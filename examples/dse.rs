@@ -1,0 +1,104 @@
+//! Design-space exploration over SA geometries — what the calibrated
+//! implementation models (Tables II/III) enable beyond the paper's
+//! three synthesized points: sweep geometry × PDK × variant and report
+//! the efficiency frontier.
+//!
+//! ```sh
+//! cargo run --release --example dse
+//! ```
+
+use bitsmm::arch::asic::AsicModel;
+use bitsmm::arch::fpga::FpgaModel;
+use bitsmm::arch::pdk::PdkKind;
+use bitsmm::report::{f, Table};
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::mac_common::MacVariant;
+
+fn main() -> bitsmm::Result<()> {
+    let geometries: Vec<(usize, usize)> = vec![
+        (8, 2),
+        (16, 4),
+        (16, 8),
+        (32, 8),
+        (32, 16),
+        (64, 16),
+        (64, 32),
+        (128, 32),
+    ];
+
+    // ---- FPGA sweep ---------------------------------------------------
+    let fpga = FpgaModel::default();
+    let mut t = Table::new(
+        "DSE — ZCU104 FPGA @300MHz, 16-bit operands (model extrapolation)",
+        &["SA (cols x rows)", "MACs", "LUTs", "Power (W)", "GOPS", "GOPS/W"],
+    );
+    let zcu104_luts = 230_400u64; // ZU7EV LUT budget
+    let mut frontier: Vec<(String, f64, f64)> = Vec::new();
+    for &(c, r) in &geometries {
+        let imp = fpga.implement(SaConfig::new(r, c, MacVariant::Booth), 16);
+        let fits = imp.luts <= zcu104_luts;
+        t.row(&[
+            format!("{c}x{r}{}", if fits { "" } else { " (exceeds ZU7EV)" }),
+            (r * c).to_string(),
+            imp.luts.to_string(),
+            f(imp.power_w),
+            f(imp.gops),
+            f(imp.gops_per_w),
+        ]);
+        if fits {
+            frontier.push((format!("{c}x{r}"), imp.gops, imp.gops_per_w));
+        }
+    }
+    print!("{}", t.render());
+    let best = frontier
+        .iter()
+        .max_by(|a, b| a.2.total_cmp(&b.2))
+        .expect("nonempty");
+    println!("best feasible GOPS/W on ZU7EV: {} at {}\n", f(best.2), best.0);
+
+    // ---- ASIC sweep -----------------------------------------------------
+    for kind in [PdkKind::Asap7, PdkKind::Nangate45] {
+        let asic = AsicModel::new(kind);
+        let mut t = Table::new(
+            &format!("DSE — {} (model extrapolation)", kind.name()),
+            &["SA", "variant", "fmax (MHz)", "area (mm2)", "GOPS@tgt", "GOPS/mm2", "GOPS/W"],
+        );
+        for &(c, r) in &geometries {
+            for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+                let imp = asic.implement(SaConfig::new(r, c, variant), 16);
+                t.row(&[
+                    format!("{c}x{r}"),
+                    variant.name().into(),
+                    f(imp.max_freq_mhz),
+                    format!("{:.4}", imp.area_mm2),
+                    f(imp.gops_at_target),
+                    f(imp.gops_per_mm2),
+                    f(imp.gops_per_w),
+                ]);
+            }
+        }
+        print!("{}", t.render());
+    }
+
+    // ---- aspect-ratio study --------------------------------------------
+    // Same MAC budget, different shapes: readout latency (rows·cols) is
+    // fixed, but tiling efficiency against a batch-8 MLP differs.
+    let mut t = Table::new(
+        "DSE — aspect ratio at a 256-MAC budget (batch-8 MLP tiling)",
+        &["SA", "tiles for 8x64x64", "modelled cycles", "achieved OP/cycle"],
+    );
+    for &(c, r) in &[(256usize, 1usize), (64, 4), (32, 8), (16, 16)] {
+        let sa = SaConfig::new(r, c, MacVariant::Booth);
+        let plan = bitsmm::coordinator::tile_matmul(8, 64, 64, &sa);
+        let cycles = plan.total_cycles(&sa, 8);
+        t.row(&[
+            format!("{c}x{r}"),
+            plan.jobs.len().to_string(),
+            cycles.to_string(),
+            f(plan.total_macs() as f64 / cycles as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("dse OK");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Per-layer precision sweep — the paper's headline flexibility
+//! ("different layers (or groups of parameters) can use different
+//! bit-widths", §V) quantified: latency (eq. 8 is linear in width)
+//! against weight-quantization SNR, plus the SNR-adaptive policy.
+//!
+//! ```sh
+//! cargo run --release --example precision_sweep
+//! ```
+
+use bitsmm::coordinator::{Backend, PrecisionPolicy, Scheduler};
+use bitsmm::nn::model::mlp_zoo;
+use bitsmm::nn::quant::{quant_snr_db, quantize_symmetric};
+use bitsmm::nn::tensor::QTensor;
+use bitsmm::prng::Pcg32;
+use bitsmm::report::{ascii_plot, f, Table};
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::mac_common::MacVariant;
+
+fn main() -> bitsmm::Result<()> {
+    let model = mlp_zoo(1);
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+
+    // ---- uniform-precision sweep ------------------------------------
+    let mut t = Table::new(
+        "uniform precision sweep (MLP 64-64-32-10)",
+        &["bits", "latency vs 16b", "hw cycles/inf", "weight SNR (dB)", "output drift"],
+    );
+    let mut series = Vec::new();
+
+    // reference output at 16 bits for drift measurement
+    let mut rng = Pcg32::new(77);
+    let x_full: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+    let reference = run_at_bits(&model, &sa, &x_full, 16)?;
+
+    for bits in [1u32, 2, 3, 4, 6, 8, 12, 16] {
+        let policy = PrecisionPolicy::Uniform(bits);
+        let frac = policy.latency_fraction(&model)?;
+        let (out, cycles) = run_at_bits(&model, &sa, &x_full, bits)?;
+        let drift = rms(&out, &reference.0);
+        // weight SNR at this width (first layer's weights, representative)
+        let w = match &model.layers[0] {
+            bitsmm::nn::layers::Layer::Linear(l) => &l.w,
+            _ => unreachable!(),
+        };
+        let real: Vec<f64> = w.data.iter().map(|&q| q as f64 * w.scale).collect();
+        let snr = quant_snr_db(&real, &quantize_symmetric(&real, w.shape.clone(), bits)?);
+        t.row(&[
+            bits.to_string(),
+            f(frac),
+            format!("{}", cycles),
+            f(snr),
+            f(drift),
+        ]);
+        let _ = out;
+        series.push((bits as f64, snr.max(0.0)));
+    }
+    print!("{}", t.render());
+    print!(
+        "{}",
+        ascii_plot("weight SNR vs operand width", &[("snr(dB)", &series)], 12)
+    );
+
+    // ---- policy comparison -------------------------------------------
+    let mut t = Table::new(
+        "precision policies",
+        &["policy", "layer widths", "latency vs 16b"],
+    );
+    for (name, policy) in [
+        ("uniform 16", PrecisionPolicy::Uniform(16)),
+        ("uniform 8", PrecisionPolicy::Uniform(8)),
+        ("per-layer 8/4/4 (paper-style)", PrecisionPolicy::PerLayer(vec![8, 4, 4])),
+        ("adaptive snr>=30dB", PrecisionPolicy::Adaptive { snr_target_db: 30.0 }),
+        ("adaptive snr>=45dB", PrecisionPolicy::Adaptive { snr_target_db: 45.0 }),
+    ] {
+        let widths = policy.resolve(&model)?;
+        let frac = policy.latency_fraction(&model)?;
+        t.row(&[name.into(), format!("{widths:?}"), f(frac)]);
+    }
+    print!("{}", t.render());
+    println!("\nprecision_sweep OK");
+    Ok(())
+}
+
+/// Run the zoo MLP with every layer clamped to `bits` and return
+/// (logits, hw cycles for one inference).
+fn run_at_bits(
+    model: &bitsmm::nn::model::Model,
+    sa: &SaConfig,
+    x_real: &[f64],
+    bits: u32,
+) -> bitsmm::Result<(Vec<f64>, u64)> {
+    // clamp a copy of the model onto the `bits` grid
+    let mut m = model.clone();
+    for layer in &mut m.layers {
+        if let bitsmm::nn::layers::Layer::Linear(l) = layer {
+            let real: Vec<f64> = l.w.data.iter().map(|&q| q as f64 * l.w.scale).collect();
+            l.w = quantize_symmetric(&real, l.w.shape.clone(), bits)?;
+            l.bits = bits;
+            l.out_bits = bits; // activations live on the same grid
+        }
+    }
+    let xq = quantize_symmetric(x_real, vec![64], bits)?;
+    let x = QTensor::new(xq.data, vec![1, 64], xq.scale, bits)?;
+    let mut sched = Scheduler::new(*sa, Backend::Native);
+    let y = m.forward(&x, &mut sched.as_exec())?;
+    Ok((
+        y.data.iter().map(|&q| q as f64 * y.scale).collect(),
+        sched.report.hw_cycles,
+    ))
+}
+
+fn rms(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len()) as f64;
+    (a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() / n).sqrt()
+}

@@ -1,0 +1,181 @@
+"""AOT export: lower the L2/L1 graphs to HLO **text** artifacts.
+
+Python runs once (``make artifacts``); the Rust binary loads these
+files through the PJRT CPU client and is self-contained afterwards.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and DESIGN.md.
+
+Artifact inventory (written to ``artifacts/`` with ``manifest.txt``):
+  * ``mm_<variant>_b<bits>_<m>x<k>x<n>[_exact]`` — bare bit-serial
+    matmuls for the tile/layer shapes the coordinator serves.
+  * ``mlp_<batch>`` — the quantized 3-layer MLP forward (per-layer
+    precisions baked in) used by the e2e serving example.
+  * ``attn_<seq>x<dim>`` — the attention block forward.
+
+Manifest line format (parsed by ``rust/src/runtime/artifact.rs``):
+  ``name kind variant bits m k n dtype path``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)  # f64 accumulator variants
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def i32_spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+# The matmul shapes the serving stack uses. (m, k, n) with m = batch
+# rows per PJRT call; k/n = layer dims of the model zoo (kept small so
+# `make artifacts` stays fast; the coordinator falls back to the native
+# plane-matmul path for unlisted shapes).
+MM_SHAPES = [
+    (8, 64, 64),
+    (8, 64, 32),
+    (8, 32, 10),
+    (32, 64, 64),
+    (32, 64, 32),
+    (32, 32, 10),
+    (64, 128, 128),
+]
+MM_BITS = [2, 4, 8]
+MM_VARIANTS = ["booth", "sbmwc"]
+
+# MLP export: 64 → 64 → 32 → 10 with per-layer precisions 8/4/4 — the
+# per-layer bit-width flexibility the paper's conclusion highlights.
+MLP_DIMS = [64, 64, 32, 10]
+MLP_BITS = [8, 4, 4]
+MLP_BATCHES = [8, 32]
+
+ATTN_SEQ, ATTN_DIM, ATTN_BITS = 16, 32, 8
+
+
+def export(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def emit(name, kind, variant, bits, m, k, n, dtype, lowered):
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {kind} {variant} {bits} {m} {k} {n} {dtype} {path}")
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    # ---- bare matmul executables -------------------------------------
+    for variant in MM_VARIANTS:
+        for bits in MM_BITS:
+            for (m, k, n) in MM_SHAPES:
+                fn = functools.partial(model.matmul_entry, bits=bits, variant=variant)
+                low = jax.jit(fn).lower(i32_spec(m, k), i32_spec(k, n))
+                emit(
+                    f"mm_{variant}_b{bits}_{m}x{k}x{n}",
+                    "matmul",
+                    variant,
+                    bits,
+                    m,
+                    k,
+                    n,
+                    "f32",
+                    low,
+                )
+    # one exact (f64) wide-precision executable for cross-validation
+    fn = functools.partial(model.matmul_entry_exact, bits=16, variant="booth")
+    low = jax.jit(fn).lower(i32_spec(8, 64, ), i32_spec(64, 64))
+    emit("mm_booth_b16_8x64x64_exact", "matmul", "booth", 16, 8, 64, 64, "f64", low)
+
+    # ---- MLP forward ---------------------------------------------------
+    key = jax.random.PRNGKey(0)
+    ws, bs = model.make_mlp_params(key, MLP_DIMS, layer_bits=MLP_BITS)
+    scales = [0.05, 0.1, 0.2]
+
+    for batch in MLP_BATCHES:
+        def mlp(x_q, *params):
+            w = list(params[: len(ws)])
+            b = list(params[len(ws):])
+            return (
+                model.mlp_forward(
+                    x_q, w, b, layer_bits=MLP_BITS, scales=scales, variant="booth"
+                ),
+            )
+
+        specs = [i32_spec(batch, MLP_DIMS[0])]
+        specs += [i32_spec(*w.shape) for w in ws]
+        specs += [i32_spec(*b.shape) for b in bs]
+        low = jax.jit(mlp).lower(*specs)
+        emit(
+            f"mlp_{batch}",
+            "mlp",
+            "booth",
+            MLP_BITS[0],
+            batch,
+            MLP_DIMS[0],
+            MLP_DIMS[-1],
+            "f32",
+            low,
+        )
+
+    # ---- attention block -----------------------------------------------
+    def attn(x_q, wq, wk, wv, wo):
+        return (
+            model.attention_forward(x_q, wq, wk, wv, wo, bits=ATTN_BITS, variant="booth"),
+        )
+
+    low = jax.jit(attn).lower(
+        i32_spec(ATTN_SEQ, ATTN_DIM), *([i32_spec(ATTN_DIM, ATTN_DIM)] * 4)
+    )
+    emit(
+        f"attn_{ATTN_SEQ}x{ATTN_DIM}",
+        "attention",
+        "booth",
+        ATTN_BITS,
+        ATTN_SEQ,
+        ATTN_DIM,
+        ATTN_DIM,
+        "f32",
+        low,
+    )
+
+    # ---- trained model (weights + eval set for the Rust stack) --------
+    from . import train
+
+    train.export_trained(out_dir)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts (+ trained_mlp.txt)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    export(args.out)
+
+
+if __name__ == "__main__":
+    main()

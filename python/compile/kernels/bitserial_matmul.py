@@ -1,0 +1,161 @@
+"""L1 Pallas kernel: bit-plane (bit-serial-equivalent) matrix multiply.
+
+TPU re-thinking of the paper's bit-serial MAC (DESIGN.md
+SHardware-Adaptation): instead of streaming one bit per *cycle* into a
+1-bit datapath, we stream one Booth-recoded bit-*plane* per grid step
+into the MXU. The decomposition is identical to the hardware's:
+
+* **booth**  — signed-digit planes ``d_i = ml[i-1] − ml[i]`` (Table I),
+  every plane weighted ``+2^i``; no sign correction (the property that
+  lets the hardware MAC use a single adder).
+* **sbmwc**  — raw bit planes, the MSb plane weighted ``−2^(b−1)``
+  (the correction step of eq. 2; the hardware variant that costs a
+  second adder).
+
+The multiplicand operand ``b`` participates at full precision, exactly
+as in the hardware: the paper's MAC assembles the serial multiplicand
+back to parallel form (multiplicand mask circuit) before the adder —
+bit-seriality of the multiplicand is transport, not arithmetic.
+
+Runtime-configurable precision — the paper's headline feature — maps to
+the ``bits`` static argument: it sets the number of planes (grid
+steps), so cycles scale linearly with precision just like eq. 8.
+
+The kernel is written for MXU-friendly shapes (tiles of 128 in the
+matmul dimensions; plane values in {−1,0,+1} are exactly representable
+in bf16) but runs here under ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so correctness is validated on CPU
+and TPU efficiency is estimated analytically (DESIGN.md SPerf/L1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default VMEM tile extents. 128 matches the MXU systolic array edge;
+# tiles are clamped to the (padded) problem size.
+TILE_M = 128
+TILE_N = 128
+
+
+def _plane(a, i: int, bits: int, variant: str):
+    """Extract plane ``i`` and its scale factor. ``a`` is int32."""
+    if variant == "booth":
+        return ref.booth_digit_plane(a, i), float(2 ** i)
+    if variant == "sbmwc":
+        scale = -float(2 ** i) if i == bits - 1 else float(2 ** i)
+        return ref.sbmwc_bit_plane(a, i), scale
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def _kernel(a_ref, b_ref, o_ref, *, bits: int, variant: str, acc_dtype):
+    """One (tile_m × tile_n) output tile.
+
+    The plane loop is the temporal dimension of the hardware (one bit
+    per cycle ↔ one plane per iteration); the `plane @ b` contraction is
+    the spatial dimension (the whole MAC grid at once). The VMEM
+    accumulator plays the role of the per-MAC accumulator registers.
+
+    Bit extraction is strength-reduced across iterations (SPerf/L2):
+    plane i's `cur` bit is plane i+1's `prev`, so each iteration
+    extracts exactly one fresh bit — halving the traced shift/and ops
+    vs recomputing both (XLA would CSE them, but the smaller StableHLO
+    lowers and compiles faster and keeps the artifact compact).
+    """
+    a = a_ref[...]  # [tm, K] int32 (multiplier / activations)
+    b = b_ref[...].astype(acc_dtype)  # [K, tn] (multiplicand / weights)
+    acc = jnp.zeros((a.shape[0], b.shape[1]), acc_dtype)
+    prev = jnp.zeros_like(a)  # ml[-1] = 0 (Table I)
+    for i in range(bits):  # static unroll: `bits` plane-matmuls
+        cur = (a >> i) & 1
+        if variant == "booth":
+            plane, scale = prev - cur, float(2 ** i)
+        elif variant == "sbmwc":
+            scale = -float(2 ** i) if i == bits - 1 else float(2 ** i)
+            plane = cur
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+        acc = acc + jnp.matmul(plane.astype(acc_dtype), b) * acc_dtype(scale)
+        prev = cur
+    o_ref[...] = acc
+
+
+def _pad_to(x, rows: int, cols: int):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "variant", "acc_dtype", "tile_m", "tile_n")
+)
+def bitserial_matmul(
+    a,
+    b,
+    *,
+    bits: int = 8,
+    variant: str = "booth",
+    acc_dtype=jnp.float32,
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+):
+    """Bit-serial-equivalent matmul ``A (m×k) · B (k×n)``.
+
+    Args:
+      a: int32 multiplier matrix (activations), values in the
+         ``bits``-bit two's-complement range.
+      b: int32 multiplicand matrix (weights), same range.
+      bits: runtime-configured operand precision, 1..16 (static under
+         jit — each precision is its own compiled executable, matching
+         the hardware where precision reconfigures the *schedule*).
+      variant: "booth" or "sbmwc" — which MAC architecture to mirror.
+      acc_dtype: accumulator element type. f32 is exact for the serving
+         regime (≤8-bit operands, k ≤ 1024 — every intermediate is an
+         integer below 2^24); use f64 for exactness at 16-bit operands.
+
+    Returns:
+      The product, in ``acc_dtype``, shape (m, n).
+    """
+    if not 1 <= bits <= ref.MAX_BITS:
+        raise ValueError(f"bits must be in 1..{ref.MAX_BITS}, got {bits}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    # pad M/N up to tile multiples (K stays whole: the contraction is
+    # done per tile, mirroring one full dot product per MAC)
+    tm = min(tile_m, m)
+    tn = min(tile_n, n)
+    mp = (m + tm - 1) // tm * tm
+    np_ = (n + tn - 1) // tn * tn
+    a_p = _pad_to(a, mp, k)
+    b_p = _pad_to(b, k, np_)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, variant=variant, acc_dtype=acc_dtype),
+        grid=(mp // tm, np_ // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), acc_dtype),
+        interpret=True,  # CPU path; real-TPU lowering emits Mosaic
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def vmem_bytes_estimate(tile_m: int, k: int, tile_n: int, acc_dtype=jnp.float32) -> int:
+    """Per-grid-step VMEM footprint estimate for DESIGN.md SPerf/L1:
+    A tile (int32) + B tile (acc) + accumulator (acc) + one plane (acc).
+    """
+    it = jnp.dtype(jnp.int32).itemsize
+    at = jnp.dtype(acc_dtype).itemsize
+    return tile_m * k * it + k * tile_n * at + 2 * tile_m * tile_n * at + tile_m * k * at

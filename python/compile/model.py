@@ -1,0 +1,130 @@
+"""L2: quantized NN forward passes built on the L1 bit-serial kernel.
+
+The compute graphs here are what the Rust coordinator executes through
+PJRT on the request path (after ``aot.py`` lowers them to HLO text).
+Every matmul goes through :func:`bitserial_matmul`, so the numbers the
+served model produces are exactly the numbers the simulated bitSMM
+hardware produces — the co-simulation contract (DESIGN.md).
+
+Per-layer runtime-configurable precision — the paper's motivating
+feature ("different layers (or groups of parameters) can use different
+bit-widths", SV) — appears as the per-layer ``bits`` entries baked into
+each exported executable.
+
+Models (mirroring the workloads the paper's introduction motivates):
+  * ``mlp_forward``         — MLP classifier (in-situ data analysis).
+  * ``attention_forward``   — single-head attention block (ViT-style
+                              transformer workloads, SII-C).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bitserial_matmul import bitserial_matmul
+from .kernels import ref
+
+
+def quantize(x, scale: float, bits: int):
+    """Symmetric quantization to ``bits``-bit two's complement."""
+    q = jnp.round(x / scale)
+    return jnp.clip(q, ref.min_value(bits), ref.max_value(bits)).astype(jnp.int32)
+
+
+def requantize(acc, in_scale: float, out_scale: float, bits: int):
+    """Scale an integer accumulator back into the next layer's grid."""
+    q = jnp.round(acc * (in_scale / out_scale))
+    return jnp.clip(q, ref.min_value(bits), ref.max_value(bits)).astype(jnp.int32)
+
+
+def linear_bitserial(x_q, w_q, b_q, *, bits: int, variant: str = "booth"):
+    """One quantized linear layer: ``x_q·w_q + b`` on the bit-serial
+    kernel. ``x_q`` is the multiplier (activations, streamed LSb-first
+    in hardware); ``w_q`` the multiplicand (weights, MSb-first)."""
+    acc = bitserial_matmul(x_q, w_q, bits=bits, variant=variant)
+    return acc + b_q.astype(acc.dtype)
+
+
+def mlp_forward(
+    x_q,
+    weights: Sequence,
+    biases: Sequence,
+    *,
+    layer_bits: Sequence[int],
+    scales: Sequence[float],
+    variant: str = "booth",
+):
+    """Quantized MLP forward: (linear → ReLU → requantize)* → logits.
+
+    ``layer_bits[i]`` is layer i's operand precision — the per-layer
+    bit-width knob. ``scales[i]`` is the activation scale entering
+    layer i (``scales[-1]`` is the logits scale).
+    """
+    h = x_q
+    n_layers = len(weights)
+    for i, (w_q, b_q) in enumerate(zip(weights, biases)):
+        acc = linear_bitserial(h, w_q, b_q, bits=layer_bits[i], variant=variant)
+        if i + 1 < n_layers:
+            acc = jax.nn.relu(acc)
+            # accumulator is in units of (in_scale·w_scale); fold the
+            # weight scale into the layer scale handed to us
+            h = requantize(acc, scales[i], scales[i + 1], layer_bits[i + 1])
+        else:
+            h = acc * scales[i]  # dequantized logits
+    return h
+
+
+def attention_forward(x_q, wq, wk, wv, wo, *, bits: int, variant: str = "booth"):
+    """Single-head self-attention with bit-serial projections.
+
+    All four projections (Q, K, V, output) run on the bit-serial
+    kernel; the attention softmax runs in f32 (the paper's accelerator
+    targets the matmul core — SII-C notes matmuls dominate ViT cost).
+    Returns f32 activations.
+    """
+    q = bitserial_matmul(x_q, wq, bits=bits, variant=variant)
+    k = bitserial_matmul(x_q, wk, bits=bits, variant=variant)
+    v = bitserial_matmul(x_q, wv, bits=bits, variant=variant)
+    d = q.shape[-1]
+    att = jax.nn.softmax(q @ k.T / jnp.sqrt(jnp.float32(d)), axis=-1)
+    ctx = att @ v
+    # requantize the context back onto the integer grid for the output
+    # projection (scale chosen so the ctx range maps onto `bits` bits)
+    ctx_scale = jnp.maximum(jnp.max(jnp.abs(ctx)), 1e-6) / ref.max_value(bits)
+    ctx_q = jnp.clip(
+        jnp.round(ctx / ctx_scale), ref.min_value(bits), ref.max_value(bits)
+    ).astype(jnp.int32)
+    out = bitserial_matmul(ctx_q, wo, bits=bits, variant=variant)
+    return out * ctx_scale
+
+
+def make_mlp_params(key, layer_dims: Sequence[int], *, layer_bits: Sequence[int]):
+    """Random quantized MLP parameters (weights int32 on each layer's
+    grid, biases int32). Used by AOT export and tests."""
+    ws, bs = [], []
+    for i, (d_in, d_out) in enumerate(zip(layer_dims[:-1], layer_dims[1:])):
+        key, k1, k2 = jax.random.split(key, 3)
+        bits = layer_bits[i]
+        hi = ref.max_value(bits)
+        lo = ref.min_value(bits)
+        ws.append(jax.random.randint(k1, (d_in, d_out), lo // 2, hi // 2 + 1, jnp.int32))
+        bs.append(jax.random.randint(k2, (d_out,), lo, hi + 1, jnp.int32))
+    return ws, bs
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "variant"))
+def matmul_entry(a, b, *, bits: int, variant: str = "booth"):
+    """The unit-of-work executable the Rust coordinator calls per tile
+    batch: a bare bit-serial matmul, f32 accumulator."""
+    return (bitserial_matmul(a, b, bits=bits, variant=variant),)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "variant"))
+def matmul_entry_exact(a, b, *, bits: int, variant: str = "booth"):
+    """f64-accumulator variant: exact up to 16-bit operands (used for
+    wide-precision layers and cross-validation against the simulator)."""
+    return (bitserial_matmul(a, b, bits=bits, variant=variant, acc_dtype=jnp.float64),)

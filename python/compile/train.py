@@ -1,0 +1,195 @@
+"""Train a small MLP classifier and export it, quantized, for the Rust
+serving stack — the "real small workload" of the end-to-end driver.
+
+Workload: synthetic multi-class instrument-vector classification (the
+in-situ data-analysis use case of the paper's introduction): 10
+Gaussian class prototypes in 64 dimensions with additive noise. A
+64-64-32-10 MLP is trained in float (plain JAX autodiff + SGD), then
+post-training-quantized to the paper-style per-layer widths 8/4/4 and
+*evaluated through the bit-serial kernel* so the exported accuracy is
+the accuracy the accelerator actually delivers.
+
+Export format (``artifacts/trained_mlp.txt``): a line-oriented
+key/value + integer-blob format parsed by ``rust/src/nn/weights_io.rs``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.bitserial_matmul import bitserial_matmul
+
+DIMS = [64, 64, 32, 10]
+LAYER_BITS = [8, 4, 4]
+N_CLASSES = 10
+N_TRAIN, N_EVAL = 2000, 400
+STEPS, LR, BATCH = 300, 0.05, 128
+
+
+def make_prototypes(key):
+    """The class definitions — shared between train and eval splits."""
+    return jax.random.normal(key, (N_CLASSES, DIMS[0]))
+
+
+def make_dataset(key, protos, n):
+    """Samples around the given Gaussian class prototypes."""
+    kx, ky = jax.random.split(key)
+    y = jax.random.randint(ky, (n,), 0, N_CLASSES)
+    x = protos[y] + 0.35 * jax.random.normal(kx, (n, DIMS[0]))
+    return x, y
+
+
+def init_params(key):
+    params = []
+    for i, (d_in, d_out) in enumerate(zip(DIMS[:-1], DIMS[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (d_in, d_out)) * (2.0 / d_in) ** 0.5
+        params.append((w, jnp.zeros((d_out,))))
+    return params
+
+
+def forward_float(params, x):
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = h @ w + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_fn(params, x, y):
+    logits = forward_float(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+@jax.jit
+def sgd_step(params, x, y):
+    grads = jax.grad(loss_fn)(params, x, y)
+    return [(w - LR * gw, b - LR * gb) for (w, b), (gw, gb) in zip(params, grads)]
+
+
+def train(seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    kp, kd, ke, ki = jax.random.split(key, 4)
+    protos = make_prototypes(kp)
+    x_train, y_train = make_dataset(kd, protos, N_TRAIN)
+    x_eval, y_eval = make_dataset(ke, protos, N_EVAL)
+    params = init_params(ki)
+    rng = np.random.default_rng(seed)
+    for _ in range(STEPS):
+        idx = rng.integers(0, N_TRAIN, BATCH)
+        params = sgd_step(params, x_train[idx], y_train[idx])
+    return params, (x_eval, y_eval)
+
+
+def quantize_sym(x, bits):
+    """Symmetric quantization; returns (q_int32, scale)."""
+    amax = float(jnp.max(jnp.abs(x)))
+    denom = max(ref.max_value(bits), 1)
+    scale = amax / denom if amax > 0 else 1.0
+    q = jnp.clip(jnp.round(x / scale), ref.min_value(bits), ref.max_value(bits))
+    return q.astype(jnp.int32), scale
+
+
+def forward_bitserial(qparams, scales, x_q, in_scale):
+    """Quantized forward exactly as the Rust LinearLayer computes it:
+    integer matmul on the bit-serial kernel, bias in accumulator units,
+    ReLU in reals, requantize onto the next activation grid."""
+    h_q, h_scale = x_q, in_scale
+    n_layers = len(qparams)
+    for i, (w_q, w_scale, b_acc) in enumerate(qparams):
+        acc = bitserial_matmul(h_q, w_q, bits=LAYER_BITS[i], variant="booth")
+        acc = acc + jnp.asarray(b_acc, acc.dtype)
+        real = acc * (h_scale * w_scale)
+        if i + 1 < n_layers:
+            real = jax.nn.relu(real)
+            out_bits = LAYER_BITS[i + 1]
+            h_q, h_scale = quantize_sym(real, out_bits)
+        else:
+            return real
+    raise AssertionError("unreachable")
+
+
+def export_trained(out_dir: str, seed: int = 0) -> dict:
+    params, (x_eval, y_eval) = train(seed)
+
+    # float accuracy
+    float_acc = float(
+        jnp.mean(jnp.argmax(forward_float(params, x_eval), -1) == y_eval)
+    )
+
+    # post-training quantization
+    in_bits = 8
+    x_q, in_scale = quantize_sym(x_eval, in_bits)
+    qparams = []
+    for i, (w, b) in enumerate(params):
+        w_q, w_scale = quantize_sym(w, LAYER_BITS[i])
+        qparams.append((w_q, w_scale, None))
+    # bias in accumulator units requires the running activation scale
+    h_scale = in_scale
+    fixed = []
+    for i, ((w, b), (w_q, w_scale, _)) in enumerate(zip(params, qparams)):
+        b_acc = np.round(np.asarray(b) / (h_scale * w_scale)).astype(np.int64)
+        fixed.append((w_q, w_scale, b_acc))
+        if i + 1 < len(params):
+            # the next layer's activation scale is data-dependent:
+            # recompute it by running the quantized forward to here
+            h_scale = _activation_scale(fixed, in_scale, x_q, i)
+
+    quant_logits = forward_bitserial(fixed, None, x_q, in_scale)
+    quant_acc = float(jnp.mean(jnp.argmax(quant_logits, -1) == y_eval))
+
+    # fixed per-layer output scales for the Rust side (it requantizes
+    # with a static grid, not per-batch): layer i<last → the activation
+    # scale measured on the eval set; last layer → a logits grid wide
+    # enough for the observed range at 16 bits
+    out_scales = []
+    for i in range(len(fixed) - 1):
+        out_scales.append(_activation_scale(fixed, in_scale, x_q, i))
+    logit_amax = float(jnp.max(jnp.abs(quant_logits)))
+    out_scales.append(max(logit_amax, 1e-6) / ref.max_value(16))
+
+    path = os.path.join(out_dir, "trained_mlp.txt")
+    with open(path, "w") as f:
+        f.write(f"# trained quantized MLP ({'/'.join(map(str, LAYER_BITS))} bits)\n")
+        f.write(f"layers {len(fixed)}\n")
+        f.write(f"input_bits {in_bits}\n")
+        f.write(f"input_scale {in_scale!r}\n")
+        f.write(f"float_acc {float_acc!r}\n")
+        f.write(f"quant_acc {quant_acc!r}\n")
+        for i, (w_q, w_scale, b_acc) in enumerate(fixed):
+            d_in, d_out = w_q.shape
+            relu = 1 if i + 1 < len(fixed) else 0
+            out_bits = LAYER_BITS[i + 1] if i + 1 < len(fixed) else 16
+            f.write(
+                f"layer {i} in {d_in} out {d_out} bits {LAYER_BITS[i]} "
+                f"w_scale {w_scale!r} relu {relu} out_bits {out_bits} "
+                f"out_scale {out_scales[i]!r}\n"
+            )
+            f.write("w " + " ".join(map(str, np.asarray(w_q).flatten())) + "\n")
+            f.write("b " + " ".join(map(str, b_acc)) + "\n")
+        # eval set (quantized inputs + labels)
+        f.write(f"eval {x_q.shape[0]} {x_q.shape[1]}\n")
+        f.write("x " + " ".join(map(str, np.asarray(x_q).flatten())) + "\n")
+        f.write("y " + " ".join(map(str, np.asarray(y_eval).flatten())) + "\n")
+    print(f"  wrote trained_mlp.txt (float acc {float_acc:.3f}, bit-serial acc {quant_acc:.3f})")
+    return {"float_acc": float_acc, "quant_acc": quant_acc, "path": path}
+
+
+def _activation_scale(fixed, in_scale, x_q, upto: int) -> float:
+    """Scale of the activations entering layer `upto+1` when running
+    the quantized forward on the eval inputs."""
+    h_q, h_scale = x_q, in_scale
+    for i in range(upto + 1):
+        w_q, w_scale, b_acc = fixed[i]
+        acc = bitserial_matmul(h_q, w_q, bits=LAYER_BITS[i], variant="booth")
+        acc = acc + jnp.asarray(b_acc, acc.dtype)
+        real = jax.nn.relu(acc * (h_scale * w_scale))
+        h_q, h_scale = quantize_sym(real, LAYER_BITS[i + 1])
+    return h_scale

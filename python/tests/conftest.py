@@ -1,0 +1,6 @@
+"""Shared pytest config: enable x64 so the exact (f64/int64) oracle
+paths behave identically to the AOT export environment."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,89 @@
+"""L2 model tests: shapes, quantization, per-layer precision, and the
+attention block — everything aot.py exports."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_quantize_roundtrip_range():
+    x = jnp.linspace(-1.0, 1.0, 101)
+    q = model.quantize(x, scale=1 / 127, bits=8)
+    assert int(jnp.min(q)) >= -128 and int(jnp.max(q)) <= 127
+    # dequantized error bounded by half a step
+    err = jnp.max(jnp.abs(q * (1 / 127) - x))
+    assert float(err) <= 0.5 / 127 + 1e-6
+
+
+def test_quantize_clamps_saturating():
+    x = jnp.array([10.0, -10.0])
+    q = model.quantize(x, scale=1 / 127, bits=8)
+    assert q.tolist() == [127, -128]
+
+
+def test_linear_layer_matches_dense_reference():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.randint(key, (4, 16), -8, 8, jnp.int32)
+    w = jax.random.randint(key, (16, 8), -8, 8, jnp.int32)
+    b = jax.random.randint(key, (8,), -8, 8, jnp.int32)
+    out = model.linear_bitserial(x, w, b, bits=4)
+    want = np.asarray(ref.matmul_exact(x, w)) + np.asarray(b)
+    np.testing.assert_allclose(np.asarray(out), want, rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("batch", [1, 8])
+def test_mlp_forward_shapes_and_finiteness(batch):
+    dims = [64, 64, 32, 10]
+    bits = [8, 4, 4]
+    key = jax.random.PRNGKey(0)
+    ws, bs = model.make_mlp_params(key, dims, layer_bits=bits)
+    x = jax.random.randint(key, (batch, dims[0]), -128, 128, jnp.int32)
+    out = model.mlp_forward(x, ws, bs, layer_bits=bits, scales=[0.05, 0.1, 0.2])
+    assert out.shape == (batch, 10)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_mlp_per_layer_precision_changes_output():
+    """The per-layer bit-width knob must actually matter."""
+    dims = [16, 16, 8]
+    key = jax.random.PRNGKey(3)
+    ws, bs = model.make_mlp_params(key, dims, layer_bits=[8, 8])
+    x = jax.random.randint(key, (4, 16), -100, 100, jnp.int32)
+    hi = model.mlp_forward(x, ws, bs, layer_bits=[8, 8], scales=[0.1, 0.1])
+    # clamp weights into the 3-bit grid for the low-precision run so
+    # both runs are over in-range operands
+    ws3 = [jnp.clip(w, -4, 3) for w in ws]
+    x3 = jnp.clip(x, -4, 3)
+    lo = model.mlp_forward(x3, ws3, bs, layer_bits=[3, 3], scales=[0.1, 0.1])
+    assert not np.allclose(np.asarray(hi), np.asarray(lo))
+
+
+def test_attention_block_shapes():
+    key = jax.random.PRNGKey(5)
+    seq, dim = 8, 16
+    x = jax.random.randint(key, (seq, dim), -64, 64, jnp.int32)
+    wq, wk, wv, wo = (
+        jax.random.randint(jax.random.fold_in(key, i), (dim, dim), -64, 64, jnp.int32)
+        for i in range(4)
+    )
+    out = model.attention_forward(x, wq, wk, wv, wo, bits=8)
+    assert out.shape == (seq, dim)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_attention_softmax_rows_stochastic():
+    """Indirect check that the attention path normalizes: output is a
+    convex combination of V projections, so it is bounded by V's row
+    extremes (up to the output projection)."""
+    key = jax.random.PRNGKey(6)
+    seq, dim = 4, 8
+    x = jax.random.randint(key, (seq, dim), -8, 8, jnp.int32)
+    eye = jnp.eye(dim, dtype=jnp.int32)
+    out = model.attention_forward(x, eye, eye, eye, eye, bits=8)
+    v = ref.matmul_exact(x, eye).astype(jnp.float64)
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1.0
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1.0

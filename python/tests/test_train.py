@@ -1,0 +1,57 @@
+"""Trained-model export: the bit-serial-served accuracy must be close
+to float accuracy and well above chance (10 classes)."""
+
+import os
+
+import pytest
+
+from compile import train
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    out = tmp_path_factory.mktemp("trained")
+    return train.export_trained(str(out), seed=0), out
+
+
+def test_float_accuracy_trains(trained):
+    info, _ = trained
+    assert info["float_acc"] > 0.9, info
+
+
+def test_bitserial_accuracy_close_to_float(trained):
+    info, _ = trained
+    assert info["quant_acc"] > 0.85, info
+    assert info["float_acc"] - info["quant_acc"] < 0.08, info
+
+
+def test_export_file_structure(trained):
+    info, _ = trained
+    with open(info["path"]) as f:
+        text = f.read()
+    assert "layers 3" in text
+    assert text.count("layer ") == 3
+    assert "eval 400 64" in text
+    # one weight blob and one bias blob per layer
+    assert sum(1 for l in text.splitlines() if l.startswith("w ")) == 3
+    assert sum(1 for l in text.splitlines() if l.startswith("b ")) == 3
+    # weight blob sizes match the declared dims
+    for line in text.splitlines():
+        if line.startswith("layer 0"):
+            assert " in 64 out 64 bits 8 " in line
+
+
+def test_weights_in_declared_range(trained):
+    info, _ = trained
+    bits = iter(train.LAYER_BITS)
+    with open(info["path"]) as f:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        if line.startswith("layer "):
+            b = int(line.split(" bits ")[1].split()[0])
+            w = [int(v) for v in lines[i + 1].split()[1:]]
+            from compile.kernels import ref
+
+            assert min(w) >= ref.min_value(b)
+            assert max(w) <= ref.max_value(b)
+            next(bits)

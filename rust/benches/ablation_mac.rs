@@ -1,0 +1,78 @@
+//! Bench ABL: the MAC-variant ablation (Booth vs SBMwC) the paper runs
+//! at 16×4 — resources (Table II/III rows), switching activity
+//! (measured on the cycle-accurate sim), and the resulting GOPS/W
+//! ordering. DESIGN.md calls this the central design choice.
+
+use bitsmm::arch::asic::AsicModel;
+use bitsmm::arch::fpga::FpgaModel;
+use bitsmm::arch::pdk::PdkKind;
+use bitsmm::prng::Pcg32;
+use bitsmm::report::{f, Table};
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::driver::mac_dot_with_stats;
+use bitsmm::sim::mac_common::MacVariant;
+
+fn main() {
+    bitsmm::bench_harness::header("ablation_mac", "Booth vs SBMwC: resources, activity, efficiency");
+
+    // --- switching activity measured on random data --------------------
+    let mut rng = Pcg32::new(0xab1a);
+    let mut t = Table::new(
+        "measured adder activity (random operands, len 512)",
+        &["bits", "booth adder ops", "sbmwc adder ops", "ratio", "booth duty", "sbmwc duty"],
+    );
+    for bits in [4u32, 8, 16] {
+        let lo = bitsmm::bits::twos::min_value(bits);
+        let hi = bitsmm::bits::twos::max_value(bits);
+        let mc: Vec<i32> = (0..512).map(|_| rng.range_i32(lo, hi)).collect();
+        let ml: Vec<i32> = (0..512).map(|_| rng.range_i32(lo, hi)).collect();
+        let booth = mac_dot_with_stats(MacVariant::Booth, &mc, &ml, bits, 48);
+        let sbmwc = mac_dot_with_stats(MacVariant::Sbmwc, &mc, &ml, bits, 48);
+        assert_eq!(booth.0, sbmwc.0, "variants must agree numerically");
+        let ratio = sbmwc.2.adder_ops as f64 / booth.2.adder_ops as f64;
+        t.row(&[
+            bits.to_string(),
+            booth.2.adder_ops.to_string(),
+            sbmwc.2.adder_ops.to_string(),
+            f(ratio),
+            f(booth.2.adder_duty()),
+            f(sbmwc.2.adder_duty()),
+        ]);
+        assert!(ratio > 1.5, "SBMwC must fire substantially more adders");
+    }
+    print!("{}", t.render());
+
+    // --- implementation cost at 16×4 (the paper's ablation point) ------
+    let fpga = FpgaModel::default();
+    let booth = fpga.implement(SaConfig::new(4, 16, MacVariant::Booth), 16);
+    let sbmwc = fpga.implement(SaConfig::new(4, 16, MacVariant::Sbmwc), 16);
+    let mut t = Table::new(
+        "implementation cost (16x4, modelled)",
+        &["metric", "booth", "sbmwc", "sbmwc/booth"],
+    );
+    t.row(&["FPGA LUTs".into(), booth.luts.to_string(), sbmwc.luts.to_string(), f(sbmwc.luts as f64 / booth.luts as f64)]);
+    t.row(&["FPGA FFs".into(), booth.ffs.to_string(), sbmwc.ffs.to_string(), f(sbmwc.ffs as f64 / booth.ffs as f64)]);
+    t.row(&["FPGA power (W)".into(), f(booth.power_w), f(sbmwc.power_w), f(sbmwc.power_w / booth.power_w)]);
+    t.row(&["FPGA GOPS/W".into(), f(booth.gops_per_w), f(sbmwc.gops_per_w), f(sbmwc.gops_per_w / booth.gops_per_w)]);
+    for kind in [PdkKind::Asap7, PdkKind::Nangate45] {
+        let asic = AsicModel::new(kind);
+        let b = asic.implement(SaConfig::new(4, 16, MacVariant::Booth), 16);
+        let s = asic.implement(SaConfig::new(4, 16, MacVariant::Sbmwc), 16);
+        t.row(&[
+            format!("{} area (mm2)", kind.name()),
+            format!("{:.4}", b.area_mm2),
+            format!("{:.4}", s.area_mm2),
+            f(s.area_mm2 / b.area_mm2),
+        ]);
+        t.row(&[
+            format!("{} GOPS/W", kind.name()),
+            f(b.gops_per_w),
+            f(s.gops_per_w),
+            f(s.gops_per_w / b.gops_per_w),
+        ]);
+        assert!(b.gops_per_w > s.gops_per_w);
+    }
+    print!("{}", t.render());
+    assert!(booth.gops_per_w > sbmwc.gops_per_w);
+    println!("ablation OK: Booth dominates on resources and GOPS/W (the paper's default choice)");
+}

@@ -1,0 +1,92 @@
+//! Bench PERF: host-side hot-path microbenchmarks feeding the §Perf
+//! iteration log in EXPERIMENTS.md — simulator inner loop, native
+//! plane matmul, tiler, batcher, and (when artifacts exist) the PJRT
+//! request path.
+
+use bitsmm::bench_harness::{bench, BenchConfig};
+use bitsmm::coordinator::{tile_matmul, Backend, Scheduler};
+use bitsmm::nn::matmul_native;
+use bitsmm::prng::Pcg32;
+use bitsmm::sim::array::{SaConfig, SystolicArray};
+use bitsmm::sim::driver::mac_dot;
+use bitsmm::sim::mac_common::MacVariant;
+
+fn main() {
+    bitsmm::bench_harness::header("perf_hotpath", "host hot paths (see EXPERIMENTS.md §Perf)");
+    let cfg = BenchConfig::default();
+    let mut rng = Pcg32::new(0x9e4f);
+
+    // ---- 1. single-MAC stepping ---------------------------------------
+    let mc: Vec<i32> = (0..256).map(|_| rng.range_i32(-128, 127)).collect();
+    let ml: Vec<i32> = (0..256).map(|_| rng.range_i32(-128, 127)).collect();
+    let r = bench("mac_dot booth len=256 @8b", cfg, || {
+        mac_dot(MacVariant::Booth, &mc, &ml, 8, 48)
+    });
+    println!("{}   ({} Mcycle/s simulated)", r.format(), fmt_rate(r.per_second(257.0 * 8.0) / 1e6));
+
+    // ---- 2. full SA matmul (the simulator inner loop) -------------------
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+    let (m, k, n, bits) = (4usize, 64usize, 16usize, 8u32);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(-128, 127)).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(-128, 127)).collect();
+    let mut arr = SystolicArray::new(sa);
+    let cycles = arr.matmul(&a, &b, m, k, n, bits).unwrap().stats.total_cycles();
+    let r = bench("sa.matmul 4x64x16 @8b (16x4 array)", cfg, || {
+        arr.matmul(&a, &b, m, k, n, bits).unwrap().result[0]
+    });
+    println!(
+        "{}   ({} Msim-cycle/s, {} MACsteps/s)",
+        r.format(),
+        fmt_rate(r.per_second(cycles as f64) / 1e6),
+        fmt_rate(r.per_second(cycles as f64 * 64.0) / 1e6)
+    );
+
+    // ---- 3. native Booth-plane matmul (functional fallback) -------------
+    let (m2, k2, n2) = (32usize, 128usize, 64usize);
+    let a2: Vec<i32> = (0..m2 * k2).map(|_| rng.range_i32(-128, 127)).collect();
+    let b2: Vec<i32> = (0..k2 * n2).map(|_| rng.range_i32(-128, 127)).collect();
+    let r = bench("matmul_native 32x128x64 @8b", cfg, || {
+        matmul_native(&a2, &b2, m2, k2, n2, 8).unwrap()[0]
+    });
+    let macs = (m2 * k2 * n2) as f64;
+    println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs) / 1e6));
+
+    // ---- 4. tiler ---------------------------------------------------------
+    let r = bench("tile_matmul 512x512x512 on 16x4", cfg, || {
+        tile_matmul(512, 512, 512, &sa).jobs.len()
+    });
+    println!("{}", r.format());
+
+    // ---- 5. scheduler end-to-end (native backend) ----------------------
+    let mut sched = Scheduler::new(sa, Backend::Native);
+    let r = bench("scheduler.matmul 32x128x64 @8b native", cfg, || {
+        sched.matmul(&a2, &b2, m2, k2, n2, 8).unwrap()[0]
+    });
+    println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs) / 1e6));
+
+    // ---- 6. PJRT request path (if artifacts are built) ------------------
+    let dir = bitsmm::runtime::default_artifact_dir();
+    match bitsmm::runtime::EngineHandle::spawn(&dir) {
+        Ok((engine, _join)) => {
+            engine.warm_up().expect("warm up");
+            let a3: Vec<i32> = (0..8 * 64).map(|_| rng.range_i32(-128, 127)).collect();
+            let b3: Vec<i32> = (0..64 * 64).map(|_| rng.range_i32(-128, 127)).collect();
+            let am = bitsmm::runtime::IntMat::new(a3, 8, 64).unwrap();
+            let bm = bitsmm::runtime::IntMat::new(b3, 64, 64).unwrap();
+            let r = bench("pjrt mm_booth_b8_8x64x64 round trip", cfg, || {
+                engine
+                    .execute_matmul(am.clone(), bm.clone(), 8, MacVariant::Booth)
+                    .unwrap()
+                    .unwrap()[0]
+            });
+            println!("{}   ({} req/s)", r.format(), fmt_rate(r.per_second(1.0)));
+            engine.shutdown();
+        }
+        Err(e) => println!("pjrt path skipped: {e:#}"),
+    }
+    println!("\nperf_hotpath bench OK");
+}
+
+fn fmt_rate(v: f64) -> String {
+    bitsmm::report::f(v)
+}

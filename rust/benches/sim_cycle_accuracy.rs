@@ -1,0 +1,67 @@
+//! Bench CYC: validate the paper's cycle equations against *measured*
+//! simulator cycles across the three published topologies — the
+//! eq. 8/9 sanity that the paper takes from its RTL testbenches. Also
+//! times the simulator itself (host-side cost of cycle accuracy).
+
+use bitsmm::bench_harness::{bench, BenchConfig};
+use bitsmm::coordinator::tile_matmul;
+use bitsmm::report::{f, Table};
+use bitsmm::sim::array::{SaConfig, SystolicArray};
+use bitsmm::sim::mac_common::MacVariant;
+
+fn main() {
+    bitsmm::bench_harness::header(
+        "sim_cycle_accuracy",
+        "measured simulator cycles vs the paper's analytic model (eq. 8 + readout)",
+    );
+    let mut t = Table::new(
+        "measured vs modelled cycles (full-size tiles)",
+        &["SA", "k", "bits", "measured", "eq8+fill+readout", "delta", "delta %"],
+    );
+    let mut worst_pct = 0.0f64;
+    for (cols, rows) in [(16usize, 4usize), (32, 8), (64, 16)] {
+        let sa = SaConfig::new(rows, cols, MacVariant::Booth);
+        for (k, bits) in [(32usize, 4u32), (128, 8), (512, 16)] {
+            let (m, n) = (rows, cols);
+            let a = vec![3i32; m * k];
+            let b = vec![-2i32; k * n];
+            let mut arr = SystolicArray::new(sa);
+            let out = arr.matmul(&a, &b, m, k, n, bits).expect("sim");
+            let measured = out.stats.total_cycles();
+            let modelled = tile_matmul(m, k, n, &sa).total_cycles(&sa, bits);
+            let delta = measured as i64 - modelled as i64;
+            let pct = delta.unsigned_abs() as f64 / modelled as f64 * 100.0;
+            worst_pct = worst_pct.max(pct);
+            t.row(&[
+                sa.label(),
+                k.to_string(),
+                bits.to_string(),
+                measured.to_string(),
+                modelled.to_string(),
+                delta.to_string(),
+                f(pct),
+            ]);
+            assert!(pct < 5.0, "{} k={k} b={bits}: {pct}%", sa.label());
+        }
+    }
+    print!("{}", t.render());
+    println!("worst model error: {}% (paper's eq. 9 ignores the systolic fill; the sim measures it)\n", f(worst_pct));
+
+    // host-side simulator throughput (feeds the §Perf log)
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+    let (m, k, n, bits) = (4usize, 64usize, 16usize, 8u32);
+    let a = vec![7i32; m * k];
+    let b = vec![-7i32; k * n];
+    let mut arr = SystolicArray::new(sa);
+    let r = bench("simulate 4x64x16 @8b on 16x4", BenchConfig::default(), || {
+        arr.matmul(&a, &b, m, k, n, bits).unwrap().stats.total_cycles()
+    });
+    println!("{}", r.format());
+    let cycles = arr.matmul(&a, &b, m, k, n, bits).unwrap().stats.total_cycles();
+    println!(
+        "host rate: {} simulated cycles/s ({} cycles per call)",
+        f(cycles as f64 / r.mean.as_secs_f64()),
+        cycles
+    );
+    println!("sim_cycle_accuracy bench OK");
+}

@@ -1,0 +1,62 @@
+//! Bench T2: regenerate paper Table II (AMD ZCU104 FPGA @ 300 MHz) from
+//! the calibrated resource/power model, assert the paper's qualitative
+//! findings, and report residuals against the published numbers.
+
+use bitsmm::arch::fpga::FpgaModel;
+use bitsmm::report::{f, Table};
+
+const PAPER: [(&str, u64, u64, f64, f64, f64); 4] = [
+    ("16x4", 5630, 8762, 1.13, 1.2, 1.062),
+    ("16x4 SBMwC", 11418, 10807, 1.657, 1.2, 0.724),
+    ("32x8", 29355, 35490, 2.125, 4.8, 2.259),
+    ("64x16", 117836, 155586, 6.459, 19.2, 2.973),
+];
+
+fn main() {
+    bitsmm::bench_harness::header("table2_fpga", "paper Table II: FPGA implementation results");
+    print!("{}", bitsmm::report::paper::render_table2());
+
+    let rows = FpgaModel::default().table2_rows();
+    let mut t = Table::new(
+        "residuals vs paper",
+        &["design", "LUT err", "FF err", "power err", "GOPS err", "GOPS/W err"],
+    );
+    let mut worst: f64 = 0.0;
+    for (row, p) in rows.iter().zip(PAPER) {
+        let e = [
+            rel(row.luts as f64, p.1 as f64),
+            rel(row.ffs as f64, p.2 as f64),
+            rel(row.power_w, p.3),
+            rel(row.gops, p.4),
+            rel(row.gops_per_w, p.5),
+        ];
+        worst = e.iter().fold(worst, |a, &b| a.max(b));
+        t.row(&[
+            p.0.into(),
+            pct(e[0]),
+            pct(e[1]),
+            pct(e[2]),
+            pct(e[3]),
+            pct(e[4]),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // the paper's qualitative findings must reproduce exactly
+    assert!(rows[1].luts > rows[0].luts, "SBMwC uses more LUTs");
+    assert!(rows[0].gops_per_w > rows[1].gops_per_w, "Booth wins GOPS/W");
+    assert!(
+        rows[3].gops_per_w > rows[2].gops_per_w && rows[2].gops_per_w > rows[0].gops_per_w,
+        "GOPS/W increases with array size on FPGA"
+    );
+    assert!(worst < 0.09, "worst residual {worst}");
+    println!("table2 bench OK (worst residual {})", pct(worst));
+}
+
+fn rel(got: f64, want: f64) -> f64 {
+    (got - want).abs() / want
+}
+
+fn pct(e: f64) -> String {
+    format!("{}%", f(e * 100.0))
+}

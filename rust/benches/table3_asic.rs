@@ -1,0 +1,57 @@
+//! Bench T3: regenerate paper Table III (asap7 + nangate45 physical
+//! implementation) from the calibrated PDK models and assert the
+//! paper's qualitative findings.
+
+use bitsmm::arch::asic::AsicModel;
+use bitsmm::arch::pdk::PdkKind;
+use bitsmm::report::f;
+use bitsmm::sim::mac_common::MacVariant;
+
+fn main() {
+    bitsmm::bench_harness::header("table3_asic", "paper Table III: ASIC synthesis results");
+    print!("{}", bitsmm::report::paper::render_table3());
+
+    for kind in [PdkKind::Asap7, PdkKind::Nangate45] {
+        let rows = AsicModel::new(kind).table3_rows();
+        // area and power scale ~proportionally with SA size
+        let booth: Vec<_> = rows
+            .iter()
+            .filter(|r| r.config.variant == MacVariant::Booth)
+            .collect();
+        for w in booth.windows(2) {
+            let mac_ratio = w[1].config.macs() as f64 / w[0].config.macs() as f64;
+            let area_ratio = w[1].area_mm2 / w[0].area_mm2;
+            let pow_ratio = w[1].power_w / w[0].power_w;
+            assert!(
+                (area_ratio / mac_ratio - 1.0).abs() < 0.1,
+                "{kind:?} area not proportional: {area_ratio} vs {mac_ratio}"
+            );
+            assert!((pow_ratio / mac_ratio - 1.0).abs() < 0.1);
+        }
+        // consistent GOPS/W across sizes
+        let gpw: Vec<f64> = booth.iter().map(|r| r.gops_per_w).collect();
+        let mean = gpw.iter().sum::<f64>() / gpw.len() as f64;
+        assert!(gpw.iter().all(|g| (g - mean).abs() / mean < 0.06));
+        println!(
+            "{}: GOPS/W consistent across sizes (mean {})",
+            kind.name(),
+            f(mean)
+        );
+    }
+
+    // headline: asap7 peak numbers
+    let a7 = AsicModel::new(PdkKind::Asap7).table3_rows();
+    let peak = a7.iter().map(|r| r.peak_gops_at_fmax).fold(0.0, f64::max);
+    let per_mm2 = a7.iter().map(|r| r.gops_per_mm2).fold(0.0, f64::max);
+    let per_w = a7.iter().map(|r| r.gops_per_w).fold(0.0, f64::max);
+    println!(
+        "asap7 headline: up to {} GOPS, {} GOPS/mm2, {} GOPS/W (paper: 73.22 / 552 / 40.8)",
+        f(peak),
+        f(per_mm2),
+        f(per_w)
+    );
+    assert!((peak - 73.22).abs() / 73.22 < 0.05);
+    assert!((per_mm2 - 552.0).abs() / 552.0 < 0.08);
+    assert!((per_w - 40.8).abs() / 40.8 < 0.08);
+    println!("table3 bench OK");
+}

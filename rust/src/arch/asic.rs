@@ -1,0 +1,168 @@
+//! ASIC physical-implementation model — regenerates **Table III**.
+//!
+//! Mirrors the paper's OpenROAD 2.0 flow outputs: maximum frequency,
+//! cell area, and estimated power for each SA topology on each PDK.
+//! Area and power scale proportionally with SA size (the paper's
+//! observation), which yields the near-constant GOPS/W across
+//! implementations that Table III shows; frequency declines gently with
+//! design size. GOPS/area and GOPS/W use the throughput at the target
+//! frequency, peak GOPS uses the maximum frequency — exactly the
+//! paper's reporting convention.
+
+use crate::arch::pdk::{Pdk, PdkKind};
+use crate::arch::throughput::{gops, peak_op_per_cycle};
+use crate::sim::array::SaConfig;
+use crate::sim::mac_common::MacVariant;
+
+/// The ASIC model: a PDK plus the evaluation operand width.
+#[derive(Debug, Clone)]
+pub struct AsicModel {
+    pub pdk: Pdk,
+}
+
+/// One Table III row.
+#[derive(Debug, Clone)]
+pub struct AsicImplementation {
+    pub config: SaConfig,
+    pub pdk_kind: PdkKind,
+    pub max_freq_mhz: f64,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    /// Peak GOPS at maximum frequency (16-bit operands).
+    pub peak_gops_at_fmax: f64,
+    /// GOPS at the PDK target frequency.
+    pub gops_at_target: f64,
+    /// GOPS/mm² at target frequency.
+    pub gops_per_mm2: f64,
+    /// GOPS/W at target frequency.
+    pub gops_per_w: f64,
+}
+
+impl AsicModel {
+    pub fn new(kind: PdkKind) -> Self {
+        AsicModel { pdk: Pdk::get(kind) }
+    }
+
+    /// Evaluate one design point at `bits`-wide operands (Table III
+    /// uses 16).
+    pub fn implement(&self, config: SaConfig, bits: u32) -> AsicImplementation {
+        let macs = config.macs();
+        let (area_f, power_f) = match config.variant {
+            MacVariant::Booth => (1.0, 1.0),
+            MacVariant::Sbmwc => (self.pdk.sbmwc_area_factor, self.pdk.sbmwc_power_factor),
+        };
+        let area = self.pdk.area_per_mac_mm2 * macs as f64 * area_f;
+        let power = self.pdk.power_per_mac_w * macs as f64 * power_f;
+        let fmax = self.pdk.fmax_mhz(macs, config.variant);
+        let opc = peak_op_per_cycle(config.cols as u64, config.rows as u64, bits);
+        let peak = gops(opc, fmax * 1e6);
+        let at_target = gops(opc, self.pdk.target_hz);
+        AsicImplementation {
+            config,
+            pdk_kind: self.pdk.kind,
+            max_freq_mhz: fmax,
+            area_mm2: area,
+            power_w: power,
+            peak_gops_at_fmax: peak,
+            gops_at_target: at_target,
+            gops_per_mm2: at_target / area,
+            gops_per_w: at_target / power,
+        }
+    }
+
+    /// The four rows the paper implements per PDK, in Table III order.
+    pub fn table3_rows(&self) -> Vec<AsicImplementation> {
+        [
+            SaConfig::new(4, 16, MacVariant::Booth),
+            SaConfig::new(4, 16, MacVariant::Sbmwc),
+            SaConfig::new(8, 32, MacVariant::Booth),
+            SaConfig::new(16, 64, MacVariant::Booth),
+        ]
+        .into_iter()
+        .map(|c| self.implement(c, 16))
+        .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table III: (label, fmax MHz, area mm², power W,
+    /// peak GOPS, GOPS@target, GOPS/mm², GOPS/W).
+    const ASAP7: [(&str, f64, f64, f64, f64, f64, f64, f64); 4] = [
+        ("16x4", 1183., 0.008, 0.102, 4.73, 4., 500., 39.2),
+        ("16x4-sbmwc", 1311., 0.011, 0.213, 5.24, 4., 364., 18.8),
+        ("32x8", 1124., 0.029, 0.403, 17.98, 16., 552., 39.7),
+        ("64x16", 1144., 0.118, 1.57, 73.22, 64., 542., 40.8),
+    ];
+    const NANGATE45: [(&str, f64, f64, f64, f64, f64, f64, f64); 4] = [
+        ("16x4", 748., 0.094, 0.214, 2.99, 2., 21.28, 9.35),
+        ("16x4-sbmwc", 730., 0.131, 0.305, 2.92, 2., 15.27, 6.56),
+        ("32x8", 685., 0.378, 0.809, 10.96, 8., 21.16, 9.89),
+        ("64x16", 643., 1.484, 3.28, 41.15, 32., 21.56, 9.76),
+    ];
+
+    fn check_rows(kind: PdkKind, expect: &[(&str, f64, f64, f64, f64, f64, f64, f64); 4]) {
+        let rows = AsicModel::new(kind).table3_rows();
+        for (row, e) in rows.iter().zip(expect) {
+            let rel = |got: f64, want: f64| (got - want).abs() / want;
+            assert!(rel(row.max_freq_mhz, e.1) < 0.045, "{kind:?} {} fmax {} vs {}", e.0, row.max_freq_mhz, e.1);
+            assert!(rel(row.area_mm2, e.2) < 0.07, "{kind:?} {} area {} vs {}", e.0, row.area_mm2, e.2);
+            assert!(rel(row.power_w, e.3) < 0.07, "{kind:?} {} power {} vs {}", e.0, row.power_w, e.3);
+            assert!(rel(row.gops_at_target, e.5) < 1e-9, "{kind:?} {} gops@target", e.0);
+            assert!(rel(row.gops_per_mm2, e.6) < 0.08, "{kind:?} {} gops/mm2 {} vs {}", e.0, row.gops_per_mm2, e.6);
+            assert!(rel(row.gops_per_w, e.7) < 0.08, "{kind:?} {} gops/W {} vs {}", e.0, row.gops_per_w, e.7);
+        }
+    }
+
+    #[test]
+    fn reproduces_table3_asap7() {
+        check_rows(PdkKind::Asap7, &ASAP7);
+    }
+
+    #[test]
+    fn reproduces_table3_nangate45() {
+        check_rows(PdkKind::Nangate45, &NANGATE45);
+    }
+
+    #[test]
+    fn consistent_gops_per_watt_across_sizes() {
+        // "Notably, this results in a consistent throughput-per-watt
+        // across all implementations."
+        for kind in [PdkKind::Asap7, PdkKind::Nangate45] {
+            let rows = AsicModel::new(kind).table3_rows();
+            let booth: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.config.variant == MacVariant::Booth)
+                .map(|r| r.gops_per_w)
+                .collect();
+            let mean = booth.iter().sum::<f64>() / booth.len() as f64;
+            for g in &booth {
+                assert!((g - mean).abs() / mean < 0.05, "{kind:?}: {booth:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn headline_claims() {
+        // "in asap7 it achieves up to 73.22 GOPS, 552 GOPS/mm², and
+        // 40.8 GOPS/W"
+        let rows = AsicModel::new(PdkKind::Asap7).table3_rows();
+        let peak = rows.iter().map(|r| r.peak_gops_at_fmax).fold(0., f64::max);
+        let per_mm2 = rows.iter().map(|r| r.gops_per_mm2).fold(0., f64::max);
+        let per_w = rows.iter().map(|r| r.gops_per_w).fold(0., f64::max);
+        assert!((peak - 73.22).abs() / 73.22 < 0.05, "peak {peak}");
+        assert!((per_mm2 - 552.).abs() / 552. < 0.08, "per_mm2 {per_mm2}");
+        assert!((per_w - 40.8).abs() / 40.8 < 0.08, "per_w {per_w}");
+    }
+
+    #[test]
+    fn smaller_arrays_close_timing_faster() {
+        // "The maximum achievable frequency is higher for smaller SAs"
+        for kind in [PdkKind::Asap7, PdkKind::Nangate45] {
+            let pdk = Pdk::get(kind);
+            assert!(pdk.fmax_mhz(64, MacVariant::Booth) > pdk.fmax_mhz(1024, MacVariant::Booth));
+        }
+    }
+}

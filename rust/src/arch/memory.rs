@@ -1,0 +1,142 @@
+//! Operand-delivery (memory interface) model.
+//!
+//! The SA consumes one bit per cycle per edge stream: `cols` vertical
+//! multiplicand streams and `rows` horizontal multiplier streams
+//! (§III-B) — so sustained compute needs only `rows + cols` bits/cycle
+//! of operand bandwidth, *independent of precision* (a wider operand
+//! takes proportionally more cycles, eq. 8). That is the quantified
+//! version of the paper's §V observation: weights can stay big-endian
+//! in memory, activations little-endian, and no in-memory data
+//! manipulation is needed — the P2S converters do the (de)serialization
+//! on the fly.
+//!
+//! This module sizes the scratchpad for a tile schedule and computes
+//! the bandwidth-limited throughput bound (a memory roofline for the
+//! accelerator), which the DSE example reports alongside the compute
+//! bound of eq. 10.
+
+use crate::sim::array::SaConfig;
+
+/// Memory interface description.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryInterface {
+    /// Bits deliverable per cycle to the accelerator (bus width ×
+    /// utilization).
+    pub bits_per_cycle: f64,
+    /// Scratchpad capacity in bytes.
+    pub scratchpad_bytes: usize,
+}
+
+impl Default for MemoryInterface {
+    fn default() -> Self {
+        // a 64-bit on-chip bus at full rate and a 64 KiB scratchpad —
+        // representative of the embedded SoCs the paper targets
+        MemoryInterface {
+            bits_per_cycle: 64.0,
+            scratchpad_bytes: 64 * 1024,
+        }
+    }
+}
+
+/// Operand-delivery requirement of one SA: bits per cycle during
+/// streaming (each active edge stream consumes one bit per cycle).
+pub fn required_bits_per_cycle(sa: &SaConfig) -> f64 {
+    (sa.rows + sa.cols) as f64
+}
+
+/// Scratchpad bytes needed to double-buffer one `m×k×n` tile at `bits`
+/// precision: A tile + B tile + output accumulators, ×2 for ping-pong.
+pub fn tile_scratchpad_bytes(m: usize, k: usize, n: usize, bits: u32, acc_bits: u32) -> usize {
+    let a_bits = m * k * bits as usize;
+    let b_bits = k * n * bits as usize;
+    let o_bits = m * n * acc_bits as usize;
+    2 * (a_bits + b_bits + o_bits).div_ceil(8)
+}
+
+/// Bandwidth-limited OP/cycle bound: operand streaming for a k-length
+/// dot product moves `(rows + cols)·(k+1)·bits` bits (eq. 8 schedule)
+/// to produce `rows·cols·k` MACs; if the interface can deliver only
+/// `B` bits/cycle the achievable rate caps at
+/// `compute_peak × min(1, B / (rows+cols))`.
+pub fn bandwidth_bound_op_per_cycle(sa: &SaConfig, bits: u32, iface: &MemoryInterface) -> f64 {
+    let compute_peak = crate::arch::throughput::peak_op_per_cycle(sa.cols as u64, sa.rows as u64, bits);
+    let supply_ratio = (iface.bits_per_cycle / required_bits_per_cycle(sa)).min(1.0);
+    compute_peak * supply_ratio
+}
+
+/// Arithmetic intensity: MAC operations per operand byte moved (the
+/// roofline x-axis). `m·n/(m+n)` scaled by `8/bits` — it grows with
+/// the output-tile extents (each A row is reused across all n columns
+/// and vice versa) and is independent of k, which scales operands and
+/// MACs alike.
+pub fn arithmetic_intensity(m: usize, k: usize, n: usize, bits: u32) -> f64 {
+    let macs = (m * k * n) as f64;
+    let bytes = ((m * k + k * n) * bits as usize) as f64 / 8.0;
+    macs / bytes
+}
+
+/// Whether a tile schedule fits the scratchpad with double buffering.
+pub fn fits_scratchpad(sa: &SaConfig, k: usize, bits: u32, iface: &MemoryInterface) -> bool {
+    tile_scratchpad_bytes(sa.rows, k, sa.cols, bits, sa.acc_bits) <= iface.scratchpad_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mac_common::MacVariant;
+
+    fn sa() -> SaConfig {
+        SaConfig::new(4, 16, MacVariant::Booth)
+    }
+
+    #[test]
+    fn bandwidth_requirement_is_precision_independent() {
+        let s = sa();
+        assert_eq!(required_bits_per_cycle(&s), 20.0);
+        // same requirement at any operand width — the bit-serial win
+        let iface = MemoryInterface::default();
+        let b4 = bandwidth_bound_op_per_cycle(&s, 4, &iface);
+        let b16 = bandwidth_bound_op_per_cycle(&s, 16, &iface);
+        // bound scales with compute peak only (4× more OP/c at 4 bits)
+        assert!((b4 / b16 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn narrow_bus_caps_throughput() {
+        let s = SaConfig::new(16, 64, MacVariant::Booth); // 80 streams
+        let narrow = MemoryInterface {
+            bits_per_cycle: 20.0,
+            ..Default::default()
+        };
+        let wide = MemoryInterface {
+            bits_per_cycle: 200.0,
+            ..Default::default()
+        };
+        let capped = bandwidth_bound_op_per_cycle(&s, 8, &narrow);
+        let full = bandwidth_bound_op_per_cycle(&s, 8, &wide);
+        assert!((capped / full - 20.0 / 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scratchpad_sizing() {
+        // 4×64×16 at 8 bits, 48-bit accumulators:
+        // A: 4·64·8 = 2048 b; B: 64·16·8 = 8192 b; O: 4·16·48 = 3072 b
+        // total (2048+8192+3072)/8 = 1664 bytes, ×2 = 3328
+        assert_eq!(tile_scratchpad_bytes(4, 64, 16, 8, 48), 3328);
+        assert!(fits_scratchpad(&sa(), 64, 8, &MemoryInterface::default()));
+        // absurdly long dot products eventually exceed 64 KiB
+        assert!(!fits_scratchpad(&sa(), 200_000, 16, &MemoryInterface::default()));
+    }
+
+    #[test]
+    fn intensity_grows_with_tile_area_not_k() {
+        // independent of k (operands and MACs both scale with k)
+        let i_k16 = arithmetic_intensity(4, 16, 16, 8);
+        let i_k1024 = arithmetic_intensity(4, 1024, 16, 8);
+        assert!((i_k16 - i_k1024).abs() < 1e-12);
+        // larger output tiles reuse operands more
+        assert!(arithmetic_intensity(16, 64, 64, 8) > i_k16);
+        // narrower operands raise MACs-per-byte
+        assert!(arithmetic_intensity(4, 16, 16, 4) > i_k16);
+    }
+}

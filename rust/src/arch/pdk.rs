@@ -1,0 +1,144 @@
+//! Process design kit (PDK) parameter sets for the ASIC model.
+//!
+//! The paper implements bitSMM with OpenROAD 2.0 using two open PDKs:
+//! **asap7** (7 nm predictive FinFET [12]) targeting 1 GHz and
+//! **nangate45** (45 nm [13]) targeting 500 MHz. Constants below are
+//! calibrated on the paper's Table III design points (per-MAC area and
+//! power are near-constant across sizes — "area and power scale
+//! proportionally with SA size"; maximum frequency declines gently with
+//! array size, modelled linearly in log2(#MACs)).
+
+use crate::sim::mac_common::MacVariant;
+
+/// Which PDK.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PdkKind {
+    Asap7,
+    Nangate45,
+}
+
+impl PdkKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PdkKind::Asap7 => "asap7 (7nm)",
+            PdkKind::Nangate45 => "nangate45 (45nm)",
+        }
+    }
+}
+
+impl std::str::FromStr for PdkKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "asap7" | "7nm" => Ok(PdkKind::Asap7),
+            "nangate45" | "45nm" => Ok(PdkKind::Nangate45),
+            other => anyhow::bail!("unknown PDK '{other}' (expected asap7|nangate45)"),
+        }
+    }
+}
+
+/// Calibrated physical parameters of one PDK.
+#[derive(Debug, Clone)]
+pub struct Pdk {
+    pub kind: PdkKind,
+    /// Feature size (nm), informational.
+    pub node_nm: u32,
+    /// Cell area per Booth MAC including its share of P2S/readout
+    /// (mm²/MAC).
+    pub area_per_mac_mm2: f64,
+    /// Power per Booth MAC at the PDK's target frequency (W/MAC).
+    pub power_per_mac_w: f64,
+    /// Max-frequency model: `fmax = fmax0 − fmax_slope · log2(#MACs)`
+    /// (MHz).
+    pub fmax0_mhz: f64,
+    pub fmax_slope_mhz: f64,
+    /// SBMwC multipliers (second adder + difference accumulator).
+    pub sbmwc_area_factor: f64,
+    pub sbmwc_power_factor: f64,
+    pub sbmwc_fmax_factor: f64,
+    /// The paper's target implementation frequency (Hz).
+    pub target_hz: f64,
+}
+
+impl Pdk {
+    pub fn get(kind: PdkKind) -> Pdk {
+        match kind {
+            // Fitted on Table III asap7 rows (see DESIGN.md).
+            PdkKind::Asap7 => Pdk {
+                kind,
+                node_nm: 7,
+                area_per_mac_mm2: 1.178e-4, // mean of 1.250/1.133/1.152e-4
+                power_per_mac_w: 1.567e-3,  // mean of 1.594/1.574/1.533e-3
+                fmax0_mhz: 1228.3,
+                fmax_slope_mhz: 9.75,
+                sbmwc_area_factor: 1.375,
+                sbmwc_power_factor: 2.088,
+                sbmwc_fmax_factor: 1.108, // smaller design closed faster
+                target_hz: 1e9,
+            },
+            // Fitted on Table III nangate45 rows.
+            PdkKind::Nangate45 => Pdk {
+                kind,
+                node_nm: 45,
+                area_per_mac_mm2: 1.465e-3,
+                power_per_mac_w: 3.236e-3,
+                fmax0_mhz: 902.0,
+                fmax_slope_mhz: 26.25,
+                sbmwc_area_factor: 1.394,
+                sbmwc_power_factor: 1.425,
+                sbmwc_fmax_factor: 0.976,
+                target_hz: 500e6,
+            },
+        }
+    }
+
+    /// Maximum frequency (MHz) for a design of `macs` MACs.
+    pub fn fmax_mhz(&self, macs: usize, variant: MacVariant) -> f64 {
+        let base = self.fmax0_mhz - self.fmax_slope_mhz * (macs as f64).log2();
+        match variant {
+            MacVariant::Booth => base,
+            MacVariant::Sbmwc => base * self.sbmwc_fmax_factor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!("asap7".parse::<PdkKind>().unwrap(), PdkKind::Asap7);
+        assert_eq!("NANGATE45".parse::<PdkKind>().unwrap(), PdkKind::Nangate45);
+        assert!("tsmc5".parse::<PdkKind>().is_err());
+    }
+
+    #[test]
+    fn fmax_matches_table3_within_tolerance() {
+        // Table III Max Freq. column (Booth rows)
+        let cases = [
+            (PdkKind::Asap7, 64usize, 1183.0f64),
+            (PdkKind::Asap7, 256, 1124.0),
+            (PdkKind::Asap7, 1024, 1144.0),
+            (PdkKind::Nangate45, 64, 748.0),
+            (PdkKind::Nangate45, 256, 685.0),
+            (PdkKind::Nangate45, 1024, 643.0),
+        ];
+        for (kind, macs, want) in cases {
+            let got = Pdk::get(kind).fmax_mhz(macs, MacVariant::Booth);
+            assert!(
+                (got - want).abs() / want < 0.035,
+                "{kind:?} {macs} MACs: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn seven_nm_is_denser_and_cooler() {
+        let a7 = Pdk::get(PdkKind::Asap7);
+        let n45 = Pdk::get(PdkKind::Nangate45);
+        assert!(a7.area_per_mac_mm2 < n45.area_per_mac_mm2 / 5.0);
+        assert!(a7.power_per_mac_w < n45.power_per_mac_w);
+        assert!(a7.fmax0_mhz > n45.fmax0_mhz);
+    }
+}

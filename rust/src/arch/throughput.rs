@@ -1,0 +1,149 @@
+//! The paper's cycle-count and throughput equations (eqs. 6–10).
+//!
+//! Conventions (see DESIGN.md "Cycle/time model"): the paper counts
+//! **one OP per multiply-accumulate result**, so that e.g. the 64×16
+//! array at 16-bit operands and 300 MHz yields
+//! `64·16/16 × 300 MHz = 19.2 GOPS` — exactly Table II's headline.
+
+/// Documentation constant: the paper's OPS convention (1 OP = 1 MAC).
+pub const PEAK_OPS_CONVENTION: &str = "1 OP = 1 multiply-accumulate";
+
+/// eq. 6 — cycles for a vector dot product in the BISMO/Loom
+/// decomposition (no intra-MAC parallelism): every multiplicand bit is
+/// paired with every multiplier bit.
+pub fn bismo_cycles(b_mc: u64, b_ml: u64, n_values: u64) -> u64 {
+    b_mc * b_ml * n_values
+}
+
+/// eq. 7 — the common operand width both streams are extended to.
+pub fn b_max(b_mc: u32, b_ml: u32) -> u32 {
+    b_mc.max(b_ml)
+}
+
+/// eq. 8 — cycles for a vector dot product on a bitSMM MAC: the
+/// multiplicand leads by `b_max`, then `n` multiplier slots follow.
+pub fn bitsmm_cycles(n_values: u64, b_max: u32) -> u64 {
+    (n_values + 1) * b_max as u64
+}
+
+/// eq. 9 — achieved operations per cycle for a full matrix
+/// multiplication on an `sa_height × sa_width` array (rows × cols),
+/// contracting dimension `n`: the numerator is the total MAC count,
+/// the denominator the compute latency (eq. 8) plus the readout
+/// latency (`sa_width × sa_height` cycles).
+pub fn op_per_cycle(
+    n: u64,
+    matrix_a_width: u64,
+    matrix_b_height: u64,
+    bit_width: u32,
+    sa_width: u64,
+    sa_height: u64,
+) -> f64 {
+    let ops = (n * matrix_a_width * matrix_b_height) as f64;
+    let cycles = ((1 + n) * bit_width as u64 + sa_width * sa_height) as f64;
+    ops / cycles
+}
+
+/// eq. 10 — peak operations per cycle (n → ∞, matrices matching the SA
+/// dimensions): `SA_width × SA_height / bitWidth`.
+pub fn peak_op_per_cycle(sa_width: u64, sa_height: u64, bit_width: u32) -> f64 {
+    (sa_width * sa_height) as f64 / bit_width as f64
+}
+
+/// OPS at a clock frequency: `OP/cycle × f`.
+pub fn gops(op_per_cycle: f64, freq_hz: f64) -> f64 {
+    op_per_cycle * freq_hz / 1e9
+}
+
+/// §III-A latency comparison: bitSMM (eq. 8, with both operands
+/// extended to `b_max`) vs the BISMO-style decomposition (eq. 6).
+/// Returns `(bitsmm, bismo)` cycles. The paper's claim: bitSMM is
+/// lower for all `b_mc > 1 && b_ml > 1`, and they tie only at
+/// `b_mc = b_ml = 2` (asymptotically in n).
+pub fn latency_pair(b_mc: u32, b_ml: u32, n_values: u64) -> (u64, u64) {
+    (
+        bitsmm_cycles(n_values, b_max(b_mc, b_ml)),
+        bismo_cycles(b_mc as u64, b_ml as u64, n_values),
+    )
+}
+
+/// The Fig. 6 series: peak OP/cycle as a function of operand bit width
+/// for one SA topology.
+pub fn fig6_series(sa_width: u64, sa_height: u64, bit_widths: impl Iterator<Item = u32>) -> Vec<(u32, f64)> {
+    bit_widths
+        .map(|b| (b, peak_op_per_cycle(sa_width, sa_height, b)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_headline_numbers_from_eq10() {
+        // Table II GOPS at 300 MHz, 16-bit operands
+        for (cols, rows, expect) in [(16u64, 4u64, 1.2f64), (32, 8, 4.8), (64, 16, 19.2)] {
+            let g = gops(peak_op_per_cycle(cols, rows, 16), 300e6);
+            assert!((g - expect).abs() < 1e-9, "{cols}x{rows}: {g}");
+        }
+    }
+
+    #[test]
+    fn table3_peak_gops_at_max_freq() {
+        // Table III "Peak GOPS (@ Max Freq.)" column, 16-bit operands
+        let cases = [
+            (16u64, 4u64, 1183e6, 4.73f64),
+            (32, 8, 1124e6, 17.98),
+            (64, 16, 1144e6, 73.22),
+            (16, 4, 748e6, 2.99),
+            (32, 8, 685e6, 10.96),
+            (64, 16, 643e6, 41.15),
+        ];
+        for (cols, rows, f, expect) in cases {
+            let g = gops(peak_op_per_cycle(cols, rows, 16), f);
+            assert!(
+                (g - expect).abs() / expect < 0.005,
+                "{cols}x{rows}@{f}: got {g} want {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn eq9_approaches_eq10_as_n_grows() {
+        let (w, h, b) = (64u64, 16u64, 8u32);
+        let peak = peak_op_per_cycle(w, h, b);
+        let at_small = op_per_cycle(64, w, h, b, w, h);
+        let at_large = op_per_cycle(1_000_000, w, h, b, w, h);
+        assert!(at_small < peak);
+        assert!((at_large - peak).abs() / peak < 1e-3);
+    }
+
+    #[test]
+    fn crossover_claim_of_section3a() {
+        // lower latency for all b_mc>1 && b_ml>1 (except the 2,2 tie)
+        let n = 1_000u64;
+        for b_mc in 2..=16u32 {
+            for b_ml in 2..=16u32 {
+                let (ours, theirs) = latency_pair(b_mc, b_ml, n);
+                if b_mc == 2 && b_ml == 2 {
+                    // matches prior approaches only at 2×2 (asymptotically)
+                    assert!(ours as f64 / theirs as f64 <= 1.0 + 2.0 / n as f64);
+                } else {
+                    assert!(ours < theirs, "b=({b_mc},{b_ml}): {ours} !< {theirs}");
+                }
+            }
+        }
+        // …and loses when an operand is 1-bit wide (the BISMO advantage)
+        let (ours, theirs) = latency_pair(1, 16, n);
+        assert!(ours > theirs);
+    }
+
+    #[test]
+    fn fig6_endpoints() {
+        let s = fig6_series(64, 16, 1..=16);
+        assert_eq!(s.first().unwrap(), &(1, 1024.0));
+        assert_eq!(s.last().unwrap(), &(16, 64.0));
+        // monotone decreasing in bit width
+        assert!(s.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+}

@@ -1,0 +1,84 @@
+//! BISMO computation model (Umuroglu et al. [33], [34]; §II-D).
+//!
+//! BISMO decomposes multiplication into bitwise products between
+//! multiplicand and multiplier bits: each pair `(mc[i], ml[j])` is
+//! ANDed and shifted by `i + j`. Without parallelism this needs
+//! `b_mc × b_ml × n` cycles per dot product (the paper's eq. 6). BISMO
+//! recovers throughput with *intra-MAC* parallelism: `dk` operand pairs
+//! are processed simultaneously and a population counter accumulates
+//! the AND results, so effective cycles divide by `dk`.
+//!
+//! Key contrast the paper draws: BISMO supports *asymmetric* operand
+//! widths natively (cycles scale with the product `b_mc·b_ml`), while
+//! bitSMM extends both operands to `b_max` but scales linearly.
+
+use super::SerialDotModel;
+use crate::arch::throughput::bismo_cycles;
+
+/// BISMO model with configurable intra-MAC parallelism.
+#[derive(Debug, Clone)]
+pub struct Bismo {
+    /// Operand pairs processed per MAC per cycle (population-counter
+    /// width). 1 = the pure serial model of eq. 6.
+    pub dk: u64,
+}
+
+impl Bismo {
+    pub fn serial() -> Self {
+        Bismo { dk: 1 }
+    }
+
+    /// The FPGA-optimized configuration of [34] processes whole 64-bit
+    /// words of packed bits per cycle.
+    pub fn optimized() -> Self {
+        Bismo { dk: 64 }
+    }
+
+    /// Cycles for an m×k×n matmul on a `pe` processing-element overlay
+    /// (each PE handles one output dot product at a time).
+    pub fn matmul_cycles(&self, m: u64, k: u64, n: u64, b_mc: u32, b_ml: u32, pe: u64) -> u64 {
+        let dots = m * n;
+        let per_dot = self.dot_cycles(b_mc, b_ml, k);
+        (dots * per_dot).div_ceil(pe)
+    }
+}
+
+impl SerialDotModel for Bismo {
+    fn name(&self) -> &'static str {
+        "bismo"
+    }
+
+    fn dot_cycles(&self, b_mc: u32, b_ml: u32, n_values: u64) -> u64 {
+        bismo_cycles(b_mc as u64, b_ml as u64, n_values).div_ceil(self.dk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq6_serial_case() {
+        // 2-bit × 2-bit over 10 values: 2·2·10 = 40 cycles
+        assert_eq!(Bismo::serial().dot_cycles(2, 2, 10), 40);
+    }
+
+    #[test]
+    fn asymmetric_widths_scale_with_product() {
+        let b = Bismo::serial();
+        assert_eq!(b.dot_cycles(1, 16, 100), 1600);
+        assert_eq!(b.dot_cycles(16, 16, 100), 25600);
+    }
+
+    #[test]
+    fn intra_mac_parallelism_divides() {
+        assert_eq!(Bismo::optimized().dot_cycles(16, 16, 100), 400);
+    }
+
+    #[test]
+    fn matmul_distributes_over_pes() {
+        let b = Bismo::serial();
+        // 4×10×4 at 2 bits on 16 PEs: 16 dots × 40 cycles / 16
+        assert_eq!(b.matmul_cycles(4, 10, 4, 2, 2, 16), 40);
+    }
+}

@@ -1,0 +1,81 @@
+//! FSSA computation model (Moghaddasi & Nam [37]; §II-D).
+//!
+//! A fully serial, mixed-precision systolic array for vision
+//! transformers: weights are preloaded onto the SA (weight-stationary),
+//! each PE multiplies one activation bit with one weight bit, and an
+//! accumulation unit reconstructs outputs. Cycle behaviour follows the
+//! eq.6 family (bit-pair sweeps) with the array providing spatial
+//! parallelism over output elements; the published efficiency figures
+//! quoted in Table IV come from their 28 nm implementation.
+
+use super::SerialDotModel;
+
+/// FSSA model.
+#[derive(Debug, Clone)]
+pub struct Fssa {
+    /// PE array extent (output elements computed concurrently).
+    pub array_rows: u64,
+    pub array_cols: u64,
+}
+
+impl Default for Fssa {
+    fn default() -> Self {
+        // representative edge configuration from [37]
+        Fssa {
+            array_rows: 16,
+            array_cols: 16,
+        }
+    }
+}
+
+impl Fssa {
+    /// Published 28 nm implementation numbers quoted by Table IV.
+    pub const PUBLISHED_GOPS: f64 = 25.75;
+    pub const PUBLISHED_GOPS_PER_W: f64 = 258.0;
+    pub const PUBLISHED_GOPS_PER_MM2: f64 = 40.86;
+
+    /// Cycles for an m×k×n matmul: weights preloaded, bit-pair sweep
+    /// per k-slice, tiles of `array_rows × array_cols` outputs.
+    pub fn matmul_cycles(&self, m: u64, k: u64, n: u64, b_act: u32, b_w: u32) -> u64 {
+        let tiles = m.div_ceil(self.array_rows) * n.div_ceil(self.array_cols);
+        let preload = b_w as u64; // weight bits shifted in serially
+        tiles * (preload + self.dot_cycles(b_w, b_act, k))
+    }
+}
+
+impl SerialDotModel for Fssa {
+    fn name(&self) -> &'static str {
+        "fssa"
+    }
+
+    fn dot_cycles(&self, b_mc: u32, b_ml: u32, n_values: u64) -> u64 {
+        // one activation bit × one weight bit per PE per cycle
+        (b_mc as u64) * (b_ml as u64) * n_values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_precision_scales_with_bit_product() {
+        let f = Fssa::default();
+        assert_eq!(f.dot_cycles(8, 4, 10), 320);
+        assert_eq!(f.dot_cycles(4, 4, 10), 160);
+    }
+
+    #[test]
+    fn matmul_tiles_over_array() {
+        let f = Fssa::default();
+        let one_tile = f.matmul_cycles(16, 32, 16, 8, 8);
+        let four_tiles = f.matmul_cycles(32, 32, 32, 8, 8);
+        assert_eq!(four_tiles, 4 * one_tile);
+    }
+
+    #[test]
+    fn published_numbers_match_table4() {
+        assert_eq!(Fssa::PUBLISHED_GOPS, 25.75);
+        assert_eq!(Fssa::PUBLISHED_GOPS_PER_W, 258.0);
+    }
+}

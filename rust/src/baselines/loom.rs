@@ -1,0 +1,57 @@
+//! Loom computation model (Sharify et al. [31]; §II-D).
+//!
+//! Fully bit-serial on both operands, like BISMO's decomposition
+//! (eq. 6), but with *spatial* parallelism: one bit from each of 16
+//! activations and one bit from each of 16 weights stream into each MAC
+//! concurrently, so a MAC covers a 16-element slice of the dot product
+//! per `b_mc × b_ml` bit-pair sweep.
+
+use super::SerialDotModel;
+
+/// Loom model.
+#[derive(Debug, Clone)]
+pub struct Loom {
+    /// Operand-pair group size streamed concurrently per MAC (16 in
+    /// the paper).
+    pub group: u64,
+}
+
+impl Default for Loom {
+    fn default() -> Self {
+        Loom { group: 16 }
+    }
+}
+
+impl SerialDotModel for Loom {
+    fn name(&self) -> &'static str {
+        "loom"
+    }
+
+    fn dot_cycles(&self, b_mc: u32, b_ml: u32, n_values: u64) -> u64 {
+        // groups of `group` values, each needing a full bit-pair sweep
+        n_values.div_ceil(self.group) * (b_mc as u64) * (b_ml as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_parallelism() {
+        let l = Loom::default();
+        // 16 values, 8×8 bits: one sweep = 64 cycles
+        assert_eq!(l.dot_cycles(8, 8, 16), 64);
+        // 17 values: two sweeps
+        assert_eq!(l.dot_cycles(8, 8, 17), 128);
+    }
+
+    #[test]
+    fn degenerates_to_eq6_with_group_1() {
+        let l = Loom { group: 1 };
+        assert_eq!(
+            l.dot_cycles(5, 7, 100),
+            crate::arch::throughput::bismo_cycles(5, 7, 100)
+        );
+    }
+}

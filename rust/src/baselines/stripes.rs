@@ -1,0 +1,76 @@
+//! Stripes computation model (Judd et al. [28]; §II-D).
+//!
+//! Serial–parallel multiplication: the multiplier (activation) streams
+//! bit-serially while the multiplicand (weight) is stored and supplied
+//! in 16-bit parallel form. A dot product therefore takes
+//! `b_ml × n` cycles — independent of the weight precision, which is
+//! fixed at the parallel width. Dynamic Stripes [29] adapts `b_ml` at
+//! runtime to the activations' actual precision needs; we model that as
+//! a per-call effective width.
+
+use super::SerialDotModel;
+
+/// Stripes model.
+#[derive(Debug, Clone)]
+pub struct Stripes {
+    /// Parallel weight width (16 in the paper).
+    pub weight_bits: u32,
+}
+
+impl Default for Stripes {
+    fn default() -> Self {
+        Stripes { weight_bits: 16 }
+    }
+}
+
+impl Stripes {
+    /// Dynamic-Stripes effective activation width: the minimum width
+    /// that covers the largest-magnitude activation in the group.
+    pub fn dynamic_effective_bits(activations: &[i32]) -> u32 {
+        activations
+            .iter()
+            .map(|&a| {
+                // smallest two's-complement width that holds `a`
+                let mut w = 1u32;
+                while !(crate::bits::twos::min_value(w) <= a && a <= crate::bits::twos::max_value(w)) {
+                    w += 1;
+                }
+                w
+            })
+            .max()
+            .unwrap_or(1)
+    }
+}
+
+impl SerialDotModel for Stripes {
+    fn name(&self) -> &'static str {
+        "stripes"
+    }
+
+    /// `b_mc` is ignored: weights are bit-parallel at `weight_bits`.
+    fn dot_cycles(&self, _b_mc: u32, b_ml: u32, n_values: u64) -> u64 {
+        b_ml as u64 * n_values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_independent_of_weight_precision() {
+        let s = Stripes::default();
+        assert_eq!(s.dot_cycles(1, 8, 100), s.dot_cycles(16, 8, 100));
+        assert_eq!(s.dot_cycles(16, 8, 100), 800);
+    }
+
+    #[test]
+    fn dynamic_width_tracks_magnitudes() {
+        assert_eq!(Stripes::dynamic_effective_bits(&[0]), 1);
+        assert_eq!(Stripes::dynamic_effective_bits(&[-1, 0]), 1);
+        assert_eq!(Stripes::dynamic_effective_bits(&[1]), 2); // +1 needs 2 bits
+        assert_eq!(Stripes::dynamic_effective_bits(&[7, -8]), 4);
+        assert_eq!(Stripes::dynamic_effective_bits(&[127]), 8);
+        assert_eq!(Stripes::dynamic_effective_bits(&[-32768]), 16);
+    }
+}

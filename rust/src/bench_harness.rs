@@ -1,0 +1,138 @@
+//! Micro-benchmark harness (offline environment — no `criterion`; see
+//! DESIGN.md substitutions). Provides warm-up, repeated timed runs,
+//! and robust summary statistics for the `rust/benches/` targets.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Throughput in "units"/second given units-per-iteration.
+    pub fn per_second(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean.as_secs_f64()
+    }
+
+    pub fn format(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12?}  median {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.median, self.p95, self.min
+        )
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    /// Stop adding iterations once this much time has been measured.
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            min_iters: 10,
+            target_time: Duration::from_millis(500),
+        }
+    }
+}
+
+/// Time `f` under `cfg`, returning summary statistics. The closure's
+/// return value is passed through `std::hint::black_box` to prevent
+/// dead-code elimination.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < cfg.min_iters as usize
+        || (start.elapsed() < cfg.target_time && samples.len() < 100_000)
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+        if samples.len() >= cfg.min_iters as usize && start.elapsed() >= cfg.target_time {
+            break;
+        }
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [Duration]) -> BenchResult {
+    samples.sort_unstable();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let pick = |p: f64| samples[((p * (n as f64 - 1.0)).round() as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean: sum / n as u32,
+        median: pick(0.5),
+        p95: pick(0.95),
+        min: samples[0],
+    }
+}
+
+/// Print a standard bench header so all targets look uniform.
+pub fn header(target: &str, what: &str) {
+    println!("\n### bench target: {target}");
+    println!("### {what}\n");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_minimum_iterations() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 25,
+            target_time: Duration::ZERO,
+        };
+        let mut count = 0u64;
+        let r = bench("count", cfg, || {
+            count += 1;
+            count
+        });
+        assert!(r.iters >= 25);
+        assert!(count >= 26); // warmup + iters
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn per_second_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(100),
+            median: Duration::from_millis(100),
+            p95: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+        };
+        assert!((r.per_second(50.0) - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_contains_name() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 3,
+            target_time: Duration::ZERO,
+        };
+        let r = bench("fmt-check", cfg, || 1 + 1);
+        assert!(r.format().contains("fmt-check"));
+    }
+}

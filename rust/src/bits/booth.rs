@@ -1,0 +1,160 @@
+//! Radix-2 Booth recoding (paper §II-A, Table I, eq. 5).
+//!
+//! Booth's algorithm scans the multiplier LSb-first and, at each bit
+//! position `i`, inspects the pair `(ml[i], ml[i-1])` (with
+//! `ml[-1] = 0`). The pair selects one of three actions (Table I):
+//!
+//! | pair (cur, prev) | action            | signed digit |
+//! |------------------|-------------------|--------------|
+//! | 00               | shift only        |  0           |
+//! | 01               | +M, shift         | +1           |
+//! | 10               | −M, shift         | −1           |
+//! | 11               | shift only        |  0           |
+//!
+//! so the multiplier decomposes into signed digits
+//! `d_i = ml[i-1] − ml[i]` with `ML = Σ d_i · 2^i`, which handles the
+//! two's-complement sign bit with no correction step — the property the
+//! Booth-based MAC exploits to need only a single adder (§III-A).
+
+use super::twos::{encode, Bits};
+
+/// The action Booth recoding selects for one multiplier bit pair
+/// (paper Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoothAction {
+    /// Pair 00 or 11: accumulate nothing, just shift.
+    Shift,
+    /// Pair 01: add the (shifted) multiplicand.
+    AddM,
+    /// Pair 10: subtract the (shifted) multiplicand.
+    SubM,
+}
+
+impl BoothAction {
+    /// Classify a (current, previous) multiplier bit pair.
+    pub fn from_pair(cur: bool, prev: bool) -> Self {
+        match (cur, prev) {
+            (false, true) => BoothAction::AddM,
+            (true, false) => BoothAction::SubM,
+            _ => BoothAction::Shift,
+        }
+    }
+
+    /// The signed digit {−1, 0, +1} this action contributes.
+    pub fn digit(self) -> i32 {
+        match self {
+            BoothAction::Shift => 0,
+            BoothAction::AddM => 1,
+            BoothAction::SubM => -1,
+        }
+    }
+}
+
+/// Booth signed digits of `ml` (LSb-first): `d_i = ml[i-1] − ml[i]`.
+///
+/// Invariant (checked by tests): `Σ d_i · 2^i == ml.value`.
+pub fn booth_digits(ml: Bits) -> Vec<i32> {
+    let pat = encode(ml.value, ml.width);
+    let mut prev = false; // ml[-1] = 0 ("we assume the previous bit is 0")
+    let mut digits = Vec::with_capacity(ml.width as usize);
+    for i in 0..ml.width {
+        let cur = (pat >> i) & 1 == 1;
+        digits.push(BoothAction::from_pair(cur, prev).digit());
+        prev = cur;
+    }
+    digits
+}
+
+/// Reference Booth multiplication: `mc × ml` via the digit expansion.
+/// This is the oracle the Booth MAC simulator is tested against.
+pub fn booth_mul(mc: Bits, ml: Bits) -> i64 {
+    booth_digits(ml)
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| (d as i64) * (mc.value as i64) << i)
+        .sum()
+}
+
+/// Number of add/sub operations Booth recoding performs for `ml` —
+/// the switching-activity proxy used by the power model: a Booth MAC
+/// only fires its adder when consecutive multiplier bits differ.
+pub fn booth_addsub_count(ml: Bits) -> u32 {
+    booth_digits(ml).iter().filter(|&&d| d != 0).count() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::twos::{max_value, min_value};
+
+    #[test]
+    fn table1_pairs() {
+        assert_eq!(BoothAction::from_pair(false, false), BoothAction::Shift);
+        assert_eq!(BoothAction::from_pair(false, true), BoothAction::AddM);
+        assert_eq!(BoothAction::from_pair(true, false), BoothAction::SubM);
+        assert_eq!(BoothAction::from_pair(true, true), BoothAction::Shift);
+    }
+
+    #[test]
+    fn paper_eq4_run_decompositions() {
+        // 0110₂ = 2³ − 2¹ = 6 (paper eq. 4)
+        let d = booth_digits(Bits::new(6, 4).unwrap());
+        assert_eq!(d, vec![0, -1, 0, 1]);
+        // 1110₂ = −2¹ = −2 (paper eq. 4)
+        let d = booth_digits(Bits::new(-2, 4).unwrap());
+        assert_eq!(d, vec![0, -1, 0, 0]);
+    }
+
+    #[test]
+    fn paper_eq5_example() {
+        // 0110 × 1110 = 6 × −2 = −12 (paper eq. 5)
+        let mc = Bits::new(6, 4).unwrap();
+        let ml = Bits::new(-2, 4).unwrap();
+        assert_eq!(booth_mul(mc, ml), -12);
+    }
+
+    #[test]
+    fn digits_reconstruct_value_exhaustive() {
+        for width in 1..=10u32 {
+            for v in min_value(width)..=max_value(width) {
+                let ml = Bits::new(v, width).unwrap();
+                let sum: i64 = booth_digits(ml)
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &d)| (d as i64) << i)
+                    .sum();
+                assert_eq!(sum, v as i64, "w={width} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn booth_mul_exhaustive_4bit() {
+        for a in -8..=7 {
+            for b in -8..=7 {
+                let mc = Bits::new(a, 4).unwrap();
+                let ml = Bits::new(b, 4).unwrap();
+                assert_eq!(booth_mul(mc, ml), (a as i64) * (b as i64));
+            }
+        }
+    }
+
+    #[test]
+    fn one_bit_operands() {
+        // 1-bit two's complement: bit pattern 1 = −1, 0 = 0.
+        let m1 = Bits::new(-1, 1).unwrap();
+        let z = Bits::new(0, 1).unwrap();
+        assert_eq!(booth_mul(m1, m1), 1);
+        assert_eq!(booth_mul(m1, z), 0);
+        assert_eq!(booth_mul(z, m1), 0);
+    }
+
+    #[test]
+    fn addsub_activity_bounds() {
+        // alternating bits maximize adder activity; 0 and −1 minimize it
+        assert_eq!(booth_addsub_count(Bits::new(0, 8).unwrap()), 0);
+        assert_eq!(booth_addsub_count(Bits::new(-1, 8).unwrap()), 1);
+        // 0b01010101 = 85: every pair differs → 8 add/subs
+        assert_eq!(booth_addsub_count(Bits::new(85, 8).unwrap()), 8);
+    }
+}

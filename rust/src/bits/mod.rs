@@ -1,0 +1,22 @@
+//! Bit-level arithmetic ground truth.
+//!
+//! Everything the paper's hardware does reduces to two's-complement
+//! arithmetic over 1..=16-bit operands (§II-A). This module is the
+//! *software* definition of that arithmetic: the cycle-accurate
+//! simulator ([`crate::sim`]) is tested against it, the analytical
+//! models use its widths, and the quantizer clamps to its ranges.
+//!
+//! Submodules:
+//! * [`twos`] — two's-complement encode/decode, ranges, wrapping.
+//! * [`booth`] — radix-2 Booth recoding (paper Table I / eq. 5).
+//! * [`plane`] — bit-plane decomposition of integer matrices (the
+//!   TPU-side re-expression of bit-serial streaming, see
+//!   DESIGN.md §Hardware-Adaptation).
+
+pub mod booth;
+pub mod plane;
+pub mod twos;
+
+pub use booth::{booth_digits, booth_mul, BoothAction};
+pub use plane::{bit_planes_sbmwc, booth_planes, reconstruct_sbmwc};
+pub use twos::{decode, encode, max_value, min_value, wrap_to, Bits};

@@ -1,0 +1,151 @@
+//! Bit-plane decomposition of integer matrices.
+//!
+//! This is the TPU-side re-expression of bit-serial streaming (see
+//! DESIGN.md §Hardware-Adaptation): instead of feeding one bit per
+//! *cycle* into a tiny MAC, we feed one bit-*plane* per grid step into
+//! a dense matmul. The two decompositions here mirror the paper's two
+//! MAC variants:
+//!
+//! * **SBMwC planes** — raw `{0,1}` bit planes; the sign (MSb) plane
+//!   carries weight `−2^(b−1)` (the "correction" of §II-A eq. 2).
+//! * **Booth planes** — `{−1,0,+1}` signed-digit planes
+//!   (`d_i = ml[i-1] − ml[i]`, Table I); every plane carries weight
+//!   `+2^i`.
+//!
+//! The Pallas kernel (`python/compile/kernels/bitserial_matmul.py`)
+//! performs the same decompositions; these functions are its Rust-side
+//! oracle and are used by the coordinator's functional fallback path.
+
+use super::twos::encode;
+
+/// SBMwC bit planes of an integer matrix (row-major `data`, values must
+/// fit in `bits` two's complement). Returns `bits` planes of `{0,1}`,
+/// plane `i` = bit `i` (LSb = plane 0).
+///
+/// Reconstruction: `x = Σ_{i<b-1} plane_i·2^i − plane_{b-1}·2^{b-1}`.
+pub fn bit_planes_sbmwc(data: &[i32], bits: u32) -> Vec<Vec<i8>> {
+    (0..bits)
+        .map(|i| {
+            data.iter()
+                .map(|&v| ((encode(v, bits) >> i) & 1) as i8)
+                .collect()
+        })
+        .collect()
+}
+
+/// Booth signed-digit planes: `bits` planes with entries in `{−1,0,+1}`.
+///
+/// Reconstruction: `x = Σ_i plane_i · 2^i` (no sign correction needed).
+pub fn booth_planes(data: &[i32], bits: u32) -> Vec<Vec<i8>> {
+    (0..bits)
+        .map(|i| {
+            data.iter()
+                .map(|&v| {
+                    let pat = encode(v, bits);
+                    let cur = ((pat >> i) & 1) as i8;
+                    let prev = if i == 0 { 0 } else { ((pat >> (i - 1)) & 1) as i8 };
+                    prev - cur // d_i = ml[i-1] − ml[i]
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Reconstruct values from SBMwC planes (test helper / functional path).
+pub fn reconstruct_sbmwc(planes: &[Vec<i8>], bits: u32) -> Vec<i32> {
+    let n = planes[0].len();
+    (0..n)
+        .map(|j| {
+            let mut v: i32 = 0;
+            for (i, p) in planes.iter().enumerate() {
+                let w = 1i32 << i;
+                let w = if i as u32 == bits - 1 { -w } else { w };
+                v += (p[j] as i32) * w;
+            }
+            v
+        })
+        .collect()
+}
+
+/// Reconstruct values from Booth planes.
+pub fn reconstruct_booth(planes: &[Vec<i8>]) -> Vec<i32> {
+    let n = planes[0].len();
+    (0..n)
+        .map(|j| {
+            planes
+                .iter()
+                .enumerate()
+                .map(|(i, p)| (p[j] as i32) << i)
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::twos::{max_value, min_value};
+
+    #[test]
+    fn sbmwc_roundtrip_exhaustive() {
+        for bits in 1..=10u32 {
+            let vals: Vec<i32> = (min_value(bits)..=max_value(bits)).collect();
+            let planes = bit_planes_sbmwc(&vals, bits);
+            assert_eq!(planes.len(), bits as usize);
+            assert_eq!(reconstruct_sbmwc(&planes, bits), vals);
+        }
+    }
+
+    #[test]
+    fn booth_roundtrip_exhaustive() {
+        for bits in 1..=10u32 {
+            let vals: Vec<i32> = (min_value(bits)..=max_value(bits)).collect();
+            let planes = booth_planes(&vals, bits);
+            assert_eq!(planes.len(), bits as usize);
+            assert_eq!(reconstruct_booth(&planes), vals);
+        }
+    }
+
+    #[test]
+    fn plane_entries_in_range() {
+        let vals: Vec<i32> = (-128..=127).collect();
+        for p in bit_planes_sbmwc(&vals, 8) {
+            assert!(p.iter().all(|&x| x == 0 || x == 1));
+        }
+        for p in booth_planes(&vals, 8) {
+            assert!(p.iter().all(|&x| (-1..=1).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn plane_matmul_equals_int_matmul() {
+        // 2×3 · 3×2 at 4 bits through Booth planes of the B operand:
+        // A·B = Σ_i 2^i (A · D_i)  — the identity the Pallas kernel uses.
+        let a = [1i32, -2, 3, 4, -5, 6]; // 2×3
+        let b = [7i32, -8, 5, -4, 3, 2]; // 3×2, all fit in 4 bits
+        let bits = 4;
+        let planes = booth_planes(&b, bits);
+        let mut acc = [0i64; 4]; // 2×2
+        for (i, plane) in planes.iter().enumerate() {
+            for r in 0..2 {
+                for c in 0..2 {
+                    let mut dot = 0i64;
+                    for k in 0..3 {
+                        dot += (a[r * 3 + k] as i64) * (plane[k * 2 + c] as i64);
+                    }
+                    acc[r * 2 + c] += dot << i;
+                }
+            }
+        }
+        // plain integer matmul reference
+        let mut expect = [0i64; 4];
+        for r in 0..2 {
+            for c in 0..2 {
+                for k in 0..3 {
+                    expect[r * 2 + c] += (a[r * 3 + k] as i64) * (b[k * 2 + c] as i64);
+                }
+            }
+        }
+        assert_eq!(acc, expect);
+    }
+}

@@ -1,0 +1,159 @@
+//! Two's-complement encode/decode helpers for 1..=16-bit operands.
+//!
+//! The hardware fixes the *maximum* operand width at compile time
+//! (16 bits in the paper) but the *effective* precision is a runtime
+//! knob (§III-A). All conversions here are explicit about the width so
+//! tests can sweep every width the hardware supports.
+
+/// A value annotated with its operand width — the unit the P2S
+/// converters serialize and the MACs consume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Bits {
+    /// The signed value. Invariant: fits in `width` bits two's complement.
+    pub value: i32,
+    /// Operand width in bits, 1..=16.
+    pub width: u32,
+}
+
+impl Bits {
+    /// Construct, checking the value fits in `width` bits.
+    pub fn new(value: i32, width: u32) -> Option<Self> {
+        if (1..=16).contains(&width) && value >= min_value(width) && value <= max_value(width) {
+            Some(Bits { value, width })
+        } else {
+            None
+        }
+    }
+
+    /// Bit `i` (0 = LSb) of the two's-complement encoding.
+    pub fn bit(&self, i: u32) -> bool {
+        debug_assert!(i < self.width);
+        (encode(self.value, self.width) >> i) & 1 == 1
+    }
+
+    /// Bits MSb-first — the order the vertical (multiplicand) P2S
+    /// converters emit (§III-B).
+    pub fn bits_msb_first(&self) -> Vec<bool> {
+        (0..self.width).rev().map(|i| self.bit(i)).collect()
+    }
+
+    /// Bits LSb-first — the order the horizontal (multiplier) P2S
+    /// converters emit (§III-B).
+    pub fn bits_lsb_first(&self) -> Vec<bool> {
+        (0..self.width).map(|i| self.bit(i)).collect()
+    }
+}
+
+/// Smallest representable value at `width` bits (two's complement).
+pub const fn min_value(width: u32) -> i32 {
+    -(1 << (width - 1))
+}
+
+/// Largest representable value at `width` bits (two's complement).
+pub const fn max_value(width: u32) -> i32 {
+    (1 << (width - 1)) - 1
+}
+
+/// Encode a signed value into its `width`-bit two's-complement pattern
+/// (returned in the low `width` bits; upper bits zero).
+pub fn encode(value: i32, width: u32) -> u32 {
+    debug_assert!((1..=31).contains(&width));
+    debug_assert!(
+        value >= min_value(width) && value <= max_value(width),
+        "{value} does not fit in {width} bits"
+    );
+    (value as u32) & low_mask(width)
+}
+
+/// Decode a `width`-bit two's-complement pattern into a signed value.
+pub fn decode(pattern: u32, width: u32) -> i32 {
+    debug_assert!((1..=31).contains(&width));
+    let pattern = pattern & low_mask(width);
+    let sign = 1u32 << (width - 1);
+    if pattern & sign != 0 {
+        (pattern as i32) - (1i32 << width)
+    } else {
+        pattern as i32
+    }
+}
+
+/// Wrap an arbitrarily wide signed value into `width`-bit two's
+/// complement (what a hardware register of that width would hold).
+///
+/// Hot path: called on every accumulator write in the simulator, so
+/// this is mask arithmetic (power-of-two modulus), not `rem_euclid` —
+/// the latter emits a hardware divide (§Perf change 1).
+#[inline(always)]
+pub fn wrap_to(value: i64, width: u32) -> i64 {
+    debug_assert!((1..=63).contains(&width));
+    let shift = 64 - width;
+    // keep the low `width` bits and sign-extend them
+    (value << shift) >> shift
+}
+
+/// Mask with the low `width` bits set.
+pub const fn low_mask(width: u32) -> u32 {
+    if width >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << width) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(min_value(1), -1);
+        assert_eq!(max_value(1), 0);
+        assert_eq!(min_value(8), -128);
+        assert_eq!(max_value(8), 127);
+        assert_eq!(min_value(16), -32768);
+        assert_eq!(max_value(16), 32767);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_exhaustive() {
+        for width in 1..=12u32 {
+            for v in min_value(width)..=max_value(width) {
+                assert_eq!(decode(encode(v, width), width), v, "w={width} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_example_eq2_operands() {
+        // 0110₂ = 6, 1110₂ = −2 at 4 bits (paper eq. 2).
+        assert_eq!(decode(0b0110, 4), 6);
+        assert_eq!(decode(0b1110, 4), -2);
+        assert_eq!(encode(-2, 4), 0b1110);
+    }
+
+    #[test]
+    fn bit_orders() {
+        let b = Bits::new(-2, 4).unwrap(); // 1110
+        assert_eq!(b.bits_msb_first(), vec![true, true, true, false]);
+        assert_eq!(b.bits_lsb_first(), vec![false, true, true, true]);
+    }
+
+    #[test]
+    fn wrapping() {
+        assert_eq!(wrap_to(128, 8), -128);
+        assert_eq!(wrap_to(-129, 8), 127);
+        assert_eq!(wrap_to(255, 8), -1);
+        assert_eq!(wrap_to(42, 8), 42);
+        // wide accumulator never wraps in the tested regimes
+        assert_eq!(wrap_to(1 << 40, 48), 1 << 40);
+    }
+
+    #[test]
+    fn new_rejects_out_of_range() {
+        assert!(Bits::new(8, 4).is_none());
+        assert!(Bits::new(-9, 4).is_none());
+        assert!(Bits::new(7, 4).is_some());
+        assert!(Bits::new(0, 0).is_none());
+        assert!(Bits::new(0, 17).is_none());
+    }
+}

@@ -1,0 +1,207 @@
+//! Argument-parsing substrate (offline environment — no `clap`; see
+//! DESIGN.md substitutions). Supports subcommands, `--flag value`,
+//! `--flag=value`, boolean switches, defaults, and generated help.
+
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// Declarative specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// A parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Positional arguments after options.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    /// Required-with-default convenience.
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get_parse(name)?
+            .ok_or_else(|| anyhow::anyhow!("missing required option --{name}"))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// A subcommand definition.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default,
+            is_switch: false,
+        });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_switch: true,
+        });
+        self
+    }
+
+    /// Parse `argv` (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.help()))?;
+                if spec.is_switch {
+                    anyhow::ensure!(inline.is_none(), "--{name} takes no value");
+                    args.switches.push(name.to_string());
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    args.values.insert(name.to_string(), value);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Usage text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_switch { "" } else { " <value>" };
+            let default = o
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\t{}{default}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("demo", "test command")
+            .opt("bits", "operand width", Some("8"))
+            .opt("sa", "array geometry", Some("16x4"))
+            .switch("verbose", "chatty output")
+    }
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&v(&[])).unwrap();
+        assert_eq!(a.get("bits"), Some("8"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&v(&["--bits", "4", "--sa=32x8", "--verbose"])).unwrap();
+        assert_eq!(a.req::<u32>("bits").unwrap(), 4);
+        assert_eq!(a.get("sa"), Some("32x8"));
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected_with_help() {
+        let e = cmd().parse(&v(&["--nope"])).unwrap_err().to_string();
+        assert!(e.contains("unknown option"));
+        assert!(e.contains("--bits"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&v(&["--bits"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&v(&["run", "--bits", "2", "fast"])).unwrap();
+        assert_eq!(a.positional, vec!["run", "fast"]);
+    }
+
+    #[test]
+    fn parse_errors_carry_context() {
+        let e = cmd().parse(&v(&["--bits", "abc"])).unwrap().req::<u32>("bits");
+        assert!(e.unwrap_err().to_string().contains("--bits=abc"));
+    }
+}

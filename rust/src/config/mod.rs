@@ -1,0 +1,239 @@
+//! TOML-subset configuration parser (offline environment — no `serde`
+//! / `toml`; see DESIGN.md substitutions).
+//!
+//! Supports the subset the launcher needs: `[section]` and
+//! `[section.sub]` headers, `key = value` with strings, integers,
+//! floats, booleans, and flat arrays, plus `#` comments. Values are
+//! addressed by dotted path (`"server.workers"`).
+
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat dotted-path configuration map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let h = h
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                anyhow::ensure!(!h.is_empty(), "line {}: empty section", lineno + 1);
+                section = h.to_string();
+            } else {
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                let value = parse_value(v.trim())
+                    .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+                anyhow::ensure!(
+                    cfg.entries.insert(key.clone(), value).is_none(),
+                    "line {}: duplicate key {key}",
+                    lineno + 1
+                );
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no escape handling needed for the subset: '#' inside strings is
+    // not supported; keep the launcher configs simple
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    anyhow::ensure!(!s.is_empty(), "empty value");
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?
+            .trim();
+        if body.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>> = body.split(',').map(|i| parse_value(i.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# bitSMM launcher config
+name = "demo"
+
+[sa]
+rows = 4
+cols = 16
+variant = "booth"
+
+[server]
+workers = 2
+linger_ms = 2.5
+pjrt = true
+layer_bits = [8, 4, 4]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", "?"), "demo");
+        assert_eq!(c.int_or("sa.rows", 0), 4);
+        assert_eq!(c.str_or("sa.variant", "?"), "booth");
+        assert_eq!(c.float_or("server.linger_ms", 0.0), 2.5);
+        assert!(c.bool_or("server.pjrt", false));
+        let arr = c.get("server.layer_bits").unwrap().as_array().unwrap();
+        assert_eq!(
+            arr.iter().map(|v| v.as_int().unwrap()).collect::<Vec<_>>(),
+            vec![8, 4, 4]
+        );
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "x"), "x");
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let c = Config::parse("a = \"has # inside\" # trailing\n").unwrap();
+        assert_eq!(c.str_or("a", "?"), "has # inside");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("a = \n").is_err());
+        assert!(Config::parse("a = 1\na = 2\n").is_err());
+        assert!(Config::parse("a = \"oops\n").is_err());
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let c = Config::parse("x = 3\n").unwrap();
+        assert_eq!(c.float_or("x", 0.0), 3.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! Dynamic batcher: groups inference requests into batches to raise SA
+//! occupancy (larger effective M per matmul → more MAC rows active),
+//! bounded by a maximum batch size and a linger deadline — the standard
+//! serving trade between throughput and tail latency.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batcher tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// How long an incomplete batch may wait for more requests.
+    pub linger: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            linger: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A batch handed to the execution engine.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub items: Vec<T>,
+    /// When the oldest item entered the queue (for latency accounting).
+    pub oldest: Instant,
+}
+
+struct Inner<T> {
+    queue: VecDeque<(T, Instant)>,
+    closed: bool,
+}
+
+/// Thread-safe dynamic batcher.
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Batcher {
+            cfg,
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one request.
+    pub fn push(&self, item: T) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue.push_back((item, Instant::now()));
+        drop(g);
+        self.cv.notify_one();
+    }
+
+    /// Signal that no more requests will arrive; blocked `next_batch`
+    /// callers drain and then observe `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Current queue depth (for backpressure decisions).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Block for the next batch: returns as soon as `max_batch` items
+    /// are available, or when the linger deadline passes with at least
+    /// one item, or `None` once closed and drained.
+    pub fn next_batch(&self) -> Option<Batch<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            // wait for the first item (or closure)
+            while g.queue.is_empty() {
+                if g.closed {
+                    return None;
+                }
+                g = self.cv.wait(g).unwrap();
+            }
+            // have at least one: linger for a full batch
+            let deadline = Instant::now() + self.cfg.linger;
+            while g.queue.len() < self.cfg.max_batch && !g.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g2, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                g = g2;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            if g.queue.is_empty() {
+                continue; // raced with another consumer
+            }
+            let take = g.queue.len().min(self.cfg.max_batch);
+            let mut items = Vec::with_capacity(take);
+            let mut oldest = Instant::now();
+            for _ in 0..take {
+                let (item, t) = g.queue.pop_front().unwrap();
+                oldest = oldest.min(t);
+                items.push(item);
+            }
+            return Some(Batch { items, oldest });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_batch_returns_immediately() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 3,
+            linger: Duration::from_secs(10), // would hang if linger waited
+        });
+        for i in 0..3 {
+            b.push(i);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn linger_flushes_partial_batch() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            linger: Duration::from_millis(5),
+        });
+        b.push(42);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![42]);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 2,
+            linger: Duration::from_millis(1),
+        });
+        b.push(1);
+        b.close();
+        assert_eq!(b.next_batch().unwrap().items, vec![1]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_all_served() {
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+        }));
+        let n = 64;
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let b2 = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..n / 4 {
+                    b2.push(t * 1000 + i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        b.close();
+        let mut seen = 0;
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.items.len() <= 4);
+            seen += batch.items.len();
+        }
+        assert_eq!(seen, n as usize);
+    }
+}

@@ -1,0 +1,245 @@
+//! CLI entry points for the launcher binary (kept in the library so
+//! integration tests can exercise them).
+
+use crate::cli::Args;
+use crate::coordinator::scheduler::Backend;
+use crate::coordinator::server::{serve_all, ServerConfig};
+use crate::coordinator::BatcherConfig;
+use crate::prng::Pcg32;
+use crate::report::{f, Table};
+use crate::sim::array::SaConfig;
+use crate::sim::mac_common::MacVariant;
+use crate::Result;
+use std::sync::Arc;
+
+/// Parse the paper's `colsxrows` geometry notation ("16x4" = 16
+/// columns × 4 rows).
+pub struct SaParse;
+
+impl SaParse {
+    pub fn parse(s: &str, variant: MacVariant) -> Result<SaConfig> {
+        let (cols, rows) = s
+            .split_once('x')
+            .ok_or_else(|| anyhow::anyhow!("geometry '{s}' should be colsxrows, e.g. 16x4"))?;
+        let cols: usize = cols.trim().parse()?;
+        let rows: usize = rows.trim().parse()?;
+        anyhow::ensure!(rows >= 1 && cols >= 1, "degenerate geometry {s}");
+        Ok(SaConfig::new(rows, cols, variant))
+    }
+}
+
+/// `bitsmm serve` implementation.
+pub fn serve_all_entry(args: &Args) -> Result<()> {
+    let variant: MacVariant = args.req::<String>("variant")?.parse()?;
+    let sa = SaParse::parse(args.get("sa").unwrap(), variant)?;
+    let backend = match args.get("backend").unwrap() {
+        "native" => Backend::Native,
+        "simulate" => Backend::Simulate,
+        "pjrt" => {
+            let dir = args
+                .get("artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(crate::runtime::default_artifact_dir);
+            let (engine, _join) = crate::runtime::EngineHandle::spawn(&dir)?;
+            println!("pjrt engine up ({} artifacts warm)", engine.warm_up()?);
+            Backend::Pjrt(engine)
+        }
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let model = match args.get("model").unwrap() {
+        "mlp" => crate::nn::model::mlp_zoo(1),
+        "attn" => anyhow::bail!("attention serving uses examples/e2e_serving.rs (token inputs)"),
+        other => anyhow::bail!("unknown model '{other}'"),
+    };
+    let n_requests: usize = args.req("requests")?;
+    let mut cfg = ServerConfig::new(sa, backend);
+    cfg.workers = args.req("workers")?;
+    cfg.batcher = BatcherConfig {
+        max_batch: args.req("batch")?,
+        linger: std::time::Duration::from_millis(2),
+    };
+
+    let d_in = model.input_shape[0];
+    let mut rng = Pcg32::new(42);
+    let lo = crate::bits::twos::min_value(model.input_bits);
+    let hi = crate::bits::twos::max_value(model.input_bits);
+    let inputs: Vec<Vec<i32>> = (0..n_requests)
+        .map(|_| (0..d_in).map(|_| rng.range_i32(lo, hi)).collect())
+        .collect();
+
+    let backend_name = cfg.backend.name();
+    let (responses, report, metrics) = serve_all(Arc::new(model), cfg, inputs)?;
+
+    let mut t = Table::new(
+        &format!("serve: {} requests, backend={backend_name}, SA {}", responses.len(), sa.label()),
+        &["metric", "value"],
+    );
+    t.row(&["requests".into(), format!("{}", metrics.requests)]);
+    t.row(&["batches".into(), format!("{}", metrics.batches)]);
+    t.row(&["mean batch".into(), f(metrics.mean_batch())]);
+    t.row(&["p50 latency (us)".into(), format!("{}", metrics.latency.percentile_us(50.0))]);
+    t.row(&["p95 latency (us)".into(), format!("{}", metrics.latency.percentile_us(95.0))]);
+    t.row(&["p99 latency (us)".into(), format!("{}", metrics.latency.percentile_us(99.0))]);
+    t.row(&["wall throughput (req/s)".into(), f(metrics.throughput_rps())]);
+    t.row(&["MACs served".into(), format!("{}", report.macs)]);
+    t.row(&["hw cycles (model)".into(), format!("{}", report.hw_cycles)]);
+    t.row(&["hw GOPS @300MHz".into(), f(report.hw_gops(300e6))]);
+    t.row(&["pjrt hits / native".into(), format!("{} / {}", report.pjrt_hits, report.native_fallbacks)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// `bitsmm launch` implementation: a config-file driven serving run —
+/// the deployment-style entry point (see `configs/serve.toml`).
+pub fn launch_entry(cfg_path: &std::path::Path) -> Result<()> {
+    let cfg = crate::config::Config::load(cfg_path)?;
+    launch_from_config(&cfg)
+}
+
+/// Serving run from a parsed [`crate::config::Config`] (separated for
+/// tests).
+pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
+    let variant: MacVariant = cfg.str_or("sa.variant", "booth").parse()?;
+    let sa = SaConfig::new(
+        usize::try_from(cfg.int_or("sa.rows", 4))?,
+        usize::try_from(cfg.int_or("sa.cols", 16))?,
+        variant,
+    );
+    anyhow::ensure!(sa.rows >= 1 && sa.cols >= 1, "degenerate SA geometry");
+    let backend = match cfg.str_or("server.backend", "native") {
+        "native" => Backend::Native,
+        "simulate" => Backend::Simulate,
+        "pjrt" => {
+            let dir = std::path::PathBuf::from(
+                cfg.str_or("server.artifacts", "artifacts"),
+            );
+            let (engine, _join) = crate::runtime::EngineHandle::spawn(&dir)?;
+            engine.warm_up()?;
+            Backend::Pjrt(engine)
+        }
+        other => anyhow::bail!("unknown backend '{other}' in config"),
+    };
+    anyhow::ensure!(
+        cfg.str_or("server.model", "mlp") == "mlp",
+        "launch currently serves the mlp zoo model"
+    );
+    let model = crate::nn::model::mlp_zoo(1);
+    let n_requests = usize::try_from(cfg.int_or("server.requests", 64))?;
+    let mut server_cfg = ServerConfig::new(sa, backend);
+    server_cfg.workers = usize::try_from(cfg.int_or("server.workers", 2))?;
+    server_cfg.batcher = BatcherConfig {
+        max_batch: usize::try_from(cfg.int_or("server.max_batch", 8))?,
+        linger: std::time::Duration::from_secs_f64(
+            cfg.float_or("server.linger_ms", 2.0) / 1e3,
+        ),
+    };
+    server_cfg.clock_hz = cfg.float_or("server.clock_mhz", 300.0) * 1e6;
+
+    let d_in = model.input_shape[0];
+    let mut rng = Pcg32::new(42);
+    let lo = crate::bits::twos::min_value(model.input_bits);
+    let hi = crate::bits::twos::max_value(model.input_bits);
+    let inputs: Vec<Vec<i32>> = (0..n_requests)
+        .map(|_| (0..d_in).map(|_| rng.range_i32(lo, hi)).collect())
+        .collect();
+    let clock_hz = server_cfg.clock_hz;
+    let (responses, report, metrics) = serve_all(Arc::new(model), server_cfg, inputs)?;
+    let mut t = Table::new(
+        &format!(
+            "launch '{}': {} requests on {} ({})",
+            cfg.str_or("name", "unnamed"),
+            responses.len(),
+            sa.label(),
+            variant.name()
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["throughput (req/s)".into(), f(metrics.throughput_rps())]);
+    t.row(&["p50 / p99 latency (us)".into(),
+        format!("{} / {}", metrics.latency.percentile_us(50.0), metrics.latency.percentile_us(99.0))]);
+    t.row(&["hw GOPS @config clock".into(), f(report.hw_gops(clock_hz))]);
+    t.row(&["MACs / hw cycles".into(), format!("{} / {}", report.macs, report.hw_cycles)]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// `bitsmm simulate` implementation.
+pub fn simulate_entry(sa: SaConfig, m: usize, k: usize, n: usize, bits: u32, seed: u64) -> Result<()> {
+    let mut rng = Pcg32::new(seed);
+    let lo = crate::bits::twos::min_value(bits);
+    let hi = crate::bits::twos::max_value(bits);
+    let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+    let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+
+    let mut sched = crate::coordinator::scheduler::Scheduler::new(sa, Backend::Simulate);
+    let got = sched.matmul(&a, &b, m, k, n, bits)?;
+    let want = crate::sim::driver::ref_matmul_i64(&a, &b, m, k, n);
+    anyhow::ensure!(got == want, "simulator diverged from integer reference");
+
+    let plan = crate::coordinator::tiler::tile_matmul(m, k, n, &sa);
+    let eq9 = crate::arch::throughput::op_per_cycle(
+        k as u64,
+        m as u64,
+        n as u64,
+        bits,
+        sa.cols as u64,
+        sa.rows as u64,
+    );
+    let mut t = Table::new(
+        &format!("simulate {m}x{k}x{n} @{bits}b on {} ({})", sa.label(), sa.variant.name()),
+        &["metric", "value"],
+    );
+    t.row(&["tiles".into(), format!("{}", plan.jobs.len())]);
+    t.row(&["measured cycles".into(), format!("{}", sched.report.hw_cycles)]);
+    t.row(&["modelled cycles (eq8+fill+readout)".into(), format!("{}", plan.total_cycles(&sa, bits))]);
+    t.row(&["achieved OP/cycle".into(), f(sched.report.macs as f64 / sched.report.hw_cycles as f64)]);
+    t.row(&["eq. 9 OP/cycle (single tile)".into(), f(eq9)]);
+    t.row(&["result".into(), "MATCHES integer reference".into()]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sa_parse_paper_notation() {
+        let sa = SaParse::parse("16x4", MacVariant::Booth).unwrap();
+        assert_eq!((sa.cols, sa.rows), (16, 4));
+        assert!(SaParse::parse("16", MacVariant::Booth).is_err());
+        assert!(SaParse::parse("0x4", MacVariant::Booth).is_err());
+    }
+
+    #[test]
+    fn launch_from_config_runs() {
+        let cfg = crate::config::Config::parse(
+            "name = \"t\"
+[sa]
+rows = 2
+cols = 4
+variant = \"booth\"
+             [server]
+requests = 4
+workers = 1
+max_batch = 4
+",
+        )
+        .unwrap();
+        launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_rejects_bad_config() {
+        let cfg = crate::config::Config::parse("[server]
+backend = \"gpu\"
+").unwrap();
+        assert!(launch_from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn simulate_entry_runs() {
+        let sa = SaConfig::new(2, 4, MacVariant::Booth);
+        simulate_entry(sa, 2, 5, 4, 4, 9).unwrap();
+    }
+}

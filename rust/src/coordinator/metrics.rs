@@ -1,0 +1,122 @@
+//! Serving metrics: latency distributions and throughput counters.
+
+use std::time::Duration;
+
+/// Online latency statistics (stores samples; serving volumes here are
+/// small enough that exact percentiles beat sketches).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    /// Exact percentile (nearest-rank). `p` in [0, 100].
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+}
+
+/// Whole-server metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub latency: LatencyStats,
+    /// Requests completed.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// MAC operations served.
+    pub macs: u64,
+    /// Simulated-hardware cycles consumed (timing model).
+    pub hw_cycles: u64,
+    /// Wall-clock of the serving run.
+    pub wall: Duration,
+}
+
+impl Metrics {
+    /// Requests per second over the run.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.requests as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Simulated-hardware GOPS (paper convention) at a clock frequency.
+    pub fn hw_gops(&self, clock_hz: f64) -> f64 {
+        if self.hw_cycles == 0 {
+            return 0.0;
+        }
+        (self.macs as f64 / self.hw_cycles as f64) * clock_hz / 1e9
+    }
+
+    /// Mean batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.batches as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut l = LatencyStats::default();
+        for us in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            l.record(Duration::from_micros(us));
+        }
+        assert_eq!(l.percentile_us(0.0), 10);
+        assert_eq!(l.percentile_us(50.0), 60); // nearest-rank on 10 samples
+        assert_eq!(l.percentile_us(100.0), 100);
+        assert!((l.mean_us() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let l = LatencyStats::default();
+        assert_eq!(l.percentile_us(99.0), 0);
+        assert_eq!(l.mean_us(), 0.0);
+        let m = Metrics::default();
+        assert_eq!(m.throughput_rps(), 0.0);
+        assert_eq!(m.hw_gops(300e6), 0.0);
+    }
+
+    #[test]
+    fn hw_gops_accounting() {
+        let m = Metrics {
+            macs: 1024,
+            hw_cycles: 16,
+            ..Default::default()
+        };
+        // 64 OP/cycle × 300 MHz = 19.2 GOPS — the Table II headline
+        assert!((m.hw_gops(300e6) - 19.2).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,32 @@
+//! L3 coordinator: the serving stack around the accelerator.
+//!
+//! The paper's contribution is the accelerator itself; its conclusion
+//! (§V) calls for integration "into a complete NN accelerator to
+//! benchmark end-to-end workloads" — this module is that integration:
+//!
+//! * [`tiler`] — maps arbitrary `M×K×N` matmuls onto SA-sized output
+//!   tiles (output-stationary, K unbounded per eq. 8).
+//! * [`precision`] — per-layer bit-width policy (uniform, per-layer,
+//!   or SNR-adaptive), the paper's headline flexibility.
+//! * [`batcher`] — dynamic batching of inference requests.
+//! * [`scheduler`] — routes each matmul to an execution backend (PJRT
+//!   artifact / cycle-accurate simulator / native planes; all
+//!   bit-identical) while accounting cycles on the *hardware* timing
+//!   model, i.e. functional–timing co-simulation.
+//! * [`server`] — the threaded request loop with latency metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod precision;
+pub mod scheduler;
+pub mod server;
+pub mod tiler;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::{LatencyStats, Metrics};
+pub use precision::PrecisionPolicy;
+pub use scheduler::{Backend, ExecutionReport, Scheduler};
+pub use server::{serve_all, InferenceServer, Request, Response, ServerConfig};
+pub mod entry;
+pub use entry::{serve_all_entry, simulate_entry, SaParse};
+pub use tiler::{tile_matmul, TileJob, TilePlan};

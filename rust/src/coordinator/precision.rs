@@ -1,0 +1,124 @@
+//! Per-layer precision policy — the runtime-configurable bit-width
+//! knob the paper highlights ("different layers (or groups of
+//! parameters) can use different bit-widths", §V).
+
+use crate::nn::model::Model;
+use crate::nn::quant::{quant_snr_db, quantize_symmetric};
+use crate::Result;
+
+/// How operand precision is chosen per layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrecisionPolicy {
+    /// One width for every layer.
+    Uniform(u32),
+    /// Explicit per-layer widths.
+    PerLayer(Vec<u32>),
+    /// Choose the smallest width whose weight-quantization SNR meets a
+    /// target (the Dynamic-Stripes-style adaptivity of §II-D, applied
+    /// per layer at load time).
+    Adaptive { snr_target_db: f64 },
+}
+
+impl PrecisionPolicy {
+    /// Resolve to one width per layer of `model`. For `Adaptive`, the
+    /// layer's *weights* are requantized at increasing widths until the
+    /// SNR target is met (weights are what we control at load time).
+    pub fn resolve(&self, model: &Model) -> Result<Vec<u32>> {
+        let n = model.layers.len();
+        match self {
+            PrecisionPolicy::Uniform(bits) => {
+                crate::validate_bits(*bits)?;
+                Ok(vec![*bits; n])
+            }
+            PrecisionPolicy::PerLayer(v) => {
+                anyhow::ensure!(v.len() == n, "policy length {} vs {} layers", v.len(), n);
+                for &b in v {
+                    crate::validate_bits(b)?;
+                }
+                Ok(v.clone())
+            }
+            PrecisionPolicy::Adaptive { snr_target_db } => {
+                let mut out = Vec::with_capacity(n);
+                for layer in &model.layers {
+                    let w = match layer {
+                        crate::nn::layers::Layer::Linear(l) => &l.w,
+                        crate::nn::layers::Layer::Conv2d(l) => &l.w,
+                        crate::nn::layers::Layer::Attention(l) => &l.wq,
+                    };
+                    let real: Vec<f64> = w.data.iter().map(|&q| q as f64 * w.scale).collect();
+                    let mut chosen = crate::MAX_BITS;
+                    for bits in 2..=crate::MAX_BITS {
+                        let t = quantize_symmetric(&real, w.shape.clone(), bits)?;
+                        if quant_snr_db(&real, &t) >= *snr_target_db {
+                            chosen = bits;
+                            break;
+                        }
+                    }
+                    out.push(chosen.max(layer.bits().min(crate::MAX_BITS)).min(crate::MAX_BITS));
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Relative latency of the policy vs uniform-16-bit on the same
+    /// model (eq. 8: cycles scale linearly with width).
+    pub fn latency_fraction(&self, model: &Model) -> Result<f64> {
+        let widths = self.resolve(model)?;
+        let stats = model.stats(1);
+        let base: f64 = stats.per_layer.iter().map(|l| l.2 as f64 * 16.0).sum();
+        let ours: f64 = stats
+            .per_layer
+            .iter()
+            .zip(&widths)
+            .map(|(l, &b)| l.2 as f64 * b as f64)
+            .sum();
+        Ok(ours / base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::mlp_zoo;
+
+    #[test]
+    fn uniform_resolves() {
+        let m = mlp_zoo(1);
+        assert_eq!(PrecisionPolicy::Uniform(8).resolve(&m).unwrap(), vec![8, 8, 8]);
+        assert!(PrecisionPolicy::Uniform(0).resolve(&m).is_err());
+    }
+
+    #[test]
+    fn per_layer_validates_length() {
+        let m = mlp_zoo(1);
+        assert!(PrecisionPolicy::PerLayer(vec![8, 4]).resolve(&m).is_err());
+        assert_eq!(
+            PrecisionPolicy::PerLayer(vec![8, 4, 2]).resolve(&m).unwrap(),
+            vec![8, 4, 2]
+        );
+    }
+
+    #[test]
+    fn adaptive_monotone_in_target() {
+        let m = mlp_zoo(1);
+        let lo = PrecisionPolicy::Adaptive { snr_target_db: 10.0 }
+            .resolve(&m)
+            .unwrap();
+        let hi = PrecisionPolicy::Adaptive { snr_target_db: 45.0 }
+            .resolve(&m)
+            .unwrap();
+        for (a, b) in lo.iter().zip(&hi) {
+            assert!(a <= b, "{lo:?} vs {hi:?}");
+        }
+    }
+
+    #[test]
+    fn latency_fraction_scales_with_width() {
+        let m = mlp_zoo(1);
+        let f8 = PrecisionPolicy::Uniform(8).latency_fraction(&m).unwrap();
+        let f4 = PrecisionPolicy::Uniform(4).latency_fraction(&m).unwrap();
+        assert!((f8 - 0.5).abs() < 1e-12);
+        assert!((f4 - 0.25).abs() < 1e-12);
+    }
+}

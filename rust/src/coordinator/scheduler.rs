@@ -1,0 +1,245 @@
+//! Matmul scheduling and functional–timing co-simulation.
+//!
+//! Every layer matmul is tiled onto the configured SA and accounted on
+//! the *hardware* timing model (eq. 8 + systolic fill + readout per
+//! tile). Functionally the integers can be produced by any of three
+//! bit-identical backends:
+//!
+//! * [`Backend::Pjrt`] — the AOT-compiled HLO executable (the L1/L2
+//!   Pallas/JAX path) through the PJRT engine thread; shapes without a
+//!   registered artifact fall back to the native path. f32 artifacts
+//!   are exact for ≤ 8-bit operands (every intermediate is an integer
+//!   < 2²⁴); wider operands are routed natively.
+//! * [`Backend::Native`] — the Rust Booth-plane matmul.
+//! * [`Backend::Simulate`] — the cycle-accurate SA simulator itself;
+//!   slowest, but *measures* cycles instead of modelling them.
+
+use crate::coordinator::tiler::{tile_matmul, TilePlan};
+use crate::nn::matmul_native;
+use crate::runtime::{EngineHandle, IntMat};
+use crate::sim::array::{SaConfig, SystolicArray};
+use crate::Result;
+
+/// Functional execution backend.
+#[derive(Clone)]
+pub enum Backend {
+    Native,
+    Simulate,
+    Pjrt(EngineHandle),
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Simulate => "simulate",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// Cycle/operation accounting of one scheduler's lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct ExecutionReport {
+    pub matmuls: u64,
+    pub tiles: u64,
+    pub macs: u64,
+    /// Architectural cycles (modelled for Native/Pjrt, measured for
+    /// Simulate).
+    pub hw_cycles: u64,
+    pub pjrt_hits: u64,
+    pub native_fallbacks: u64,
+    pub sim_passes: u64,
+}
+
+impl ExecutionReport {
+    pub fn merge(&mut self, o: &ExecutionReport) {
+        self.matmuls += o.matmuls;
+        self.tiles += o.tiles;
+        self.macs += o.macs;
+        self.hw_cycles += o.hw_cycles;
+        self.pjrt_hits += o.pjrt_hits;
+        self.native_fallbacks += o.native_fallbacks;
+        self.sim_passes += o.sim_passes;
+    }
+
+    /// Simulated-hardware GOPS at a clock (paper convention).
+    pub fn hw_gops(&self, clock_hz: f64) -> f64 {
+        if self.hw_cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / self.hw_cycles as f64 * clock_hz / 1e9
+    }
+}
+
+/// One worker's scheduler: owns (or talks to) its backends and keeps
+/// its own report; workers merge reports at the end of a run.
+pub struct Scheduler {
+    pub sa: SaConfig,
+    backend: Backend,
+    /// Long-lived simulated array (Simulate backend only).
+    sim: Option<SystolicArray>,
+    pub report: ExecutionReport,
+}
+
+impl Scheduler {
+    pub fn new(sa: SaConfig, backend: Backend) -> Scheduler {
+        let sim = match backend {
+            Backend::Simulate => Some(SystolicArray::new(sa)),
+            _ => None,
+        };
+        Scheduler {
+            sa,
+            backend,
+            sim,
+            report: ExecutionReport::default(),
+        }
+    }
+
+    /// Execute `A (m×k) · B (k×n)` at `bits` precision. Returns exact
+    /// i64 accumulators; updates the report.
+    pub fn matmul(
+        &mut self,
+        a: &[i32],
+        b: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        bits: u32,
+    ) -> Result<Vec<i64>> {
+        crate::validate_bits(bits)?;
+        let plan = tile_matmul(m, k, n, &self.sa);
+        self.report.matmuls += 1;
+        self.report.tiles += plan.jobs.len() as u64;
+        self.report.macs += plan.total_macs();
+
+        let out = match &self.backend {
+            Backend::Native => {
+                self.report.hw_cycles += plan.total_cycles(&self.sa, bits);
+                self.report.native_fallbacks += 1;
+                matmul_native(a, b, m, k, n, bits)?
+            }
+            Backend::Pjrt(engine) => {
+                self.report.hw_cycles += plan.total_cycles(&self.sa, bits);
+                // f32 artifact exactness holds through 8-bit operands
+                let attempt = if bits <= 8 {
+                    engine.execute_matmul(
+                        IntMat::new(a.to_vec(), m, k)?,
+                        IntMat::new(b.to_vec(), k, n)?,
+                        bits,
+                        self.sa.variant,
+                    )?
+                } else {
+                    None
+                };
+                match attempt {
+                    Some(f) => {
+                        self.report.pjrt_hits += 1;
+                        f.into_iter().map(|v| v.round() as i64).collect()
+                    }
+                    None => {
+                        self.report.native_fallbacks += 1;
+                        matmul_native(a, b, m, k, n, bits)?
+                    }
+                }
+            }
+            Backend::Simulate => {
+                let sim = self.sim.as_mut().expect("simulate backend has an array");
+                let mut out = vec![0i64; m * n];
+                for job in &plan.jobs {
+                    // slice operands for this tile
+                    let mut ta = Vec::with_capacity(job.m * k);
+                    for r in job.row0..job.row0 + job.m {
+                        ta.extend_from_slice(&a[r * k..(r + 1) * k]);
+                    }
+                    let mut tb = Vec::with_capacity(k * job.n);
+                    for kk in 0..k {
+                        tb.extend_from_slice(&b[kk * n + job.col0..kk * n + job.col0 + job.n]);
+                    }
+                    let res = sim.matmul(&ta, &tb, job.m, k, job.n, bits)?;
+                    self.report.hw_cycles += res.stats.total_cycles();
+                    self.report.sim_passes += 1;
+                    for r in 0..job.m {
+                        for c in 0..job.n {
+                            out[(job.row0 + r) * n + job.col0 + c] = res.result[r * job.n + c];
+                        }
+                    }
+                }
+                out
+            }
+        };
+        Ok(out)
+    }
+
+    /// Timing-only accounting for a plan executed elsewhere.
+    pub fn plan_for(&self, m: usize, k: usize, n: usize) -> TilePlan {
+        tile_matmul(m, k, n, &self.sa)
+    }
+
+    /// Adapt this scheduler into the `MatmulExec` closure the nn layers
+    /// consume.
+    pub fn as_exec(&mut self) -> impl FnMut(&[i32], &[i32], usize, usize, usize, u32) -> Result<Vec<i64>> + '_ {
+        move |a, b, m, k, n, bits| self.matmul(a, b, m, k, n, bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+    use crate::sim::driver::ref_matmul_i64;
+    use crate::sim::mac_common::MacVariant;
+
+    fn rand_mat(rng: &mut Pcg32, len: usize, bits: u32) -> Vec<i32> {
+        let lo = crate::bits::twos::min_value(bits);
+        let hi = crate::bits::twos::max_value(bits);
+        (0..len).map(|_| rng.range_i32(lo, hi)).collect()
+    }
+
+    #[test]
+    fn native_and_simulate_agree_with_reference() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (6, 9, 20, 5);
+        let mut rng = Pcg32::new(0x5eed);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        assert_eq!(nat.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+
+        let mut sim = Scheduler::new(sa, Backend::Simulate);
+        assert_eq!(sim.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        // measured and modelled cycle counts agree to within the
+        // per-tile fill/flush allowance
+        let slack = sim.report.tiles * (sa.rows + sa.cols) as u64;
+        let (hi, lo) = (
+            sim.report.hw_cycles.max(nat.report.hw_cycles),
+            sim.report.hw_cycles.min(nat.report.hw_cycles),
+        );
+        assert!(hi - lo <= slack, "sim {} vs model {}", sim.report.hw_cycles, nat.report.hw_cycles);
+        assert_eq!(sim.report.sim_passes, sim.report.tiles);
+    }
+
+    #[test]
+    fn report_accounting() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let mut s = Scheduler::new(sa, Backend::Native);
+        s.matmul(&[1; 8 * 3], &[1; 3 * 20], 8, 3, 20, 4).unwrap();
+        assert_eq!(s.report.matmuls, 1);
+        assert_eq!(s.report.tiles, 4); // 2 row tiles × 2 col tiles
+        assert_eq!(s.report.macs, (8 * 3 * 20) as u64);
+        assert!(s.report.hw_cycles > 0);
+    }
+
+    #[test]
+    fn model_forward_through_scheduler() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let model = crate::nn::model::mlp_zoo(11);
+        let x = crate::nn::tensor::QTensor::zeros(vec![2, 64], 0.05, 8);
+        let mut s = Scheduler::new(sa, Backend::Native);
+        let y = model.forward(&x, &mut s.as_exec()).unwrap();
+        assert_eq!(y.shape, vec![2, 10]);
+        assert_eq!(s.report.matmuls, 3);
+    }
+}

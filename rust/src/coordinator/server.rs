@@ -1,0 +1,270 @@
+//! The inference server: threaded request loop over the batcher,
+//! scheduler and model — the end-to-end serving path of the `e2e`
+//! example (and the paper's future-work integration, §V).
+
+use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scheduler::{Backend, ExecutionReport, Scheduler};
+use crate::nn::model::Model;
+use crate::nn::tensor::QTensor;
+use crate::sim::array::SaConfig;
+use crate::Result;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// One inference request: a quantized input row for the model.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<i32>,
+    pub submitted: Instant,
+}
+
+/// One completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Output activations (dequantized logits).
+    pub output: Vec<f64>,
+    pub latency: std::time::Duration,
+}
+
+/// Server tuning.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub sa: SaConfig,
+    pub backend: Backend,
+    pub batcher: BatcherConfig,
+    pub workers: usize,
+    /// Hardware clock for GOPS accounting (300 MHz = the paper's FPGA
+    /// operating point).
+    pub clock_hz: f64,
+}
+
+impl ServerConfig {
+    pub fn new(sa: SaConfig, backend: Backend) -> Self {
+        ServerConfig {
+            sa,
+            backend,
+            batcher: BatcherConfig::default(),
+            workers: 2,
+            clock_hz: 300e6,
+        }
+    }
+}
+
+/// A running inference server for one model.
+pub struct InferenceServer {
+    batcher: Arc<Batcher<(Request, mpsc::Sender<Response>)>>,
+    workers: Vec<std::thread::JoinHandle<(ExecutionReport, Metrics)>>,
+}
+
+impl InferenceServer {
+    /// Start worker threads serving `model` (2-D inputs: each request
+    /// is one row; batches stack rows into one matmul pass).
+    pub fn start(model: Arc<Model>, cfg: ServerConfig) -> Result<InferenceServer> {
+        anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        anyhow::ensure!(
+            model.input_shape.len() == 1,
+            "row-serving requires vector inputs (got {:?})",
+            model.input_shape
+        );
+        let batcher = Arc::new(Batcher::new(cfg.batcher));
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers {
+            let batcher = batcher.clone();
+            let model = model.clone();
+            let cfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bitsmm-worker-{w}"))
+                    .spawn(move || worker_loop(&model, &cfg, &batcher))?,
+            );
+        }
+        Ok(InferenceServer { batcher, workers })
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.batcher.push((req, tx));
+        rx
+    }
+
+    /// Queue depth (for callers implementing backpressure).
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Stop accepting requests, drain, and collect merged metrics.
+    pub fn shutdown(self) -> (ExecutionReport, Metrics) {
+        self.batcher.close();
+        let mut report = ExecutionReport::default();
+        let mut metrics = Metrics::default();
+        for w in self.workers {
+            let (r, m) = w.join().expect("worker panicked");
+            report.merge(&r);
+            metrics.latency.merge(&m.latency);
+            metrics.requests += m.requests;
+            metrics.batches += m.batches;
+            metrics.macs += m.macs;
+            metrics.hw_cycles += m.hw_cycles;
+            metrics.wall = metrics.wall.max(m.wall);
+        }
+        (report, metrics)
+    }
+}
+
+fn worker_loop(
+    model: &Model,
+    cfg: &ServerConfig,
+    batcher: &Batcher<(Request, mpsc::Sender<Response>)>,
+) -> (ExecutionReport, Metrics) {
+    let mut sched = Scheduler::new(cfg.sa, cfg.backend.clone());
+    let mut metrics = Metrics::default();
+    let t0 = Instant::now();
+    let d_in = model.input_shape[0];
+    while let Some(batch) = batcher.next_batch() {
+        let rows = batch.items.len();
+        let mut stacked = Vec::with_capacity(rows * d_in);
+        for (req, _) in &batch.items {
+            debug_assert_eq!(req.input.len(), d_in);
+            stacked.extend_from_slice(&req.input);
+        }
+        let x = match QTensor::new(stacked, vec![rows, d_in], model.input_scale, model.input_bits)
+        {
+            Ok(x) => x,
+            Err(e) => {
+                log_drop(&batch, &e);
+                continue;
+            }
+        };
+        let cycles_before = sched.report.hw_cycles;
+        let macs_before = sched.report.macs;
+        let result = model.forward(&x, &mut sched.as_exec());
+        match result {
+            Ok(y) => {
+                let out_dim = y.shape[1];
+                for (i, (req, tx)) in batch.items.iter().enumerate() {
+                    let output: Vec<f64> = y.data[i * out_dim..(i + 1) * out_dim]
+                        .iter()
+                        .map(|&q| q as f64 * y.scale)
+                        .collect();
+                    let latency = req.submitted.elapsed();
+                    metrics.latency.record(latency);
+                    let _ = tx.send(Response {
+                        id: req.id,
+                        output,
+                        latency,
+                    });
+                }
+                metrics.requests += rows as u64;
+                metrics.batches += 1;
+                metrics.macs += sched.report.macs - macs_before;
+                metrics.hw_cycles += sched.report.hw_cycles - cycles_before;
+            }
+            Err(e) => log_drop(&batch, &e),
+        }
+    }
+    metrics.wall = t0.elapsed();
+    (sched.report, metrics)
+}
+
+fn log_drop(batch: &crate::coordinator::batcher::Batch<(Request, mpsc::Sender<Response>)>, e: &anyhow::Error) {
+    eprintln!(
+        "[bitsmm-server] dropping batch of {}: {e:#}",
+        batch.items.len()
+    );
+}
+
+/// Convenience: run a closed set of requests through a fresh server and
+/// gather everything (used by examples/benches).
+pub fn serve_all(
+    model: Arc<Model>,
+    cfg: ServerConfig,
+    inputs: Vec<Vec<i32>>,
+) -> Result<(Vec<Response>, ExecutionReport, Metrics)> {
+    let server = InferenceServer::start(model, cfg)?;
+    let rxs: Vec<_> = inputs
+        .into_iter()
+        .enumerate()
+        .map(|(i, input)| {
+            server.submit(Request {
+                id: i as u64,
+                input,
+                submitted: Instant::now(),
+            })
+        })
+        .collect();
+    let mut responses = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        responses.push(rx.recv()?);
+    }
+    let (report, metrics) = server.shutdown();
+    responses.sort_by_key(|r| r.id);
+    Ok((responses, report, metrics))
+}
+
+/// Shared-state guard used by tests to assert worker counts; kept
+/// small and public for the harness.
+pub type SharedReport = Arc<Mutex<ExecutionReport>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+    use crate::sim::mac_common::MacVariant;
+
+    fn inputs(n: usize, d: usize, bits: u32) -> Vec<Vec<i32>> {
+        let mut rng = Pcg32::new(0xf00d);
+        let lo = crate::bits::twos::min_value(bits);
+        let hi = crate::bits::twos::max_value(bits);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.range_i32(lo, hi)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn serves_all_requests_in_order() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let (resp, report, metrics) = serve_all(model, cfg, inputs(20, 64, 8)).unwrap();
+        assert_eq!(resp.len(), 20);
+        for (i, r) in resp.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.output.len(), 10);
+        }
+        assert_eq!(metrics.requests, 20);
+        assert!(report.macs > 0 && report.hw_cycles > 0);
+        assert!(metrics.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn batching_reduces_matmul_count() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        cfg.workers = 1;
+        cfg.batcher = BatcherConfig {
+            max_batch: 16,
+            linger: std::time::Duration::from_millis(20),
+        };
+        let (_, report, metrics) = serve_all(model, cfg, inputs(16, 64, 8)).unwrap();
+        // ideally one batch of 16 → 3 matmuls; allow some fragmentation
+        assert!(report.matmuls <= 3 * 4, "matmuls = {}", report.matmuls);
+        assert!(metrics.mean_batch() > 1.0);
+    }
+
+    #[test]
+    fn deterministic_results_across_backends() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let ins = inputs(4, 64, 8);
+        let cfg_n = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let mut cfg_s = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Simulate);
+        cfg_s.workers = 1;
+        let (r1, _, _) = serve_all(model.clone(), cfg_n, ins.clone()).unwrap();
+        let (r2, _, _) = serve_all(model, cfg_s, ins).unwrap();
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.output, b.output, "native vs simulate diverged");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Matmul tiling onto the systolic array.
+//!
+//! The SA computes output tiles of at most `rows × cols` elements per
+//! pass (one MAC per output element, output-stationary). The contracted
+//! dimension K is unbounded — eq. 8 scales linearly in `n_values` — so
+//! only M and N are tiled. Edge tiles are smaller (unused rows/columns
+//! idle, exactly as in the hardware where their enables stay low).
+
+use crate::arch::throughput::bitsmm_cycles;
+use crate::sim::array::SaConfig;
+
+/// One SA pass: computes `C[row0.., col0..][..m, ..n]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileJob {
+    pub row0: usize,
+    pub col0: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl TileJob {
+    /// Architectural cycles for this pass: compute (eq. 8) + systolic
+    /// fill + readout (`rows·cols`, §III-B).
+    pub fn cycles(&self, sa: &SaConfig, bits: u32) -> u64 {
+        let fill = (sa.rows + sa.cols - 2) as u64;
+        bitsmm_cycles(self.k as u64, bits) + fill + (sa.rows * sa.cols) as u64
+    }
+
+    /// MAC operations this pass performs.
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+}
+
+/// A full matmul decomposed into SA passes.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    pub jobs: Vec<TileJob>,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl TilePlan {
+    /// Total architectural cycles (sequential passes on one SA).
+    pub fn total_cycles(&self, sa: &SaConfig, bits: u32) -> u64 {
+        self.jobs.iter().map(|j| j.cycles(sa, bits)).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.jobs.iter().map(|j| j.macs()).sum()
+    }
+
+    /// Achieved OP/cycle of the plan (paper convention, 1 OP = 1 MAC).
+    pub fn ops_per_cycle(&self, sa: &SaConfig, bits: u32) -> f64 {
+        self.total_macs() as f64 / self.total_cycles(sa, bits) as f64
+    }
+}
+
+/// Decompose `M×K×N` into row-major SA tiles.
+pub fn tile_matmul(m: usize, k: usize, n: usize, sa: &SaConfig) -> TilePlan {
+    let mut jobs = Vec::new();
+    let mut row0 = 0;
+    while row0 < m {
+        let tm = (m - row0).min(sa.rows);
+        let mut col0 = 0;
+        while col0 < n {
+            let tn = (n - col0).min(sa.cols);
+            jobs.push(TileJob {
+                row0,
+                col0,
+                m: tm,
+                k,
+                n: tn,
+            });
+            col0 += tn;
+        }
+        row0 += tm;
+    }
+    TilePlan { jobs, m, k, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mac_common::MacVariant;
+
+    fn sa() -> SaConfig {
+        SaConfig::new(4, 16, MacVariant::Booth)
+    }
+
+    #[test]
+    fn exact_fit_single_tile() {
+        let plan = tile_matmul(4, 100, 16, &sa());
+        assert_eq!(plan.jobs.len(), 1);
+        assert_eq!(plan.jobs[0], TileJob { row0: 0, col0: 0, m: 4, k: 100, n: 16 });
+    }
+
+    #[test]
+    fn larger_matrix_tiles_cover_everything() {
+        let (m, k, n) = (10, 7, 40);
+        let plan = tile_matmul(m, k, n, &sa());
+        // coverage: every output element in exactly one tile
+        let mut cover = vec![0u8; m * n];
+        for j in &plan.jobs {
+            for r in j.row0..j.row0 + j.m {
+                for c in j.col0..j.col0 + j.n {
+                    cover[r * n + c] += 1;
+                }
+            }
+        }
+        assert!(cover.iter().all(|&x| x == 1));
+        assert_eq!(plan.total_macs(), (m * k * n) as u64);
+    }
+
+    #[test]
+    fn edge_tiles_are_cropped() {
+        let plan = tile_matmul(5, 3, 17, &sa());
+        // rows: 4 + 1; cols: 16 + 1 → 4 tiles
+        assert_eq!(plan.jobs.len(), 4);
+        let last = plan.jobs.last().unwrap();
+        assert_eq!((last.m, last.n), (1, 1));
+    }
+
+    #[test]
+    fn cycles_match_eq8_plus_readout() {
+        let plan = tile_matmul(4, 64, 16, &sa());
+        let bits = 8;
+        let want = (64 + 1) * 8 + (4 + 16 - 2) + 64;
+        assert_eq!(plan.total_cycles(&sa(), bits), want as u64);
+    }
+
+    #[test]
+    fn ops_per_cycle_below_peak() {
+        let cfg = sa();
+        let plan = tile_matmul(4, 10_000, 16, &cfg);
+        let achieved = plan.ops_per_cycle(&cfg, 16);
+        let peak = crate::arch::throughput::peak_op_per_cycle(16, 4, 16);
+        assert!(achieved <= peak);
+        assert!(achieved / peak > 0.98, "long-K should approach peak");
+    }
+}

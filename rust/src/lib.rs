@@ -1,0 +1,65 @@
+//! # bitSMM — bit-Serial Matrix Multiplication Accelerator
+//!
+//! Reproduction of *"bitSMM: A bit-Serial Matrix Multiplication
+//! Accelerator"* (Antunes & Podobas, CS.AR 2026) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate contains:
+//!
+//! * [`bits`] — two's-complement / Booth-recoding / bit-plane arithmetic
+//!   (the shared ground truth for the simulator and all tests).
+//! * [`sim`] — a **bit-true, cycle-accurate** simulator of the paper's
+//!   hardware: both bit-serial MAC variants (Booth, SBMwC), the
+//!   parallel-to-serial converters, the systolic array with its skewed
+//!   streaming network, and the snake-traversal readout network.
+//! * [`arch`] — analytical models: the paper's throughput equations
+//!   (eqs. 6–10), the FPGA resource/power model behind Table II, and the
+//!   ASIC area/power models behind Table III.
+//! * [`baselines`] — cycle/throughput models of the comparator designs
+//!   (BISMO, Loom, Stripes, FSSA) used for Table IV.
+//! * [`nn`] — the NN substrate: integer tensors, symmetric quantization,
+//!   linear / conv2d / attention layers, and a tiny model zoo.
+//! * [`coordinator`] — the serving stack: matmul tiler, per-layer
+//!   precision policy, dynamic batcher, scheduler and threaded server.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and executes them on
+//!   the request path (Python is never on the request path).
+//! * Substrates built in-repo because the environment is offline:
+//!   [`cli`] (argument parsing), [`config`] (TOML-subset parser),
+//!   [`report`] (paper-style tables), [`proptest_lite`] (property
+//!   testing with shrinking), [`bench_harness`] (timing statistics),
+//!   [`prng`] (SplitMix64/PCG32).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod arch;
+pub mod baselines;
+pub mod bench_harness;
+pub mod bits;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod nn;
+pub mod prng;
+pub mod proptest_lite;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Maximum operand bit width supported by the hardware (compile-time
+/// constant in the paper; all MACs are synthesized for up to 16-bit
+/// operands, §III-A).
+pub const MAX_BITS: u32 = 16;
+
+/// Check that a runtime-configured operand width is legal (1..=16).
+pub fn validate_bits(bits: u32) -> Result<u32> {
+    if (1..=MAX_BITS).contains(&bits) {
+        Ok(bits)
+    } else {
+        anyhow::bail!("operand bit width must be in 1..={MAX_BITS}, got {bits}")
+    }
+}

@@ -1,0 +1,203 @@
+//! bitSMM launcher: the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   serve      run the inference server on a zoo model
+//!   simulate   run one matmul on the cycle-accurate SA simulator
+//!   tables     reproduce paper Tables II / III / IV
+//!   fig6       reproduce paper Fig. 6 (peak OP/cycle vs bit width)
+//!   artifacts  list the AOT artifact registry
+//!   help       this text
+
+use bitsmm::cli::Command;
+use bitsmm::coordinator::{serve_all_entry, SaParse};
+use bitsmm::Result;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let (sub, rest) = match argv.first().map(|s| s.as_str()) {
+        Some(s) if !s.starts_with("--") => (s, &argv[1..]),
+        _ => ("help", argv),
+    };
+    match sub {
+        "serve" => cmd_serve(rest),
+        "launch" => cmd_launch(rest),
+        "simulate" => cmd_simulate(rest),
+        "tables" => cmd_tables(rest),
+        "fig6" => cmd_fig6(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "verilog" => cmd_verilog(rest),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}'\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+bitsmm — bit-serial matrix multiplication accelerator (paper reproduction)
+
+usage: bitsmm <subcommand> [options]
+
+subcommands:
+  serve      run the inference server on a zoo model
+  launch     config-file driven serving run (see configs/serve.toml)
+  simulate   run one matmul on the cycle-accurate SA simulator
+  tables     reproduce paper Tables II / III / IV
+  fig6       reproduce paper Fig. 6 (peak OP/cycle vs bit width)
+  artifacts  list the AOT artifact registry
+  verilog    emit the SystemVerilog for an SA configuration
+  help       this text
+
+run `bitsmm <subcommand> --help` for options.
+";
+
+fn cmd_verilog(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("verilog", "emit SystemVerilog for an SA configuration")
+        .opt("sa", "SA geometry colsxrows", Some("16x4"))
+        .opt("variant", "booth|sbmwc", Some("booth"))
+        .opt("out", "output file (stdout if omitted)", None)
+        .switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let sa = SaParse::parse(
+        args.get("sa").unwrap(),
+        args.req::<String>("variant")?.parse()?,
+    )?;
+    let text = bitsmm::sim::verilog_gen::full_design(&sa, &Default::default());
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote {} bytes to {path}", text.len());
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_launch(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("launch", "config-file driven serving run")
+        .opt("config", "TOML config path", Some("configs/serve.toml"))
+        .switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    bitsmm::coordinator::entry::launch_entry(std::path::Path::new(args.get("config").unwrap()))
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "run the inference server on a zoo model")
+        .opt("model", "zoo model: mlp", Some("mlp"))
+        .opt("backend", "native|simulate|pjrt", Some("native"))
+        .opt("sa", "SA geometry colsxrows (paper order)", Some("16x4"))
+        .opt("variant", "MAC variant booth|sbmwc", Some("booth"))
+        .opt("requests", "number of requests to serve", Some("64"))
+        .opt("workers", "worker threads", Some("2"))
+        .opt("batch", "max batch size", Some("8"))
+        .opt("artifacts", "artifact directory", None)
+        .switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    serve_all_entry(&args)
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("simulate", "run one matmul on the cycle-accurate simulator")
+        .opt("sa", "SA geometry colsxrows", Some("16x4"))
+        .opt("variant", "booth|sbmwc", Some("booth"))
+        .opt("m", "output rows", Some("4"))
+        .opt("k", "contracted dim", Some("64"))
+        .opt("n", "output cols", Some("16"))
+        .opt("bits", "operand precision 1..16", Some("8"))
+        .opt("seed", "operand seed", Some("1"))
+        .switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let sa = SaParse::parse(
+        args.get("sa").unwrap(),
+        args.req::<String>("variant")?.parse()?,
+    )?;
+    let (m, k, n) = (args.req("m")?, args.req("k")?, args.req("n")?);
+    let bits: u32 = args.req("bits")?;
+    let seed: u64 = args.req("seed")?;
+    bitsmm::coordinator::simulate_entry(sa, m, k, n, bits, seed)
+}
+
+fn cmd_tables(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("tables", "reproduce paper Tables II/III/IV").switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    print!("{}", bitsmm::report::paper::render_table2());
+    print!("{}", bitsmm::report::paper::render_table3());
+    print!("{}", bitsmm::report::paper::render_table4());
+    Ok(())
+}
+
+fn cmd_fig6(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("fig6", "reproduce paper Fig. 6").switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    print!("{}", bitsmm::report::paper::render_fig6());
+    Ok(())
+}
+
+fn cmd_artifacts(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("artifacts", "list the AOT artifact registry")
+        .opt("dir", "artifact directory", None)
+        .switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(bitsmm::runtime::default_artifact_dir);
+    let reg = bitsmm::runtime::Registry::load(&dir)?;
+    println!("{} artifacts in {}", reg.len(), dir.display());
+    let mut metas: Vec<_> = reg.iter().collect();
+    metas.sort_by(|a, b| a.name.cmp(&b.name));
+    for m in metas {
+        println!(
+            "  {:<32} {:?} {} bits={} {}x{}x{} {:?}",
+            m.name,
+            m.kind,
+            m.variant.name(),
+            m.bits,
+            m.m,
+            m.k,
+            m.n,
+            m.dtype
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,358 @@
+//! NN layer types, each reduced to matmul work-items for the
+//! accelerator (§II-C: fully-connected and convolutional layers
+//! dominate NN compute and both reduce to matrix multiplication).
+//!
+//! Layers are *executor-parameterised*: `forward` takes a [`MatmulExec`]
+//! closure so the coordinator decides where each matmul runs — the
+//! PJRT artifact, the cycle-accurate simulator, or the native Booth
+//! plane path. All three produce identical integers, so routing is a
+//! pure performance/fidelity decision.
+
+use crate::nn::quant::quantize_with_scale;
+use crate::nn::tensor::{im2col, QTensor};
+use crate::Result;
+
+/// A matmul executor: `(a, b, m, k, n, bits) → i64 accumulators`.
+/// `a` is the multiplier operand (activations, LSb-first in hardware),
+/// `b` the multiplicand (weights, MSb-first).
+pub type MatmulExec<'a> = dyn FnMut(&[i32], &[i32], usize, usize, usize, u32) -> Result<Vec<i64>> + 'a;
+
+/// Fully-connected layer.
+#[derive(Debug, Clone)]
+pub struct LinearLayer {
+    /// Weights, shape `[in, out]`.
+    pub w: QTensor,
+    /// Bias in accumulator units (i.e. units of `in_scale · w_scale`).
+    pub bias: Vec<i64>,
+    /// Operand precision for this layer — the per-layer knob.
+    pub bits: u32,
+    /// Apply ReLU before requantizing.
+    pub relu: bool,
+    /// Activation scale for the layer output.
+    pub out_scale: f64,
+    /// Output precision (bits of the produced activations).
+    pub out_bits: u32,
+}
+
+impl LinearLayer {
+    /// `x`: `[batch, in]`. Produces `[batch, out]` activations on the
+    /// output grid.
+    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+        anyhow::ensure!(x.rank() == 2, "linear expects 2-D input");
+        let (batch, d_in) = (x.shape[0], x.shape[1]);
+        let (w_in, d_out) = (self.w.shape[0], self.w.shape[1]);
+        anyhow::ensure!(d_in == w_in, "linear dims: input {d_in} vs weights {w_in}");
+        anyhow::ensure!(x.bits <= self.bits, "input precision exceeds layer precision");
+        let acc = exec(&x.data, &self.w.data, batch, d_in, d_out, self.bits)?;
+        // accumulator units: in_scale · w_scale
+        let acc_scale = x.scale * self.w.scale;
+        let mut real: Vec<f64> = acc
+            .iter()
+            .zip(self.bias.iter().cycle())
+            .map(|(&a, &b)| (a + b) as f64 * acc_scale)
+            .collect();
+        if self.relu {
+            for v in &mut real {
+                *v = v.max(0.0);
+            }
+        }
+        quantize_with_scale(&real, vec![batch, d_out], self.out_scale, self.out_bits)
+    }
+
+    /// The matmul work-items this layer contributes for a batch.
+    pub fn matmul_shape(&self, batch: usize) -> (usize, usize, usize, u32) {
+        (batch, self.w.shape[0], self.w.shape[1], self.bits)
+    }
+
+    /// MAC operations for a batch (the OPS numerator).
+    pub fn macs(&self, batch: usize) -> u64 {
+        (batch * self.w.shape[0] * self.w.shape[1]) as u64
+    }
+}
+
+/// Convolution layer, served through im2col.
+#[derive(Debug, Clone)]
+pub struct Conv2dLayer {
+    /// Kernel, shape `[oc, c, kh, kw]`.
+    pub w: QTensor,
+    pub bias: Vec<i64>,
+    pub stride: usize,
+    pub pad: usize,
+    pub bits: u32,
+    pub relu: bool,
+    pub out_scale: f64,
+    pub out_bits: u32,
+}
+
+impl Conv2dLayer {
+    /// `x`: `(c, h, w)` single image. Produces `(oc, oh, ow)`.
+    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+        anyhow::ensure!(x.rank() == 3, "conv expects (C,H,W)");
+        let (oc, c, kh, kw) = (
+            self.w.shape[0],
+            self.w.shape[1],
+            self.w.shape[2],
+            self.w.shape[3],
+        );
+        anyhow::ensure!(c == x.shape[0], "channel mismatch");
+        let (a, oh, ow) = im2col(x, kh, kw, self.stride, self.pad)?;
+        // weights reshaped to [oc, c·kh·kw] then transposed → [ckk, oc]
+        let wt = self
+            .w
+            .reshape(vec![oc, c * kh * kw])?
+            .transpose2()?;
+        let m = oh * ow;
+        let kdim = c * kh * kw;
+        let acc = exec(&a.data, &wt.data, m, kdim, oc, self.bits)?;
+        let acc_scale = x.scale * self.w.scale;
+        // output layout (oc, oh, ow): transpose the (m, oc) result
+        let mut real = vec![0f64; oc * m];
+        for r in 0..m {
+            for o in 0..oc {
+                let v = (acc[r * oc + o] + self.bias[o]) as f64 * acc_scale;
+                real[o * m + r] = if self.relu { v.max(0.0) } else { v };
+            }
+        }
+        quantize_with_scale(&real, vec![oc, oh, ow], self.out_scale, self.out_bits)
+    }
+
+    pub fn macs(&self, h: usize, w: usize) -> u64 {
+        let (oc, c, kh, kw) = (
+            self.w.shape[0],
+            self.w.shape[1],
+            self.w.shape[2],
+            self.w.shape[3],
+        );
+        let oh = (h + 2 * self.pad - kh) / self.stride + 1;
+        let ow = (w + 2 * self.pad - kw) / self.stride + 1;
+        (oh * ow * c * kh * kw * oc) as u64
+    }
+}
+
+/// Single-head self-attention block: four bit-serial projections plus
+/// an f64 softmax (matmuls dominate; the paper targets the GEMM core).
+#[derive(Debug, Clone)]
+pub struct AttentionLayer {
+    pub wq: QTensor,
+    pub wk: QTensor,
+    pub wv: QTensor,
+    pub wo: QTensor,
+    pub bits: u32,
+    pub out_scale: f64,
+    pub out_bits: u32,
+}
+
+impl AttentionLayer {
+    /// `x`: `[seq, dim]` quantized tokens → `[seq, dim]` on the output
+    /// grid.
+    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+        anyhow::ensure!(x.rank() == 2, "attention expects [seq, dim]");
+        let (s, d) = (x.shape[0], x.shape[1]);
+        anyhow::ensure!(self.wq.shape == vec![d, d], "wq shape");
+        let proj = |exec: &mut MatmulExec, w: &QTensor| -> Result<Vec<f64>> {
+            let acc = exec(&x.data, &w.data, s, d, d, self.bits)?;
+            let sc = x.scale * w.scale;
+            Ok(acc.iter().map(|&v| v as f64 * sc).collect())
+        };
+        let q = proj(exec, &self.wq)?;
+        let k = proj(exec, &self.wk)?;
+        let v = proj(exec, &self.wv)?;
+        // softmax(q kᵀ / sqrt(d)) v — float side, matching model.py
+        let mut ctx = vec![0f64; s * d];
+        let scale = 1.0 / (d as f64).sqrt();
+        for i in 0..s {
+            let mut logits = vec![0f64; s];
+            for j in 0..s {
+                let mut dot = 0.0;
+                for t in 0..d {
+                    dot += q[i * d + t] * k[j * d + t];
+                }
+                logits[j] = dot * scale;
+            }
+            let m = logits.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+            let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
+            let z: f64 = exps.iter().sum();
+            for j in 0..s {
+                let a = exps[j] / z;
+                for t in 0..d {
+                    ctx[i * d + t] += a * v[j * d + t];
+                }
+            }
+        }
+        // requantize context, then output projection
+        let amax = ctx.iter().fold(1e-6f64, |m, v| m.max(v.abs()));
+        let ctx_scale = amax / crate::bits::twos::max_value(self.bits) as f64;
+        let ctx_q = quantize_with_scale(&ctx, vec![s, d], ctx_scale, self.bits)?;
+        let acc = exec(&ctx_q.data, &self.wo.data, s, d, d, self.bits)?;
+        let sc = ctx_scale * self.wo.scale;
+        let real: Vec<f64> = acc.iter().map(|&a| a as f64 * sc).collect();
+        quantize_with_scale(&real, vec![s, d], self.out_scale, self.out_bits)
+    }
+
+    pub fn macs(&self, seq: usize) -> u64 {
+        let d = self.wq.shape[0];
+        4 * (seq * d * d) as u64
+    }
+}
+
+/// A heterogeneous layer.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Linear(LinearLayer),
+    Conv2d(Conv2dLayer),
+    Attention(AttentionLayer),
+}
+
+impl Layer {
+    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+        match self {
+            Layer::Linear(l) => l.forward(x, exec),
+            Layer::Conv2d(l) => l.forward(x, exec),
+            Layer::Attention(l) => l.forward(x, exec),
+        }
+    }
+
+    /// This layer's operand precision — the per-layer bit-width knob.
+    pub fn bits(&self) -> u32 {
+        match self {
+            Layer::Linear(l) => l.bits,
+            Layer::Conv2d(l) => l.bits,
+            Layer::Attention(l) => l.bits,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Layer::Linear(_) => "linear",
+            Layer::Conv2d(_) => "conv2d",
+            Layer::Attention(_) => "attention",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::matmul_native;
+
+    fn native_exec() -> impl FnMut(&[i32], &[i32], usize, usize, usize, u32) -> Result<Vec<i64>> {
+        |a, b, m, k, n, bits| matmul_native(a, b, m, k, n, bits)
+    }
+
+    #[test]
+    fn linear_identity_weights() {
+        let d = 4;
+        let mut w = vec![0i32; d * d];
+        for i in 0..d {
+            w[i * d + i] = 1;
+        }
+        let layer = LinearLayer {
+            w: QTensor::new(w, vec![d, d], 1.0, 8).unwrap(),
+            bias: vec![0; d],
+            bits: 8,
+            relu: false,
+            out_scale: 1.0,
+            out_bits: 8,
+        };
+        let x = QTensor::new(vec![1, -2, 3, -4, 5, -6, 7, -8], vec![2, d], 1.0, 8).unwrap();
+        let y = layer.forward(&x, &mut native_exec()).unwrap();
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn linear_relu_clamps_negatives() {
+        let layer = LinearLayer {
+            w: QTensor::new(vec![1], vec![1, 1], 1.0, 8).unwrap(),
+            bias: vec![0],
+            bits: 8,
+            relu: true,
+            out_scale: 1.0,
+            out_bits: 8,
+        };
+        let x = QTensor::new(vec![-5], vec![1, 1], 1.0, 8).unwrap();
+        let y = layer.forward(&x, &mut native_exec()).unwrap();
+        assert_eq!(y.data, vec![0]);
+    }
+
+    #[test]
+    fn linear_bias_applied_in_accumulator_units() {
+        let layer = LinearLayer {
+            w: QTensor::new(vec![2], vec![1, 1], 0.5, 8).unwrap(),
+            bias: vec![10],
+            bits: 8,
+            relu: false,
+            out_scale: 0.25,
+            out_bits: 8,
+        };
+        let x = QTensor::new(vec![3], vec![1, 1], 0.5, 8).unwrap();
+        // acc = 3·2 + 10 = 16, real = 16·0.25 = 4.0, q = 4/0.25 = 16
+        let y = layer.forward(&x, &mut native_exec()).unwrap();
+        assert_eq!(y.data, vec![16]);
+    }
+
+    #[test]
+    fn conv_1x1_is_channel_mix() {
+        // 2 channels → 1 output channel, 1×1 kernel w = [1, 1]
+        let w = QTensor::new(vec![1, 1], vec![1, 2, 1, 1], 1.0, 8).unwrap();
+        let layer = Conv2dLayer {
+            w,
+            bias: vec![0],
+            stride: 1,
+            pad: 0,
+            bits: 8,
+            relu: false,
+            out_scale: 1.0,
+            out_bits: 8,
+        };
+        let x = QTensor::new(vec![1, 2, 3, 4, 10, 20, 30, 40], vec![2, 2, 2], 1.0, 8).unwrap();
+        let y = layer.forward(&x, &mut native_exec()).unwrap();
+        assert_eq!(y.shape, vec![1, 2, 2]);
+        assert_eq!(y.data, vec![11, 22, 33, 44]);
+    }
+
+    #[test]
+    fn conv_macs_formula() {
+        let w = QTensor::zeros(vec![4, 2, 3, 3], 1.0, 8);
+        let layer = Conv2dLayer {
+            w,
+            bias: vec![0; 4],
+            stride: 1,
+            pad: 1,
+            bits: 8,
+            relu: true,
+            out_scale: 1.0,
+            out_bits: 8,
+        };
+        // 8×8 input, same-padded: 8·8 positions × 2·3·3 × 4
+        assert_eq!(layer.macs(8, 8), 64 * 18 * 4);
+    }
+
+    #[test]
+    fn attention_identity_projections_bounded() {
+        let d = 4;
+        let mut eye = vec![0i32; d * d];
+        for i in 0..d {
+            eye[i * d + i] = 1;
+        }
+        let q = QTensor::new(eye, vec![d, d], 1.0, 8).unwrap();
+        let layer = AttentionLayer {
+            wq: q.clone(),
+            wk: q.clone(),
+            wv: q.clone(),
+            wo: q,
+            bits: 8,
+            out_scale: 0.1,
+            out_bits: 8,
+        };
+        let x = QTensor::new(vec![4, -4, 2, -2, 1, 3, -3, -1], vec![2, 4], 1.0, 8).unwrap();
+        let y = layer.forward(&x, &mut native_exec()).unwrap();
+        assert_eq!(y.shape, vec![2, 4]);
+        // convex combination of rows of x (identity V): bounded by x range
+        let lo = *x.data.iter().min().unwrap() as f64;
+        let hi = *x.data.iter().max().unwrap() as f64;
+        for &v in &y.data {
+            let real = v as f64 * 0.1;
+            assert!(real >= lo - 0.2 && real <= hi + 0.2, "{real}");
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! NN substrate: integer tensors, symmetric quantization, and the
+//! layer types whose matmuls the accelerator serves.
+//!
+//! The paper positions bitSMM as the GEMM core of space-oriented NN
+//! inference (§I, §II-C): fully-connected and convolutional layers
+//! dominate compute and both reduce to matrix multiplication (conv via
+//! im2col), and transformer attention is matmul-dominated. This module
+//! provides exactly that reduction so the coordinator can serve whole
+//! models: every layer exposes its matmul work-items and a forward
+//! function parameterised over a matmul executor (PJRT artifact,
+//! cycle-accurate simulator, or the native bit-plane path — all three
+//! compute identical integers).
+
+pub mod layers;
+pub mod model;
+pub mod quant;
+pub mod tensor;
+pub mod weights_io;
+
+pub use layers::{AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec};
+pub use model::{Model, ModelStats};
+pub use quant::{dequantize, quantize_symmetric, QuantParams};
+pub use tensor::QTensor;
+
+use crate::Result;
+
+/// Exact integer matmul — the native functional fallback when no PJRT
+/// artifact matches a shape.
+///
+/// The Booth plane decomposition telescopes: `Σ_i 2^i · D_i(A) = A`
+/// (digits `d_i = ml[i-1] − ml[i]`, Table I), so
+/// `Σ_i 2^i · (D_i(A)·B) = A·B` *exactly* — the per-plane realisation
+/// ([`matmul_planes`]) and this direct product are algebraically
+/// identical, and a property test pins them together. The serving path
+/// therefore uses the direct form with an i-k-j loop order
+/// (row-contiguous accumulation — §Perf change 3); `matmul_planes`
+/// remains the decomposition oracle used by tests and by callers that
+/// want per-plane observability.
+pub fn matmul_native(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u32) -> Result<Vec<i64>> {
+    crate::validate_bits(bits)?;
+    anyhow::ensure!(a.len() == m * k && b.len() == k * n, "shape mismatch");
+    let mut acc = vec![0i64; m * n];
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        let out = &mut acc[r * n..(r + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i64;
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in out.iter_mut().zip(brow) {
+                *o += av * bv as i64;
+            }
+        }
+    }
+    Ok(acc)
+}
+
+/// Per-plane Booth realisation of the same product (`Σ_i 2^i ·
+/// (D_i(A)·B)`), mirroring the hardware decomposition cycle-for-plane.
+/// Used as the oracle for [`matmul_native`] and by observability paths.
+pub fn matmul_planes(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u32) -> Result<Vec<i64>> {
+    crate::validate_bits(bits)?;
+    anyhow::ensure!(a.len() == m * k && b.len() == k * n, "shape mismatch");
+    let planes = crate::bits::plane::booth_planes(a, bits);
+    let mut acc = vec![0i64; m * n];
+    for (i, plane) in planes.iter().enumerate() {
+        for r in 0..m {
+            for c in 0..n {
+                let mut dot = 0i64;
+                for kk in 0..k {
+                    dot += (plane[r * k + kk] as i64) * (b[kk * n + c] as i64);
+                }
+                acc[r * n + c] += dot << i;
+            }
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::driver::ref_matmul_i64;
+
+    #[test]
+    fn native_matmul_matches_reference() {
+        let a = [3i32, -4, 5, 6, -7, 0]; // 2×3
+        let b = [1i32, 2, -3, 4, 5, -6]; // 3×2
+        let got = matmul_native(&a, &b, 2, 3, 2, 4).unwrap();
+        assert_eq!(got, ref_matmul_i64(&a, &b, 2, 3, 2));
+    }
+
+    #[test]
+    fn plane_realisation_identical_to_direct() {
+        // the telescoping identity behind §Perf change 3
+        let mut rng = crate::prng::Pcg32::new(0x9a7e);
+        for bits in [1u32, 3, 8, 16] {
+            let (lo, hi) = (
+                crate::bits::twos::min_value(bits),
+                crate::bits::twos::max_value(bits),
+            );
+            let (m, k, n) = (3usize, 11usize, 5usize);
+            let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+            assert_eq!(
+                matmul_native(&a, &b, m, k, n, bits).unwrap(),
+                matmul_planes(&a, &b, m, k, n, bits).unwrap(),
+                "bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn native_matmul_validates() {
+        assert!(matmul_native(&[1], &[1], 1, 1, 1, 0).is_err());
+        assert!(matmul_native(&[1, 2], &[1], 1, 1, 1, 4).is_err());
+    }
+}

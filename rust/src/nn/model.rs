@@ -1,0 +1,252 @@
+//! Model graphs and the tiny-model zoo used by examples and benches.
+//!
+//! Models mirror the space workloads the paper's introduction motivates
+//! (§I): in-situ data analysis (MLP classifier over instrument
+//! vectors), on-board payload processing (small CNN over image tiles —
+//! the cloud-screening use case of [9]), and transformer workloads
+//! (§II-C).
+
+use crate::nn::layers::{AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec};
+use crate::nn::tensor::QTensor;
+use crate::prng::Pcg32;
+use crate::Result;
+
+/// A sequential quantized model.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Expected input shape (excluding batch for 2-D inputs).
+    pub input_shape: Vec<usize>,
+    pub input_bits: u32,
+    pub input_scale: f64,
+}
+
+/// Aggregate statistics of one forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct ModelStats {
+    /// Total MAC operations executed.
+    pub macs: u64,
+    /// Per-layer (kind, bits, macs).
+    pub per_layer: Vec<(&'static str, u32, u64)>,
+}
+
+impl Model {
+    /// Run the model on one input through the given matmul executor.
+    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+        let mut h = x.clone();
+        for layer in &self.layers {
+            h = layer.forward(&h, exec)?;
+        }
+        Ok(h)
+    }
+
+    /// Static MAC census (per-layer precision included) for a batch of
+    /// one 2-D input row set / one image.
+    pub fn stats(&self, batch: usize) -> ModelStats {
+        let mut s = ModelStats::default();
+        let mut spatial = self.input_shape.clone();
+        for layer in &self.layers {
+            let macs = match layer {
+                Layer::Linear(l) => l.macs(batch),
+                Layer::Conv2d(l) => {
+                    let m = l.macs(spatial[1], spatial[2]);
+                    // update spatial dims for chained convs
+                    let (kh, kw) = (l.w.shape[2], l.w.shape[3]);
+                    spatial = vec![
+                        l.w.shape[0],
+                        (spatial[1] + 2 * l.pad - kh) / l.stride + 1,
+                        (spatial[2] + 2 * l.pad - kw) / l.stride + 1,
+                    ];
+                    m
+                }
+                Layer::Attention(l) => l.macs(batch),
+            };
+            s.macs += macs;
+            s.per_layer.push((layer.kind(), layer.bits(), macs));
+        }
+        s
+    }
+}
+
+fn rand_q(rng: &mut Pcg32, shape: Vec<usize>, bits: u32, scale: f64) -> QTensor {
+    let lo = crate::bits::twos::min_value(bits) / 2;
+    let hi = crate::bits::twos::max_value(bits) / 2;
+    let numel = shape.iter().product();
+    let data: Vec<i32> = (0..numel).map(|_| rng.range_i32(lo, hi)).collect();
+    QTensor::new(data, shape, scale, bits).expect("rand_q in range")
+}
+
+/// MLP classifier 64→64→32→10 with per-layer precisions 8/4/4 — the
+/// same architecture `python/compile/aot.py` exports, so PJRT-served
+/// and rust-native paths cover the same model.
+pub fn mlp_zoo(seed: u64) -> Model {
+    let mut rng = Pcg32::new(seed);
+    let mk = |rng: &mut Pcg32, d_in, d_out, bits, out_scale, out_bits, relu| {
+        Layer::Linear(LinearLayer {
+            w: rand_q(rng, vec![d_in, d_out], bits, 0.02),
+            bias: (0..d_out).map(|_| rng.range_i32(-64, 64) as i64).collect(),
+            bits,
+            relu,
+            out_scale,
+            out_bits,
+        })
+    };
+    Model {
+        name: "mlp-64-64-32-10".into(),
+        layers: vec![
+            mk(&mut rng, 64, 64, 8, 0.05, 4, true),
+            mk(&mut rng, 64, 32, 4, 0.1, 4, true),
+            mk(&mut rng, 32, 10, 4, 0.2, 8, false),
+        ],
+        input_shape: vec![64],
+        input_bits: 8,
+        input_scale: 0.05,
+    }
+}
+
+/// Small CNN over 1×16×16 tiles: conv3x3(8) → conv3x3(16, stride 2) →
+/// flatten-linear(10). The cloud-screening-style payload workload.
+pub fn cnn_zoo(seed: u64) -> Model {
+    let mut rng = Pcg32::new(seed);
+    let conv = |rng: &mut Pcg32, oc, c, bits, stride, out_scale| {
+        Layer::Conv2d(Conv2dLayer {
+            w: rand_q(rng, vec![oc, c, 3, 3], bits, 0.05),
+            bias: (0..oc).map(|_| rng.range_i32(-16, 16) as i64).collect(),
+            stride,
+            pad: 1,
+            bits,
+            relu: true,
+            out_scale,
+            out_bits: bits,
+        })
+    };
+    let mut rng2 = Pcg32::new(seed ^ 0xc0ffee);
+    Model {
+        name: "cnn-16x16".into(),
+        layers: vec![
+            conv(&mut rng, 8, 1, 8, 1, 0.1),
+            conv(&mut rng, 16, 8, 6, 2, 0.2),
+            // flatten happens implicitly via reshape in forward_cnn
+            Layer::Linear(LinearLayer {
+                w: rand_q(&mut rng2, vec![16 * 8 * 8, 10], 6, 0.05),
+                bias: vec![0; 10],
+                bits: 6,
+                relu: false,
+                out_scale: 0.5,
+                out_bits: 8,
+            }),
+        ],
+        input_shape: vec![1, 16, 16],
+        input_bits: 8,
+        input_scale: 0.02,
+    }
+}
+
+/// One transformer attention block over `[seq=16, dim=32]` tokens.
+pub fn attention_zoo(seed: u64) -> Model {
+    let mut rng = Pcg32::new(seed);
+    let d = 32;
+    Model {
+        name: "attn-16x32".into(),
+        layers: vec![Layer::Attention(AttentionLayer {
+            wq: rand_q(&mut rng, vec![d, d], 8, 0.03),
+            wk: rand_q(&mut rng, vec![d, d], 8, 0.03),
+            wv: rand_q(&mut rng, vec![d, d], 8, 0.03),
+            wo: rand_q(&mut rng, vec![d, d], 8, 0.03),
+            bits: 8,
+            out_scale: 0.1,
+            out_bits: 8,
+        })],
+        input_shape: vec![16, d],
+        input_bits: 8,
+        input_scale: 0.05,
+    }
+}
+
+/// CNN forward needs a flatten between conv and linear stages; this
+/// wrapper inserts it (kept out of `Model::forward` to keep layer
+/// composition explicit).
+pub fn forward_cnn(model: &Model, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+    let mut h = x.clone();
+    for layer in &model.layers {
+        if let (Layer::Linear(_), 3) = (layer, h.rank()) {
+            h = h.reshape(vec![1, h.numel()])?;
+        }
+        h = layer.forward(&h, exec)?;
+    }
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::matmul_native;
+
+    fn exec() -> impl FnMut(&[i32], &[i32], usize, usize, usize, u32) -> Result<Vec<i64>> {
+        |a, b, m, k, n, bits| matmul_native(a, b, m, k, n, bits)
+    }
+
+    #[test]
+    fn mlp_forward_shape() {
+        let m = mlp_zoo(1);
+        let x = QTensor::zeros(vec![4, 64], 0.05, 8);
+        let y = m.forward(&x, &mut exec()).unwrap();
+        assert_eq!(y.shape, vec![4, 10]);
+    }
+
+    #[test]
+    fn mlp_deterministic_per_seed() {
+        let m1 = mlp_zoo(7);
+        let m2 = mlp_zoo(7);
+        let mut rng = Pcg32::new(99);
+        let x = QTensor::new(
+            (0..64).map(|_| rng.range_i32(-100, 100)).collect(),
+            vec![1, 64],
+            0.05,
+            8,
+        )
+        .unwrap();
+        let y1 = m1.forward(&x, &mut exec()).unwrap();
+        let y2 = m2.forward(&x, &mut exec()).unwrap();
+        assert_eq!(y1.data, y2.data);
+    }
+
+    #[test]
+    fn cnn_forward_shape() {
+        let m = cnn_zoo(2);
+        let x = QTensor::zeros(vec![1, 16, 16], 0.02, 8);
+        let y = forward_cnn(&m, &x, &mut exec()).unwrap();
+        assert_eq!(y.shape, vec![1, 10]);
+    }
+
+    #[test]
+    fn attention_forward_shape() {
+        let m = attention_zoo(3);
+        let x = QTensor::zeros(vec![16, 32], 0.05, 8);
+        let y = m.forward(&x, &mut exec()).unwrap();
+        assert_eq!(y.shape, vec![16, 32]);
+    }
+
+    #[test]
+    fn stats_census() {
+        let m = mlp_zoo(1);
+        let s = m.stats(8);
+        assert_eq!(s.per_layer.len(), 3);
+        assert_eq!(s.macs, 8 * (64 * 64 + 64 * 32 + 32 * 10) as u64);
+        // per-layer precisions recorded
+        assert_eq!(
+            s.per_layer.iter().map(|p| p.1).collect::<Vec<_>>(),
+            vec![8, 4, 4]
+        );
+    }
+
+    #[test]
+    fn cnn_stats_spatial_tracking() {
+        let m = cnn_zoo(2);
+        let s = m.stats(1);
+        // conv1: 16·16 × 1·3·3 × 8; conv2 (stride 2): 8·8 × 8·3·3 × 16
+        assert_eq!(s.per_layer[0].2, 256 * 9 * 8);
+        assert_eq!(s.per_layer[1].2, 64 * 72 * 16);
+    }
+}

@@ -1,0 +1,110 @@
+//! Symmetric quantization — the bridge between float model weights /
+//! sensor data and the integer operands the accelerator consumes.
+//!
+//! The paper's flexibility argument (§I, §V): bit-serial hardware lets
+//! each layer pick its own precision, trading accuracy against
+//! latency/power, where binarized networks over-commit. This module is
+//! where the per-layer bit-width decision lands numerically.
+
+use crate::bits::twos::max_value;
+use crate::nn::tensor::QTensor;
+use crate::Result;
+
+/// Quantization parameters of one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f64,
+    pub bits: u32,
+}
+
+/// Symmetric per-tensor quantization: `q = clamp(round(x / scale))`
+/// with `scale = max|x| / max_value(bits)`.
+pub fn quantize_symmetric(x: &[f64], shape: Vec<usize>, bits: u32) -> Result<QTensor> {
+    crate::validate_bits(bits)?;
+    let amax = x.iter().fold(0f64, |m, v| m.max(v.abs()));
+    // 1-bit two's complement has max_value = 0 (range {−1, 0}); anchor
+    // the scale to the magnitude of the *negative* end instead so the
+    // binarized-network corner stays well-defined.
+    let denom = max_value(bits).max(-(crate::bits::twos::min_value(bits) + 1)).max(1) as f64;
+    let scale = if amax == 0.0 { 1.0 } else { amax / denom };
+    quantize_with_scale(x, shape, scale, bits)
+}
+
+/// Quantize with an externally chosen scale (e.g. a calibration pass).
+pub fn quantize_with_scale(x: &[f64], shape: Vec<usize>, scale: f64, bits: u32) -> Result<QTensor> {
+    anyhow::ensure!(scale > 0.0, "scale must be positive");
+    let hi = max_value(bits);
+    let lo = crate::bits::twos::min_value(bits);
+    let data: Vec<i32> = x
+        .iter()
+        .map(|&v| ((v / scale).round() as i64).clamp(lo as i64, hi as i64) as i32)
+        .collect();
+    QTensor::new(data, shape, scale, bits)
+}
+
+/// Dequantize back to reals.
+pub fn dequantize(t: &QTensor) -> Vec<f64> {
+    t.data.iter().map(|&q| q as f64 * t.scale).collect()
+}
+
+/// Quantization SNR in dB (signal power over error power) — used by
+/// the precision-sweep example to show the accuracy/precision trade.
+pub fn quant_snr_db(x: &[f64], t: &QTensor) -> f64 {
+    let xr = dequantize(t);
+    let sig: f64 = x.iter().map(|v| v * v).sum();
+    let err: f64 = x.iter().zip(&xr).map(|(a, b)| (a - b) * (a - b)).sum();
+    if err == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (sig / err).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let x: Vec<f64> = (-50..=50).map(|i| i as f64 / 37.0).collect();
+        let t = quantize_symmetric(&x, vec![101], 8).unwrap();
+        let xr = dequantize(&t);
+        for (a, b) in x.iter().zip(&xr) {
+            assert!((a - b).abs() <= t.scale / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let t = quantize_symmetric(&[0.0; 4], vec![4], 8).unwrap();
+        assert!(t.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn snr_improves_with_bits() {
+        let x: Vec<f64> = (0..256).map(|i| ((i as f64) * 0.37).sin()).collect();
+        let mut prev = f64::NEG_INFINITY;
+        for bits in [2u32, 4, 6, 8, 12] {
+            let t = quantize_symmetric(&x, vec![256], bits).unwrap();
+            let snr = quant_snr_db(&x, &t);
+            assert!(snr > prev, "{bits}-bit SNR {snr} !> {prev}");
+            prev = snr;
+        }
+        // ~6 dB/bit rule of thumb: 8-bit should exceed 40 dB
+        let t8 = quantize_symmetric(&x, vec![256], 8).unwrap();
+        assert!(quant_snr_db(&x, &t8) > 40.0);
+    }
+
+    #[test]
+    fn one_bit_is_sign_only() {
+        // 1-bit two's complement holds {−1, 0}: positives clamp to 0
+        let t = quantize_symmetric(&[-1.0, 1.0, -0.2], vec![3], 1).unwrap();
+        assert!(t.data.iter().all(|&v| v == 0 || v == -1));
+    }
+
+    #[test]
+    fn external_scale_clamps() {
+        let t = quantize_with_scale(&[100.0, -100.0], vec![2], 0.5, 4).unwrap();
+        assert_eq!(t.data, vec![7, -8]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Quantized integer tensors.
+
+use crate::bits::twos::{max_value, min_value};
+use crate::Result;
+
+/// A quantized tensor: `real ≈ data · scale`, with `data` in the
+/// `bits`-bit two's-complement range. Row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub data: Vec<i32>,
+    pub shape: Vec<usize>,
+    pub scale: f64,
+    pub bits: u32,
+}
+
+impl QTensor {
+    pub fn new(data: Vec<i32>, shape: Vec<usize>, scale: f64, bits: u32) -> Result<Self> {
+        crate::validate_bits(bits)?;
+        let numel: usize = shape.iter().product();
+        anyhow::ensure!(numel == data.len(), "shape {shape:?} vs {} elems", data.len());
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        anyhow::ensure!(
+            data.iter().all(|v| (lo..=hi).contains(v)),
+            "values exceed {bits}-bit range"
+        );
+        Ok(QTensor {
+            data,
+            shape,
+            scale,
+            bits,
+        })
+    }
+
+    pub fn zeros(shape: Vec<usize>, scale: f64, bits: u32) -> Self {
+        let numel = shape.iter().product();
+        QTensor {
+            data: vec![0; numel],
+            shape,
+            scale,
+            bits,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D accessor (row-major); panics on rank ≠ 2 in debug.
+    pub fn at2(&self, r: usize, c: usize) -> i32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(&self, shape: Vec<usize>) -> Result<QTensor> {
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == self.numel(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        let mut t = self.clone();
+        t.shape = shape;
+        Ok(t)
+    }
+
+    /// Transposed copy of a 2-D tensor.
+    pub fn transpose2(&self) -> Result<QTensor> {
+        anyhow::ensure!(self.rank() == 2, "transpose2 on rank {}", self.rank());
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut data = vec![0i32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        QTensor::new(data, vec![c, r], self.scale, self.bits)
+    }
+}
+
+/// im2col for NCHW single-image input: turn a convolution
+/// `(C,H,W) * (OC,C,KH,KW)` into a matmul
+/// `A[OH·OW, C·KH·KW] × Wᵀ[C·KH·KW, OC]` — the reduction that lets the
+/// SA serve convolutional layers (§II-C).
+pub fn im2col(
+    input: &QTensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<(QTensor, usize, usize)> {
+    anyhow::ensure!(input.rank() == 3, "im2col expects (C,H,W)");
+    let (c, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    anyhow::ensure!(kh >= 1 && kw >= 1 && stride >= 1, "bad conv params");
+    anyhow::ensure!(h + 2 * pad >= kh && w + 2 * pad >= kw, "kernel larger than input");
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let cols = c * kh * kw;
+    let mut out = vec![0i32; oh * ow * cols];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            for ch in 0..c {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        let v = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
+                            input.data[ch * h * w + iy as usize * w + ix as usize]
+                        } else {
+                            0
+                        };
+                        out[row * cols + ch * kh * kw + ky * kw + kx] = v;
+                    }
+                }
+            }
+        }
+    }
+    Ok((
+        QTensor::new(out, vec![oh * ow, cols], input.scale, input.bits)?,
+        oh,
+        ow,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_range_and_shape() {
+        assert!(QTensor::new(vec![127, -128], vec![2], 1.0, 8).is_ok());
+        assert!(QTensor::new(vec![128], vec![1], 1.0, 8).is_err());
+        assert!(QTensor::new(vec![1, 2, 3], vec![2], 1.0, 8).is_err());
+        assert!(QTensor::new(vec![1], vec![1], 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = QTensor::new((0..6).collect(), vec![2, 3], 1.0, 8).unwrap();
+        let tt = t.transpose2().unwrap().transpose2().unwrap();
+        assert_eq!(t, tt);
+        let tr = t.transpose2().unwrap();
+        assert_eq!(tr.at2(0, 1), t.at2(1, 0));
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1×1 kernel, stride 1: im2col is the flattened image
+        let img = QTensor::new((0..9).collect(), vec![1, 3, 3], 1.0, 8).unwrap();
+        let (a, oh, ow) = im2col(&img, 1, 1, 1, 0).unwrap();
+        assert_eq!((oh, ow), (3, 3));
+        assert_eq!(a.shape, vec![9, 1]);
+        assert_eq!(a.data, (0..9).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn im2col_3x3_known_patch() {
+        let img = QTensor::new((0..16).collect(), vec![1, 4, 4], 1.0, 8).unwrap();
+        let (a, oh, ow) = im2col(&img, 3, 3, 1, 0).unwrap();
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(a.shape, vec![4, 9]);
+        // first patch = rows 0..3 × cols 0..3
+        assert_eq!(&a.data[0..9], &[0, 1, 2, 4, 5, 6, 8, 9, 10]);
+    }
+
+    #[test]
+    fn im2col_padding_zero_fills() {
+        let img = QTensor::new(vec![5; 4], vec![1, 2, 2], 1.0, 8).unwrap();
+        let (a, oh, ow) = im2col(&img, 3, 3, 1, 1).unwrap();
+        assert_eq!((oh, ow), (2, 2));
+        // top-left patch has its first row and column zero-padded
+        assert_eq!(&a.data[0..9], &[0, 0, 0, 0, 5, 5, 0, 5, 5]);
+    }
+
+    #[test]
+    fn im2col_stride_2() {
+        let img = QTensor::new((0..16).collect(), vec![1, 4, 4], 1.0, 8).unwrap();
+        let (_, oh, ow) = im2col(&img, 2, 2, 2, 0).unwrap();
+        assert_eq!((oh, ow), (2, 2));
+    }
+}

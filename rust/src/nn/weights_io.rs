@@ -1,0 +1,209 @@
+//! Loader for the trained quantized model exported by
+//! `python/compile/train.py` (`artifacts/trained_mlp.txt`) — weights,
+//! per-layer precisions/scales, and the held-out eval set, so the Rust
+//! serving stack can run a *genuinely trained* workload and measure
+//! the accuracy the accelerator delivers.
+
+use crate::nn::layers::{Layer, LinearLayer};
+use crate::nn::model::Model;
+use crate::nn::tensor::QTensor;
+use crate::Result;
+use std::path::Path;
+
+/// The trained bundle: the model plus its evaluation split.
+#[derive(Debug, Clone)]
+pub struct TrainedBundle {
+    pub model: Model,
+    /// Eval inputs, quantized on the model's input grid (row-major
+    /// `n × d`).
+    pub eval_x: Vec<i32>,
+    pub eval_n: usize,
+    pub eval_d: usize,
+    /// Eval labels.
+    pub eval_y: Vec<usize>,
+    /// Accuracies measured at export time (float / bit-serial python).
+    pub float_acc: f64,
+    pub python_quant_acc: f64,
+}
+
+/// Parse `trained_mlp.txt`.
+pub fn load_trained(path: &Path) -> Result<TrainedBundle> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {} ({e}); run `make artifacts`", path.display()))?;
+    parse_trained(&text)
+}
+
+/// Parse the export text (separated for tests).
+pub fn parse_trained(text: &str) -> Result<TrainedBundle> {
+    let mut lines = text.lines().filter(|l| !l.trim_start().starts_with('#'));
+    let mut kv = |expect: &str| -> Result<Vec<String>> {
+        let line = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("unexpected EOF expecting '{expect}'"))?;
+        let f: Vec<String> = line.split_whitespace().map(str::to_string).collect();
+        anyhow::ensure!(
+            f.first().map(String::as_str) == Some(expect),
+            "expected '{expect}', got '{line}'"
+        );
+        Ok(f)
+    };
+
+    let n_layers: usize = kv("layers")?[1].parse()?;
+    let input_bits: u32 = kv("input_bits")?[1].parse()?;
+    let input_scale: f64 = kv("input_scale")?[1].parse()?;
+    let float_acc: f64 = kv("float_acc")?[1].parse()?;
+    let python_quant_acc: f64 = kv("quant_acc")?[1].parse()?;
+
+    let mut layers = Vec::with_capacity(n_layers);
+    let mut d_in0 = None;
+    for i in 0..n_layers {
+        let hdr = kv("layer")?;
+        anyhow::ensure!(hdr[1].parse::<usize>()? == i, "layer index mismatch");
+        let field = |name: &str| -> Result<f64> {
+            let pos = hdr
+                .iter()
+                .position(|t| t == name)
+                .ok_or_else(|| anyhow::anyhow!("layer line missing '{name}'"))?;
+            Ok(hdr[pos + 1].parse()?)
+        };
+        let d_in = field("in")? as usize;
+        let d_out = field("out")? as usize;
+        let bits = field("bits")? as u32;
+        let w_scale = field("w_scale")?;
+        let relu = field("relu")? != 0.0;
+        let out_bits = field("out_bits")? as u32;
+        let out_scale = field("out_scale")?;
+        d_in0.get_or_insert(d_in);
+
+        let wline = kv("w")?;
+        let w: Vec<i32> = wline[1..]
+            .iter()
+            .map(|t| t.parse::<i32>().map_err(anyhow::Error::from))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(w.len() == d_in * d_out, "layer {i} weight blob size");
+        let bline = kv("b")?;
+        let bias: Vec<i64> = bline[1..]
+            .iter()
+            .map(|t| t.parse::<i64>().map_err(anyhow::Error::from))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(bias.len() == d_out, "layer {i} bias blob size");
+
+        layers.push(Layer::Linear(LinearLayer {
+            w: QTensor::new(w, vec![d_in, d_out], w_scale, bits)?,
+            bias,
+            bits,
+            relu,
+            out_scale,
+            out_bits,
+        }));
+    }
+
+    let eval_hdr = kv("eval")?;
+    let eval_n: usize = eval_hdr[1].parse()?;
+    let eval_d: usize = eval_hdr[2].parse()?;
+    let xline = kv("x")?;
+    let eval_x: Vec<i32> = xline[1..]
+        .iter()
+        .map(|t| t.parse::<i32>().map_err(anyhow::Error::from))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(eval_x.len() == eval_n * eval_d, "eval x blob size");
+    let yline = kv("y")?;
+    let eval_y: Vec<usize> = yline[1..]
+        .iter()
+        .map(|t| t.parse::<usize>().map_err(anyhow::Error::from))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(eval_y.len() == eval_n, "eval y blob size");
+
+    Ok(TrainedBundle {
+        model: Model {
+            name: "trained-mlp".into(),
+            layers,
+            input_shape: vec![d_in0.unwrap_or(eval_d)],
+            input_bits,
+            input_scale,
+        },
+        eval_x,
+        eval_n,
+        eval_d,
+        eval_y,
+        float_acc,
+        python_quant_acc,
+    })
+}
+
+/// Run the bundle's eval split through a matmul executor and return
+/// the classification accuracy — the accelerator-delivered accuracy.
+pub fn evaluate(bundle: &TrainedBundle, exec: &mut crate::nn::layers::MatmulExec) -> Result<f64> {
+    let x = QTensor::new(
+        bundle.eval_x.clone(),
+        vec![bundle.eval_n, bundle.eval_d],
+        bundle.model.input_scale,
+        bundle.model.input_bits,
+    )?;
+    let logits = bundle.model.forward(&x, exec)?;
+    let classes = logits.shape[1];
+    let mut correct = 0usize;
+    for i in 0..bundle.eval_n {
+        let row = &logits.data[i * classes..(i + 1) * classes];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred == bundle.eval_y[i] {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / bundle.eval_n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+layers 1
+input_bits 4
+input_scale 0.5
+float_acc 0.95
+quant_acc 0.9
+layer 0 in 2 out 2 bits 4 w_scale 1.0 relu 0 out_bits 8 out_scale 1.0
+w 1 0 0 1
+b 0 0
+eval 2 2
+x 3 -4 5 6
+y 0 1
+";
+
+    #[test]
+    fn parses_sample() {
+        let b = parse_trained(SAMPLE).unwrap();
+        assert_eq!(b.model.layers.len(), 1);
+        assert_eq!(b.eval_n, 2);
+        assert_eq!(b.eval_y, vec![0, 1]);
+        assert!((b.float_acc - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_model_evaluates() {
+        let b = parse_trained(SAMPLE).unwrap();
+        let mut exec = |a: &[i32], w: &[i32], m: usize, k: usize, n: usize, bits: u32| {
+            crate::nn::matmul_native(a, w, m, k, n, bits)
+        };
+        // identity weights: logits = inputs; labels picked accordingly:
+        // row0 = [3,-4] -> argmax 0 (correct), row1 = [5,6] -> argmax 1
+        let acc = evaluate(&b, &mut exec).unwrap();
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_trained("layers 1\n").is_err());
+        let bad = SAMPLE.replace("w 1 0 0 1", "w 1 0 0");
+        assert!(parse_trained(&bad).is_err());
+        let bad = SAMPLE.replace("y 0 1", "y 0");
+        assert!(parse_trained(&bad).is_err());
+    }
+}

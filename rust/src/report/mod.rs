@@ -1,0 +1,182 @@
+//! Paper-style table/figure rendering for the bench harness: plain
+//! monospace tables matching the paper's rows, and ASCII series plots
+//! for the figures.
+
+/// A simple text table with column alignment.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with engineering-style compactness.
+pub fn f(v: f64) -> String {
+    if v == 0.0 {
+        return "0".into();
+    }
+    let a = v.abs();
+    if a >= 100.0 {
+        format!("{v:.1}")
+    } else if a >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// ASCII plot of one or more (x, y) series — stands in for the paper's
+/// figures in terminal output. Log-y is used when the dynamic range is
+/// wide (Fig. 6 spans 4→1024 OP/cycle).
+pub fn ascii_plot(title: &str, series: &[(&str, &[(f64, f64)])], height: usize) -> String {
+    assert!(height >= 4);
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, s)| s.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("== {title} == (no data)\n");
+    }
+    let (xmin, xmax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), p| (lo.min(p.0), hi.max(p.0)));
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), p| (lo.min(p.1), hi.max(p.1)));
+    let log_y = ymin > 0.0 && ymax / ymin > 50.0;
+    let (ty_min, ty_max) = if log_y {
+        (ymin.ln(), ymax.ln())
+    } else {
+        (ymin, ymax)
+    };
+    let width = 64usize;
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', '+', 'o', 'x', '#'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts.iter() {
+            let tx = if xmax > xmin {
+                (x - xmin) / (xmax - xmin)
+            } else {
+                0.5
+            };
+            let ty_val = if log_y { y.ln() } else { y };
+            let ty = if ty_max > ty_min {
+                (ty_val - ty_min) / (ty_max - ty_min)
+            } else {
+                0.5
+            };
+            let col = (tx * (width - 1) as f64).round() as usize;
+            let row = height - 1 - (ty * (height - 1) as f64).round() as usize;
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!(
+        "== {title} ==  (y: {}..{}{}; x: {}..{})\n",
+        f(ymin),
+        f(ymax),
+        if log_y { ", log scale" } else { "" },
+        f(xmin),
+        f(xmax)
+    );
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(&["short".into(), "1".into()]);
+        t.row(&["a-much-longer-name".into(), "23456".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // all data lines equal width
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn float_formatting() {
+        assert_eq!(f(0.0), "0");
+        assert_eq!(f(1234.5), "1234.5");
+        assert_eq!(f(19.2), "19.20");
+        assert_eq!(f(0.724), "0.724");
+    }
+
+    #[test]
+    fn plot_contains_series_marks() {
+        let s1: Vec<(f64, f64)> = (1..=16).map(|b| (b as f64, 1024.0 / b as f64)).collect();
+        let s2: Vec<(f64, f64)> = (1..=16).map(|b| (b as f64, 64.0 / b as f64)).collect();
+        let p = ascii_plot("Fig6", &[("64x16", &s1), ("16x4", &s2)], 12);
+        assert!(p.contains('*') && p.contains('+'));
+        assert!(p.contains("log scale"));
+    }
+}
+
+pub mod paper;

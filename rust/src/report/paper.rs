@@ -1,0 +1,177 @@
+//! Renderers that regenerate the paper's tables and figures from the
+//! models — shared by the launcher (`bitsmm tables|fig6`) and the
+//! bench targets.
+
+use crate::arch::asic::AsicModel;
+use crate::arch::fpga::FpgaModel;
+use crate::arch::pdk::PdkKind;
+use crate::arch::throughput::fig6_series;
+use crate::baselines::table4_published;
+use crate::report::{ascii_plot, f, Table};
+use crate::sim::array::SaConfig;
+use crate::sim::mac_common::MacVariant;
+
+/// Table II: FPGA implementation results at 300 MHz.
+pub fn render_table2() -> String {
+    let model = FpgaModel::default();
+    let mut t = Table::new(
+        "Table II — AMD ZCU104 FPGA @ 300 MHz (modelled; paper values in brackets)",
+        &["Design", "LUTs", "FFs", "Power (W)", "GOPS", "GOPS/W"],
+    );
+    let paper: [(&str, u64, u64, f64, f64, f64); 4] = [
+        ("16x4", 5630, 8762, 1.13, 1.2, 1.062),
+        ("16x4 SBMwC", 11418, 10807, 1.657, 1.2, 0.724),
+        ("32x8", 29355, 35490, 2.125, 4.8, 2.259),
+        ("64x16", 117836, 155586, 6.459, 19.2, 2.973),
+    ];
+    for (row, p) in model.table2_rows().iter().zip(paper) {
+        t.row(&[
+            p.0.to_string(),
+            format!("{} [{}]", row.luts, p.1),
+            format!("{} [{}]", row.ffs, p.2),
+            format!("{} [{}]", f(row.power_w), p.3),
+            format!("{} [{}]", f(row.gops), p.4),
+            format!("{} [{}]", f(row.gops_per_w), p.5),
+        ]);
+    }
+    t.render()
+}
+
+/// Table III: ASIC physical implementation results.
+pub fn render_table3() -> String {
+    let mut out = String::new();
+    for kind in [PdkKind::Asap7, PdkKind::Nangate45] {
+        let model = AsicModel::new(kind);
+        let mut t = Table::new(
+            &format!("Table III — {} (modelled)", kind.name()),
+            &[
+                "Design",
+                "MaxF (MHz)",
+                "Area (mm2)",
+                "Power (W)",
+                "Peak GOPS",
+                "GOPS@tgt",
+                "GOPS/mm2",
+                "GOPS/W",
+            ],
+        );
+        for row in model.table3_rows() {
+            let label = match row.config.variant {
+                MacVariant::Booth => row.config.label(),
+                MacVariant::Sbmwc => format!("{} SBMwC", row.config.label()),
+            };
+            t.row(&[
+                label,
+                f(row.max_freq_mhz),
+                format!("{:.3}", row.area_mm2),
+                f(row.power_w),
+                f(row.peak_gops_at_fmax),
+                f(row.gops_at_target),
+                f(row.gops_per_mm2),
+                f(row.gops_per_w),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Table IV: comparison with published SOTA numbers.
+pub fn render_table4() -> String {
+    let fpga = FpgaModel::default();
+    let ours_fpga = fpga.implement(SaConfig::new(16, 64, MacVariant::Booth), 16);
+    let asic = AsicModel::new(PdkKind::Asap7);
+    let ours_asic = asic.implement(SaConfig::new(16, 64, MacVariant::Booth), 16);
+    let published = table4_published();
+
+    let mut t = Table::new(
+        "Table IV — comparison with SOTA (16-bit-equivalent)",
+        &["Design", "Platform", "GOPS", "GOPS/W"],
+    );
+    t.row(&[
+        published[0].design.into(),
+        published[0].platform.into(),
+        f(published[0].gops_16b),
+        f(published[0].gops_per_w),
+    ]);
+    t.row(&[
+        "Ours (64x16)".into(),
+        "ZU7EV on ZCU104".into(),
+        f(ours_fpga.gops),
+        f(ours_fpga.gops_per_w),
+    ]);
+    t.row(&[
+        published[1].design.into(),
+        published[1].platform.into(),
+        f(published[1].gops_16b),
+        f(published[1].gops_per_w),
+    ]);
+    t.row(&[
+        "Ours (64x16)".into(),
+        "asap7 (7nm)".into(),
+        f(ours_asic.peak_gops_at_fmax),
+        f(ours_asic.gops_per_w),
+    ]);
+    let mut s = t.render();
+    s.push_str(&format!(
+        "area efficiency: FSSA {} GOPS/mm2 vs ours {} GOPS/mm2 (asap7)\n",
+        f(published[1].gops_per_mm2.unwrap()),
+        f(ours_asic.gops_per_mm2)
+    ));
+    s
+}
+
+/// Fig. 6: peak OP/cycle vs operand bit width for the three topologies.
+pub fn render_fig6() -> String {
+    let topologies = [(16u64, 4u64), (32, 8), (64, 16)];
+    let series: Vec<(String, Vec<(f64, f64)>)> = topologies
+        .iter()
+        .map(|&(c, r)| {
+            (
+                format!("{c}x{r}"),
+                fig6_series(c, r, 1..=16)
+                    .into_iter()
+                    .map(|(b, v)| (b as f64, v))
+                    .collect(),
+            )
+        })
+        .collect();
+    let refs: Vec<(&str, &[(f64, f64)])> = series
+        .iter()
+        .map(|(n, s)| (n.as_str(), s.as_slice()))
+        .collect();
+    let mut out = ascii_plot(
+        "Fig. 6 — peak throughput (OP/cycle) vs operand bit width (eq. 10)",
+        &refs,
+        16,
+    );
+    // also emit the exact series, paper-style
+    let mut t = Table::new("Fig. 6 data", &["bits", "16x4", "32x8", "64x16"]);
+    for b in 1..=16u32 {
+        t.row(&[
+            b.to_string(),
+            f(64.0 / b as f64),
+            f(256.0 / b as f64),
+            f(1024.0 / b as f64),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_contain_headline_numbers() {
+        let t2 = super::render_table2();
+        assert!(t2.contains("19.20"));
+        let t3 = super::render_table3();
+        assert!(t3.contains("asap7"));
+        assert!(t3.contains("nangate45"));
+        let t4 = super::render_table4();
+        assert!(t4.contains("BISMO"));
+        assert!(t4.contains("FSSA"));
+        let f6 = super::render_fig6();
+        assert!(f6.contains("1024"));
+    }
+}

@@ -1,0 +1,194 @@
+//! Artifact registry: the manifest of AOT-compiled HLO executables
+//! produced by `python/compile/aot.py` (`make artifacts`).
+//!
+//! Manifest line format (one artifact per line):
+//! `name kind variant bits m k n dtype path`
+
+use crate::sim::mac_common::MacVariant;
+use crate::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Bare bit-serial matmul `(a m×k, b k×n) → (m×n,)`.
+    Matmul,
+    /// Quantized MLP forward (weights/biases as parameters).
+    Mlp,
+    /// Attention block forward.
+    Attention,
+}
+
+impl std::str::FromStr for ArtifactKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "matmul" => Ok(ArtifactKind::Matmul),
+            "mlp" => Ok(ArtifactKind::Mlp),
+            "attention" => Ok(ArtifactKind::Attention),
+            other => anyhow::bail!("unknown artifact kind '{other}'"),
+        }
+    }
+}
+
+/// Output element type of an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+}
+
+impl std::str::FromStr for DType {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "f64" => Ok(DType::F64),
+            other => anyhow::bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub variant: MacVariant,
+    pub bits: u32,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub dtype: DType,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+}
+
+/// Shape key used to look up matmul executables.
+pub type MatmulKey = (usize, usize, usize, u32, MacVariant);
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    by_name: HashMap<String, ArtifactMeta>,
+    matmuls: HashMap<MatmulKey, String>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Registry> {
+        let mut reg = Registry::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(
+                f.len() == 9,
+                "manifest line {} malformed ({} fields)",
+                lineno + 1,
+                f.len()
+            );
+            let meta = ArtifactMeta {
+                name: f[0].to_string(),
+                kind: f[1].parse()?,
+                variant: f[2].parse()?,
+                bits: f[3].parse()?,
+                m: f[4].parse()?,
+                k: f[5].parse()?,
+                n: f[6].parse()?,
+                dtype: f[7].parse()?,
+                path: dir.join(f[8]),
+            };
+            if meta.kind == ArtifactKind::Matmul && meta.dtype == DType::F32 {
+                reg.matmuls.insert(
+                    (meta.m, meta.k, meta.n, meta.bits, meta.variant),
+                    meta.name.clone(),
+                );
+            }
+            anyhow::ensure!(
+                reg.by_name.insert(meta.name.clone(), meta).is_none(),
+                "duplicate artifact name on line {}",
+                lineno + 1
+            );
+        }
+        Ok(reg)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name)
+    }
+
+    /// Find the f32 matmul executable matching a shape/precision, if
+    /// one was exported.
+    pub fn find_matmul(&self, m: usize, k: usize, n: usize, bits: u32, variant: MacVariant) -> Option<&ArtifactMeta> {
+        self.matmuls
+            .get(&(m, k, n, bits, variant))
+            .and_then(|n2| self.by_name.get(n2))
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.by_name.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+mm_booth_b8_8x64x64 matmul booth 8 8 64 64 f32 mm_booth_b8_8x64x64.hlo.txt
+mlp_8 mlp booth 8 8 64 10 f32 mlp_8.hlo.txt
+# a comment
+
+mm_booth_b16_8x64x64_exact matmul booth 16 8 64 64 f64 exact.hlo.txt
+";
+
+    #[test]
+    fn parses_manifest() {
+        let reg = Registry::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(reg.len(), 3);
+        let m = reg.get("mlp_8").unwrap();
+        assert_eq!(m.kind, ArtifactKind::Mlp);
+        assert_eq!(m.path, Path::new("/tmp/a/mlp_8.hlo.txt"));
+    }
+
+    #[test]
+    fn matmul_lookup_by_shape() {
+        let reg = Registry::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let hit = reg.find_matmul(8, 64, 64, 8, MacVariant::Booth);
+        assert_eq!(hit.unwrap().name, "mm_booth_b8_8x64x64");
+        assert!(reg.find_matmul(8, 64, 64, 4, MacVariant::Booth).is_none());
+        // f64 artifacts are not offered for the fast path
+        assert!(reg.find_matmul(8, 64, 64, 16, MacVariant::Booth).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Registry::parse("too few fields", Path::new("/")).is_err());
+        let dup = "a matmul booth 8 1 1 1 f32 p\na matmul booth 8 1 1 1 f32 p\n";
+        assert!(Registry::parse(dup, Path::new("/")).is_err());
+    }
+}

@@ -1,0 +1,295 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes
+//! them on the request path. Python is **never** on this path — the
+//! Rust binary is self-contained once `make artifacts` has run.
+//!
+//! Two layers:
+//!
+//! * [`Engine`] — owns the `xla` PJRT CPU client and a compile-once
+//!   executable cache. PJRT handles are raw pointers (`!Send`), so an
+//!   `Engine` lives on one thread.
+//! * [`EngineHandle`] — the `Send + Clone` face the coordinator uses: a
+//!   dedicated executor thread owns the `Engine` and serves execution
+//!   requests over a channel (single execution stream, like a device
+//!   queue).
+
+pub mod artifact;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, DType, Registry};
+
+use crate::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+
+/// A matrix (or vector) of i32 operands, row-major.
+#[derive(Debug, Clone)]
+pub struct IntMat {
+    pub data: Vec<i32>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Emit a rank-1 literal of length `cols` (bias vectors etc.).
+    rank1: bool,
+}
+
+impl IntMat {
+    pub fn new(data: Vec<i32>, rows: usize, cols: usize) -> Result<Self> {
+        anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+        Ok(IntMat {
+            data,
+            rows,
+            cols,
+            rank1: false,
+        })
+    }
+
+    /// A rank-1 operand (e.g. a bias vector).
+    pub fn vec(data: Vec<i32>) -> Self {
+        let cols = data.len();
+        IntMat {
+            data,
+            rows: 1,
+            cols,
+            rank1: true,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.rank1 {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&[self.rows as i64, self.cols as i64])?)
+        }
+    }
+}
+
+/// The single-threaded PJRT engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let registry = Registry::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            registry,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the executable for an artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .registry
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Eagerly compile every artifact (server warm-up).
+    pub fn warm_up(&mut self) -> Result<usize> {
+        let names: Vec<String> = self.registry.iter().map(|m| m.name.clone()).collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute an artifact with i32 matrix inputs; returns the first
+    /// tuple element flattened to f64 (f32 artifacts are upcast).
+    pub fn execute(&mut self, name: &str, inputs: &[IntMat]) -> Result<Vec<f64>> {
+        let dtype = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?
+            .dtype;
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| m.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(match dtype {
+            DType::F32 => result.to_vec::<f32>()?.into_iter().map(f64::from).collect(),
+            DType::F64 => result.to_vec::<f64>()?,
+        })
+    }
+
+    /// Execute the registered matmul artifact for `(m,k,n,bits,variant)`.
+    /// Returns `None` (without executing) when no artifact matches —
+    /// the caller falls back to the native plane-matmul path.
+    pub fn execute_matmul(
+        &mut self,
+        a: &IntMat,
+        b: &IntMat,
+        bits: u32,
+        variant: crate::sim::mac_common::MacVariant,
+    ) -> Result<Option<Vec<f64>>> {
+        let key = self
+            .registry
+            .find_matmul(a.rows, a.cols, b.cols, bits, variant)
+            .map(|meta| meta.name.clone());
+        match key {
+            Some(name) => Ok(Some(self.execute(&name, &[a.clone(), b.clone()])?)),
+            None => Ok(None),
+        }
+    }
+}
+
+/// A request processed by the executor thread.
+enum Req {
+    Execute {
+        name: String,
+        inputs: Vec<IntMat>,
+        reply: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Matmul {
+        a: IntMat,
+        b: IntMat,
+        bits: u32,
+        variant: crate::sim::mac_common::MacVariant,
+        reply: mpsc::Sender<Result<Option<Vec<f64>>>>,
+    },
+    WarmUp {
+        reply: mpsc::Sender<Result<usize>>,
+    },
+    Shutdown,
+}
+
+/// `Send + Clone` handle to an engine running on its own thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Req>,
+}
+
+impl EngineHandle {
+    /// Spawn the executor thread. Fails fast if the engine cannot be
+    /// constructed (missing artifacts, PJRT init failure).
+    pub fn spawn(artifact_dir: &Path) -> Result<(EngineHandle, std::thread::JoinHandle<()>)> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifact_dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Execute { name, inputs, reply } => {
+                            let _ = reply.send(engine.execute(&name, &inputs));
+                        }
+                        Req::Matmul { a, b, bits, variant, reply } => {
+                            let _ = reply.send(engine.execute_matmul(&a, &b, bits, variant));
+                        }
+                        Req::WarmUp { reply } => {
+                            let _ = reply.send(engine.warm_up());
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })?;
+        init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during init"))??;
+        Ok((EngineHandle { tx }, join))
+    }
+
+    pub fn execute(&self, name: &str, inputs: Vec<IntMat>) -> Result<Vec<f64>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Execute {
+                name: name.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+
+    pub fn execute_matmul(
+        &self,
+        a: IntMat,
+        b: IntMat,
+        bits: u32,
+        variant: crate::sim::mac_common::MacVariant,
+    ) -> Result<Option<Vec<f64>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Matmul {
+                a,
+                b,
+                bits,
+                variant,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+
+    pub fn warm_up(&self) -> Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::WarmUp { reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+/// Default artifact directory: `$BITSMM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("BITSMM_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| "artifacts".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intmat_checks_shape() {
+        assert!(IntMat::new(vec![1, 2, 3], 2, 2).is_err());
+        assert!(IntMat::new(vec![1, 2, 3, 4], 2, 2).is_ok());
+    }
+
+    #[test]
+    fn missing_artifact_dir_errors_cleanly() {
+        let err = Engine::new(Path::new("/nonexistent-dir-xyz")).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

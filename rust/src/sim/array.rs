@@ -1,0 +1,446 @@
+//! The bit-serial systolic array (paper §III-B, Fig. 4).
+//!
+//! A compile-time-configurable grid of `rows × cols` bit-serial MACs
+//! with parallel-to-serial converters on both edges and pipeline
+//! registers that propagate data across the array:
+//!
+//! * **Vertical** streams (top edge, one per column): multiplicands
+//!   (the B operand), MSb first, propagating **downward** one row per
+//!   cycle through pipeline registers, together with the value toggle
+//!   and the column enable.
+//! * **Horizontal** streams (left edge, one per row): multipliers (the
+//!   A operand), LSb first, propagating **rightward** one column per
+//!   cycle, with the row enable.
+//!
+//! Streams are diagonally skewed at the edges (column `c` delayed by
+//! `c` cycles, row `r` by `r` cycles) so that after propagation every
+//! MAC `(r,c)` sees its multiplicand and multiplier streams with the
+//! exact `b_max`-cycle lead of §III-A, uniformly across the array.
+//! MAC `(r,c)` therefore accumulates `Σ_k A[r,k]·B[k,c]` — the
+//! output-stationary dataflow of Fig. 1.
+//!
+//! The paper's eq. 8/9 cycle counts ignore the systolic fill
+//! (`rows + cols − 2` skew cycles); the simulator measures the true
+//! count and the `sim_cycle_accuracy` bench quantifies the delta.
+
+use crate::bits::twos::{max_value, min_value};
+use crate::sim::mac_common::{MacInput, MacVariant};
+use crate::sim::p2s::{BitOrder, P2s, P2sOut};
+use crate::sim::readout::ReadoutNetwork;
+use crate::sim::stats::SimStats;
+use crate::sim::{MacUnit, DEFAULT_ACC_BITS};
+use crate::Result;
+
+/// Compile-time configuration of one SA instance. The paper's evaluated
+/// topologies are 16×4, 32×8 and 64×16 (#columns × #rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SaConfig {
+    /// #rows — the M (output-row) extent of one tile.
+    pub rows: usize,
+    /// #columns — the N (output-column) extent of one tile.
+    pub cols: usize,
+    /// MAC variant instantiated across the grid.
+    pub variant: MacVariant,
+    /// Accumulator register width.
+    pub acc_bits: u32,
+}
+
+impl SaConfig {
+    pub fn new(rows: usize, cols: usize, variant: MacVariant) -> Self {
+        SaConfig {
+            rows,
+            cols,
+            variant,
+            acc_bits: DEFAULT_ACC_BITS,
+        }
+    }
+
+    /// The paper's three evaluated topologies, written `cols × rows`
+    /// as in the paper ("16×4, 32×8, 64×16 (#columns and #rows)").
+    pub fn paper_topologies(variant: MacVariant) -> Vec<SaConfig> {
+        vec![
+            SaConfig::new(4, 16, variant),
+            SaConfig::new(8, 32, variant),
+            SaConfig::new(16, 64, variant),
+        ]
+    }
+
+    /// Number of MAC units.
+    pub fn macs(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Display as the paper writes it: `cols × rows`.
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.cols, self.rows)
+    }
+}
+
+/// Per-hop vertical pipeline register contents.
+#[derive(Debug, Clone, Copy, Default)]
+struct VSig {
+    bit: bool,
+    en: bool,
+    v_t: bool,
+}
+
+/// Per-hop horizontal pipeline register contents.
+#[derive(Debug, Clone, Copy, Default)]
+struct HSig {
+    bit: bool,
+    en: bool,
+}
+
+/// Edge stream source: a P2S plus its operand queue and emission skew.
+struct EdgeSource {
+    p2s: P2s,
+    /// Values yet to stream (in order), with their widths.
+    queue: std::collections::VecDeque<(i32, u32)>,
+    /// Idle cycles before the first bit (diagonal skew + lead).
+    delay: u64,
+    /// Emit one zero flush operand after the queue drains (vertical
+    /// side only — provides the toggle that latches the final operand).
+    flush_ops_left: u32,
+    flush_width: u32,
+}
+
+impl EdgeSource {
+    fn new(order: BitOrder, delay: u64, flush_ops: u32, flush_width: u32) -> Self {
+        EdgeSource {
+            p2s: P2s::new(order),
+            queue: std::collections::VecDeque::new(),
+            delay,
+            flush_ops_left: flush_ops,
+            flush_width,
+        }
+    }
+
+    /// Advance one cycle, producing the edge signal.
+    fn emit(&mut self) -> P2sOut {
+        if self.delay > 0 {
+            self.delay -= 1;
+            return P2sOut {
+                bit: false,
+                valid: false,
+                v_t: self.p2s.shift().v_t, // idle shift: holds toggle
+            };
+        }
+        if self.p2s.empty() {
+            if let Some((v, w)) = self.queue.pop_front() {
+                self.p2s.load(v, w);
+            } else if self.flush_ops_left > 0 {
+                self.flush_ops_left -= 1;
+                self.p2s.load(0, self.flush_width);
+            }
+        }
+        self.p2s.shift()
+    }
+
+    fn exhausted(&self) -> bool {
+        self.delay == 0 && self.p2s.empty() && self.queue.is_empty() && self.flush_ops_left == 0
+    }
+}
+
+/// A simulated systolic array instance.
+pub struct SystolicArray {
+    cfg: SaConfig,
+    macs: Vec<MacUnit>,
+    /// Input register planes: the signal each MAC sees *this* cycle.
+    v_regs: Vec<VSig>,
+    h_regs: Vec<HSig>,
+    readout: ReadoutNetwork,
+    cycle: u64,
+}
+
+impl SystolicArray {
+    pub fn new(cfg: SaConfig) -> Self {
+        let macs = (0..cfg.macs())
+            .map(|_| MacUnit::new(cfg.variant, cfg.acc_bits))
+            .collect();
+        SystolicArray {
+            cfg,
+            macs,
+            v_regs: vec![VSig::default(); cfg.macs()],
+            h_regs: vec![HSig::default(); cfg.macs()],
+            readout: ReadoutNetwork::new(cfg.rows, cfg.cols),
+            cycle: 0,
+        }
+    }
+
+    pub fn config(&self) -> SaConfig {
+        self.cfg
+    }
+
+    /// Global synchronous reset (§III-B input).
+    pub fn reset(&mut self) {
+        for m in &mut self.macs {
+            m.reset();
+        }
+        self.v_regs.fill(VSig::default());
+        self.h_regs.fill(HSig::default());
+        self.readout = ReadoutNetwork::new(self.cfg.rows, self.cfg.cols);
+        self.cycle = 0;
+    }
+
+    /// Direct accumulator plane access (row-major) — used by the TMR
+    /// harness and tests; hardware exposes this only via the readout
+    /// network.
+    pub fn accumulators(&self) -> Vec<i64> {
+        self.macs.iter().map(|m| m.accumulator()).collect()
+    }
+
+    /// Inject a single-event upset into MAC (r,c)'s accumulator.
+    pub fn inject_fault(&mut self, r: usize, c: usize, bit: u32) {
+        self.macs[r * self.cfg.cols + c].inject_accumulator_fault(bit);
+    }
+
+    /// Execute one matrix multiplication `A (m×k) · B (k×n)` at operand
+    /// width `bits`, where `m ≤ rows` and `n ≤ cols`. Returns the m×n
+    /// result (row-major) and the cycle statistics, including the
+    /// snake-order readout drain.
+    pub fn matmul(&mut self, a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u32) -> Result<MatmulOutput> {
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        anyhow::ensure!(m >= 1 && k >= 1 && n >= 1, "empty matmul {m}x{k}x{n}");
+        anyhow::ensure!(m <= rows, "tile rows {m} exceed SA rows {rows}");
+        anyhow::ensure!(n <= cols, "tile cols {n} exceed SA cols {cols}");
+        anyhow::ensure!(a.len() == m * k, "A shape mismatch");
+        anyhow::ensure!(b.len() == k * n, "B shape mismatch");
+        crate::validate_bits(bits)?;
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        anyhow::ensure!(
+            a.iter().chain(b.iter()).all(|&v| (lo..=hi).contains(&v)),
+            "operand out of {bits}-bit two's-complement range"
+        );
+        self.reset();
+
+        // Edge sources with diagonal skew. The multiplicand (vertical)
+        // leads the multiplier (horizontal) by b_max cycles (eq. 7).
+        let bits_u64 = bits as u64;
+        let mut v_srcs: Vec<EdgeSource> = (0..cols)
+            .map(|c| {
+                let mut s = EdgeSource::new(BitOrder::MsbFirst, c as u64, 1, bits);
+                if c < n {
+                    for kk in 0..k {
+                        s.queue.push_back((b[kk * n + c], bits));
+                    }
+                } else {
+                    s.queue.clear();
+                    s.flush_ops_left = 0; // unused column: stays idle
+                }
+                s
+            })
+            .collect();
+        let mut h_srcs: Vec<EdgeSource> = (0..rows)
+            .map(|r| {
+                let mut s = EdgeSource::new(BitOrder::LsbFirst, r as u64 + bits_u64, 0, bits);
+                if r < m {
+                    for kk in 0..k {
+                        s.queue.push_back((a[r * k + kk], bits));
+                    }
+                } else {
+                    s.queue.clear();
+                }
+                s
+            })
+            .collect();
+
+        // Compute phase: run until every source is exhausted and every
+        // in-flight bit has propagated through the deepest pipeline.
+        let drain_after = (rows + cols) as u64; // conservative pipeline drain
+        let mut idle_cycles = 0u64;
+        let mut compute_cycles = 0u64;
+        while idle_cycles < drain_after {
+            let all_done = v_srcs.iter().all(|s| s.exhausted()) && h_srcs.iter().all(|s| s.exhausted());
+            self.step_compute(&mut v_srcs, &mut h_srcs);
+            compute_cycles += 1;
+            if all_done {
+                idle_cycles += 1;
+            }
+            anyhow::ensure!(
+                compute_cycles < 10_000_000,
+                "simulation runaway: {compute_cycles} cycles"
+            );
+        }
+
+        // Readout phase: snake drain, one value per cycle.
+        let accs = self.accumulators();
+        let (snake_vals, readout_cycles) = self.readout.drain(&accs);
+
+        // De-snake into a row-major result and crop to m×n.
+        let mut full = vec![0i64; rows * cols];
+        for (p, v) in snake_vals.iter().enumerate() {
+            let (r, c) = crate::sim::readout::snake_position(p, cols);
+            full[r * cols + c] = *v;
+        }
+        let mut result = vec![0i64; m * n];
+        for r in 0..m {
+            for c in 0..n {
+                result[r * n + c] = full[r * cols + c];
+            }
+        }
+
+        let mut stats = SimStats {
+            // the paper's cycle accounting stops when the last MAC has
+            // consumed its final multiplier bit; the drain allowance is
+            // a simulator artefact, so report the architectural count
+            compute_cycles: compute_cycles - drain_after,
+            readout_cycles,
+            num_macs: self.cfg.macs() as u64,
+            mac_results: (m * n) as u64,
+            ..Default::default()
+        };
+        for mac in &self.macs {
+            stats.mac.merge(mac.stats());
+        }
+        Ok(MatmulOutput { result, stats })
+    }
+
+    /// One compute-phase clock edge: emit at the edges, step every MAC
+    /// with its current input registers, then shift the pipeline
+    /// registers (bottom-up / right-to-left so the move is in-place).
+    fn step_compute(&mut self, v_srcs: &mut [EdgeSource], h_srcs: &mut [EdgeSource]) {
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+
+        // 1. every MAC consumes the register plane of this cycle
+        //    (zipped iterators: no per-element bounds checks in the
+        //    innermost loop — §Perf change 4)
+        for ((mac, v), h) in self
+            .macs
+            .iter_mut()
+            .zip(self.v_regs.iter())
+            .zip(self.h_regs.iter())
+        {
+            mac.step(MacInput {
+                mc_bit: v.bit,
+                mc_en: v.en,
+                ml_bit: h.bit,
+                ml_en: h.en,
+                v_t: v.v_t,
+            });
+        }
+
+        // 2. pipeline shift: vertical signals move down one row — a
+        //    single overlapping memmove of the first rows−1 rows
+        self.v_regs.copy_within(0..(rows - 1) * cols, cols);
+        for (c, src) in v_srcs.iter_mut().enumerate() {
+            let out = src.emit();
+            self.v_regs[c] = VSig {
+                bit: out.bit,
+                en: out.valid,
+                v_t: out.v_t,
+            };
+        }
+
+        // 3. horizontal signals move right one column (one memmove per
+        //    row)
+        for r in 0..rows {
+            let base = r * cols;
+            self.h_regs.copy_within(base..base + cols - 1, base + 1);
+        }
+        for (r, src) in h_srcs.iter_mut().enumerate() {
+            let out = src.emit();
+            self.h_regs[r * cols] = HSig {
+                bit: out.bit,
+                en: out.valid,
+            };
+        }
+
+        self.cycle += 1;
+    }
+}
+
+/// Result bundle of one simulated matmul.
+#[derive(Debug, Clone)]
+pub struct MatmulOutput {
+    /// Row-major m×n product.
+    pub result: Vec<i64>,
+    /// Cycle and activity statistics.
+    pub stats: SimStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::mac_common::MacVariant;
+
+    fn ref_matmul(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i64> {
+        let mut out = vec![0i64; m * n];
+        for r in 0..m {
+            for c in 0..n {
+                for kk in 0..k {
+                    out[r * n + c] += (a[r * k + kk] as i64) * (b[kk * n + c] as i64);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tiny_2x2_both_variants() {
+        let a = [1, 2, 3, 4]; // 2×2
+        let b = [5, 6, 7, -8]; // 2×2
+        for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+            let mut sa = SystolicArray::new(SaConfig::new(2, 2, variant));
+            let out = sa.matmul(&a, &b, 2, 2, 2, 5).unwrap();
+            assert_eq!(out.result, ref_matmul(&a, &b, 2, 2, 2), "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn rectangular_tile_smaller_than_array() {
+        // 3×5 · 5×7 inside a 4-row × 16-col array at 6 bits
+        let (m, k, n) = (3usize, 5usize, 7usize);
+        let a: Vec<i32> = (0..m * k).map(|i| (i as i32 % 31) - 15).collect();
+        let b: Vec<i32> = (0..k * n).map(|i| ((i as i32 * 7) % 31) - 15).collect();
+        let mut sa = SystolicArray::new(SaConfig::new(4, 16, MacVariant::Booth));
+        let out = sa.matmul(&a, &b, m, k, n, 6).unwrap();
+        assert_eq!(out.result, ref_matmul(&a, &b, m, k, n));
+    }
+
+    #[test]
+    fn compute_cycles_close_to_eq8() {
+        // eq. 8: (n_values+1)·b_max; simulator adds the systolic fill
+        let (m, k, n, bits) = (4usize, 32usize, 16usize, 8u32);
+        let a = vec![1i32; m * k];
+        let b = vec![1i32; k * n];
+        let mut sa = SystolicArray::new(SaConfig::new(4, 16, MacVariant::Booth));
+        let out = sa.matmul(&a, &b, m, k, n, bits).unwrap();
+        let eq8 = ((k as u64) + 1) * bits as u64;
+        let measured = out.stats.compute_cycles;
+        assert!(
+            measured >= eq8 && measured <= eq8 + (4 + 16) as u64,
+            "measured {measured} vs eq8 {eq8}"
+        );
+        assert_eq!(out.stats.readout_cycles, 4 * 16);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_ranges() {
+        let mut sa = SystolicArray::new(SaConfig::new(2, 2, MacVariant::Booth));
+        assert!(sa.matmul(&[1, 2, 3, 4, 5, 6], &[1, 1], 3, 2, 1, 4).is_err()); // m > rows
+        assert!(sa.matmul(&[100], &[1], 1, 1, 1, 4).is_err()); // out of 4-bit range
+        assert!(sa.matmul(&[1], &[1], 1, 1, 1, 0).is_err()); // bad width
+        assert!(sa.matmul(&[1], &[1], 1, 1, 1, 17).is_err());
+    }
+
+    #[test]
+    fn one_bit_matmul_binary_weights() {
+        // 1-bit two's complement values are {0,−1}: the BNN-style corner
+        let a = [0, -1, -1, 0]; // 2×2
+        let b = [-1, -1, 0, -1]; // 2×2
+        let mut sa = SystolicArray::new(SaConfig::new(2, 2, MacVariant::Booth));
+        let out = sa.matmul(&a, &b, 2, 2, 2, 1).unwrap();
+        assert_eq!(out.result, ref_matmul(&a, &b, 2, 2, 2));
+    }
+
+    #[test]
+    fn sixteen_bit_extremes() {
+        let a = [32767, -32768, -1, 0]; // 2×2
+        let b = [-32768, 32767, 32767, -32768]; // 2×2
+        for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+            let mut sa = SystolicArray::new(SaConfig::new(2, 2, variant));
+            let out = sa.matmul(&a, &b, 2, 2, 2, 16).unwrap();
+            assert_eq!(out.result, ref_matmul(&a, &b, 2, 2, 2), "{variant:?}");
+        }
+    }
+}

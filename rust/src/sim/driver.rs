@@ -1,0 +1,190 @@
+//! High-level drivers for the cycle-accurate simulator — the Rust
+//! equivalent of the paper's testbench harnesses (§IV-A), also used by
+//! the coordinator's timing path.
+
+use crate::bits::twos::Bits;
+use crate::sim::array::{MatmulOutput, SaConfig, SystolicArray};
+use crate::sim::mac_common::{MacInput, MacVariant};
+use crate::sim::stats::MacStats;
+use crate::sim::MacUnit;
+use crate::Result;
+
+/// Drive a single MAC through a full vector dot product following the
+/// §III-A protocol: the multiplicand streams `b_max` cycles ahead of
+/// the multiplier (eq. 7); each MAC receives the multiplier bits of the
+/// current multiplication concurrently with the multiplicand bits of
+/// the next. Returns `(accumulator, cycles)`; the cycle count realises
+/// eq. 8: `(n_values + 1) × b_max`.
+pub fn mac_dot(variant: MacVariant, mc: &[i32], ml: &[i32], bits: u32, acc_bits: u32) -> (i64, u64) {
+    let (acc, cycles, _) = mac_dot_with_stats(variant, mc, ml, bits, acc_bits);
+    (acc, cycles)
+}
+
+/// As [`mac_dot`] but also returns the MAC's activity counters.
+pub fn mac_dot_with_stats(
+    variant: MacVariant,
+    mc: &[i32],
+    ml: &[i32],
+    bits: u32,
+    acc_bits: u32,
+) -> (i64, u64, MacStats) {
+    assert_eq!(mc.len(), ml.len(), "dot product operand length mismatch");
+    assert!(!mc.is_empty());
+    let n = mc.len();
+    let b = bits as usize;
+    let mut mac = MacUnit::new(variant, acc_bits); // static dispatch (§Perf change 9)
+
+    // Validate ranges once, then extract stream bits arithmetically —
+    // materialising Vec<Vec<bool>> per operand dominated the driver
+    // (§Perf change 8).
+    let check = |v: i32, side: &str| {
+        Bits::new(v, bits).unwrap_or_else(|| panic!("{side} operand {v} out of {bits}-bit range"))
+    };
+    let mc_pat: Vec<u32> = mc
+        .iter()
+        .map(|&v| crate::bits::twos::encode(check(v, "mc").value, bits))
+        .collect();
+    let ml_pat: Vec<u32> = ml
+        .iter()
+        .map(|&v| crate::bits::twos::encode(check(v, "ml").value, bits))
+        .collect();
+
+    let total = (n + 1) * b; // eq. 8
+    let mut v_t = false;
+    for slot in 0..=n {
+        v_t = !v_t; // a new multiplicand (or the flush slot) begins
+        for j in 0..b {
+            let (mc_bit, mc_en) = if slot < n {
+                // MSb first: bit (b−1−j)
+                ((mc_pat[slot] >> (b - 1 - j)) & 1 == 1, true)
+            } else {
+                (false, false) // flush slot: toggle only
+            };
+            let (ml_bit, ml_en) = if slot >= 1 {
+                // LSb first: bit j, lagging by b_max cycles
+                ((ml_pat[slot - 1] >> j) & 1 == 1, true)
+            } else {
+                (false, false)
+            };
+            mac.step(MacInput {
+                mc_bit,
+                mc_en,
+                ml_bit,
+                ml_en,
+                v_t,
+            });
+        }
+    }
+    (mac.accumulator(), total as u64, *mac.stats())
+}
+
+/// Result of one simulated SA matrix multiplication.
+pub type MatmulRun = MatmulOutput;
+
+/// Simulate `A (m×k) · B (k×n)` on a freshly instantiated SA of the
+/// given configuration (convenience wrapper used by tests and benches;
+/// the coordinator keeps long-lived arrays instead).
+pub fn sa_matmul(
+    cfg: SaConfig,
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bits: u32,
+) -> Result<MatmulRun> {
+    let mut sa = SystolicArray::new(cfg);
+    sa.matmul(a, b, m, k, n, bits)
+}
+
+/// Plain integer matmul reference (the simulator's oracle).
+pub fn ref_matmul_i64(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0i64;
+            for kk in 0..k {
+                acc += (a[r * k + kk] as i64) * (b[kk * n + c] as i64);
+            }
+            out[r * n + c] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::twos::{max_value, min_value};
+    use crate::prng::Pcg32;
+    use crate::sim::DEFAULT_ACC_BITS;
+
+    /// §IV-A: "we exhaustively tested all multiplicand–multiplier pairs
+    /// for bit widths up to 8 bits" — kept to 6 bits in the unit suite
+    /// for runtime; the full 8-bit sweep lives in `rust/tests/`.
+    #[test]
+    fn exhaustive_pairs_small_widths() {
+        for bits in 1..=6u32 {
+            for a in min_value(bits)..=max_value(bits) {
+                for b in min_value(bits)..=max_value(bits) {
+                    for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+                        let (acc, cycles) = mac_dot(variant, &[a], &[b], bits, DEFAULT_ACC_BITS);
+                        assert_eq!(
+                            acc,
+                            (a as i64) * (b as i64),
+                            "{variant:?} {a}×{b} @{bits}b"
+                        );
+                        assert_eq!(cycles, 2 * bits as u64);
+                    }
+                }
+            }
+        }
+    }
+
+    /// §IV-A: random operand pairs for widths between 8 and 16 bits.
+    #[test]
+    fn random_pairs_wide_widths() {
+        let mut rng = Pcg32::new(0xb175);
+        for bits in 8..=16u32 {
+            for _ in 0..40 {
+                let a = rng.range_i32(min_value(bits), max_value(bits));
+                let b = rng.range_i32(min_value(bits), max_value(bits));
+                for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+                    let (acc, _) = mac_dot(variant, &[a], &[b], bits, DEFAULT_ACC_BITS);
+                    assert_eq!(acc, (a as i64) * (b as i64), "{variant:?} {a}×{b} @{bits}b");
+                }
+            }
+        }
+    }
+
+    /// §IV-A: random vector dot products, widths 1–16, lengths 1–1000.
+    #[test]
+    fn random_dot_products() {
+        let mut rng = Pcg32::new(0xd07);
+        for &len in &[1usize, 2, 3, 17, 100, 1000] {
+            let bits = 1 + rng.below(16);
+            let mc: Vec<i32> = (0..len)
+                .map(|_| rng.range_i32(min_value(bits), max_value(bits)))
+                .collect();
+            let ml: Vec<i32> = (0..len)
+                .map(|_| rng.range_i32(min_value(bits), max_value(bits)))
+                .collect();
+            let expect: i64 = mc
+                .iter()
+                .zip(&ml)
+                .map(|(&a, &b)| (a as i64) * (b as i64))
+                .sum();
+            for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+                let (acc, cycles) = mac_dot(variant, &mc, &ml, bits, DEFAULT_ACC_BITS);
+                assert_eq!(acc, expect, "{variant:?} len={len} bits={bits}");
+                assert_eq!(cycles, (len as u64 + 1) * bits as u64); // eq. 8
+            }
+        }
+    }
+
+    #[test]
+    fn ref_matmul_sanity() {
+        // [[1,2],[3,4]]·[[5],[6]] = [[17],[39]]
+        assert_eq!(ref_matmul_i64(&[1, 2, 3, 4], &[5, 6], 2, 2, 1), vec![17, 39]);
+    }
+}

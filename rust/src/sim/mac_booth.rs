@@ -1,0 +1,160 @@
+//! Booth-based bit-serial MAC (paper Fig. 2, §III-A).
+//!
+//! Datapath per the paper: the latched multiplicand is sign-extended
+//! into a working register that **shifts left one bit each cycle**;
+//! add/subtract is decided by the two most recent multiplier bits
+//! (Table I) and the Booth enable asserts only when they differ — so
+//! the design needs a **single adder** and its adder activity tracks
+//! the number of bit transitions in the multiplier, the paper's power
+//! advantage over SBMwC.
+
+use crate::bits::twos::wrap_to;
+use crate::sim::mac_common::{MacInput, MacVariant, MultiplicandCircuit};
+use crate::sim::stats::MacStats;
+use crate::sim::BitSerialMac;
+
+/// Cycle-accurate Booth bit-serial MAC.
+#[derive(Debug, Clone)]
+pub struct BoothMac {
+    /// Shared multiplicand mask / assembly / toggle circuitry.
+    mc_circuit: MultiplicandCircuit,
+    /// Working multiplicand: sign-extended, shifted left each cycle so
+    /// cycle `i` holds `M << i`.
+    work_mc: i64,
+    /// Previous multiplier bit (`ml[i-1]`; reset to 0 per operand —
+    /// "for the first multiplier bit, we assume the previous bit is 0").
+    ml_prev: bool,
+    /// Dot-product accumulator (the Booth accumulator of Fig. 2).
+    acc: i64,
+    /// Accumulator width in bits (wrapping semantics of a hardware
+    /// register).
+    acc_bits: u32,
+    stats: MacStats,
+}
+
+impl BoothMac {
+    pub fn new(acc_bits: u32) -> Self {
+        assert!((8..=63).contains(&acc_bits), "acc_bits out of range");
+        BoothMac {
+            mc_circuit: MultiplicandCircuit::new(),
+            work_mc: 0,
+            ml_prev: false,
+            acc: 0,
+            acc_bits,
+            stats: MacStats::default(),
+        }
+    }
+}
+
+impl BitSerialMac for BoothMac {
+    #[inline(always)]
+    fn step(&mut self, input: MacInput) {
+        // fully idle cycle (systolic fill/drain): nothing changes
+        if !input.ml_en && self.mc_circuit.is_idle(input.mc_en, input.v_t) {
+            return;
+        }
+        // Multiplicand side: assemble the *next* operand; on a toggle
+        // edge the just-completed operand is latched and loaded into
+        // the working register (reset to shift position 0).
+        let latched = self
+            .mc_circuit
+            .step(input.mc_bit, input.mc_en, input.v_t, &mut self.stats);
+        if latched {
+            self.work_mc = self.mc_circuit.current_mc();
+            self.ml_prev = false;
+        }
+
+        // Multiplier side: one Booth step per valid multiplier bit.
+        if input.ml_en && self.mc_circuit.mul_enabled() {
+            self.stats.ml_active_cycles += 1;
+            // pair (cur,prev) = (0,1) → +M ; (1,0) → −M ; else 0
+            // (Table I). Branch-free: the Booth digit d = prev − cur is
+            // data-dependent and random multiplier bits mispredict a
+            // conditional ~50% of the time (§Perf change 6).
+            let d = (self.ml_prev as i64) - (input.ml_bit as i64);
+            let booth_en = (d != 0) as u64;
+            self.acc = wrap_to(self.acc + d * self.work_mc, self.acc_bits);
+            self.stats.adder_ops += booth_en;
+            self.stats.acc_writes += booth_en;
+            self.ml_prev = input.ml_bit;
+            // arithmetic-left-shift of the working multiplicand
+            self.work_mc <<= 1;
+        }
+    }
+
+    fn accumulator(&self) -> i64 {
+        self.acc
+    }
+
+    fn reset(&mut self) {
+        let acc_bits = self.acc_bits;
+        *self = BoothMac::new(acc_bits);
+    }
+
+    fn stats(&self) -> &MacStats {
+        &self.stats
+    }
+
+    fn variant(&self) -> MacVariant {
+        MacVariant::Booth
+    }
+
+    fn inject_accumulator_fault(&mut self, bit: u32) {
+        let bit = bit % self.acc_bits;
+        self.acc = wrap_to(self.acc ^ (1i64 << bit), self.acc_bits);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::driver::mac_dot;
+    use crate::sim::mac_common::MacVariant;
+
+    #[test]
+    fn paper_eq5_single_multiply() {
+        // 6 × (−2) at 4 bits = −12 (paper eq. 5)
+        let (acc, cycles) = mac_dot(MacVariant::Booth, &[6], &[-2], 4, 48);
+        assert_eq!(acc, -12);
+        assert_eq!(cycles, (1 + 1) * 4); // eq. 8: (n+1)·b_max
+    }
+
+    #[test]
+    fn accumulates_dot_product() {
+        // [1,2,3]·[4,5,6] = 32 at 8 bits
+        let (acc, cycles) = mac_dot(MacVariant::Booth, &[1, 2, 3], &[4, 5, 6], 8, 48);
+        assert_eq!(acc, 32);
+        assert_eq!(cycles, (3 + 1) * 8);
+    }
+
+    #[test]
+    fn adder_fires_only_on_transitions() {
+        // multiplier 0 at any width fires the adder zero times
+        let run = crate::sim::driver::mac_dot_with_stats(MacVariant::Booth, &[7], &[0], 8, 48);
+        assert_eq!(run.2.adder_ops, 0);
+        // multiplier −1 (all ones) has exactly one 0→1 transition
+        let run = crate::sim::driver::mac_dot_with_stats(MacVariant::Booth, &[7], &[-1], 8, 48);
+        assert_eq!(run.2.adder_ops, 1);
+        assert_eq!(run.0, -7);
+    }
+
+    #[test]
+    fn fault_injection_flips_bit() {
+        let mut mac = BoothMac::new(16);
+        assert_eq!(mac.accumulator(), 0);
+        mac.inject_accumulator_fault(3);
+        assert_eq!(mac.accumulator(), 8);
+        mac.inject_accumulator_fault(3);
+        assert_eq!(mac.accumulator(), 0);
+        // flipping the top bit goes negative (two's complement register)
+        mac.inject_accumulator_fault(15);
+        assert!(mac.accumulator() < 0);
+    }
+
+    #[test]
+    fn accumulator_wraps_like_hardware_register() {
+        // 8-bit accumulator: 100 + 100 wraps
+        let (acc, _) = mac_dot(MacVariant::Booth, &[100, 100], &[1, 1], 8, 8);
+        assert_eq!(acc, crate::bits::twos::wrap_to(200, 8));
+    }
+}

@@ -1,0 +1,274 @@
+//! Circuits shared by both MAC variants (§III-A): the value-toggle
+//! edge detector, the multiplicand mask circuit, and the
+//! multiplication-enable gating.
+
+use crate::bits::twos::decode;
+use crate::sim::stats::MacStats;
+
+/// Which MAC architecture (paper §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MacVariant {
+    /// Booth-recoded MAC (Fig. 2): single adder, add/sub selected by
+    /// the two most recent multiplier bits.
+    Booth,
+    /// Standard-binary-multiplication-with-correction MAC (Fig. 3):
+    /// two adders, sum and difference accumulators, final-bit
+    /// correction.
+    Sbmwc,
+}
+
+impl MacVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            MacVariant::Booth => "booth",
+            MacVariant::Sbmwc => "sbmwc",
+        }
+    }
+}
+
+impl std::str::FromStr for MacVariant {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "booth" => Ok(MacVariant::Booth),
+            "sbmwc" => Ok(MacVariant::Sbmwc),
+            other => anyhow::bail!("unknown MAC variant '{other}' (expected booth|sbmwc)"),
+        }
+    }
+}
+
+/// Per-cycle input bundle of one MAC — the signals of Figs. 2/3.
+///
+/// Signal naming follows the paper: `_i` suffixed inputs, the value
+/// toggle `v_t_i`, bit-serial multiplicand `mc_i` (MSb first) and
+/// multiplier `ml_i` (LSb first). The `*_en` flags model the per-row /
+/// per-column enable signals of the SA (§III-B): when deasserted the
+/// corresponding registers hold their state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MacInput {
+    /// Bit-serial multiplicand bit (vertical stream, MSb first).
+    pub mc_bit: bool,
+    /// Multiplicand stream valid (vertical enable).
+    pub mc_en: bool,
+    /// Bit-serial multiplier bit (horizontal stream, LSb first).
+    pub ml_bit: bool,
+    /// Multiplier stream valid (horizontal enable).
+    pub ml_en: bool,
+    /// Value toggle `v_t_i` — flips when a new operand begins. Used
+    /// instead of a cycle counter to cut switching activity (§III-A).
+    pub v_t: bool,
+}
+
+impl MacInput {
+    /// An idle cycle (both streams invalid, toggle unchanged).
+    pub fn idle(v_t: bool) -> Self {
+        MacInput {
+            v_t,
+            ..Default::default()
+        }
+    }
+}
+
+/// Multiplicand mask circuit + assembly register + toggle detector
+/// (common to Figs. 2 and 3).
+///
+/// Between value toggles the circuit appends a leading one to the mask
+/// register each cycle while the multiplicand bits shift MSb-first into
+/// the assembly register. On a toggle edge it copies the mask into the
+/// shift mask `s_m`, isolating the bits of the just-completed operand
+/// so the *next* multiplicand can stream into the same register without
+/// corrupting the ongoing multiplication (§III-A).
+#[derive(Debug, Clone)]
+pub struct MultiplicandCircuit {
+    /// Registered copy of the value toggle (the XOR partner).
+    v_t_reg: bool,
+    /// Assembly shift register: multiplicand bits, MSb first.
+    mc_shift: u32,
+    /// Growing mask: one leading 1 appended per valid cycle.
+    mask_reg: u32,
+    /// Shift mask latched at the toggle — isolates the active operand.
+    s_m: u32,
+    /// Sign-extended value of the operand isolated by `s_m`.
+    cur_mc: i64,
+    /// Effective width of `cur_mc` in bits.
+    cur_width: u32,
+    /// Multiplication-enable: set once the first complete multiplicand
+    /// has been latched (the "multiplication enable circuit").
+    mul_en: bool,
+}
+
+impl Default for MultiplicandCircuit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MultiplicandCircuit {
+    pub fn new() -> Self {
+        MultiplicandCircuit {
+            v_t_reg: false,
+            mc_shift: 0,
+            mask_reg: 0,
+            s_m: 0,
+            cur_mc: 0,
+            cur_width: 0,
+            mul_en: false,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = MultiplicandCircuit::new();
+    }
+
+    /// True when a `step` with these inputs would change no register —
+    /// the fully-idle fast path the SA uses during systolic fill/drain
+    /// (§Perf change 5). Idle means: no valid bit on either stream and
+    /// no pending toggle edge.
+    #[inline(always)]
+    pub fn is_idle(&self, mc_en: bool, v_t: bool) -> bool {
+        !mc_en && v_t == self.v_t_reg
+    }
+
+    /// One clock edge. Returns `true` when a toggle edge latched a new
+    /// operand (i.e. the multiply datapath should reload its working
+    /// multiplicand this cycle).
+    #[inline(always)]
+    pub fn step(&mut self, mc_bit: bool, mc_en: bool, v_t: bool, stats: &mut MacStats) -> bool {
+        let toggled = v_t != self.v_t_reg;
+        let mut latched = false;
+        if toggled {
+            stats.toggle_edges += 1;
+            if self.mask_reg != 0 {
+                // A complete operand sits in the assembly register:
+                // copy the mask to s_m and decode the operand.
+                self.s_m = self.mask_reg;
+                self.cur_width = self.mask_reg.count_ones();
+                self.cur_mc = decode(self.mc_shift & self.mask_reg, self.cur_width) as i64;
+                self.mul_en = true;
+                latched = true;
+            }
+            self.mask_reg = 0;
+        }
+        if mc_en {
+            self.mc_shift = (self.mc_shift << 1) | mc_bit as u32;
+            self.mask_reg = (self.mask_reg << 1) | 1;
+            stats.mc_shift_cycles += 1;
+        }
+        self.v_t_reg = v_t;
+        latched
+    }
+
+    /// The operand most recently latched (sign-extended).
+    pub fn current_mc(&self) -> i64 {
+        self.cur_mc
+    }
+
+    /// Width of the current operand.
+    pub fn current_width(&self) -> u32 {
+        self.cur_width
+    }
+
+    /// Whether the first multiplicand has arrived.
+    pub fn mul_enabled(&self) -> bool {
+        self.mul_en
+    }
+
+    /// The latched shift mask (exposed for inspection/tests).
+    pub fn shift_mask(&self) -> u32 {
+        self.s_m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::twos::Bits;
+
+    /// Stream one operand MSb-first and confirm it latches on the next
+    /// toggle edge.
+    fn stream_and_latch(value: i32, width: u32) -> (i64, u32) {
+        let mut c = MultiplicandCircuit::new();
+        let mut stats = MacStats::default();
+        let b = Bits::new(value, width).unwrap();
+        let mut v_t = false;
+        // first operand: toggle flips at its first bit
+        v_t = !v_t;
+        let msb = b.bits_msb_first();
+        for (i, &bit) in msb.iter().enumerate() {
+            let latched = c.step(bit, true, v_t, &mut stats);
+            assert!(!latched, "latched too early at bit {i}");
+        }
+        // next operand begins: toggle flips, operand latches
+        v_t = !v_t;
+        let latched = c.step(false, true, v_t, &mut stats);
+        assert!(latched);
+        (c.current_mc(), c.current_width())
+    }
+
+    #[test]
+    fn latches_positive_and_negative() {
+        assert_eq!(stream_and_latch(6, 4), (6, 4));
+        assert_eq!(stream_and_latch(-2, 4), (-2, 4));
+        assert_eq!(stream_and_latch(-128, 8), (-128, 8));
+        assert_eq!(stream_and_latch(0, 1), (0, 1));
+        assert_eq!(stream_and_latch(-1, 1), (-1, 1));
+        assert_eq!(stream_and_latch(-32768, 16), (-32768, 16));
+        assert_eq!(stream_and_latch(32767, 16), (32767, 16));
+    }
+
+    #[test]
+    fn mul_en_stays_false_without_data() {
+        let mut c = MultiplicandCircuit::new();
+        let mut stats = MacStats::default();
+        for _ in 0..10 {
+            c.step(false, false, false, &mut stats);
+        }
+        assert!(!c.mul_enabled());
+        // a toggle with an empty mask register must not enable
+        c.step(false, false, true, &mut stats);
+        assert!(!c.mul_enabled());
+    }
+
+    #[test]
+    fn back_to_back_operands_use_same_register() {
+        // Stream 5 then -3 at 4 bits with no gap; both must latch
+        // correctly even though they share the assembly register.
+        let mut c = MultiplicandCircuit::new();
+        let mut stats = MacStats::default();
+        let mut v_t = false;
+        let mut latched_values = Vec::new();
+        for &val in &[5i32, -3] {
+            v_t = !v_t;
+            for (i, &bit) in Bits::new(val, 4).unwrap().bits_msb_first().iter().enumerate() {
+                let latched = c.step(bit, true, v_t, &mut stats);
+                if i == 0 && latched {
+                    latched_values.push(c.current_mc());
+                }
+            }
+        }
+        // flush toggle to latch the second operand
+        v_t = !v_t;
+        if c.step(false, true, v_t, &mut stats) {
+            latched_values.push(c.current_mc());
+        }
+        assert_eq!(latched_values, vec![5, -3]);
+    }
+
+    #[test]
+    fn disabled_cycles_hold_state() {
+        let mut c = MultiplicandCircuit::new();
+        let mut stats = MacStats::default();
+        let mut v_t = true;
+        for &bit in &Bits::new(6, 4).unwrap().bits_msb_first() {
+            c.step(bit, true, v_t, &mut stats);
+        }
+        // idle cycles: enable low, toggle unchanged — nothing shifts
+        for _ in 0..5 {
+            c.step(true, false, v_t, &mut stats);
+        }
+        v_t = !v_t;
+        c.step(false, true, v_t, &mut stats);
+        assert_eq!(c.current_mc(), 6);
+        assert_eq!(c.current_width(), 4);
+    }
+}

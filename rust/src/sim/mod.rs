@@ -1,0 +1,135 @@
+//! Bit-true, cycle-accurate simulator of the bitSMM hardware (§III).
+//!
+//! This is the Rust re-implementation of the paper's [System]Verilog
+//! RTL at register-transfer granularity: every architectural register
+//! named in the paper (value-toggle register, multiplicand mask /
+//! shift-mask, assembly shift register, Booth accumulator, the SBMwC
+//! sum/difference accumulator pair, P2S shift registers, the SA's
+//! skewing pipeline registers, and the readout enable chain) is
+//! modelled, and the per-cycle observable behaviour (which bit enters
+//! which unit on which clock edge, when accumulators update, when
+//! outputs emerge) matches the paper's description and its latency
+//! equations (eq. 7/8 and the readout latency of §III-B).
+//!
+//! Module map (paper figure → module):
+//! * Fig. 2 (Booth MAC)        → [`mac_booth`]
+//! * Fig. 3 (SBMwC MAC)        → [`mac_sbmwc`]
+//! * Fig. 4 (SA + P2S + regs)  → [`array`], [`p2s`]
+//! * Fig. 5 (snake readout)    → [`readout`]
+//! * §I TMR motivation         → [`tmr`]
+//!
+//! The simulator is validated against [`crate::bits`] exactly as the
+//! paper validates its RTL against testbenches (§IV-A): exhaustively
+//! for ≤8-bit operand pairs, randomly for 8–16-bit, random dot products
+//! for vector lengths 1–1000, and matrix products up to the SA
+//! dimensions — see `rust/tests/`.
+
+pub mod array;
+pub mod driver;
+pub mod mac_booth;
+pub mod mac_common;
+pub mod mac_sbmwc;
+pub mod p2s;
+pub mod readout;
+pub mod stats;
+pub mod tmr;
+pub mod trace;
+pub mod verilog_gen;
+
+pub use array::{SaConfig, SystolicArray};
+pub use driver::{mac_dot, sa_matmul, MatmulRun};
+pub use mac_booth::BoothMac;
+pub use mac_common::{MacInput, MacVariant};
+pub use mac_sbmwc::SbmwcMac;
+pub use stats::{MacStats, SimStats};
+
+/// Default accumulator width in bits. 16×16-bit products summed over
+/// vectors of length ≤ 2¹⁶ need 32 + 16 = 48 bits; the compile-time
+/// default leaves headroom, mirroring the paper's fixed-at-synthesis
+/// accumulator sizing.
+pub const DEFAULT_ACC_BITS: u32 = 48;
+
+/// Object-safe interface shared by both MAC variants — the SA is
+/// generic over it, matching the paper's drop-in exchange of the two
+/// MAC architectures inside the same array (§IV-A).
+pub trait BitSerialMac {
+    /// Advance one clock edge with the given input bits.
+    fn step(&mut self, input: MacInput);
+    /// Current dot-product accumulator value (what the readout network
+    /// forwards when this MAC's enable is asserted).
+    fn accumulator(&self) -> i64;
+    /// Synchronous reset (the SA's global reset, §III-B).
+    fn reset(&mut self);
+    /// Switching-activity counters for the power model.
+    fn stats(&self) -> &MacStats;
+    /// Which variant this is (for reporting).
+    fn variant(&self) -> MacVariant;
+    /// Inject a single-event upset: flip bit `bit` of the accumulator
+    /// (radiation-fault model used by the TMR harness; §I).
+    fn inject_accumulator_fault(&mut self, bit: u32);
+}
+
+/// Construct a MAC of the given variant with `acc_bits`-wide
+/// accumulators.
+pub fn make_mac(variant: MacVariant, acc_bits: u32) -> Box<dyn BitSerialMac + Send> {
+    match variant {
+        MacVariant::Booth => Box::new(BoothMac::new(acc_bits)),
+        MacVariant::Sbmwc => Box::new(SbmwcMac::new(acc_bits)),
+    }
+}
+
+/// Statically dispatched MAC — the SA's grid element. `Box<dyn>` costs
+/// a vtable call per MAC per cycle in the simulator's innermost loop;
+/// the enum lets the compiler inline both step functions
+/// (§Perf change 2).
+#[derive(Debug, Clone)]
+pub enum MacUnit {
+    Booth(BoothMac),
+    Sbmwc(SbmwcMac),
+}
+
+impl MacUnit {
+    pub fn new(variant: MacVariant, acc_bits: u32) -> MacUnit {
+        match variant {
+            MacVariant::Booth => MacUnit::Booth(BoothMac::new(acc_bits)),
+            MacVariant::Sbmwc => MacUnit::Sbmwc(SbmwcMac::new(acc_bits)),
+        }
+    }
+
+    #[inline(always)]
+    pub fn step(&mut self, input: MacInput) {
+        match self {
+            MacUnit::Booth(m) => m.step(input),
+            MacUnit::Sbmwc(m) => m.step(input),
+        }
+    }
+
+    #[inline]
+    pub fn accumulator(&self) -> i64 {
+        match self {
+            MacUnit::Booth(m) => m.accumulator(),
+            MacUnit::Sbmwc(m) => m.accumulator(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        match self {
+            MacUnit::Booth(m) => m.reset(),
+            MacUnit::Sbmwc(m) => m.reset(),
+        }
+    }
+
+    pub fn stats(&self) -> &MacStats {
+        match self {
+            MacUnit::Booth(m) => m.stats(),
+            MacUnit::Sbmwc(m) => m.stats(),
+        }
+    }
+
+    pub fn inject_accumulator_fault(&mut self, bit: u32) {
+        match self {
+            MacUnit::Booth(m) => m.inject_accumulator_fault(bit),
+            MacUnit::Sbmwc(m) => m.inject_accumulator_fault(bit),
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Parallel-to-serial (P2S) converters (paper §III-B, Fig. 4).
+//!
+//! P2S units turn parallel values fetched from memory into serial bit
+//! streams. Once `valid` is asserted each unit stores the value in an
+//! internal shift register and shifts every cycle:
+//!
+//! * **Vertical** P2S (multiplicand inputs): emits **MSb first**, the
+//!   internal register shifts *left* each cycle. It also drives the
+//!   value toggle `v_t` that flips at each operand boundary.
+//! * **Horizontal** P2S (multiplier inputs): emits **LSb first**, the
+//!   register shifts *right*.
+//!
+//! A practical consequence the paper highlights in §V: weights can be
+//! stored big-endian and activations little-endian — no in-memory data
+//! manipulation before multiplication.
+
+use crate::bits::twos::encode;
+
+/// Bit emission order (which end of the register leaves first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BitOrder {
+    /// MSb first — vertical / multiplicand side (shift left).
+    MsbFirst,
+    /// LSb first — horizontal / multiplier side (shift right).
+    LsbFirst,
+}
+
+/// One parallel-to-serial converter.
+#[derive(Debug, Clone)]
+pub struct P2s {
+    order: BitOrder,
+    /// Internal shift register (holds the two's-complement pattern).
+    reg: u32,
+    /// Bits remaining in the current value.
+    remaining: u32,
+    /// Operand width of the current value.
+    width: u32,
+    /// Value toggle output (vertical units drive the MACs' `v_t`).
+    v_t: bool,
+}
+
+/// One emitted bit plus stream metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct P2sOut {
+    pub bit: bool,
+    pub valid: bool,
+    pub v_t: bool,
+}
+
+impl P2s {
+    pub fn new(order: BitOrder) -> Self {
+        P2s {
+            order,
+            reg: 0,
+            remaining: 0,
+            width: 0,
+            v_t: false,
+        }
+    }
+
+    /// True when the current value has fully shifted out.
+    pub fn empty(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// Load a new parallel value (asserting `valid` in hardware). Flips
+    /// the value toggle — this is what signals the operand boundary to
+    /// the MACs downstream.
+    pub fn load(&mut self, value: i32, width: u32) {
+        debug_assert!(self.empty(), "P2S loaded while still shifting");
+        self.reg = encode(value, width);
+        self.width = width;
+        self.remaining = width;
+        self.v_t = !self.v_t;
+    }
+
+    /// Flip the toggle without loading data — the flush slot that lets
+    /// the final operand latch once the stream ends.
+    pub fn flush_toggle(&mut self) {
+        self.v_t = !self.v_t;
+    }
+
+    /// Shift one bit out. When empty, emits `valid = false` and holds
+    /// the toggle.
+    #[inline(always)]
+    pub fn shift(&mut self) -> P2sOut {
+        if self.remaining == 0 {
+            return P2sOut {
+                bit: false,
+                valid: false,
+                v_t: self.v_t,
+            };
+        }
+        let bit = match self.order {
+            BitOrder::MsbFirst => {
+                let b = (self.reg >> (self.width - 1)) & 1 == 1;
+                self.reg = (self.reg << 1) & crate::bits::twos::low_mask(self.width);
+                b
+            }
+            BitOrder::LsbFirst => {
+                let b = self.reg & 1 == 1;
+                self.reg >>= 1;
+                b
+            }
+        };
+        self.remaining -= 1;
+        P2sOut {
+            bit,
+            valid: true,
+            v_t: self.v_t,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::twos::Bits;
+
+    fn drain(p: &mut P2s, n: u32) -> Vec<bool> {
+        (0..n).map(|_| p.shift().bit).collect()
+    }
+
+    #[test]
+    fn vertical_emits_msb_first() {
+        let mut p = P2s::new(BitOrder::MsbFirst);
+        p.load(-2, 4); // 1110
+        assert_eq!(drain(&mut p, 4), Bits::new(-2, 4).unwrap().bits_msb_first());
+        assert!(p.empty());
+    }
+
+    #[test]
+    fn horizontal_emits_lsb_first() {
+        let mut p = P2s::new(BitOrder::LsbFirst);
+        p.load(6, 4); // 0110
+        assert_eq!(drain(&mut p, 4), Bits::new(6, 4).unwrap().bits_lsb_first());
+    }
+
+    #[test]
+    fn toggle_flips_per_load() {
+        let mut p = P2s::new(BitOrder::MsbFirst);
+        let t0 = p.shift().v_t;
+        p.load(3, 4);
+        let t1 = p.shift().v_t;
+        assert_ne!(t0, t1);
+        drain(&mut p, 3);
+        p.load(5, 4);
+        let t2 = p.shift().v_t;
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    fn empty_stream_is_invalid_and_holds_toggle() {
+        let mut p = P2s::new(BitOrder::LsbFirst);
+        let o1 = p.shift();
+        let o2 = p.shift();
+        assert!(!o1.valid && !o2.valid);
+        assert_eq!(o1.v_t, o2.v_t);
+    }
+
+    #[test]
+    fn variable_width_values_in_one_stream() {
+        // runtime-configurable precision: stream a 3-bit then a 5-bit value
+        let mut p = P2s::new(BitOrder::MsbFirst);
+        p.load(-4, 3); // 100
+        assert_eq!(drain(&mut p, 3), vec![true, false, false]);
+        p.load(9, 5); // 01001
+        assert_eq!(drain(&mut p, 5), vec![false, true, false, false, true]);
+    }
+}

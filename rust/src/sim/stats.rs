@@ -1,0 +1,125 @@
+//! Switching-activity and cycle counters.
+//!
+//! The paper's power argument (§III-A) is structural: the Booth MAC
+//! fires its single adder only when consecutive multiplier bits differ,
+//! the value toggle replaces a free-running cycle counter, and the
+//! SBMwC MAC pays for two adders every set multiplier bit. These
+//! counters capture exactly those events so the FPGA/ASIC power models
+//! ([`crate::arch`]) can scale dynamic power with measured activity
+//! instead of assuming a constant toggle rate.
+
+/// Per-MAC activity counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MacStats {
+    /// Clock cycles in which the multiplicand assembly register shifted.
+    pub mc_shift_cycles: u64,
+    /// Clock cycles in which the multiplier datapath was active.
+    pub ml_active_cycles: u64,
+    /// Value-toggle edges observed.
+    pub toggle_edges: u64,
+    /// Adder firings (adds + subtracts). For SBMwC each set multiplier
+    /// bit fires *two* adders (sum and difference paths).
+    pub adder_ops: u64,
+    /// Accumulator register writes.
+    pub acc_writes: u64,
+}
+
+impl MacStats {
+    pub fn merge(&mut self, other: &MacStats) {
+        self.mc_shift_cycles += other.mc_shift_cycles;
+        self.ml_active_cycles += other.ml_active_cycles;
+        self.toggle_edges += other.toggle_edges;
+        self.adder_ops += other.adder_ops;
+        self.acc_writes += other.acc_writes;
+    }
+
+    /// Adder duty cycle: fraction of multiplier-active cycles that
+    /// fired an adder — the headline Booth-vs-SBMwC activity metric.
+    pub fn adder_duty(&self) -> f64 {
+        if self.ml_active_cycles == 0 {
+            0.0
+        } else {
+            self.adder_ops as f64 / self.ml_active_cycles as f64
+        }
+    }
+}
+
+/// Whole-array simulation statistics for one matrix multiplication.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Cycles spent streaming/computing (eq. 8 plus systolic skew).
+    pub compute_cycles: u64,
+    /// Cycles spent draining the readout network (= rows × cols).
+    pub readout_cycles: u64,
+    /// Aggregated MAC activity across the whole grid.
+    pub mac: MacStats,
+    /// Number of MAC units in the array.
+    pub num_macs: u64,
+    /// MAC results produced (one per output element).
+    pub mac_results: u64,
+}
+
+impl SimStats {
+    /// Total cycles for the operation.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.readout_cycles
+    }
+
+    /// Achieved operations per cycle (paper convention: one OP per
+    /// completed multiply-accumulate result element contribution,
+    /// i.e. n MAC-ops per output element — see DESIGN.md eq-9 note).
+    pub fn ops_per_cycle(&self, n: u64) -> f64 {
+        if self.total_cycles() == 0 {
+            return 0.0;
+        }
+        (self.mac_results * n) as f64 / self.total_cycles() as f64
+    }
+
+    /// Throughput in OPS at a clock frequency `hz`.
+    pub fn ops_per_second(&self, n: u64, hz: f64) -> f64 {
+        self.ops_per_cycle(n) * hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = MacStats {
+            mc_shift_cycles: 1,
+            ml_active_cycles: 2,
+            toggle_edges: 3,
+            adder_ops: 4,
+            acc_writes: 5,
+        };
+        a.merge(&a.clone());
+        assert_eq!(a.adder_ops, 8);
+        assert_eq!(a.toggle_edges, 6);
+    }
+
+    #[test]
+    fn duty_cycle() {
+        let s = MacStats {
+            ml_active_cycles: 10,
+            adder_ops: 4,
+            ..Default::default()
+        };
+        assert!((s.adder_duty() - 0.4).abs() < 1e-12);
+        assert_eq!(MacStats::default().adder_duty(), 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = SimStats {
+            compute_cycles: 90,
+            readout_cycles: 10,
+            mac_results: 50,
+            ..Default::default()
+        };
+        // 50 results × n=4 MAC-ops each over 100 cycles = 2 OP/cycle
+        assert!((s.ops_per_cycle(4) - 2.0).abs() < 1e-12);
+        assert!((s.ops_per_second(4, 300e6) - 600e6).abs() < 1.0);
+    }
+}

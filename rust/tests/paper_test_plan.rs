@@ -1,0 +1,139 @@
+//! The paper's §IV-A verification plan, executed verbatim against the
+//! cycle-accurate simulator:
+//!
+//! * exhaustive multiplicand–multiplier pairs for widths up to 8 bits;
+//! * 100 random operand pairs per width for 8–16 bits;
+//! * random vector dot products, widths 1–16, lengths 1–1000;
+//! * multiple SA topologies, matmuls with varying matrix sizes (up to
+//!   the SA dimensions) and vector lengths, outputs checked against
+//!   the expected results.
+
+use bitsmm::bits::twos::{max_value, min_value};
+use bitsmm::prng::Pcg32;
+use bitsmm::sim::array::{SaConfig, SystolicArray};
+use bitsmm::sim::driver::{mac_dot, ref_matmul_i64};
+use bitsmm::sim::mac_common::MacVariant;
+use bitsmm::sim::DEFAULT_ACC_BITS;
+
+/// Exhaustive pairs at widths 1..=8 for both MAC variants.
+/// (Paper: "we exhaustively tested all multiplicand–multiplier pairs
+/// for bit widths up to 8 bits".) The 8-bit sweep is 65 536 pairs per
+/// variant at 16 cycles each — fast enough in release, so no sampling.
+#[test]
+fn exhaustive_mac_pairs_to_8_bits() {
+    for bits in 1..=8u32 {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        for a in lo..=hi {
+            for b in lo..=hi {
+                let expect = (a as i64) * (b as i64);
+                for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+                    let (acc, cycles) = mac_dot(variant, &[a], &[b], bits, DEFAULT_ACC_BITS);
+                    assert_eq!(acc, expect, "{variant:?} {a}x{b} @{bits}b");
+                    assert_eq!(cycles, 2 * bits as u64);
+                }
+            }
+        }
+    }
+}
+
+/// 100 random pairs per width for widths 8..=16 (paper's random axis).
+#[test]
+fn random_mac_pairs_8_to_16_bits() {
+    let mut rng = Pcg32::new(0x1eaf);
+    for bits in 8..=16u32 {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        for _ in 0..100 {
+            let a = rng.range_i32(lo, hi);
+            let b = rng.range_i32(lo, hi);
+            for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+                let (acc, _) = mac_dot(variant, &[a], &[b], bits, DEFAULT_ACC_BITS);
+                assert_eq!(acc, (a as i64) * (b as i64), "{variant:?} {a}x{b} @{bits}b");
+            }
+        }
+    }
+}
+
+/// Random dot products: widths 1–16, vector lengths 1–1000.
+#[test]
+fn random_dot_products_lengths_1_to_1000() {
+    let mut rng = Pcg32::new(0xd07b);
+    let lengths = [1usize, 2, 5, 13, 64, 250, 611, 1000];
+    for &len in &lengths {
+        for _ in 0..2 {
+            let bits = 1 + rng.below(16);
+            let (lo, hi) = (min_value(bits), max_value(bits));
+            let mc: Vec<i32> = (0..len).map(|_| rng.range_i32(lo, hi)).collect();
+            let ml: Vec<i32> = (0..len).map(|_| rng.range_i32(lo, hi)).collect();
+            let expect: i64 = mc.iter().zip(&ml).map(|(&a, &b)| a as i64 * b as i64).sum();
+            for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+                let (acc, cycles) = mac_dot(variant, &mc, &ml, bits, DEFAULT_ACC_BITS);
+                assert_eq!(acc, expect, "{variant:?} len={len} bits={bits}");
+                assert_eq!(cycles, (len as u64 + 1) * bits as u64, "eq. 8");
+            }
+        }
+    }
+}
+
+/// Multiple SA topologies × matrix sizes (up to the SA dims) × vector
+/// lengths, both variants — the paper's SA test matrix.
+#[test]
+fn sa_topologies_and_matrix_sizes() {
+    let mut rng = Pcg32::new(0x5a5a);
+    let topologies = [(2usize, 2usize), (4, 16), (8, 8), (3, 5)];
+    for &(rows, cols) in &topologies {
+        for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+            let sa = SaConfig::new(rows, cols, variant);
+            let mut arr = SystolicArray::new(sa);
+            for &(m, n) in &[(1usize, 1usize), (rows, cols), (rows.min(2), cols.min(3))] {
+                for &k in &[1usize, 7, 33] {
+                    let bits = 1 + rng.below(8);
+                    let (lo, hi) = (min_value(bits), max_value(bits));
+                    let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+                    let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+                    let out = arr.matmul(&a, &b, m, k, n, bits).expect("sim matmul");
+                    assert_eq!(
+                        out.result,
+                        ref_matmul_i64(&a, &b, m, k, n),
+                        "{variant:?} {rows}x{cols} SA, {m}x{k}x{n} @{bits}b"
+                    );
+                    // eq. 8 + fill + readout bounds
+                    let eq8 = (k as u64 + 1) * bits as u64;
+                    assert!(out.stats.compute_cycles >= eq8);
+                    assert!(out.stats.compute_cycles <= eq8 + (rows + cols) as u64);
+                    assert_eq!(out.stats.readout_cycles, (rows * cols) as u64);
+                }
+            }
+        }
+    }
+}
+
+/// Back-to-back matmuls on one array must not leak state (the global
+/// reset of §III-B).
+#[test]
+fn array_reset_between_runs() {
+    let sa = SaConfig::new(2, 3, MacVariant::Booth);
+    let mut arr = SystolicArray::new(sa);
+    let a = [7i32, -3, 2, 5, -1, 4]; // 2×3
+    let b = [1i32, 2, 3, -1, 0, 2, 1, 1, -2]; // 3×3
+    let first = arr.matmul(&a, &b, 2, 3, 3, 4).unwrap().result;
+    for _ in 0..3 {
+        let again = arr.matmul(&a, &b, 2, 3, 3, 4).unwrap().result;
+        assert_eq!(again, first);
+    }
+}
+
+/// Mixed effective widths in consecutive runs — runtime-configurable
+/// precision on the same hardware instance.
+#[test]
+fn runtime_precision_reconfiguration() {
+    let sa = SaConfig::new(4, 4, MacVariant::Sbmwc);
+    let mut arr = SystolicArray::new(sa);
+    let mut rng = Pcg32::new(3);
+    for &bits in &[1u32, 16, 2, 12, 7] {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let a: Vec<i32> = (0..4 * 5).map(|_| rng.range_i32(lo, hi)).collect();
+        let b: Vec<i32> = (0..5 * 4).map(|_| rng.range_i32(lo, hi)).collect();
+        let out = arr.matmul(&a, &b, 4, 5, 4, bits).unwrap();
+        assert_eq!(out.result, ref_matmul_i64(&a, &b, 4, 5, 4), "bits={bits}");
+    }
+}

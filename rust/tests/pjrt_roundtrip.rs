@@ -1,0 +1,152 @@
+//! Integration of the AOT path: HLO artifacts produced by the Python
+//! L1/L2 layers, loaded and executed from Rust through PJRT, must be
+//! bit-identical to the native Booth-plane path and the cycle-accurate
+//! hardware simulator.
+//!
+//! Requires `make artifacts`; each test skips (with a notice) when the
+//! artifact directory is absent so `cargo test` stays green on a fresh
+//! checkout.
+
+use bitsmm::coordinator::{Backend, Scheduler};
+use bitsmm::prng::Pcg32;
+use bitsmm::runtime::{EngineHandle, IntMat};
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::driver::ref_matmul_i64;
+use bitsmm::sim::mac_common::MacVariant;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = bitsmm::runtime::default_artifact_dir();
+    let dir = if dir.is_relative() {
+        // cargo test runs from the workspace root
+        std::env::current_dir().ok()?.join(dir)
+    } else {
+        dir
+    };
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] no artifacts at {} — run `make artifacts`", dir.display());
+        None
+    }
+}
+
+fn rand_ops(seed: u64, m: usize, k: usize, n: usize, bits: u32) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Pcg32::new(seed);
+    let lo = bitsmm::bits::twos::min_value(bits);
+    let hi = bitsmm::bits::twos::max_value(bits);
+    (
+        (0..m * k).map(|_| rng.range_i32(lo, hi)).collect(),
+        (0..k * n).map(|_| rng.range_i32(lo, hi)).collect(),
+    )
+}
+
+#[test]
+fn pjrt_matmul_matches_native_all_artifact_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, _join) = EngineHandle::spawn(&dir).expect("engine");
+    // exercise every registered f32 matmul artifact
+    let shapes = [
+        (8usize, 64usize, 64usize),
+        (8, 64, 32),
+        (8, 32, 10),
+        (32, 64, 64),
+        (32, 64, 32),
+        (32, 32, 10),
+        (64, 128, 128),
+    ];
+    for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+        for bits in [2u32, 4, 8] {
+            for &(m, k, n) in &shapes {
+                let (a, b) = rand_ops(m as u64 * 31 + bits as u64, m, k, n, bits);
+                let got = engine
+                    .execute_matmul(
+                        IntMat::new(a.clone(), m, k).unwrap(),
+                        IntMat::new(b.clone(), k, n).unwrap(),
+                        bits,
+                        variant,
+                    )
+                    .expect("execute")
+                    .unwrap_or_else(|| panic!("artifact missing for {m}x{k}x{n} b{bits} {variant:?}"));
+                let want = ref_matmul_i64(&a, &b, m, k, n);
+                let got_i: Vec<i64> = got.iter().map(|&v| v.round() as i64).collect();
+                assert_eq!(got_i, want, "{variant:?} {m}x{k}x{n} @{bits}b");
+            }
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn pjrt_exact_f64_artifact_at_16_bits() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, _join) = EngineHandle::spawn(&dir).expect("engine");
+    let (m, k, n, bits) = (8usize, 64usize, 64usize, 16u32);
+    let (a, b) = rand_ops(0xe8ac, m, k, n, bits);
+    let got = engine
+        .execute(
+            "mm_booth_b16_8x64x64_exact",
+            vec![
+                IntMat::new(a.clone(), m, k).unwrap(),
+                IntMat::new(b.clone(), k, n).unwrap(),
+            ],
+        )
+        .expect("execute exact");
+    let want = ref_matmul_i64(&a, &b, m, k, n);
+    let got_i: Vec<i64> = got.iter().map(|&v| v.round() as i64).collect();
+    assert_eq!(got_i, want, "f64 artifact must be exact at 16-bit operands");
+    engine.shutdown();
+}
+
+#[test]
+fn pjrt_backend_cosimulates_with_hardware_sim() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, _join) = EngineHandle::spawn(&dir).expect("engine");
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+    let (m, k, n, bits) = (8usize, 64usize, 32usize, 8u32);
+    let (a, b) = rand_ops(0xc051, m, k, n, bits);
+
+    let mut pjrt = Scheduler::new(sa, Backend::Pjrt(engine.clone()));
+    let mut sim = Scheduler::new(sa, Backend::Simulate);
+    let y1 = pjrt.matmul(&a, &b, m, k, n, bits).unwrap();
+    let y2 = sim.matmul(&a, &b, m, k, n, bits).unwrap();
+    assert_eq!(y1, y2, "PJRT and cycle-accurate sim must be bit-identical");
+    assert_eq!(pjrt.report.pjrt_hits, 1);
+    assert_eq!(pjrt.report.native_fallbacks, 0);
+    engine.shutdown();
+}
+
+#[test]
+fn pjrt_unregistered_shape_falls_back_natively() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, _join) = EngineHandle::spawn(&dir).expect("engine");
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+    let (m, k, n, bits) = (3usize, 11usize, 5usize, 7u32); // no artifact
+    let (a, b) = rand_ops(7, m, k, n, bits);
+    let mut sched = Scheduler::new(sa, Backend::Pjrt(engine.clone()));
+    let y = sched.matmul(&a, &b, m, k, n, bits).unwrap();
+    assert_eq!(y, ref_matmul_i64(&a, &b, m, k, n));
+    assert_eq!(sched.report.pjrt_hits, 0);
+    assert_eq!(sched.report.native_fallbacks, 1);
+    engine.shutdown();
+}
+
+#[test]
+fn pjrt_mlp_artifact_runs() {
+    let Some(dir) = artifact_dir() else { return };
+    let (engine, _join) = EngineHandle::spawn(&dir).expect("engine");
+    // the mlp_8 artifact embeds its parameter shapes: x[8,64] + 3 W + 3 b
+    let mut rng = Pcg32::new(0x31);
+    let x = IntMat::new((0..8 * 64).map(|_| rng.range_i32(-128, 127)).collect(), 8, 64).unwrap();
+    let dims = [(64usize, 64usize), (64, 32), (32, 10)];
+    let mut inputs = vec![x];
+    for &(i, o) in &dims {
+        inputs.push(IntMat::new((0..i * o).map(|_| rng.range_i32(-63, 63)).collect(), i, o).unwrap());
+    }
+    for &(_, o) in &dims {
+        inputs.push(IntMat::vec((0..o).map(|_| rng.range_i32(-128, 127)).collect()));
+    }
+    let out = engine.execute("mlp_8", inputs).expect("mlp artifact");
+    assert_eq!(out.len(), 8 * 10);
+    assert!(out.iter().all(|v| v.is_finite()));
+    engine.shutdown();
+}

@@ -1,0 +1,138 @@
+//! Property-based invariants over the coordinator and arithmetic
+//! substrates, using the in-repo property-testing framework
+//! (`proptest_lite`): routing/tiling coverage, quantization bounds,
+//! Booth-digit reconstruction, simulator-vs-native agreement, and
+//! batching conservation.
+
+use bitsmm::bits::booth::booth_digits;
+use bitsmm::bits::twos::{max_value, min_value, Bits};
+use bitsmm::coordinator::tile_matmul;
+use bitsmm::nn::matmul_native;
+use bitsmm::nn::quant::{dequantize, quantize_symmetric};
+use bitsmm::prng::Pcg32;
+use bitsmm::proptest_lite::{forall, Gen};
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::driver::{mac_dot, ref_matmul_i64, sa_matmul};
+use bitsmm::sim::mac_common::MacVariant;
+
+/// Tiling covers every output element exactly once, for arbitrary
+/// problem and array geometries.
+#[test]
+fn prop_tiler_partitions_output() {
+    let gen = Gen::pair(
+        Gen::pair(Gen::u32s(1, 40), Gen::u32s(1, 40)), // (m, n)
+        Gen::pair(Gen::u32s(1, 9), Gen::u32s(1, 17)),  // (rows, cols)
+    );
+    forall("tiler partitions output", 300, gen, |&((m, n), (rows, cols))| {
+        let sa = SaConfig::new(rows as usize, cols as usize, MacVariant::Booth);
+        let plan = tile_matmul(m as usize, 3, n as usize, &sa);
+        let mut cover = vec![0u32; (m * n) as usize];
+        for j in &plan.jobs {
+            if j.m > rows as usize || j.n > cols as usize {
+                return false;
+            }
+            for r in j.row0..j.row0 + j.m {
+                for c in j.col0..j.col0 + j.n {
+                    cover[r * n as usize + c] += 1;
+                }
+            }
+        }
+        cover.iter().all(|&x| x == 1)
+    });
+}
+
+/// Quantization always lands inside the two's-complement range and the
+/// reconstruction error is bounded by half a step.
+#[test]
+fn prop_quantization_bounds() {
+    let gen = Gen::pair(Gen::u32s(1, 16), Gen::vecs(Gen::i32s(-1000, 1000), 1, 64));
+    forall("quantization bounds", 300, gen, |(bits, raw)| {
+        let x: Vec<f64> = raw.iter().map(|&v| v as f64 / 37.0).collect();
+        let t = match quantize_symmetric(&x, vec![x.len()], *bits) {
+            Ok(t) => t,
+            Err(_) => return false,
+        };
+        let in_range = t
+            .data
+            .iter()
+            .all(|&q| q >= min_value(*bits) && q <= max_value(*bits));
+        // reconstruction error bounded by half a step for values the
+        // grid can represent; symmetric quantization clamps the extreme
+        // positive value (|max| = |min|−1 step), so allow a full step
+        let xr = dequantize(&t);
+        let bounded = x
+            .iter()
+            .zip(&xr)
+            .all(|(a, b)| (a - b).abs() <= t.scale + 1e-9);
+        in_range && bounded
+    });
+}
+
+/// Booth digits always reconstruct the value (Table I identity) and
+/// contain no digit runs of equal nonzero sign without a gap — the
+/// structural property that bounds adder activity.
+#[test]
+fn prop_booth_digits_reconstruct() {
+    let gen = Gen::pair(Gen::u32s(1, 16), Gen::i32s(-32768, 32767));
+    forall("booth digits reconstruct", 500, gen, |&(bits, v)| {
+        let v = v.clamp(min_value(bits), max_value(bits));
+        let b = Bits::new(v, bits).unwrap();
+        let digits = booth_digits(b);
+        let sum: i64 = digits.iter().enumerate().map(|(i, &d)| (d as i64) << i).sum();
+        let no_adjacent_same_sign = digits
+            .windows(2)
+            .all(|w| !(w[0] != 0 && w[1] != 0 && w[0] == w[1]));
+        sum == v as i64 && no_adjacent_same_sign
+    });
+}
+
+/// The three functional paths agree: reference integer matmul, native
+/// Booth-plane matmul, and the cycle-accurate simulator.
+#[test]
+fn prop_backends_agree() {
+    let gen = Gen::pair(
+        Gen::pair(Gen::u32s(1, 4), Gen::pair(Gen::u32s(1, 9), Gen::u32s(1, 6))),
+        Gen::pair(Gen::u32s(1, 8), Gen::u32s(0, u32::MAX)),
+    );
+    forall("backends agree", 60, gen, |&((m, (k, n)), (bits, seed))| {
+        let mut rng = Pcg32::new(seed as u64);
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let a: Vec<i32> = (0..(m * k) as usize).map(|_| rng.range_i32(lo, hi)).collect();
+        let b: Vec<i32> = (0..(k * n) as usize).map(|_| rng.range_i32(lo, hi)).collect();
+        let (m, k, n) = (m as usize, k as usize, n as usize);
+        let reference = ref_matmul_i64(&a, &b, m, k, n);
+        let native = matmul_native(&a, &b, m, k, n, bits).unwrap();
+        let sa = SaConfig::new(m, n, MacVariant::Booth);
+        let sim = sa_matmul(sa, &a, &b, m, k, n, bits).unwrap().result;
+        native == reference && sim == reference
+    });
+}
+
+/// Single-MAC dot products satisfy eq. 8 cycle counts for every
+/// (length, width) pair.
+#[test]
+fn prop_eq8_cycles_exact() {
+    let gen = Gen::pair(Gen::u32s(1, 16), Gen::u32s(1, 64));
+    forall("eq8 exact", 120, gen, |&(bits, len)| {
+        // {0, −1} fits every width including 1-bit
+        let mc: Vec<i32> = (0..len as usize).map(|i| -((i as i32) % 2)).collect();
+        let ml = mc.clone();
+        let (_, cycles) = mac_dot(MacVariant::Booth, &mc, &ml, bits, 48);
+        cycles == (len as u64 + 1) * bits as u64
+    });
+}
+
+/// Accumulator wrapping is consistent between variants: both wrap to
+/// the same register-width semantics.
+#[test]
+fn prop_wrapping_consistent_between_variants() {
+    let gen = Gen::pair(Gen::u32s(8, 20), Gen::u32s(0, u32::MAX));
+    forall("wrap consistent", 80, gen, |&(acc_bits, seed)| {
+        let mut rng = Pcg32::new(seed as u64);
+        let mc: Vec<i32> = (0..12).map(|_| rng.range_i32(-128, 127)).collect();
+        let ml: Vec<i32> = (0..12).map(|_| rng.range_i32(-128, 127)).collect();
+        let (a, _) = mac_dot(MacVariant::Booth, &mc, &ml, 8, acc_bits);
+        let (b, _) = mac_dot(MacVariant::Sbmwc, &mc, &ml, 8, acc_bits);
+        a == b
+    });
+}

@@ -1,0 +1,122 @@
+//! Server-level integration: batching, multi-worker serving, backend
+//! determinism, backpressure observability, and failure injection
+//! (malformed requests must not take the server down).
+
+use bitsmm::coordinator::{
+    serve_all, Backend, BatcherConfig, InferenceServer, Request, ServerConfig,
+};
+use bitsmm::nn::model::mlp_zoo;
+use bitsmm::prng::Pcg32;
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::mac_common::MacVariant;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn inputs(n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| (0..64).map(|_| rng.range_i32(-128, 127)).collect())
+        .collect()
+}
+
+fn base_cfg(workers: usize) -> ServerConfig {
+    let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+    cfg.workers = workers;
+    cfg.batcher = BatcherConfig {
+        max_batch: 8,
+        linger: std::time::Duration::from_millis(1),
+    };
+    cfg
+}
+
+#[test]
+fn four_workers_serve_disjoint_requests() {
+    let model = Arc::new(mlp_zoo(9));
+    let (resp, report, metrics) = serve_all(model, base_cfg(4), inputs(97, 1)).unwrap();
+    assert_eq!(resp.len(), 97);
+    assert_eq!(metrics.requests, 97);
+    // every id exactly once
+    for (i, r) in resp.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+    }
+    assert!(report.matmuls >= 3); // at least one batch of 3 layers
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let model = Arc::new(mlp_zoo(9));
+    let ins = inputs(24, 2);
+    let (r1, _, _) = serve_all(model.clone(), base_cfg(1), ins.clone()).unwrap();
+    let (r4, _, _) = serve_all(model, base_cfg(4), ins).unwrap();
+    for (a, b) in r1.iter().zip(&r4) {
+        assert_eq!(a.output, b.output);
+    }
+}
+
+#[test]
+fn malformed_request_is_dropped_not_fatal() {
+    let model = Arc::new(mlp_zoo(9));
+    let server = InferenceServer::start(model, base_cfg(1)).unwrap();
+    // out-of-range activation (300 exceeds 8-bit) — the batch is
+    // rejected by QTensor validation and dropped
+    let bad_rx = server.submit(Request {
+        id: 0,
+        input: vec![300; 64],
+        submitted: Instant::now(),
+    });
+    // wait until the bad batch has been consumed so it cannot merge
+    // with the good request below
+    let bad = bad_rx.recv_timeout(std::time::Duration::from_millis(500));
+    assert!(bad.is_err(), "malformed request must not produce a response");
+    let good_rx = server.submit(Request {
+        id: 1,
+        input: vec![1; 64],
+        submitted: Instant::now(),
+    });
+    let good = good_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert_eq!(good.id, 1);
+    let (_, metrics) = server.shutdown();
+    assert_eq!(metrics.requests, 1);
+}
+
+#[test]
+fn queue_depth_reflects_backlog() {
+    let model = Arc::new(mlp_zoo(9));
+    // zero workers is rejected; use a server whose single worker we
+    // stall by submitting a large burst and checking depth observably
+    let server = InferenceServer::start(model, base_cfg(1)).unwrap();
+    let mut rxs = Vec::new();
+    for (i, input) in inputs(64, 3).into_iter().enumerate() {
+        rxs.push(server.submit(Request {
+            id: i as u64,
+            input,
+            submitted: Instant::now(),
+        }));
+    }
+    // depth is a point-in-time observation; it must never exceed the
+    // submitted count and must drain to zero by shutdown
+    assert!(server.queue_depth() <= 64);
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert_eq!(server.queue_depth(), 0);
+    server.shutdown();
+}
+
+#[test]
+fn zero_workers_rejected() {
+    let model = Arc::new(mlp_zoo(9));
+    let mut cfg = base_cfg(1);
+    cfg.workers = 0;
+    assert!(InferenceServer::start(model, cfg).is_err());
+}
+
+#[test]
+fn latency_metrics_populated() {
+    let model = Arc::new(mlp_zoo(9));
+    let (_, _, metrics) = serve_all(model, base_cfg(2), inputs(32, 4)).unwrap();
+    assert_eq!(metrics.latency.count(), 32);
+    assert!(metrics.latency.percentile_us(50.0) <= metrics.latency.percentile_us(99.0));
+    assert!(metrics.throughput_rps() > 0.0);
+    assert!(metrics.hw_cycles > 0);
+}

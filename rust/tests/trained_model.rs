@@ -1,0 +1,70 @@
+//! The trained-workload integration: a genuinely trained (JAX/SGD)
+//! quantized classifier, loaded from `artifacts/trained_mlp.txt` and
+//! evaluated through the Rust serving stack — the accuracy the
+//! simulated accelerator delivers must match the training-time
+//! measurement. Skips when artifacts are absent.
+
+use bitsmm::coordinator::{Backend, Scheduler};
+use bitsmm::nn::weights_io::{evaluate, load_trained};
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::mac_common::MacVariant;
+
+fn bundle_path() -> Option<std::path::PathBuf> {
+    let dir = bitsmm::runtime::default_artifact_dir();
+    let p = if dir.is_relative() {
+        std::env::current_dir().ok()?.join(dir).join("trained_mlp.txt")
+    } else {
+        dir.join("trained_mlp.txt")
+    };
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!("[skip] no trained model at {} — run `make artifacts`", p.display());
+        None
+    }
+}
+
+#[test]
+fn trained_accuracy_on_native_backend() {
+    let Some(p) = bundle_path() else { return };
+    let bundle = load_trained(&p).expect("parse trained bundle");
+    assert!(bundle.float_acc > 0.9, "training failed upstream");
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+    let mut sched = Scheduler::new(sa, Backend::Native);
+    let acc = evaluate(&bundle, &mut sched.as_exec()).expect("evaluate");
+    // The Rust pipeline requantizes with the exported static scales
+    // (python used per-batch dynamic scales), so allow a small gap.
+    assert!(
+        acc >= bundle.python_quant_acc - 0.05,
+        "rust-served accuracy {acc} vs python {python}",
+        python = bundle.python_quant_acc
+    );
+    assert!(acc > 0.85, "accelerator-delivered accuracy {acc}");
+}
+
+#[test]
+fn trained_accuracy_identical_on_cycle_accurate_sim() {
+    let Some(p) = bundle_path() else { return };
+    let bundle = load_trained(&p).expect("parse trained bundle");
+    // evaluate a subset on the (slow) cycle-accurate simulator and the
+    // native path: identical logits, identical predictions
+    let mut small = bundle.clone();
+    small.eval_n = 32;
+    small.eval_x.truncate(32 * small.eval_d);
+    small.eval_y.truncate(32);
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+    let mut nat = Scheduler::new(sa, Backend::Native);
+    let mut sim = Scheduler::new(sa, Backend::Simulate);
+    let a1 = evaluate(&small, &mut nat.as_exec()).unwrap();
+    let a2 = evaluate(&small, &mut sim.as_exec()).unwrap();
+    assert_eq!(a1, a2, "native and cycle-accurate accuracies diverge");
+    assert!(sim.report.hw_cycles > nat.report.hw_cycles / 2);
+}
+
+#[test]
+fn per_layer_precisions_are_the_paper_style_mix() {
+    let Some(p) = bundle_path() else { return };
+    let bundle = load_trained(&p).expect("parse");
+    let bits: Vec<u32> = bundle.model.layers.iter().map(|l| l.bits()).collect();
+    assert_eq!(bits, vec![8, 4, 4], "per-layer precision mix");
+}
