@@ -1,20 +1,26 @@
 //! Bench PERF: host-side hot-path microbenchmarks feeding the §Perf
-//! iteration log in EXPERIMENTS.md — simulator inner loop, native
-//! plane matmul, tiler, batcher, and (when artifacts exist) the PJRT
-//! request path.
+//! iteration log — simulator inner loop, native matmul, the per-plane
+//! and word-packed plane realisations (the headline comparison for the
+//! packed engine), tiler, and (when artifacts are built) the PJRT
+//! request path. Every result is also written to
+//! `BENCH_perf_hotpath.json` so the perf trajectory is machine-
+//! trackable across PRs.
 
-use bitsmm::bench_harness::{bench, BenchConfig};
+use bitsmm::bench_harness::{bench, BenchConfig, BenchResult};
+use bitsmm::bits::packed::{matmul_packed_planes, PackedPlanes};
+use bitsmm::bits::plane::PlaneKind;
 use bitsmm::coordinator::{tile_matmul, Backend, Scheduler};
-use bitsmm::nn::matmul_native;
+use bitsmm::nn::{matmul_native, matmul_packed, matmul_planes};
 use bitsmm::prng::Pcg32;
 use bitsmm::sim::array::{SaConfig, SystolicArray};
 use bitsmm::sim::driver::mac_dot;
 use bitsmm::sim::mac_common::MacVariant;
 
 fn main() {
-    bitsmm::bench_harness::header("perf_hotpath", "host hot paths (see EXPERIMENTS.md §Perf)");
+    bitsmm::bench_harness::header("perf_hotpath", "host hot paths (native vs planes vs packed)");
     let cfg = BenchConfig::default();
     let mut rng = Pcg32::new(0x9e4f);
+    let mut log: Vec<BenchResult> = Vec::new();
 
     // ---- 1. single-MAC stepping ---------------------------------------
     let mc: Vec<i32> = (0..256).map(|_| rng.range_i32(-128, 127)).collect();
@@ -23,6 +29,7 @@ fn main() {
         mac_dot(MacVariant::Booth, &mc, &ml, 8, 48)
     });
     println!("{}   ({} Mcycle/s simulated)", r.format(), fmt_rate(r.per_second(257.0 * 8.0) / 1e6));
+    log.push(r);
 
     // ---- 2. full SA matmul (the simulator inner loop) -------------------
     let sa = SaConfig::new(4, 16, MacVariant::Booth);
@@ -40,39 +47,109 @@ fn main() {
         fmt_rate(r.per_second(cycles as f64) / 1e6),
         fmt_rate(r.per_second(cycles as f64 * 64.0) / 1e6)
     );
+    log.push(r);
 
-    // ---- 3. native Booth-plane matmul (functional fallback) -------------
-    let (m2, k2, n2) = (32usize, 128usize, 64usize);
-    let a2: Vec<i32> = (0..m2 * k2).map(|_| rng.range_i32(-128, 127)).collect();
-    let b2: Vec<i32> = (0..k2 * n2).map(|_| rng.range_i32(-128, 127)).collect();
-    let r = bench("matmul_native 32x128x64 @8b", cfg, || {
-        matmul_native(&a2, &b2, m2, k2, n2, 8).unwrap()[0]
+    // ---- 3. native vs per-plane vs packed, bit-width sweep --------------
+    // The packed engine's plane-pair count grows with bits² while its
+    // word count shrinks 64×, so the sweep shows where each
+    // realisation wins (see DESIGN.md §Packed-Planes).
+    let (m2, k2, n2) = (64usize, 128usize, 64usize);
+    let macs2 = (m2 * k2 * n2) as f64;
+    for bits in [1u32, 2, 4, 8, 16] {
+        let lo = bitsmm::bits::twos::min_value(bits);
+        let hi = bitsmm::bits::twos::max_value(bits);
+        let a2: Vec<i32> = (0..m2 * k2).map(|_| rng.range_i32(lo, hi)).collect();
+        let b2: Vec<i32> = (0..k2 * n2).map(|_| rng.range_i32(lo, hi)).collect();
+        for (name, f) in [
+            ("native", matmul_native as fn(&[i32], &[i32], usize, usize, usize, u32) -> bitsmm::Result<Vec<i64>>),
+            ("planes", matmul_planes),
+            ("packed", matmul_packed),
+        ] {
+            let r = bench(&format!("matmul_{name} 64x128x64 @{bits}b"), cfg, || {
+                f(&a2, &b2, m2, k2, n2, bits).unwrap()[0]
+            });
+            println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs2) / 1e6));
+            log.push(r);
+        }
+    }
+
+    // ---- 4. the acceptance matrix: 256x256x256 @8b ----------------------
+    // (bigger problem, fewer iterations; packed must beat planes here)
+    let big = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        target_time: std::time::Duration::from_millis(400),
+    };
+    let (m3, k3, n3, bits3) = (256usize, 256usize, 256usize, 8u32);
+    let macs3 = (m3 * k3 * n3) as f64;
+    let a3: Vec<i32> = (0..m3 * k3).map(|_| rng.range_i32(-128, 127)).collect();
+    let b3: Vec<i32> = (0..k3 * n3).map(|_| rng.range_i32(-128, 127)).collect();
+    let mut planes_mean = 0f64;
+    let mut packed_mean = 0f64;
+    for (name, f) in [
+        ("native", matmul_native as fn(&[i32], &[i32], usize, usize, usize, u32) -> bitsmm::Result<Vec<i64>>),
+        ("planes", matmul_planes),
+        ("packed", matmul_packed),
+    ] {
+        let r = bench(&format!("matmul_{name} 256x256x256 @{bits3}b"), big, || {
+            f(&a3, &b3, m3, k3, n3, bits3).unwrap()[0]
+        });
+        println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs3) / 1e6));
+        match name {
+            "planes" => planes_mean = r.mean.as_secs_f64(),
+            "packed" => packed_mean = r.mean.as_secs_f64(),
+            _ => {}
+        }
+        log.push(r);
+    }
+    if packed_mean > 0.0 && planes_mean > 0.0 {
+        println!(
+            "packed vs per-plane speedup @8b 256^3: {:.2}x",
+            planes_mean / packed_mean
+        );
+    }
+
+    // ---- 5. packed kernel with pre-packed (cached) weights --------------
+    // the serving steady state: only the streamed operand packs per call
+    let pb = PackedPlanes::pack_cols(&b3, k3, n3, bits3, PlaneKind::Sbmwc).unwrap();
+    let r = bench("matmul_packed 256x256x256 @8b cached-W", big, || {
+        let pa = PackedPlanes::pack_rows(&a3, m3, k3, bits3, PlaneKind::Sbmwc).unwrap();
+        matmul_packed_planes(&pa, &pb).unwrap()[0]
     });
-    let macs = (m2 * k2 * n2) as f64;
-    println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs) / 1e6));
+    println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs3) / 1e6));
+    log.push(r);
 
-    // ---- 4. tiler ---------------------------------------------------------
+    // ---- 6. tiler ---------------------------------------------------------
     let r = bench("tile_matmul 512x512x512 on 16x4", cfg, || {
         tile_matmul(512, 512, 512, &sa).jobs.len()
     });
     println!("{}", r.format());
+    log.push(r);
 
-    // ---- 5. scheduler end-to-end (native backend) ----------------------
-    let mut sched = Scheduler::new(sa, Backend::Native);
-    let r = bench("scheduler.matmul 32x128x64 @8b native", cfg, || {
-        sched.matmul(&a2, &b2, m2, k2, n2, 8).unwrap()[0]
-    });
-    println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs) / 1e6));
+    // ---- 7. scheduler end-to-end (native + packed backends) -------------
+    let (m4, k4, n4) = (32usize, 128usize, 64usize);
+    let macs4 = (m4 * k4 * n4) as f64;
+    let a4: Vec<i32> = (0..m4 * k4).map(|_| rng.range_i32(-128, 127)).collect();
+    let b4: Vec<i32> = (0..k4 * n4).map(|_| rng.range_i32(-128, 127)).collect();
+    for backend in [Backend::Native, Backend::Packed] {
+        let name = backend.name();
+        let mut sched = Scheduler::new(sa, backend);
+        let r = bench(&format!("scheduler.matmul 32x128x64 @8b {name}"), cfg, || {
+            sched.matmul(&a4, &b4, m4, k4, n4, 8).unwrap()[0]
+        });
+        println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs4) / 1e6));
+        log.push(r);
+    }
 
-    // ---- 6. PJRT request path (if artifacts are built) ------------------
+    // ---- 8. PJRT request path (if artifacts are built) ------------------
     let dir = bitsmm::runtime::default_artifact_dir();
     match bitsmm::runtime::EngineHandle::spawn(&dir) {
         Ok((engine, _join)) => {
             engine.warm_up().expect("warm up");
-            let a3: Vec<i32> = (0..8 * 64).map(|_| rng.range_i32(-128, 127)).collect();
-            let b3: Vec<i32> = (0..64 * 64).map(|_| rng.range_i32(-128, 127)).collect();
-            let am = bitsmm::runtime::IntMat::new(a3, 8, 64).unwrap();
-            let bm = bitsmm::runtime::IntMat::new(b3, 64, 64).unwrap();
+            let a5: Vec<i32> = (0..8 * 64).map(|_| rng.range_i32(-128, 127)).collect();
+            let b5: Vec<i32> = (0..64 * 64).map(|_| rng.range_i32(-128, 127)).collect();
+            let am = bitsmm::runtime::IntMat::new(a5, 8, 64).unwrap();
+            let bm = bitsmm::runtime::IntMat::new(b5, 64, 64).unwrap();
             let r = bench("pjrt mm_booth_b8_8x64x64 round trip", cfg, || {
                 engine
                     .execute_matmul(am.clone(), bm.clone(), 8, MacVariant::Booth)
@@ -80,11 +157,17 @@ fn main() {
                     .unwrap()[0]
             });
             println!("{}   ({} req/s)", r.format(), fmt_rate(r.per_second(1.0)));
+            log.push(r);
             engine.shutdown();
         }
         Err(e) => println!("pjrt path skipped: {e:#}"),
     }
-    println!("\nperf_hotpath bench OK");
+
+    match bitsmm::bench_harness::write_json("perf_hotpath", &log) {
+        Ok(path) => println!("\nwrote {path} ({} results)", log.len()),
+        Err(e) => println!("\ncould not write bench json: {e}"),
+    }
+    println!("perf_hotpath bench OK");
 }
 
 fn fmt_rate(v: f64) -> String {

@@ -27,6 +27,33 @@ impl BenchResult {
             self.name, self.iters, self.mean, self.median, self.p95, self.min
         )
     }
+
+    /// One JSON object for the machine-readable bench log (names are
+    /// bench-controlled ASCII, so no escaping is needed).
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"median_ns\":{},\"p95_ns\":{},\"min_ns\":{}}}",
+            self.name,
+            self.iters,
+            self.mean.as_nanos(),
+            self.median.as_nanos(),
+            self.p95.as_nanos(),
+            self.min.as_nanos()
+        )
+    }
+}
+
+/// Write `BENCH_<target>.json` next to the working directory so the
+/// perf trajectory is trackable across PRs. Returns the path written.
+pub fn write_json(target: &str, results: &[BenchResult]) -> std::io::Result<String> {
+    let path = format!("BENCH_{target}.json");
+    let body: Vec<String> = results.iter().map(|r| format!("  {}", r.json())).collect();
+    let text = format!(
+        "{{\"target\":\"{target}\",\"results\":[\n{}\n]}}\n",
+        body.join(",\n")
+    );
+    std::fs::write(&path, text)?;
+    Ok(path)
 }
 
 /// Benchmark configuration.
@@ -123,6 +150,23 @@ mod tests {
             min: Duration::from_millis(100),
         };
         assert!((r.per_second(50.0) - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_is_well_formed() {
+        let r = BenchResult {
+            name: "kernel x".into(),
+            iters: 2,
+            mean: Duration::from_nanos(1500),
+            median: Duration::from_nanos(1400),
+            p95: Duration::from_nanos(2000),
+            min: Duration::from_nanos(1000),
+        };
+        let j = r.json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"name\":\"kernel x\""));
+        assert!(j.contains("\"mean_ns\":1500"));
+        assert!(j.contains("\"min_ns\":1000"));
     }
 
     #[test]

@@ -11,12 +11,20 @@
 //! * [`booth`] — radix-2 Booth recoding (paper Table I / eq. 5).
 //! * [`plane`] — bit-plane decomposition of integer matrices (the
 //!   TPU-side re-expression of bit-serial streaming, see
-//!   DESIGN.md §Hardware-Adaptation).
+//!   DESIGN.md §Hardware-Adaptation) and the decomposition oracle
+//!   shared by every plane-based execution path.
+//! * [`packed`] — word-packed planes (`u64` words, 64 digits/word)
+//!   and the AND+popcount plane-pair matmul kernel behind
+//!   `Backend::Packed` (see DESIGN.md §Packed-Planes).
 
 pub mod booth;
+pub mod packed;
 pub mod plane;
 pub mod twos;
 
 pub use booth::{booth_digits, booth_mul, BoothAction};
-pub use plane::{bit_planes_sbmwc, booth_planes, reconstruct_sbmwc};
+pub use packed::{matmul_packed_planes, matmul_packed_tile, PackedPlanes};
+pub use plane::{
+    bit_planes_sbmwc, booth_planes, decompose, plane_weight, reconstruct_sbmwc, PlaneKind,
+};
 pub use twos::{decode, encode, max_value, min_value, wrap_to, Bits};

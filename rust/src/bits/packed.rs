@@ -1,0 +1,394 @@
+//! Word-packed bit planes and the popcount plane-pair matmul kernel —
+//! the software hot path of the bit-serial formulation (see DESIGN.md
+//! §Packed-Planes).
+//!
+//! The per-plane path ([`crate::nn::matmul_planes`]) stores one *byte*
+//! per digit, so an `m×k` operand at `b` bits costs `b·m·k` bytes and
+//! the plane matmul touches every one of them per output column. This
+//! module stores each plane packed 64 digits per `u64` word:
+//!
+//! * **SBMwC** `{0,1}` planes — one word stream per plane; the MSb
+//!   plane's weight is `−2^(b−1)` (eq. 2's sign correction).
+//! * **Booth** `{−1,0,+1}` planes — a `(pos, neg)` word-stream pair
+//!   per plane (`digit = pos − neg`); every plane weighs `+2^i`.
+//!
+//! The kernel realises `A·B = Σ_{i,j} w_i·w_j · (D_i(A)·D_j(B))` where
+//! each binary plane-pair product is per-word `AND` + `count_ones` —
+//! the BISMO-style word-packed formulation (PAPERS.md, Umuroglu et
+//! al.), with signed `w` absorbing the SBMwC correction. Both packers
+//! derive their digits from the shared [`decompose`] oracle, so the
+//! packed engine cannot drift from the per-plane one.
+
+use super::plane::{decompose, plane_weight, PlaneKind};
+use crate::Result;
+
+/// A matrix operand decomposed into `bits` digit planes, each packed
+/// 64 digits per word along the contracted dimension.
+///
+/// `vectors` is the number of packed vectors — matrix *rows* for the
+/// streamed (left) operand of `A·B` ([`PackedPlanes::pack_rows`]),
+/// matrix *columns* for the stationary (right) operand
+/// ([`PackedPlanes::pack_cols`]) — and `len` is the contracted
+/// dimension k. Packing columns along k is what lets the tiler slice
+/// column ranges of a cached weight operand without re-packing
+/// ([`matmul_packed_tile`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedPlanes {
+    pub kind: PlaneKind,
+    pub bits: u32,
+    /// Number of packed vectors (rows or columns of the source matrix).
+    pub vectors: usize,
+    /// Digits per vector (the contracted dimension k).
+    pub len: usize,
+    /// Words per vector: `ceil(len / 64)`; trailing bits of the last
+    /// word are always zero (tail masking happens at pack time).
+    pub words: usize,
+    /// Positive-digit words, plane-major:
+    /// `pos[(plane · vectors + vec) · words + w]`.
+    pos: Vec<u64>,
+    /// Negative-digit words (Booth only; empty for SBMwC).
+    neg: Vec<u64>,
+}
+
+impl PackedPlanes {
+    /// Pack the rows of a row-major `rows × cols` matrix: one packed
+    /// vector per row, `len = cols`. This is the layout for the
+    /// streamed (left) operand of `A·B`.
+    pub fn pack_rows(
+        data: &[i32],
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        kind: PlaneKind,
+    ) -> Result<PackedPlanes> {
+        Self::check(data, rows, cols, bits)?;
+        Ok(Self::pack_vectors(data, rows, cols, bits, kind, |v, e| {
+            v * cols + e
+        }))
+    }
+
+    /// Pack the columns of a row-major `rows × cols` matrix: one packed
+    /// vector per column, `len = rows`. This is the layout for the
+    /// stationary (right) operand of `A·B`, packed along k so weight
+    /// matrices pack once and tiles select column ranges by index.
+    pub fn pack_cols(
+        data: &[i32],
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        kind: PlaneKind,
+    ) -> Result<PackedPlanes> {
+        Self::check(data, rows, cols, bits)?;
+        Ok(Self::pack_vectors(data, cols, rows, bits, kind, |v, e| {
+            e * cols + v
+        }))
+    }
+
+    fn check(data: &[i32], rows: usize, cols: usize, bits: u32) -> Result<()> {
+        crate::validate_bits(bits)?;
+        anyhow::ensure!(
+            data.len() == rows * cols,
+            "pack: {} values for a {rows}x{cols} matrix",
+            data.len()
+        );
+        let (lo, hi) = (
+            crate::bits::twos::min_value(bits),
+            crate::bits::twos::max_value(bits),
+        );
+        anyhow::ensure!(
+            data.iter().all(|v| (lo..=hi).contains(v)),
+            "pack: operand exceeds the {bits}-bit two's-complement range"
+        );
+        Ok(())
+    }
+
+    fn pack_vectors(
+        data: &[i32],
+        vectors: usize,
+        len: usize,
+        bits: u32,
+        kind: PlaneKind,
+        index: impl Fn(usize, usize) -> usize,
+    ) -> PackedPlanes {
+        let planes = decompose(kind, data, bits); // the shared oracle
+        let words = (len + 63) / 64;
+        let total = bits as usize * vectors * words;
+        let mut pos = vec![0u64; total];
+        let mut neg = match kind {
+            PlaneKind::Booth => vec![0u64; total],
+            PlaneKind::Sbmwc => Vec::new(),
+        };
+        for (p, plane) in planes.iter().enumerate() {
+            for v in 0..vectors {
+                let base = (p * vectors + v) * words;
+                for e in 0..len {
+                    let digit = plane[index(v, e)];
+                    let bit = 1u64 << (e % 64);
+                    if digit > 0 {
+                        pos[base + e / 64] |= bit;
+                    } else if digit < 0 {
+                        debug_assert_eq!(kind, PlaneKind::Booth);
+                        neg[base + e / 64] |= bit;
+                    }
+                }
+            }
+        }
+        PackedPlanes {
+            kind,
+            bits,
+            vectors,
+            len,
+            words,
+            pos,
+            neg,
+        }
+    }
+
+    /// Positive-digit words of one plane of one vector.
+    #[inline]
+    pub fn plane_pos(&self, plane: usize, vec: usize) -> &[u64] {
+        let base = (plane * self.vectors + vec) * self.words;
+        &self.pos[base..base + self.words]
+    }
+
+    /// Negative-digit words of one plane of one vector (`None` for
+    /// SBMwC, whose digits are non-negative).
+    #[inline]
+    pub fn plane_neg(&self, plane: usize, vec: usize) -> Option<&[u64]> {
+        if self.neg.is_empty() {
+            return None;
+        }
+        let base = (plane * self.vectors + vec) * self.words;
+        Some(&self.neg[base..base + self.words])
+    }
+
+    /// Unpack back to digit planes in packed-vector order. For a
+    /// [`PackedPlanes::pack_rows`] of row-major data this reproduces
+    /// the [`decompose`] oracle's planes exactly (the round-trip the
+    /// property tests pin).
+    pub fn unpack(&self) -> Vec<Vec<i8>> {
+        (0..self.bits as usize)
+            .map(|p| {
+                let mut plane = Vec::with_capacity(self.vectors * self.len);
+                for v in 0..self.vectors {
+                    let pos = self.plane_pos(p, v);
+                    let neg = self.plane_neg(p, v);
+                    for e in 0..self.len {
+                        let bit = 1u64 << (e % 64);
+                        let digit = if pos[e / 64] & bit != 0 {
+                            1i8
+                        } else if neg.map_or(false, |n| n[e / 64] & bit != 0) {
+                            -1i8
+                        } else {
+                            0i8
+                        };
+                        plane.push(digit);
+                    }
+                }
+                plane
+            })
+            .collect()
+    }
+
+    /// Words of packed storage. The byte-per-digit representation costs
+    /// `bits · vectors · len` bytes; this costs `8 · mem_words()` —
+    /// a ~8× reduction (~16× for Booth's two streams vs. pos/neg bytes
+    /// is the same 8× per stream).
+    pub fn mem_words(&self) -> usize {
+        self.pos.len() + self.neg.len()
+    }
+}
+
+/// Packed plane-pair matmul: `a` holds the rows of `A` (m vectors of
+/// length k), `b` the columns of `B` (n vectors of length k). Returns
+/// the exact `m × n` i64 accumulators, bit-identical to
+/// [`crate::nn::matmul_native`].
+pub fn matmul_packed_planes(a: &PackedPlanes, b: &PackedPlanes) -> Result<Vec<i64>> {
+    matmul_packed_tile(a, b, 0, a.vectors, 0, b.vectors)
+}
+
+/// Tile view of [`matmul_packed_planes`]: rows `row0 .. row0+tm` of A
+/// against columns `col0 .. col0+tn` of B, selected by index so
+/// neither operand is re-packed per tile. Returns a `tm × tn` tile.
+///
+/// Realises `A·B = Σ_{i,j} w_i w_j (D_i(A)·D_j(B))` with the binary
+/// plane-pair products computed as per-word `AND` + `count_ones`; the
+/// signed plane weights carry the SBMwC MSb-plane correction.
+pub fn matmul_packed_tile(
+    a: &PackedPlanes,
+    b: &PackedPlanes,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+) -> Result<Vec<i64>> {
+    anyhow::ensure!(
+        a.len == b.len,
+        "contracted dims differ: {} vs {}",
+        a.len,
+        b.len
+    );
+    anyhow::ensure!(
+        row0 + tm <= a.vectors && col0 + tn <= b.vectors,
+        "tile {row0}+{tm} / {col0}+{tn} exceeds {}x{} packed operands",
+        a.vectors,
+        b.vectors
+    );
+    let mut out = vec![0i64; tm * tn];
+    for i in 0..a.bits as usize {
+        let wa = plane_weight(a.kind, i as u32, a.bits);
+        for j in 0..b.bits as usize {
+            let w = wa * plane_weight(b.kind, j as u32, b.bits);
+            for r in 0..tm {
+                let ap = a.plane_pos(i, row0 + r);
+                let an = a.plane_neg(i, row0 + r);
+                let orow = &mut out[r * tn..(r + 1) * tn];
+                for (c, o) in orow.iter_mut().enumerate() {
+                    let bp = b.plane_pos(j, col0 + c);
+                    let bn = b.plane_neg(j, col0 + c);
+                    // Specialised per kind pair: the SBMwC×SBMwC case
+                    // (the engine default) is a single AND+popcount.
+                    let dot: i64 = match (an, bn) {
+                        (None, None) => ap
+                            .iter()
+                            .zip(bp)
+                            .map(|(x, y)| (x & y).count_ones() as i64)
+                            .sum(),
+                        (Some(an), None) => ap
+                            .iter()
+                            .zip(an)
+                            .zip(bp)
+                            .map(|((x, xn), y)| {
+                                (x & y).count_ones() as i64 - (xn & y).count_ones() as i64
+                            })
+                            .sum(),
+                        (None, Some(bn)) => ap
+                            .iter()
+                            .zip(bp)
+                            .zip(bn)
+                            .map(|((x, y), yn)| {
+                                (x & y).count_ones() as i64 - (x & yn).count_ones() as i64
+                            })
+                            .sum(),
+                        (Some(an), Some(bn)) => ap
+                            .iter()
+                            .zip(an)
+                            .zip(bp)
+                            .zip(bn)
+                            .map(|(((x, xn), y), yn)| {
+                                (x & y).count_ones() as i64 - (x & yn).count_ones() as i64
+                                    - (xn & y).count_ones() as i64
+                                    + (xn & yn).count_ones() as i64
+                            })
+                            .sum(),
+                    };
+                    *o += w * dot;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::twos::{max_value, min_value};
+    use crate::prng::Pcg32;
+    use crate::sim::driver::ref_matmul_i64 as ref_mm;
+
+    fn rand_mat(rng: &mut Pcg32, len: usize, bits: u32) -> Vec<i32> {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        (0..len).map(|_| rng.range_i32(lo, hi)).collect()
+    }
+
+    #[test]
+    fn pack_unpack_matches_oracle_both_kinds() {
+        let mut rng = Pcg32::new(0xbeef);
+        for bits in [1u32, 2, 5, 8, 16] {
+            // lengths straddling the word boundary exercise tail masking
+            for len in [1usize, 7, 63, 64, 65, 130] {
+                let data = rand_mat(&mut rng, 3 * len, bits);
+                for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                    let p = PackedPlanes::pack_rows(&data, 3, len, bits, kind).unwrap();
+                    assert_eq!(p.words, (len + 63) / 64);
+                    assert_eq!(p.unpack(), decompose(kind, &data, bits), "{kind:?} {bits}b len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_matmul_exact_all_kind_pairs() {
+        let mut rng = Pcg32::new(0x9c0d);
+        for bits in [1u32, 3, 8, 11, 16] {
+            for (m, k, n) in [(2usize, 7usize, 3usize), (3, 64, 2), (2, 70, 4), (1, 1, 1)] {
+                let a = rand_mat(&mut rng, m * k, bits);
+                let b = rand_mat(&mut rng, k * n, bits);
+                let want = ref_mm(&a, &b, m, k, n);
+                for ka in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                    for kb in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                        let pa = PackedPlanes::pack_rows(&a, m, k, bits, ka).unwrap();
+                        let pb = PackedPlanes::pack_cols(&b, k, n, bits, kb).unwrap();
+                        assert_eq!(
+                            matmul_packed_planes(&pa, &pb).unwrap(),
+                            want,
+                            "{ka:?}x{kb:?} {m}x{k}x{n} @{bits}b"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sign_plane_saturation_is_exact() {
+        // every operand at min_value: the SBMwC MSb (sign) plane is
+        // all-ones, maximally exercising the −2^(b−1) correction
+        for bits in 1..=16u32 {
+            let (m, k, n) = (2usize, 70usize, 2usize);
+            let a = vec![min_value(bits); m * k];
+            let b = vec![min_value(bits); k * n];
+            let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap();
+            let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+            assert_eq!(matmul_packed_planes(&pa, &pb).unwrap(), ref_mm(&a, &b, m, k, n), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn tile_view_matches_full_product() {
+        let mut rng = Pcg32::new(0x711e);
+        let (m, k, n, bits) = (5usize, 67usize, 9usize, 6u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap();
+        let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+        let full = matmul_packed_planes(&pa, &pb).unwrap();
+        // a 2×3 tile at (row0=2, col0=5), sliced purely by index
+        let tile = matmul_packed_tile(&pa, &pb, 2, 2, 5, 3).unwrap();
+        for r in 0..2 {
+            for c in 0..3 {
+                assert_eq!(tile[r * 3 + c], full[(2 + r) * n + 5 + c]);
+            }
+        }
+        assert!(matmul_packed_tile(&pa, &pb, 4, 2, 0, 1).is_err(), "row overrun");
+    }
+
+    #[test]
+    fn packing_validates_range_and_shape() {
+        assert!(PackedPlanes::pack_rows(&[1, 2, 3], 2, 2, 4, PlaneKind::Sbmwc).is_err());
+        assert!(PackedPlanes::pack_rows(&[8], 1, 1, 4, PlaneKind::Sbmwc).is_err()); // 8 > max 4-bit
+        assert!(PackedPlanes::pack_rows(&[7], 1, 1, 4, PlaneKind::Sbmwc).is_ok());
+        assert!(PackedPlanes::pack_rows(&[1], 1, 1, 0, PlaneKind::Sbmwc).is_err());
+    }
+
+    #[test]
+    fn packed_footprint_is_an_order_smaller() {
+        let (rows, cols, bits) = (16usize, 256usize, 8u32);
+        let data = vec![1i32; rows * cols];
+        let p = PackedPlanes::pack_rows(&data, rows, cols, bits, PlaneKind::Sbmwc).unwrap();
+        let packed_bytes = p.mem_words() * 8;
+        let byte_planes = bits as usize * rows * cols;
+        assert_eq!(packed_bytes * 8, byte_planes, "exactly 8x smaller");
+    }
+}

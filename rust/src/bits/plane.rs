@@ -18,6 +18,46 @@
 
 use super::twos::encode;
 
+/// Which plane decomposition a plane set uses. Mirrors the paper's two
+/// MAC variants; [`decompose`] is the single oracle both the per-plane
+/// matmul ([`crate::nn::matmul_planes`]) and the packed engine
+/// ([`crate::bits::packed`]) derive their planes from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlaneKind {
+    /// Raw `{0,1}` bit planes; the MSb plane carries weight `−2^(b−1)`
+    /// (the sign correction of §II-A eq. 2).
+    Sbmwc,
+    /// Booth signed-digit `{−1,0,+1}` planes; plane `i` carries `+2^i`.
+    Booth,
+}
+
+impl PlaneKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlaneKind::Sbmwc => "sbmwc",
+            PlaneKind::Booth => "booth",
+        }
+    }
+}
+
+/// The decomposition oracle: one definition of "the planes of `data`
+/// at `bits` width" shared by every plane-based execution path.
+pub fn decompose(kind: PlaneKind, data: &[i32], bits: u32) -> Vec<Vec<i8>> {
+    match kind {
+        PlaneKind::Sbmwc => bit_planes_sbmwc(data, bits),
+        PlaneKind::Booth => booth_planes(data, bits),
+    }
+}
+
+/// Signed weight of plane `i` under `kind` at `bits` width:
+/// `x = Σ_i plane_weight(kind, i, bits) · digit_i(x)`.
+pub fn plane_weight(kind: PlaneKind, i: u32, bits: u32) -> i64 {
+    match kind {
+        PlaneKind::Sbmwc if i == bits - 1 => -(1i64 << i),
+        _ => 1i64 << i,
+    }
+}
+
 /// SBMwC bit planes of an integer matrix (row-major `data`, values must
 /// fit in `bits` two's complement). Returns `bits` planes of `{0,1}`,
 /// plane `i` = bit `i` (LSb = plane 0).
@@ -114,6 +154,26 @@ mod tests {
         }
         for p in booth_planes(&vals, 8) {
             assert!(p.iter().all(|&x| (-1..=1).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn oracle_weights_reconstruct_both_kinds() {
+        // x = Σ_i plane_weight(kind, i, bits) · digit_i(x) for every
+        // representable value under both decompositions.
+        for bits in 1..=10u32 {
+            let vals: Vec<i32> = (min_value(bits)..=max_value(bits)).collect();
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let planes = decompose(kind, &vals, bits);
+                for (j, &v) in vals.iter().enumerate() {
+                    let got: i64 = planes
+                        .iter()
+                        .enumerate()
+                        .map(|(i, p)| plane_weight(kind, i as u32, bits) * p[j] as i64)
+                        .sum();
+                    assert_eq!(got, v as i64, "{} bits={bits} v={v}", kind.name());
+                }
+            }
         }
     }
 

@@ -34,6 +34,7 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
     let sa = SaParse::parse(args.get("sa").unwrap(), variant)?;
     let backend = match args.get("backend").unwrap() {
         "native" => Backend::Native,
+        "packed" => Backend::Packed,
         "simulate" => Backend::Simulate,
         "pjrt" => {
             let dir = args
@@ -84,7 +85,13 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
     t.row(&["MACs served".into(), format!("{}", report.macs)]);
     t.row(&["hw cycles (model)".into(), format!("{}", report.hw_cycles)]);
     t.row(&["hw GOPS @300MHz".into(), f(report.hw_gops(300e6))]);
-    t.row(&["pjrt hits / native".into(), format!("{} / {}", report.pjrt_hits, report.native_fallbacks)]);
+    t.row(&[
+        "pjrt / native / packed".into(),
+        format!(
+            "{} / {} / {}",
+            report.pjrt_hits, report.native_fallbacks, report.packed_execs
+        ),
+    ]);
     print!("{}", t.render());
     Ok(())
 }
@@ -108,6 +115,7 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     anyhow::ensure!(sa.rows >= 1 && sa.cols >= 1, "degenerate SA geometry");
     let backend = match cfg.str_or("server.backend", "native") {
         "native" => Backend::Native,
+        "packed" => Backend::Packed,
         "simulate" => Backend::Simulate,
         "pjrt" => {
             let dir = std::path::PathBuf::from(
@@ -222,6 +230,24 @@ variant = \"booth\"
              [server]
 requests = 4
 workers = 1
+max_batch = 4
+",
+        )
+        .unwrap();
+        launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_runs_on_packed_backend() {
+        let cfg = crate::config::Config::parse(
+            "name = \"p\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"packed\"
+requests = 4
+workers = 2
 max_batch = 4
 ",
         )

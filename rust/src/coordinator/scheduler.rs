@@ -2,7 +2,7 @@
 //!
 //! Every layer matmul is tiled onto the configured SA and accounted on
 //! the *hardware* timing model (eq. 8 + systolic fill + readout per
-//! tile). Functionally the integers can be produced by any of three
+//! tile). Functionally the integers can be produced by any of four
 //! bit-identical backends:
 //!
 //! * [`Backend::Pjrt`] — the AOT-compiled HLO executable (the L1/L2
@@ -11,14 +11,25 @@
 //!   are exact for ≤ 8-bit operands (every intermediate is an integer
 //!   < 2²⁴); wider operands are routed natively.
 //! * [`Backend::Native`] — the Rust Booth-plane matmul.
+//! * [`Backend::Packed`] — the word-packed plane engine
+//!   ([`crate::bits::packed`]): AND+popcount per plane pair, the
+//!   streamed operand packed once per matmul, the stationary operand
+//!   taken pre-packed from the layer's [`crate::nn::PackedCache`] when
+//!   the call arrives through [`crate::nn::MatmulExec`]; per-tile
+//!   slices are routed through the packed kernel by index, so neither
+//!   operand is re-packed per tile.
 //! * [`Backend::Simulate`] — the cycle-accurate SA simulator itself;
 //!   slowest, but *measures* cycles instead of modelling them.
 
+use crate::bits::packed::{matmul_packed_tile, PackedPlanes};
+use crate::bits::plane::PlaneKind;
 use crate::coordinator::tiler::{tile_matmul, TilePlan};
+use crate::nn::layers::{MatmulExec, PackedWeight};
 use crate::nn::matmul_native;
 use crate::runtime::{EngineHandle, IntMat};
 use crate::sim::array::{SaConfig, SystolicArray};
 use crate::Result;
+use std::sync::Arc;
 
 /// Functional execution backend.
 #[derive(Clone)]
@@ -26,6 +37,7 @@ pub enum Backend {
     Native,
     Simulate,
     Pjrt(EngineHandle),
+    Packed,
 }
 
 impl Backend {
@@ -34,6 +46,7 @@ impl Backend {
             Backend::Native => "native",
             Backend::Simulate => "simulate",
             Backend::Pjrt(_) => "pjrt",
+            Backend::Packed => "packed",
         }
     }
 }
@@ -50,6 +63,8 @@ pub struct ExecutionReport {
     pub pjrt_hits: u64,
     pub native_fallbacks: u64,
     pub sim_passes: u64,
+    /// Matmuls executed by the packed plane engine.
+    pub packed_execs: u64,
 }
 
 impl ExecutionReport {
@@ -61,6 +76,7 @@ impl ExecutionReport {
         self.pjrt_hits += o.pjrt_hits;
         self.native_fallbacks += o.native_fallbacks;
         self.sim_passes += o.sim_passes;
+        self.packed_execs += o.packed_execs;
     }
 
     /// Simulated-hardware GOPS at a clock (paper convention).
@@ -107,6 +123,22 @@ impl Scheduler {
         n: usize,
         bits: u32,
     ) -> Result<Vec<i64>> {
+        self.matmul_with(a, b, m, k, n, bits, None)
+    }
+
+    /// [`Scheduler::matmul`] with an optional pre-packed stationary
+    /// operand (the packed backend skips re-packing it; other backends
+    /// ignore it).
+    fn matmul_with(
+        &mut self,
+        a: &[i32],
+        b: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        bits: u32,
+        packed_b: Option<Arc<PackedPlanes>>,
+    ) -> Result<Vec<i64>> {
         crate::validate_bits(bits)?;
         let plan = tile_matmul(m, k, n, &self.sa);
         self.report.matmuls += 1;
@@ -143,6 +175,50 @@ impl Scheduler {
                     }
                 }
             }
+            Backend::Packed => {
+                self.report.hw_cycles += plan.total_cycles(&self.sa, bits);
+                // Plane decomposition needs operands inside the
+                // declared width; layers with looser precision
+                // contracts (conv/attention inputs are not
+                // range-checked) fall back to the native loop so the
+                // packed backend never errs where Native succeeds.
+                let lo = crate::bits::twos::min_value(bits);
+                let hi = crate::bits::twos::max_value(bits);
+                let in_range = |s: &[i32]| s.iter().all(|v| (lo..=hi).contains(v));
+                if !in_range(a) || (packed_b.is_none() && !in_range(b)) {
+                    self.report.native_fallbacks += 1;
+                    return matmul_native(a, b, m, k, n, bits);
+                }
+                self.report.packed_execs += 1;
+                // the streamed operand is packed once per matmul; the
+                // stationary operand arrives pre-packed from the layer
+                // cache (or is packed here for ad-hoc calls)
+                let pa = PackedPlanes::pack_rows(a, m, k, bits, PlaneKind::Sbmwc)?;
+                let pb = match packed_b {
+                    Some(p) => {
+                        anyhow::ensure!(
+                            p.len == k && p.vectors == n && p.bits == bits,
+                            "cached planes ({}x{} @{}b) do not match the request ({k}x{n} @{bits}b)",
+                            p.len,
+                            p.vectors,
+                            p.bits
+                        );
+                        p
+                    }
+                    None => Arc::new(PackedPlanes::pack_cols(b, k, n, bits, PlaneKind::Sbmwc)?),
+                };
+                // per-tile slices go through the packed kernel by
+                // index — no per-tile re-packing of either operand
+                let mut out = vec![0i64; m * n];
+                for job in &plan.jobs {
+                    let tile = matmul_packed_tile(&pa, &pb, job.row0, job.m, job.col0, job.n)?;
+                    for r in 0..job.m {
+                        let dst = (job.row0 + r) * n + job.col0;
+                        out[dst..dst + job.n].copy_from_slice(&tile[r * job.n..(r + 1) * job.n]);
+                    }
+                }
+                out
+            }
             Backend::Simulate => {
                 let sim = self.sim.as_mut().expect("simulate backend has an array");
                 let mut out = vec![0i64; m * n];
@@ -176,10 +252,42 @@ impl Scheduler {
         tile_matmul(m, k, n, &self.sa)
     }
 
-    /// Adapt this scheduler into the `MatmulExec` closure the nn layers
-    /// consume.
+    /// Adapt this scheduler into a plain closure executor. Note the
+    /// closure path never advertises packed support — pass `&mut
+    /// Scheduler` itself (it implements [`MatmulExec`]) to let the
+    /// packed backend reuse layer-cached weight planes.
     pub fn as_exec(&mut self) -> impl FnMut(&[i32], &[i32], usize, usize, usize, u32) -> Result<Vec<i64>> + '_ {
         move |a, b, m, k, n, bits| self.matmul(a, b, m, k, n, bits)
+    }
+}
+
+impl MatmulExec for Scheduler {
+    fn matmul(
+        &mut self,
+        a: &[i32],
+        b: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        bits: u32,
+    ) -> Result<Vec<i64>> {
+        Scheduler::matmul(self, a, b, m, k, n, bits)
+    }
+
+    fn wants_packed(&self) -> bool {
+        matches!(self.backend, Backend::Packed)
+    }
+
+    fn matmul_packed(
+        &mut self,
+        a: &[i32],
+        w: &PackedWeight<'_>,
+        m: usize,
+        k: usize,
+        n: usize,
+        bits: u32,
+    ) -> Result<Vec<i64>> {
+        self.matmul_with(a, w.data, m, k, n, bits, w.planes.clone())
     }
 }
 
@@ -207,6 +315,12 @@ mod tests {
 
         let mut nat = Scheduler::new(sa, Backend::Native);
         assert_eq!(nat.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+
+        let mut packed = Scheduler::new(sa, Backend::Packed);
+        assert_eq!(packed.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        // packed and native share the same modelled cycle accounting
+        assert_eq!(packed.report.hw_cycles, nat.report.hw_cycles);
+        assert_eq!(packed.report.packed_execs, 1);
 
         let mut sim = Scheduler::new(sa, Backend::Simulate);
         assert_eq!(sim.matmul(&a, &b, m, k, n, bits).unwrap(), want);
@@ -241,5 +355,67 @@ mod tests {
         let y = model.forward(&x, &mut s.as_exec()).unwrap();
         assert_eq!(y.shape, vec![2, 10]);
         assert_eq!(s.report.matmuls, 3);
+    }
+
+    #[test]
+    fn packed_backend_uses_layer_cached_planes() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let model = crate::nn::model::mlp_zoo(11);
+        let mut rng = Pcg32::new(0xcafe);
+        let x = crate::nn::tensor::QTensor::new(
+            (0..2 * 64).map(|_| rng.range_i32(-128, 127)).collect(),
+            vec![2, 64],
+            0.05,
+            8,
+        )
+        .unwrap();
+
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = model.forward(&x, &mut nat).unwrap();
+
+        // two forwards through &mut Scheduler (the MatmulExec impl):
+        // identical integers, and each layer packs its weights once
+        let mut packed = Scheduler::new(sa, Backend::Packed);
+        let y1 = model.forward(&x, &mut packed).unwrap();
+        let y2 = model.forward(&x, &mut packed).unwrap();
+        assert_eq!(y1.data, want.data, "packed vs native diverged");
+        assert_eq!(y2.data, want.data);
+        assert_eq!(packed.report.packed_execs, 6, "3 layers x 2 forwards");
+        for layer in &model.layers {
+            if let crate::nn::layers::Layer::Linear(l) = layer {
+                assert_eq!(l.packed.packs(), 1, "one pack per (layer, precision)");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_falls_back_natively_on_out_of_range_operands() {
+        // conv/attention layers may legally hand a packed scheduler
+        // operands wider than the layer precision; the backend must
+        // match Native, not error
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (2usize, 5usize, 3usize, 4u32);
+        let a = vec![100i32; m * k]; // 100 does not fit in 4 bits
+        let b = vec![3i32; k * n];
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = nat.matmul(&a, &b, m, k, n, bits).unwrap();
+        let mut packed = Scheduler::new(sa, Backend::Packed);
+        assert_eq!(packed.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(packed.report.packed_execs, 0);
+        assert_eq!(packed.report.native_fallbacks, 1);
+    }
+
+    #[test]
+    fn packed_rejects_mismatched_cached_planes() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        let b = [1i32, 2, 3, 4, 5, 6];
+        // planes packed for a 3x2 weight at 4 bits...
+        let planes = std::sync::Arc::new(
+            crate::bits::packed::PackedPlanes::pack_cols(&b, 3, 2, 4, crate::bits::plane::PlaneKind::Sbmwc).unwrap(),
+        );
+        let w = PackedWeight { data: &b, planes: Some(planes) };
+        // ...offered for an 8-bit request: rejected, not silently wrong
+        assert!(s.matmul_packed(&[1, 1, 1], &w, 1, 3, 2, 8).is_err());
     }
 }

@@ -141,7 +141,10 @@ fn worker_loop(
         };
         let cycles_before = sched.report.hw_cycles;
         let macs_before = sched.report.macs;
-        let result = model.forward(&x, &mut sched.as_exec());
+        // the scheduler itself is the executor (not an `as_exec`
+        // closure) so the packed backend sees layer-cached weight
+        // planes and packs each weight once per (layer, precision)
+        let result = model.forward(&x, &mut sched);
         match result {
             Ok(y) => {
                 let out_dim = y.shape[1];
@@ -261,10 +264,14 @@ mod tests {
         let cfg_n = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
         let mut cfg_s = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Simulate);
         cfg_s.workers = 1;
+        let cfg_p = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
         let (r1, _, _) = serve_all(model.clone(), cfg_n, ins.clone()).unwrap();
-        let (r2, _, _) = serve_all(model, cfg_s, ins).unwrap();
-        for (a, b) in r1.iter().zip(&r2) {
+        let (r2, _, _) = serve_all(model.clone(), cfg_s, ins.clone()).unwrap();
+        let (r3, rep_p, _) = serve_all(model, cfg_p, ins).unwrap();
+        for ((a, b), c) in r1.iter().zip(&r2).zip(&r3) {
             assert_eq!(a.output, b.output, "native vs simulate diverged");
+            assert_eq!(a.output, c.output, "native vs packed diverged");
         }
+        assert!(rep_p.packed_execs > 0, "packed backend actually ran");
     }
 }

@@ -7,7 +7,9 @@
 //! The crate contains:
 //!
 //! * [`bits`] — two's-complement / Booth-recoding / bit-plane arithmetic
-//!   (the shared ground truth for the simulator and all tests).
+//!   (the shared ground truth for the simulator and all tests), plus
+//!   the word-packed plane engine (`bits::packed`) behind the serving
+//!   stack's `Backend::Packed` hot path.
 //! * [`sim`] — a **bit-true, cycle-accurate** simulator of the paper's
 //!   hardware: both bit-serial MAC variants (Booth, SBMwC), the
 //!   parallel-to-serial converters, the systolic array with its skewed

@@ -104,7 +104,7 @@ fn cmd_launch(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "run the inference server on a zoo model")
         .opt("model", "zoo model: mlp", Some("mlp"))
-        .opt("backend", "native|simulate|pjrt", Some("native"))
+        .opt("backend", "native|packed|simulate|pjrt", Some("native"))
         .opt("sa", "SA geometry colsxrows (paper order)", Some("16x4"))
         .opt("variant", "MAC variant booth|sbmwc", Some("booth"))
         .opt("requests", "number of requests to serve", Some("64"))

@@ -2,20 +2,164 @@
 //! accelerator (§II-C: fully-connected and convolutional layers
 //! dominate NN compute and both reduce to matrix multiplication).
 //!
-//! Layers are *executor-parameterised*: `forward` takes a [`MatmulExec`]
-//! closure so the coordinator decides where each matmul runs — the
-//! PJRT artifact, the cycle-accurate simulator, or the native Booth
-//! plane path. All three produce identical integers, so routing is a
-//! pure performance/fidelity decision.
+//! Layers are *executor-parameterised*: `forward` takes a
+//! [`MatmulExec`] so the coordinator decides where each matmul runs —
+//! the PJRT artifact, the cycle-accurate simulator, the native Booth
+//! plane path, or the word-packed plane engine. All four produce
+//! identical integers, so routing is a pure performance/fidelity
+//! decision. Weight matrices carry a [`PackedCache`] so the packed
+//! backend packs each weight once per (layer, precision), not once per
+//! request.
 
+use crate::bits::packed::PackedPlanes;
+use crate::bits::plane::PlaneKind;
 use crate::nn::quant::quantize_with_scale;
 use crate::nn::tensor::{im2col, QTensor};
 use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
-/// A matmul executor: `(a, b, m, k, n, bits) → i64 accumulators`.
-/// `a` is the multiplier operand (activations, LSb-first in hardware),
-/// `b` the multiplicand (weights, MSb-first).
-pub type MatmulExec<'a> = dyn FnMut(&[i32], &[i32], usize, usize, usize, u32) -> Result<Vec<i64>> + 'a;
+/// A matmul executor. `a` is the multiplier operand (activations,
+/// LSb-first in hardware), `b` the multiplicand (weights, MSb-first).
+///
+/// Executors that can exploit pre-packed weight planes (the packed
+/// backend) advertise it via [`MatmulExec::wants_packed`]; layers then
+/// hand over a [`PackedWeight`] whose planes come from the per-layer
+/// [`PackedCache`], so each weight matrix is packed once per
+/// precision instead of once per request.
+pub trait MatmulExec {
+    /// `(a, b, m, k, n, bits) → i64 accumulators`.
+    fn matmul(
+        &mut self,
+        a: &[i32],
+        b: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        bits: u32,
+    ) -> Result<Vec<i64>>;
+
+    /// Whether this executor uses pre-packed weight planes. Layers only
+    /// pay the (cached) packing cost when it does.
+    fn wants_packed(&self) -> bool {
+        false
+    }
+
+    /// Matmul whose weight operand carries cached packed planes.
+    /// Executors that cannot use them fall back to the dense path.
+    fn matmul_packed(
+        &mut self,
+        a: &[i32],
+        w: &PackedWeight<'_>,
+        m: usize,
+        k: usize,
+        n: usize,
+        bits: u32,
+    ) -> Result<Vec<i64>> {
+        self.matmul(a, w.data, m, k, n, bits)
+    }
+}
+
+/// Every plain closure of the historical `(a, b, m, k, n, bits)` shape
+/// is an executor, so tests/benches keep passing closures unchanged.
+impl<F> MatmulExec for F
+where
+    F: FnMut(&[i32], &[i32], usize, usize, usize, u32) -> Result<Vec<i64>>,
+{
+    fn matmul(
+        &mut self,
+        a: &[i32],
+        b: &[i32],
+        m: usize,
+        k: usize,
+        n: usize,
+        bits: u32,
+    ) -> Result<Vec<i64>> {
+        self(a, b, m, k, n, bits)
+    }
+}
+
+/// A weight operand: dense data plus (optionally) its packed planes.
+pub struct PackedWeight<'w> {
+    pub data: &'w [i32],
+    pub planes: Option<Arc<PackedPlanes>>,
+}
+
+/// Lazily-built, shared cache of packed weight planes, keyed by
+/// `(weight slot, precision)`. Cloning shares the cache (it is an
+/// `Arc` inside), so server workers sharing an `Arc<Model>` pack each
+/// weight matrix **once** per precision, not once per request — the
+/// pack happens under the lock, so concurrent workers cannot
+/// double-pack. The pack counter makes that invariant testable.
+///
+/// Invariant: weights are immutable once a model serves. The cache is
+/// never invalidated, so code that mutates a layer's `w` in place
+/// (e.g. requantisation sweeps) must rebuild the layer — or serve on a
+/// non-packed backend — to avoid stale planes.
+#[derive(Debug, Default, Clone)]
+pub struct PackedCache {
+    planes: Arc<Mutex<HashMap<(u32, u32), Arc<PackedPlanes>>>>,
+    pack_count: Arc<AtomicU64>,
+}
+
+impl PackedCache {
+    pub fn new() -> PackedCache {
+        PackedCache::default()
+    }
+
+    /// The packed columns of the 2-D weight `w` at `bits` precision,
+    /// packing at most once per `(slot, bits)`.
+    pub fn get_or_pack(&self, slot: u32, w: &QTensor, bits: u32) -> Result<Arc<PackedPlanes>> {
+        let mut cache = self.planes.lock().expect("packed cache poisoned");
+        if let Some(p) = cache.get(&(slot, bits)) {
+            return Ok(p.clone());
+        }
+        anyhow::ensure!(w.rank() == 2, "packed weights must be 2-D, got {:?}", w.shape);
+        let p = Arc::new(PackedPlanes::pack_cols(
+            &w.data,
+            w.shape[0],
+            w.shape[1],
+            bits,
+            PlaneKind::Sbmwc,
+        )?);
+        self.pack_count.fetch_add(1, Ordering::Relaxed);
+        cache.insert((slot, bits), p.clone());
+        Ok(p)
+    }
+
+    /// How many times a weight matrix was actually packed — the
+    /// once-per-(layer, precision) serving invariant.
+    pub fn packs(&self) -> u64 {
+        self.pack_count.load(Ordering::Relaxed)
+    }
+}
+
+/// Layer-side executor routing shared by every layer type: take the
+/// packed path (with `w`'s cached planes) when the executor wants it
+/// and both operands fit the layer precision, else the dense path.
+fn exec_layer_matmul(
+    exec: &mut dyn MatmulExec,
+    cache: &PackedCache,
+    slot: u32,
+    a: &QTensor,
+    w: &QTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+    bits: u32,
+) -> Result<Vec<i64>> {
+    if exec.wants_packed() && a.bits <= bits && w.bits <= bits {
+        let planes = cache.get_or_pack(slot, w, bits)?;
+        let pw = PackedWeight {
+            data: &w.data,
+            planes: Some(planes),
+        };
+        exec.matmul_packed(&a.data, &pw, m, k, n, bits)
+    } else {
+        exec.matmul(&a.data, &w.data, m, k, n, bits)
+    }
+}
 
 /// Fully-connected layer.
 #[derive(Debug, Clone)]
@@ -32,18 +176,21 @@ pub struct LinearLayer {
     pub out_scale: f64,
     /// Output precision (bits of the produced activations).
     pub out_bits: u32,
+    /// Lazily-built packed weight planes (shared across clones).
+    pub packed: PackedCache,
 }
 
 impl LinearLayer {
     /// `x`: `[batch, in]`. Produces `[batch, out]` activations on the
     /// output grid.
-    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+    pub fn forward(&self, x: &QTensor, exec: &mut dyn MatmulExec) -> Result<QTensor> {
         anyhow::ensure!(x.rank() == 2, "linear expects 2-D input");
         let (batch, d_in) = (x.shape[0], x.shape[1]);
         let (w_in, d_out) = (self.w.shape[0], self.w.shape[1]);
         anyhow::ensure!(d_in == w_in, "linear dims: input {d_in} vs weights {w_in}");
         anyhow::ensure!(x.bits <= self.bits, "input precision exceeds layer precision");
-        let acc = exec(&x.data, &self.w.data, batch, d_in, d_out, self.bits)?;
+        let acc =
+            exec_layer_matmul(exec, &self.packed, 0, x, &self.w, batch, d_in, d_out, self.bits)?;
         // accumulator units: in_scale · w_scale
         let acc_scale = x.scale * self.w.scale;
         let mut real: Vec<f64> = acc
@@ -82,11 +229,13 @@ pub struct Conv2dLayer {
     pub relu: bool,
     pub out_scale: f64,
     pub out_bits: u32,
+    /// Lazily-built packed planes of the im2col-transposed kernel.
+    pub packed: PackedCache,
 }
 
 impl Conv2dLayer {
     /// `x`: `(c, h, w)` single image. Produces `(oc, oh, ow)`.
-    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+    pub fn forward(&self, x: &QTensor, exec: &mut dyn MatmulExec) -> Result<QTensor> {
         anyhow::ensure!(x.rank() == 3, "conv expects (C,H,W)");
         let (oc, c, kh, kw) = (
             self.w.shape[0],
@@ -103,7 +252,7 @@ impl Conv2dLayer {
             .transpose2()?;
         let m = oh * ow;
         let kdim = c * kh * kw;
-        let acc = exec(&a.data, &wt.data, m, kdim, oc, self.bits)?;
+        let acc = exec_layer_matmul(exec, &self.packed, 0, &a, &wt, m, kdim, oc, self.bits)?;
         let acc_scale = x.scale * self.w.scale;
         // output layout (oc, oh, ow): transpose the (m, oc) result
         let mut real = vec![0f64; oc * m];
@@ -140,23 +289,40 @@ pub struct AttentionLayer {
     pub bits: u32,
     pub out_scale: f64,
     pub out_bits: u32,
+    /// Lazily-built packed planes of the four projections (slots
+    /// 0..=3 = q/k/v/o).
+    pub packed: PackedCache,
 }
 
 impl AttentionLayer {
+    /// Route one projection through the executor, using the packed
+    /// cache slot when the executor exploits packed weight planes.
+    fn proj_acc(
+        &self,
+        exec: &mut dyn MatmulExec,
+        slot: u32,
+        a: &QTensor,
+        w: &QTensor,
+        s: usize,
+        d: usize,
+    ) -> Result<Vec<i64>> {
+        exec_layer_matmul(exec, &self.packed, slot, a, w, s, d, d, self.bits)
+    }
+
     /// `x`: `[seq, dim]` quantized tokens → `[seq, dim]` on the output
     /// grid.
-    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+    pub fn forward(&self, x: &QTensor, exec: &mut dyn MatmulExec) -> Result<QTensor> {
         anyhow::ensure!(x.rank() == 2, "attention expects [seq, dim]");
         let (s, d) = (x.shape[0], x.shape[1]);
         anyhow::ensure!(self.wq.shape == vec![d, d], "wq shape");
-        let proj = |exec: &mut MatmulExec, w: &QTensor| -> Result<Vec<f64>> {
-            let acc = exec(&x.data, &w.data, s, d, d, self.bits)?;
+        let proj = |exec: &mut dyn MatmulExec, slot: u32, w: &QTensor| -> Result<Vec<f64>> {
+            let acc = self.proj_acc(exec, slot, x, w, s, d)?;
             let sc = x.scale * w.scale;
             Ok(acc.iter().map(|&v| v as f64 * sc).collect())
         };
-        let q = proj(exec, &self.wq)?;
-        let k = proj(exec, &self.wk)?;
-        let v = proj(exec, &self.wv)?;
+        let q = proj(exec, 0, &self.wq)?;
+        let k = proj(exec, 1, &self.wk)?;
+        let v = proj(exec, 2, &self.wv)?;
         // softmax(q kᵀ / sqrt(d)) v — float side, matching model.py
         let mut ctx = vec![0f64; s * d];
         let scale = 1.0 / (d as f64).sqrt();
@@ -183,7 +349,7 @@ impl AttentionLayer {
         let amax = ctx.iter().fold(1e-6f64, |m, v| m.max(v.abs()));
         let ctx_scale = amax / crate::bits::twos::max_value(self.bits) as f64;
         let ctx_q = quantize_with_scale(&ctx, vec![s, d], ctx_scale, self.bits)?;
-        let acc = exec(&ctx_q.data, &self.wo.data, s, d, d, self.bits)?;
+        let acc = self.proj_acc(exec, 3, &ctx_q, &self.wo, s, d)?;
         let sc = ctx_scale * self.wo.scale;
         let real: Vec<f64> = acc.iter().map(|&a| a as f64 * sc).collect();
         quantize_with_scale(&real, vec![s, d], self.out_scale, self.out_bits)
@@ -204,7 +370,7 @@ pub enum Layer {
 }
 
 impl Layer {
-    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+    pub fn forward(&self, x: &QTensor, exec: &mut dyn MatmulExec) -> Result<QTensor> {
         match self {
             Layer::Linear(l) => l.forward(x, exec),
             Layer::Conv2d(l) => l.forward(x, exec),
@@ -253,6 +419,7 @@ mod tests {
             relu: false,
             out_scale: 1.0,
             out_bits: 8,
+            packed: PackedCache::new(),
         };
         let x = QTensor::new(vec![1, -2, 3, -4, 5, -6, 7, -8], vec![2, d], 1.0, 8).unwrap();
         let y = layer.forward(&x, &mut native_exec()).unwrap();
@@ -268,6 +435,7 @@ mod tests {
             relu: true,
             out_scale: 1.0,
             out_bits: 8,
+            packed: PackedCache::new(),
         };
         let x = QTensor::new(vec![-5], vec![1, 1], 1.0, 8).unwrap();
         let y = layer.forward(&x, &mut native_exec()).unwrap();
@@ -283,6 +451,7 @@ mod tests {
             relu: false,
             out_scale: 0.25,
             out_bits: 8,
+            packed: PackedCache::new(),
         };
         let x = QTensor::new(vec![3], vec![1, 1], 0.5, 8).unwrap();
         // acc = 3·2 + 10 = 16, real = 16·0.25 = 4.0, q = 4/0.25 = 16
@@ -303,6 +472,7 @@ mod tests {
             relu: false,
             out_scale: 1.0,
             out_bits: 8,
+            packed: PackedCache::new(),
         };
         let x = QTensor::new(vec![1, 2, 3, 4, 10, 20, 30, 40], vec![2, 2, 2], 1.0, 8).unwrap();
         let y = layer.forward(&x, &mut native_exec()).unwrap();
@@ -322,9 +492,98 @@ mod tests {
             relu: true,
             out_scale: 1.0,
             out_bits: 8,
+            packed: PackedCache::new(),
         };
         // 8×8 input, same-padded: 8·8 positions × 2·3·3 × 4
         assert_eq!(layer.macs(8, 8), 64 * 18 * 4);
+    }
+
+    /// Executor that insists on packed weights and computes through the
+    /// packed kernel — exercises the layer-side caching contract.
+    struct PackedExec {
+        packed_calls: u64,
+        planes_seen: u64,
+    }
+
+    impl MatmulExec for PackedExec {
+        fn matmul(
+            &mut self,
+            a: &[i32],
+            b: &[i32],
+            m: usize,
+            k: usize,
+            n: usize,
+            bits: u32,
+        ) -> Result<Vec<i64>> {
+            matmul_native(a, b, m, k, n, bits)
+        }
+
+        fn wants_packed(&self) -> bool {
+            true
+        }
+
+        fn matmul_packed(
+            &mut self,
+            a: &[i32],
+            w: &PackedWeight<'_>,
+            m: usize,
+            k: usize,
+            n: usize,
+            bits: u32,
+        ) -> Result<Vec<i64>> {
+            self.packed_calls += 1;
+            match &w.planes {
+                Some(p) => {
+                    self.planes_seen += 1;
+                    let pa = PackedPlanes::pack_rows(a, m, k, bits, PlaneKind::Sbmwc)?;
+                    crate::bits::packed::matmul_packed_planes(&pa, p)
+                }
+                None => self.matmul(a, w.data, m, k, n, bits),
+            }
+        }
+    }
+
+    #[test]
+    fn packed_executor_gets_cached_planes_and_identical_outputs() {
+        let layer = LinearLayer {
+            w: QTensor::new(vec![2, -3, 1, 4, 0, -7], vec![3, 2], 0.5, 8).unwrap(),
+            bias: vec![5, -5],
+            bits: 8,
+            relu: false,
+            out_scale: 0.25,
+            out_bits: 8,
+            packed: PackedCache::new(),
+        };
+        let x = QTensor::new(vec![1, -2, 3, 4, -5, 6], vec![2, 3], 0.5, 8).unwrap();
+        let dense = layer.forward(&x, &mut native_exec()).unwrap();
+        let mut pe = PackedExec {
+            packed_calls: 0,
+            planes_seen: 0,
+        };
+        let p1 = layer.forward(&x, &mut pe).unwrap();
+        let p2 = layer.forward(&x, &mut pe).unwrap();
+        assert_eq!(p1.data, dense.data, "packed path must be bit-identical");
+        assert_eq!(p2.data, dense.data);
+        assert_eq!(pe.packed_calls, 2);
+        assert_eq!(pe.planes_seen, 2);
+        // two forwards, one pack: the cache held the planes
+        assert_eq!(layer.packed.packs(), 1);
+    }
+
+    #[test]
+    fn packed_cache_is_shared_across_clones_and_keyed_by_precision() {
+        let w = QTensor::new(vec![1, 2, 3, -4], vec![2, 2], 1.0, 4).unwrap();
+        let cache = PackedCache::new();
+        let clone = cache.clone();
+        let a = cache.get_or_pack(0, &w, 4).unwrap();
+        let b = clone.get_or_pack(0, &w, 4).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "clones share one cache");
+        assert_eq!(cache.packs(), 1);
+        // a different precision is a different cache entry
+        let c = cache.get_or_pack(0, &w, 8).unwrap();
+        assert_eq!(c.bits, 8);
+        assert_eq!(cache.packs(), 2);
+        assert_eq!(clone.packs(), 2);
     }
 
     #[test]
@@ -343,6 +602,7 @@ mod tests {
             bits: 8,
             out_scale: 0.1,
             out_bits: 8,
+            packed: PackedCache::new(),
         };
         let x = QTensor::new(vec![4, -4, 2, -2, 1, 3, -3, -1], vec![2, 4], 1.0, 8).unwrap();
         let y = layer.forward(&x, &mut native_exec()).unwrap();

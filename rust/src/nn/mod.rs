@@ -8,8 +8,8 @@
 //! provides exactly that reduction so the coordinator can serve whole
 //! models: every layer exposes its matmul work-items and a forward
 //! function parameterised over a matmul executor (PJRT artifact,
-//! cycle-accurate simulator, or the native bit-plane path — all three
-//! compute identical integers).
+//! cycle-accurate simulator, native loop, or the word-packed plane
+//! engine — all four compute identical integers).
 
 pub mod layers;
 pub mod model;
@@ -17,11 +17,15 @@ pub mod quant;
 pub mod tensor;
 pub mod weights_io;
 
-pub use layers::{AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec};
+pub use layers::{
+    AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec, PackedCache, PackedWeight,
+};
 pub use model::{Model, ModelStats};
 pub use quant::{dequantize, quantize_symmetric, QuantParams};
 pub use tensor::QTensor;
 
+use crate::bits::packed::{matmul_packed_planes, PackedPlanes};
+use crate::bits::plane::{decompose, plane_weight, PlaneKind};
 use crate::Result;
 
 /// Exact integer matmul — the native functional fallback when no PJRT
@@ -60,23 +64,43 @@ pub fn matmul_native(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u
 /// Per-plane Booth realisation of the same product (`Σ_i 2^i ·
 /// (D_i(A)·B)`), mirroring the hardware decomposition cycle-for-plane.
 /// Used as the oracle for [`matmul_native`] and by observability paths.
+/// Derives its planes from the same [`decompose`] oracle as
+/// [`matmul_packed`], so the two realisations cannot drift.
 pub fn matmul_planes(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u32) -> Result<Vec<i64>> {
     crate::validate_bits(bits)?;
     anyhow::ensure!(a.len() == m * k && b.len() == k * n, "shape mismatch");
-    let planes = crate::bits::plane::booth_planes(a, bits);
+    let planes = decompose(PlaneKind::Booth, a, bits);
     let mut acc = vec![0i64; m * n];
     for (i, plane) in planes.iter().enumerate() {
+        let w = plane_weight(PlaneKind::Booth, i as u32, bits);
         for r in 0..m {
             for c in 0..n {
                 let mut dot = 0i64;
                 for kk in 0..k {
                     dot += (plane[r * k + kk] as i64) * (b[kk * n + c] as i64);
                 }
-                acc[r * n + c] += dot << i;
+                acc[r * n + c] += dot * w;
             }
         }
     }
     Ok(acc)
+}
+
+/// Word-packed realisation of the same product: both operands are
+/// decomposed (via the shared [`decompose`] oracle) into SBMwC planes
+/// packed 64 digits per `u64` word, and every plane pair is reduced
+/// with per-word `AND` + `count_ones`
+/// (`A·B = Σ_{i,j} w_i w_j (D_i(A)·D_j(B))`, see
+/// [`crate::bits::packed`]). Bit-identical to [`matmul_native`] and
+/// [`matmul_planes`]; ~8× less memory traffic than the byte-per-digit
+/// plane path. Serving callers should pre-pack the stationary operand
+/// once via [`PackedCache`] instead of calling this per request.
+pub fn matmul_packed(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u32) -> Result<Vec<i64>> {
+    crate::validate_bits(bits)?;
+    anyhow::ensure!(a.len() == m * k && b.len() == k * n, "shape mismatch");
+    let pa = PackedPlanes::pack_rows(a, m, k, bits, PlaneKind::Sbmwc)?;
+    let pb = PackedPlanes::pack_cols(b, k, n, bits, PlaneKind::Sbmwc)?;
+    matmul_packed_planes(&pa, &pb)
 }
 
 #[cfg(test)]
@@ -116,5 +140,31 @@ mod tests {
     fn native_matmul_validates() {
         assert!(matmul_native(&[1], &[1], 1, 1, 1, 0).is_err());
         assert!(matmul_native(&[1, 2], &[1], 1, 1, 1, 4).is_err());
+    }
+
+    #[test]
+    fn packed_realisation_identical_to_direct() {
+        let mut rng = crate::prng::Pcg32::new(0x9a7f);
+        for bits in [1u32, 3, 8, 16] {
+            let (lo, hi) = (
+                crate::bits::twos::min_value(bits),
+                crate::bits::twos::max_value(bits),
+            );
+            // k = 70 straddles the 64-digit word boundary
+            let (m, k, n) = (3usize, 70usize, 5usize);
+            let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+            assert_eq!(
+                matmul_packed(&a, &b, m, k, n, bits).unwrap(),
+                matmul_native(&a, &b, m, k, n, bits).unwrap(),
+                "bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_matmul_validates() {
+        assert!(matmul_packed(&[1], &[1], 1, 1, 1, 0).is_err());
+        assert!(matmul_packed(&[1, 2], &[1], 1, 1, 1, 4).is_err());
     }
 }

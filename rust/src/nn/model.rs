@@ -6,7 +6,7 @@
 //! the cloud-screening use case of [9]), and transformer workloads
 //! (§II-C).
 
-use crate::nn::layers::{AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec};
+use crate::nn::layers::{AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec, PackedCache};
 use crate::nn::tensor::QTensor;
 use crate::prng::Pcg32;
 use crate::Result;
@@ -33,7 +33,7 @@ pub struct ModelStats {
 
 impl Model {
     /// Run the model on one input through the given matmul executor.
-    pub fn forward(&self, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+    pub fn forward(&self, x: &QTensor, exec: &mut dyn MatmulExec) -> Result<QTensor> {
         let mut h = x.clone();
         for layer in &self.layers {
             h = layer.forward(&h, exec)?;
@@ -90,6 +90,7 @@ pub fn mlp_zoo(seed: u64) -> Model {
             relu,
             out_scale,
             out_bits,
+            packed: PackedCache::new(),
         })
     };
     Model {
@@ -119,6 +120,7 @@ pub fn cnn_zoo(seed: u64) -> Model {
             relu: true,
             out_scale,
             out_bits: bits,
+            packed: PackedCache::new(),
         })
     };
     let mut rng2 = Pcg32::new(seed ^ 0xc0ffee);
@@ -135,6 +137,7 @@ pub fn cnn_zoo(seed: u64) -> Model {
                 relu: false,
                 out_scale: 0.5,
                 out_bits: 8,
+                packed: PackedCache::new(),
             }),
         ],
         input_shape: vec![1, 16, 16],
@@ -157,6 +160,7 @@ pub fn attention_zoo(seed: u64) -> Model {
             bits: 8,
             out_scale: 0.1,
             out_bits: 8,
+            packed: PackedCache::new(),
         })],
         input_shape: vec![16, d],
         input_bits: 8,
@@ -167,7 +171,7 @@ pub fn attention_zoo(seed: u64) -> Model {
 /// CNN forward needs a flatten between conv and linear stages; this
 /// wrapper inserts it (kept out of `Model::forward` to keep layer
 /// composition explicit).
-pub fn forward_cnn(model: &Model, x: &QTensor, exec: &mut MatmulExec) -> Result<QTensor> {
+pub fn forward_cnn(model: &Model, x: &QTensor, exec: &mut dyn MatmulExec) -> Result<QTensor> {
     let mut h = x.clone();
     for layer in &model.layers {
         if let (Layer::Linear(_), 3) = (layer, h.rank()) {

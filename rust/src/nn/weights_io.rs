@@ -4,7 +4,7 @@
 //! serving stack can run a *genuinely trained* workload and measure
 //! the accuracy the accelerator delivers.
 
-use crate::nn::layers::{Layer, LinearLayer};
+use crate::nn::layers::{Layer, LinearLayer, PackedCache};
 use crate::nn::model::Model;
 use crate::nn::tensor::QTensor;
 use crate::Result;
@@ -95,6 +95,7 @@ pub fn parse_trained(text: &str) -> Result<TrainedBundle> {
             relu,
             out_scale,
             out_bits,
+            packed: PackedCache::new(),
         }));
     }
 
@@ -133,7 +134,7 @@ pub fn parse_trained(text: &str) -> Result<TrainedBundle> {
 
 /// Run the bundle's eval split through a matmul executor and return
 /// the classification accuracy — the accelerator-delivered accuracy.
-pub fn evaluate(bundle: &TrainedBundle, exec: &mut crate::nn::layers::MatmulExec) -> Result<f64> {
+pub fn evaluate(bundle: &TrainedBundle, exec: &mut dyn crate::nn::layers::MatmulExec) -> Result<f64> {
     let x = QTensor::new(
         bundle.eval_x.clone(),
         vec![bundle.eval_n, bundle.eval_d],

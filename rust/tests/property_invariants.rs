@@ -1,19 +1,90 @@
 //! Property-based invariants over the coordinator and arithmetic
 //! substrates, using the in-repo property-testing framework
 //! (`proptest_lite`): routing/tiling coverage, quantization bounds,
-//! Booth-digit reconstruction, simulator-vs-native agreement, and
-//! batching conservation.
+//! Booth-digit reconstruction, simulator-vs-native agreement,
+//! packed-plane/native/per-plane equality, and batching conservation.
 
 use bitsmm::bits::booth::booth_digits;
+use bitsmm::bits::packed::{matmul_packed_planes, PackedPlanes};
+use bitsmm::bits::plane::{decompose, PlaneKind};
 use bitsmm::bits::twos::{max_value, min_value, Bits};
 use bitsmm::coordinator::tile_matmul;
-use bitsmm::nn::matmul_native;
 use bitsmm::nn::quant::{dequantize, quantize_symmetric};
+use bitsmm::nn::{matmul_native, matmul_packed, matmul_planes};
 use bitsmm::prng::Pcg32;
 use bitsmm::proptest_lite::{forall, Gen};
 use bitsmm::sim::array::SaConfig;
 use bitsmm::sim::driver::{mac_dot, ref_matmul_i64, sa_matmul};
 use bitsmm::sim::mac_common::MacVariant;
+
+/// The four matmul realisations are pinned together: packed == native
+/// == per-plane == the i64 reference, for random shapes (k straddling
+/// the 64-digit word boundary) and every width 1..=16.
+#[test]
+fn prop_packed_native_planes_reference_agree() {
+    let gen = Gen::pair(
+        Gen::pair(Gen::u32s(1, 16), Gen::u32s(0, u32::MAX)), // (bits, seed)
+        Gen::pair(Gen::u32s(1, 5), Gen::pair(Gen::u32s(1, 140), Gen::u32s(1, 6))), // (m, (k, n))
+    );
+    forall("packed==native==planes==ref", 80, gen, |&((bits, seed), (m, (k, n)))| {
+        let (m, k, n) = (m as usize, k as usize, n as usize);
+        let mut rng = Pcg32::new(seed as u64 ^ 0x9e3779b97f4a7c15);
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+        matmul_packed(&a, &b, m, k, n, bits).unwrap() == want
+            && matmul_native(&a, &b, m, k, n, bits).unwrap() == want
+            && matmul_planes(&a, &b, m, k, n, bits).unwrap() == want
+    });
+}
+
+/// Pack → unpack reproduces the decomposition oracle's digit planes
+/// exactly, for both plane kinds and lengths crossing word boundaries.
+#[test]
+fn prop_packed_roundtrip_matches_decompose_oracle() {
+    let gen = Gen::pair(
+        Gen::pair(Gen::u32s(1, 16), Gen::u32s(1, 200)), // (bits, len)
+        Gen::u32s(0, u32::MAX),                         // seed
+    );
+    forall("pack/unpack == decompose", 120, gen, |&((bits, len), seed)| {
+        let mut rng = Pcg32::new(seed as u64);
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let data: Vec<i32> = (0..2 * len as usize).map(|_| rng.range_i32(lo, hi)).collect();
+        [PlaneKind::Sbmwc, PlaneKind::Booth].iter().all(|&kind| {
+            let p = PackedPlanes::pack_rows(&data, 2, len as usize, bits, kind).unwrap();
+            p.unpack() == decompose(kind, &data, bits)
+        })
+    });
+}
+
+/// The SBMwC sign-plane correction and the tail-word masking are exact
+/// at the extremes: operands saturated at the width's min/max, with k
+/// straddling the 64-digit word boundary in every direction.
+#[test]
+fn packed_sign_plane_and_tail_word_edges() {
+    for bits in 1..=16u32 {
+        let (m, n) = (2usize, 3usize);
+        for k in [1usize, 63, 64, 65, 70, 128, 129] {
+            for fill in [min_value(bits), max_value(bits)] {
+                let a = vec![fill; m * k];
+                let mut b = vec![fill; k * n];
+                // perturb one element so the product is not uniform
+                b[k / 2 * n] = 0;
+                let want = ref_matmul_i64(&a, &b, m, k, n);
+                assert_eq!(
+                    matmul_packed(&a, &b, m, k, n, bits).unwrap(),
+                    want,
+                    "bits={bits} k={k} fill={fill}"
+                );
+                // mixed-kind kernels hit the same reference
+                let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Booth).unwrap();
+                let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+                assert_eq!(matmul_packed_planes(&pa, &pb).unwrap(), want, "booth x sbmwc bits={bits} k={k}");
+            }
+        }
+    }
+}
 
 /// Tiling covers every output element exactly once, for arbitrary
 /// problem and array geometries.

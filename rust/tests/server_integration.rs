@@ -103,6 +103,32 @@ fn queue_depth_reflects_backlog() {
     server.shutdown();
 }
 
+/// The packed backend serves bit-identical results to the native one
+/// and packs each layer's weights exactly once per (layer, precision)
+/// even with multiple workers racing over many batches — the serving
+/// invariant the per-layer `PackedCache` exists for.
+#[test]
+fn packed_backend_identical_results_and_packs_weights_once() {
+    let model = Arc::new(mlp_zoo(9));
+    let ins = inputs(48, 11);
+    let (want, _, _) = serve_all(model.clone(), base_cfg(2), ins.clone()).unwrap();
+
+    let mut cfg = base_cfg(4);
+    cfg.backend = Backend::Packed;
+    let (got, report, metrics) = serve_all(model.clone(), cfg, ins).unwrap();
+    assert_eq!(metrics.requests, 48);
+    assert!(report.packed_execs > 0, "packed engine must have executed");
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.output, b.output, "packed vs native diverged at id {}", a.id);
+    }
+    // 4 workers × many batches, but each (layer, precision) packed once
+    for (i, layer) in model.layers.iter().enumerate() {
+        if let bitsmm::nn::Layer::Linear(l) = layer {
+            assert_eq!(l.packed.packs(), 1, "layer {i} packed more than once");
+        }
+    }
+}
+
 #[test]
 fn zero_workers_rejected() {
     let model = Arc::new(mlp_zoo(9));

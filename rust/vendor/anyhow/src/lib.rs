@@ -1,0 +1,108 @@
+//! Offline stand-in for the `anyhow` crate (see DESIGN.md
+//! substitutions). The build environment has no crates.io access, so
+//! this vendors the subset the workspace uses: a string-backed dynamic
+//! [`Error`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, the
+//! `Result<T>` alias, and `From<E: std::error::Error>` so `?` converts
+//! any standard error (the source chain is flattened into the message,
+//! which is what `{e:#}` formatting prints in real anyhow).
+
+use std::fmt;
+
+/// A dynamic error: a rendered message (source chain included).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` uses).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and `{e:#}` both print the full flattened chain.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`;
+// that is what keeps this blanket conversion coherent (same trick as
+// real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn inner(s: &str) -> crate::Result<i32> {
+            crate::ensure!(!s.is_empty(), "empty input");
+            let v: i32 = s.parse()?; // ParseIntError -> Error via From
+            if v < 0 {
+                crate::bail!("negative: {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(inner("42").unwrap(), 42);
+        assert!(inner("").unwrap_err().to_string().contains("empty"));
+        assert!(inner("x").unwrap_err().to_string().contains("invalid"));
+        assert!(inner("-1").unwrap_err().to_string().contains("negative: -1"));
+        let e = crate::anyhow!("ctx {}", 7);
+        assert_eq!(format!("{e:#}"), "ctx 7");
+        assert_eq!(format!("{e:?}"), "ctx 7");
+    }
+}
