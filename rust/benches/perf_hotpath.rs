@@ -1,13 +1,21 @@
 //! Bench PERF: host-side hot-path microbenchmarks feeding the §Perf
 //! iteration log — simulator inner loop, native matmul, the per-plane
-//! and word-packed plane realisations (the headline comparison for the
-//! packed engine), tiler, and (when artifacts are built) the PJRT
-//! request path. Every result is also written to
-//! `BENCH_perf_hotpath.json` so the perf trajectory is machine-
-//! trackable across PRs.
+//! and word-packed plane realisations, the popcount-reducer and
+//! thread-count sweeps of the packed engine (the headline comparison
+//! for this PR), cross-precision plane slicing, tiler, and (when
+//! artifacts are built) the PJRT request path. Every result is also
+//! written to `BENCH_perf_hotpath.json` so the perf trajectory is
+//! machine-trackable across PRs.
+//!
+//! Set `BITSMM_BENCH_SMOKE=1` (CI does) to run the same matrix on a
+//! small shape with a tight iteration budget — seconds, not minutes —
+//! while still producing the JSON artifact.
 
 use bitsmm::bench_harness::{bench, BenchConfig, BenchResult};
-use bitsmm::bits::packed::{matmul_packed_planes, PackedPlanes};
+use bitsmm::bits::packed::{
+    matmul_packed_planes, matmul_packed_tile_pooled, matmul_packed_tile_with, PackedPlanes,
+    PackedPool, PopcountKernel,
+};
 use bitsmm::bits::plane::PlaneKind;
 use bitsmm::coordinator::{tile_matmul, Backend, Scheduler};
 use bitsmm::nn::{matmul_native, matmul_packed, matmul_planes};
@@ -15,10 +23,27 @@ use bitsmm::prng::Pcg32;
 use bitsmm::sim::array::{SaConfig, SystolicArray};
 use bitsmm::sim::driver::mac_dot;
 use bitsmm::sim::mac_common::MacVariant;
+use std::sync::Arc;
 
 fn main() {
-    bitsmm::bench_harness::header("perf_hotpath", "host hot paths (native vs planes vs packed)");
-    let cfg = BenchConfig::default();
+    let smoke = std::env::var("BITSMM_BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    bitsmm::bench_harness::header(
+        "perf_hotpath",
+        if smoke {
+            "host hot paths (SMOKE mode: small shapes, tight budget)"
+        } else {
+            "host hot paths (native vs planes vs packed; reducer + thread sweeps)"
+        },
+    );
+    let cfg = if smoke {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            target_time: std::time::Duration::from_millis(50),
+        }
+    } else {
+        BenchConfig::default()
+    };
     let mut rng = Pcg32::new(0x9e4f);
     let mut log: Vec<BenchResult> = Vec::new();
 
@@ -53,7 +78,11 @@ fn main() {
     // The packed engine's plane-pair count grows with bits² while its
     // word count shrinks 64×, so the sweep shows where each
     // realisation wins (see DESIGN.md §Packed-Planes).
-    let (m2, k2, n2) = (64usize, 128usize, 64usize);
+    let (m2, k2, n2) = if smoke {
+        (16usize, 128usize, 16usize)
+    } else {
+        (64usize, 128usize, 64usize)
+    };
     let macs2 = (m2 * k2 * n2) as f64;
     for bits in [1u32, 2, 4, 8, 16] {
         let lo = bitsmm::bits::twos::min_value(bits);
@@ -65,7 +94,7 @@ fn main() {
             ("planes", matmul_planes),
             ("packed", matmul_packed),
         ] {
-            let r = bench(&format!("matmul_{name} 64x128x64 @{bits}b"), cfg, || {
+            let r = bench(&format!("matmul_{name} {m2}x{k2}x{n2} @{bits}b"), cfg, || {
                 f(&a2, &b2, m2, k2, n2, bits).unwrap()[0]
             });
             println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs2) / 1e6));
@@ -73,17 +102,30 @@ fn main() {
         }
     }
 
-    // ---- 4. the acceptance matrix: 256x256x256 @8b ----------------------
-    // (bigger problem, fewer iterations; packed must beat planes here)
-    let big = BenchConfig {
-        warmup_iters: 1,
-        min_iters: 3,
-        target_time: std::time::Duration::from_millis(400),
+    // ---- 4. the acceptance matrix -----------------------------------------
+    // (bigger problem, fewer iterations; packed must beat planes here,
+    // and the threaded packed kernel must beat scalar single-thread by
+    // >= 2x at >= 4 threads)
+    let big = if smoke {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 2,
+            target_time: std::time::Duration::from_millis(40),
+        }
+    } else {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            target_time: std::time::Duration::from_millis(400),
+        }
     };
-    let (m3, k3, n3, bits3) = (256usize, 256usize, 256usize, 8u32);
+    let dim = if smoke { 64usize } else { 256usize };
+    let (m3, k3, n3, bits3) = (dim, dim, dim, 8u32);
+    let shape3 = format!("{m3}x{k3}x{n3}");
     let macs3 = (m3 * k3 * n3) as f64;
     let a3: Vec<i32> = (0..m3 * k3).map(|_| rng.range_i32(-128, 127)).collect();
     let b3: Vec<i32> = (0..k3 * n3).map(|_| rng.range_i32(-128, 127)).collect();
+    let mut native_mean = 0f64;
     let mut planes_mean = 0f64;
     let mut packed_mean = 0f64;
     for (name, f) in [
@@ -91,11 +133,12 @@ fn main() {
         ("planes", matmul_planes),
         ("packed", matmul_packed),
     ] {
-        let r = bench(&format!("matmul_{name} 256x256x256 @{bits3}b"), big, || {
+        let r = bench(&format!("matmul_{name} {shape3} @{bits3}b"), big, || {
             f(&a3, &b3, m3, k3, n3, bits3).unwrap()[0]
         });
-        println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs3) / 1e6));
+        println!("{}   ({} GOPS)", r.format(), fmt_rate(r.per_second(macs3) / 1e9));
         match name {
+            "native" => native_mean = r.mean.as_secs_f64(),
             "planes" => planes_mean = r.mean.as_secs_f64(),
             "packed" => packed_mean = r.mean.as_secs_f64(),
             _ => {}
@@ -104,7 +147,7 @@ fn main() {
     }
     if packed_mean > 0.0 && planes_mean > 0.0 {
         println!(
-            "packed vs per-plane speedup @8b 256^3: {:.2}x",
+            "packed vs per-plane speedup @8b {shape3}: {:.2}x",
             planes_mean / packed_mean
         );
     }
@@ -112,11 +155,83 @@ fn main() {
     // ---- 5. packed kernel with pre-packed (cached) weights --------------
     // the serving steady state: only the streamed operand packs per call
     let pb = PackedPlanes::pack_cols(&b3, k3, n3, bits3, PlaneKind::Sbmwc).unwrap();
-    let r = bench("matmul_packed 256x256x256 @8b cached-W", big, || {
+    let r = bench(&format!("matmul_packed {shape3} @{bits3}b cached-W"), big, || {
         let pa = PackedPlanes::pack_rows(&a3, m3, k3, bits3, PlaneKind::Sbmwc).unwrap();
         matmul_packed_planes(&pa, &pb).unwrap()[0]
     });
-    println!("{}   ({} MMAC/s)", r.format(), fmt_rate(r.per_second(macs3) / 1e6));
+    println!("{}   ({} GOPS)", r.format(), fmt_rate(r.per_second(macs3) / 1e9));
+    log.push(r);
+
+    // ---- 5b. popcount reducer sweep (single thread, both cached) --------
+    // scalar = the PR 1 kernel, the baseline for the acceptance speedup
+    let pa3 = Arc::new(PackedPlanes::pack_rows(&a3, m3, k3, bits3, PlaneKind::Sbmwc).unwrap());
+    let pb3 = Arc::new(pb);
+    let mut scalar_mean = 0f64;
+    for kernel in PopcountKernel::CONCRETE {
+        if !kernel.available() {
+            println!("packed {shape3} @{bits3}b t1 {:<8}  skipped (CPU lacks it)", kernel.name());
+            continue;
+        }
+        let r = bench(&format!("packed {shape3} @{bits3}b t1 {}", kernel.name()), big, || {
+            matmul_packed_tile_with(&pa3, &pb3, 0, m3, 0, n3, kernel).unwrap()[0]
+        });
+        let mean = r.mean.as_secs_f64();
+        if kernel == PopcountKernel::Scalar {
+            scalar_mean = mean;
+        }
+        println!(
+            "{}   ({} GOPS, {:.2}x vs scalar, {:.2}x vs native)",
+            r.format(),
+            fmt_rate(r.per_second(macs3) / 1e9),
+            safe_ratio(scalar_mean, mean),
+            safe_ratio(native_mean, mean)
+        );
+        log.push(r);
+    }
+
+    // ---- 5c. thread sweep on the shared row-block pool ------------------
+    // (auto reducer; pools are persistent — built once, reused per run)
+    let mut t4_mean = 0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let pool = PackedPool::new(threads).unwrap();
+        let r = bench(&format!("packed {shape3} @{bits3}b t{threads} auto"), big, || {
+            matmul_packed_tile_pooled(&pool, &pa3, &pb3, 0, m3, 0, n3, PopcountKernel::Auto)
+                .unwrap()[0]
+        });
+        let mean = r.mean.as_secs_f64();
+        if threads == 4 {
+            t4_mean = mean;
+        }
+        println!(
+            "{}   ({} GOPS, {:.2}x vs t1-scalar, {:.2}x vs native)",
+            r.format(),
+            fmt_rate(r.per_second(macs3) / 1e9),
+            safe_ratio(scalar_mean, mean),
+            safe_ratio(native_mean, mean)
+        );
+        log.push(r);
+    }
+    if scalar_mean > 0.0 && t4_mean > 0.0 {
+        println!(
+            "ACCEPTANCE packed {shape3} @8b: t4 vs PR1 scalar t1 = {:.2}x (target >= 2x)",
+            scalar_mean / t4_mean
+        );
+    }
+
+    // ---- 5d. cross-precision plane reuse: slice vs fresh re-pack --------
+    // 4-bit-range weights packed at 8 bits: a precision-lowered request
+    // slices a plane-subset view where PR 1 re-decomposed the matrix
+    let b_lo: Vec<i32> = (0..k3 * n3).map(|_| rng.range_i32(-8, 7)).collect();
+    let pb_wide = PackedPlanes::pack_cols(&b_lo, k3, n3, 8, PlaneKind::Sbmwc).unwrap();
+    let r = bench(&format!("pack_cols {k3}x{n3} @4b (fresh re-pack)"), big, || {
+        PackedPlanes::pack_cols(&b_lo, k3, n3, 4, PlaneKind::Sbmwc).unwrap().words
+    });
+    println!("{}", r.format());
+    log.push(r);
+    let r = bench(&format!("slice_bits 8->4 {k3}x{n3} (plane-subset view)"), big, || {
+        pb_wide.slice_bits(4).unwrap().bits
+    });
+    println!("{}   (replaces the fresh re-pack above)", r.format());
     log.push(r);
 
     // ---- 6. tiler ---------------------------------------------------------
@@ -172,4 +287,14 @@ fn main() {
 
 fn fmt_rate(v: f64) -> String {
     bitsmm::report::f(v)
+}
+
+/// `num/den` guarded against a zero denominator/numerator (skipped
+/// baseline entries), so a missing baseline prints 0.00x, not inf.
+fn safe_ratio(num: f64, den: f64) -> f64 {
+    if num > 0.0 && den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
 }

@@ -13,9 +13,11 @@
 //!   TPU-side re-expression of bit-serial streaming, see
 //!   DESIGN.md §Hardware-Adaptation) and the decomposition oracle
 //!   shared by every plane-based execution path.
-//! * [`packed`] — word-packed planes (`u64` words, 64 digits/word)
-//!   and the AND+popcount plane-pair matmul kernel behind
-//!   `Backend::Packed` (see DESIGN.md §Packed-Planes).
+//! * [`packed`] — word-packed planes (`u64` words, 64 digits/word),
+//!   the AND+popcount plane-pair matmul kernel behind
+//!   `Backend::Packed`, its unrolled/AVX2 popcount reducers, the
+//!   persistent row-block worker pool, and cross-precision plane
+//!   slicing (see DESIGN.md §Packed-Planes and §Packed-Threading).
 
 pub mod booth;
 pub mod packed;
@@ -23,7 +25,10 @@ pub mod plane;
 pub mod twos;
 
 pub use booth::{booth_digits, booth_mul, BoothAction};
-pub use packed::{matmul_packed_planes, matmul_packed_tile, PackedPlanes};
+pub use packed::{
+    matmul_packed_planes, matmul_packed_tile, matmul_packed_tile_pooled,
+    matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
+};
 pub use plane::{
     bit_planes_sbmwc, booth_planes, decompose, plane_weight, reconstruct_sbmwc, PlaneKind,
 };

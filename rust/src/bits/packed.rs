@@ -1,6 +1,6 @@
 //! Word-packed bit planes and the popcount plane-pair matmul kernel —
 //! the software hot path of the bit-serial formulation (see DESIGN.md
-//! §Packed-Planes).
+//! §Packed-Planes and §Packed-Threading).
 //!
 //! The per-plane path ([`crate::nn::matmul_planes`]) stores one *byte*
 //! per digit, so an `m×k` operand at `b` bits costs `b·m·k` bytes and
@@ -13,14 +13,32 @@
 //!   per plane (`digit = pos − neg`); every plane weighs `+2^i`.
 //!
 //! The kernel realises `A·B = Σ_{i,j} w_i·w_j · (D_i(A)·D_j(B))` where
-//! each binary plane-pair product is per-word `AND` + `count_ones` —
-//! the BISMO-style word-packed formulation (PAPERS.md, Umuroglu et
-//! al.), with signed `w` absorbing the SBMwC correction. Both packers
-//! derive their digits from the shared [`decompose`] oracle, so the
-//! packed engine cannot drift from the per-plane one.
+//! each binary plane-pair product is per-word `AND` + popcount — the
+//! BISMO-style word-packed formulation (PAPERS.md, Umuroglu et al.),
+//! with signed `w` absorbing the SBMwC correction. Both packers derive
+//! their digits from the shared [`decompose`] oracle, so the packed
+//! engine cannot drift from the per-plane one.
+//!
+//! Three host-throughput levers live here (all bit-identical to the
+//! scalar kernel, pinned by tests):
+//!
+//! * [`PopcountKernel`] — the word reducer behind every plane-pair
+//!   product: scalar, 4-/8-word unrolled chunks, or an AVX2 nibble-LUT
+//!   popcount selected by *runtime* feature detection (`Auto`). All
+//!   kind-pair arms share one [`plane_pair_dot`] reducer, so unroll
+//!   variants cannot diverge from each other.
+//! * [`PackedPool`] — a persistent `std::thread` worker pool that
+//!   partitions a packed matmul across output-row blocks
+//!   ([`matmul_packed_tile_pooled`]); one pool is shared by all of a
+//!   server's request workers.
+//! * [`PackedPlanes::slice_bits`] — cross-precision plane reuse: the
+//!   plane-major layout makes the planes of every lower precision a
+//!   *prefix* of a higher-precision pack, so a `b'`-bit view of a
+//!   `b`-bit pack (`b' ≥ min_bits`) is a zero-copy `Arc` share.
 
 use super::plane::{decompose, plane_weight, PlaneKind};
 use crate::Result;
+use std::sync::{mpsc, Arc, Mutex};
 
 /// A matrix operand decomposed into `bits` digit planes, each packed
 /// 64 digits per word along the contracted dimension.
@@ -32,7 +50,13 @@ use crate::Result;
 /// dimension k. Packing columns along k is what lets the tiler slice
 /// column ranges of a cached weight operand without re-packing
 /// ([`matmul_packed_tile`]).
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// Word storage is plane-major and shared (`Arc`), so a lower-precision
+/// view produced by [`PackedPlanes::slice_bits`] costs no copy: planes
+/// `0..b'` of a `b`-bit pack are a storage prefix. Equality compares
+/// only the visible planes (`0..bits`), so a sliced view equals a fresh
+/// pack at the same precision.
+#[derive(Debug, Clone)]
 pub struct PackedPlanes {
     pub kind: PlaneKind,
     pub bits: u32,
@@ -43,12 +67,37 @@ pub struct PackedPlanes {
     /// Words per vector: `ceil(len / 64)`; trailing bits of the last
     /// word are always zero (tail masking happens at pack time).
     pub words: usize,
+    /// Smallest width every packed value fits in — the floor for
+    /// [`PackedPlanes::slice_bits`] (truncating two's complement below
+    /// this width would change values).
+    pub min_bits: u32,
     /// Positive-digit words, plane-major:
-    /// `pos[(plane · vectors + vec) · words + w]`.
-    pos: Vec<u64>,
+    /// `pos[(plane · vectors + vec) · words + w]`. Shared across
+    /// precision-sliced views.
+    pos: Arc<[u64]>,
     /// Negative-digit words (Booth only; empty for SBMwC).
-    neg: Vec<u64>,
+    neg: Arc<[u64]>,
 }
+
+impl PartialEq for PackedPlanes {
+    /// Visible-plane equality: two packs are equal when their shape and
+    /// their planes `0..bits` agree — storage beyond the visible planes
+    /// (a higher-precision donor behind a [`PackedPlanes::slice_bits`]
+    /// view) does not participate.
+    fn eq(&self, other: &PackedPlanes) -> bool {
+        let vis = |p: &PackedPlanes| p.bits as usize * p.vectors * p.words;
+        self.kind == other.kind
+            && self.bits == other.bits
+            && self.vectors == other.vectors
+            && self.len == other.len
+            && self.words == other.words
+            && self.pos[..vis(self)] == other.pos[..vis(other)]
+            && self.neg.is_empty() == other.neg.is_empty()
+            && (self.neg.is_empty() || self.neg[..vis(self)] == other.neg[..vis(other)])
+    }
+}
+
+impl Eq for PackedPlanes {}
 
 impl PackedPlanes {
     /// Pack the rows of a row-major `rows × cols` matrix: one packed
@@ -102,6 +151,20 @@ impl PackedPlanes {
         Ok(())
     }
 
+    /// Smallest width every value of `data` fits in (1..=16; `check`
+    /// guarantees it does not exceed the declared pack width).
+    fn needed_bits(data: &[i32]) -> u32 {
+        let mut bits = 1u32;
+        for &v in data {
+            while v < crate::bits::twos::min_value(bits)
+                || v > crate::bits::twos::max_value(bits)
+            {
+                bits += 1;
+            }
+        }
+        bits
+    }
+
     fn pack_vectors(
         data: &[i32],
         vectors: usize,
@@ -139,9 +202,38 @@ impl PackedPlanes {
             vectors,
             len,
             words,
-            pos,
-            neg,
+            min_bits: Self::needed_bits(data),
+            pos: pos.into(),
+            neg: neg.into(),
         }
+    }
+
+    /// A `bits`-precision view of this pack, sharing the word storage
+    /// (zero copy, zero re-decomposition).
+    ///
+    /// Sound because two's-complement truncation preserves values that
+    /// fit in the narrower width, both plane kinds derive digit `i`
+    /// only from pattern bits `≤ i`, and the plane-major layout makes
+    /// planes `0..bits` a storage prefix; the top plane's sign weight
+    /// is reapplied by [`plane_weight`] at the new width. Requires
+    /// `min_bits ≤ bits ≤ self.bits` — below `min_bits` the narrower
+    /// encoding would change values, exactly when a fresh re-pack at
+    /// `bits` would also be rejected.
+    pub fn slice_bits(&self, bits: u32) -> Result<PackedPlanes> {
+        crate::validate_bits(bits)?;
+        anyhow::ensure!(
+            bits <= self.bits,
+            "cannot slice {bits} planes out of a {}-bit pack (packs only narrow)",
+            self.bits
+        );
+        anyhow::ensure!(
+            self.min_bits <= bits,
+            "packed values need {} bits; a {bits}-bit slice would truncate them",
+            self.min_bits
+        );
+        let mut view = self.clone(); // Arc clones — no word copy
+        view.bits = bits;
+        Ok(view)
     }
 
     /// Positive-digit words of one plane of one vector.
@@ -190,38 +282,216 @@ impl PackedPlanes {
             .collect()
     }
 
-    /// Words of packed storage. The byte-per-digit representation costs
-    /// `bits · vectors · len` bytes; this costs `8 · mem_words()` —
-    /// a ~8× reduction (~16× for Booth's two streams vs. pos/neg bytes
-    /// is the same 8× per stream).
+    /// Words of packed storage visible at this precision (a sliced view
+    /// reports its own planes, not the donor's). The byte-per-digit
+    /// representation costs `bits · vectors · len` bytes; this costs
+    /// `8 · mem_words()` — a ~8× reduction per stream.
     pub fn mem_words(&self) -> usize {
-        self.pos.len() + self.neg.len()
+        let streams = if self.neg.is_empty() { 1 } else { 2 };
+        self.bits as usize * self.vectors * self.words * streams
     }
 }
 
-/// Packed plane-pair matmul: `a` holds the rows of `A` (m vectors of
-/// length k), `b` the columns of `B` (n vectors of length k). Returns
-/// the exact `m × n` i64 accumulators, bit-identical to
-/// [`crate::nn::matmul_native`].
-pub fn matmul_packed_planes(a: &PackedPlanes, b: &PackedPlanes) -> Result<Vec<i64>> {
-    matmul_packed_tile(a, b, 0, a.vectors, 0, b.vectors)
+// ---------------------------------------------------------------------------
+// Popcount reducers
+// ---------------------------------------------------------------------------
+
+/// Word-level `AND`+popcount reducer used for every binary plane-pair
+/// product — the innermost loop of the packed engine (DESIGN.md
+/// §Packed-Threading). All variants are bit-identical; they differ only
+/// in how many words they reduce per step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopcountKernel {
+    /// Best available at runtime: AVX2 when the CPU has it, else the
+    /// 8-word unrolled chunks.
+    Auto,
+    /// One `u64::count_ones` per word — the PR 1 baseline, kept as the
+    /// forced-scalar reference for tests and benches.
+    Scalar,
+    /// 4-word chunked `count_ones`.
+    Unroll4,
+    /// 8-word chunked `count_ones`.
+    Unroll8,
+    /// `std::arch` AVX2 nibble-LUT popcount (4 words per 256-bit step).
+    /// Falls back to [`PopcountKernel::Unroll8`] where AVX2 is absent.
+    Avx2,
 }
 
-/// Tile view of [`matmul_packed_planes`]: rows `row0 .. row0+tm` of A
-/// against columns `col0 .. col0+tn` of B, selected by index so
-/// neither operand is re-packed per tile. Returns a `tm × tn` tile.
-///
-/// Realises `A·B = Σ_{i,j} w_i w_j (D_i(A)·D_j(B))` with the binary
-/// plane-pair products computed as per-word `AND` + `count_ones`; the
-/// signed plane weights carry the SBMwC MSb-plane correction.
-pub fn matmul_packed_tile(
+impl PopcountKernel {
+    /// Every concrete (non-`Auto`) kernel, for sweeps.
+    pub const CONCRETE: [PopcountKernel; 4] = [
+        PopcountKernel::Scalar,
+        PopcountKernel::Unroll4,
+        PopcountKernel::Unroll8,
+        PopcountKernel::Avx2,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PopcountKernel::Auto => "auto",
+            PopcountKernel::Scalar => "scalar",
+            PopcountKernel::Unroll4 => "unroll4",
+            PopcountKernel::Unroll8 => "unroll8",
+            PopcountKernel::Avx2 => "avx2",
+        }
+    }
+
+    /// Whether this kernel runs natively on the current CPU (`Avx2` is
+    /// the only conditional one; everything else always does).
+    pub fn available(self) -> bool {
+        match self {
+            PopcountKernel::Avx2 => avx2_available(),
+            _ => true,
+        }
+    }
+
+    /// Map `Auto` (and an unavailable `Avx2`) to a concrete kernel via
+    /// runtime feature detection.
+    pub fn resolve(self) -> PopcountKernel {
+        match self {
+            PopcountKernel::Auto => {
+                if avx2_available() {
+                    PopcountKernel::Avx2
+                } else {
+                    PopcountKernel::Unroll8
+                }
+            }
+            PopcountKernel::Avx2 if !avx2_available() => PopcountKernel::Unroll8,
+            k => k,
+        }
+    }
+
+    /// The reducer function: `Σ_w popcount(x_w & y_w)`.
+    fn and_pop(self) -> AndPop {
+        match self.resolve() {
+            PopcountKernel::Scalar => and_pop_scalar,
+            PopcountKernel::Unroll4 => and_pop_unrolled::<4>,
+            PopcountKernel::Unroll8 => and_pop_unrolled::<8>,
+            PopcountKernel::Avx2 => and_pop_avx2,
+            PopcountKernel::Auto => unreachable!("resolve() never returns Auto"),
+        }
+    }
+}
+
+impl std::str::FromStr for PopcountKernel {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<PopcountKernel> {
+        match s {
+            "auto" => Ok(PopcountKernel::Auto),
+            "scalar" => Ok(PopcountKernel::Scalar),
+            "unroll4" => Ok(PopcountKernel::Unroll4),
+            "unroll8" => Ok(PopcountKernel::Unroll8),
+            "avx2" => Ok(PopcountKernel::Avx2),
+            other => anyhow::bail!(
+                "unknown popcount kernel '{other}' (auto|scalar|unroll4|unroll8|avx2)"
+            ),
+        }
+    }
+}
+
+type AndPop = fn(&[u64], &[u64]) -> u64;
+
+fn and_pop_scalar(x: &[u64], y: &[u64]) -> u64 {
+    x.iter().zip(y).map(|(a, b)| (a & b).count_ones() as u64).sum()
+}
+
+/// Chunked reducer: `W` words per step so the compiler can keep `W`
+/// independent `popcnt` chains in flight, plus a scalar tail.
+fn and_pop_unrolled<const W: usize>(x: &[u64], y: &[u64]) -> u64 {
+    let n = x.len().min(y.len());
+    let steps = n / W;
+    let mut sum = 0u64;
+    for s in 0..steps {
+        let base = s * W;
+        let mut chunk = 0u64;
+        for l in 0..W {
+            chunk += (x[base + l] & y[base + l]).count_ones() as u64;
+        }
+        sum += chunk;
+    }
+    for i in steps * W..n {
+        sum += (x[i] & y[i]).count_ones() as u64;
+    }
+    sum
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn and_pop_avx2(x: &[u64], y: &[u64]) -> u64 {
+    // Safety: this entry is only installed by `PopcountKernel::resolve`
+    // after `is_x86_feature_detected!("avx2")` returned true.
+    unsafe { avx2::and_popcount(x, y) }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn and_pop_avx2(x: &[u64], y: &[u64]) -> u64 {
+    and_pop_unrolled::<8>(x, y)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! Mula-style nibble-LUT popcount: per 256-bit step, AND the
+    //! operands, table-look-up each nibble's popcount with `vpshufb`,
+    //! and horizontally add bytes into 64-bit lanes with `vpsadbw`.
+    use std::arch::x86_64::*;
+
+    /// `Σ_w popcount(x_w & y_w)` over 4 `u64` words per vector step.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn and_popcount(x: &[u64], y: &[u64]) -> u64 {
+        let n = x.len().min(y.len());
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low_nibble = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero;
+        let steps = n / 4;
+        for s in 0..steps {
+            let xv = _mm256_loadu_si256(x.as_ptr().add(4 * s) as *const __m256i);
+            let yv = _mm256_loadu_si256(y.as_ptr().add(4 * s) as *const __m256i);
+            let v = _mm256_and_si256(xv, yv);
+            let lo = _mm256_and_si256(v, low_nibble);
+            let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low_nibble);
+            let counts = _mm256_add_epi8(
+                _mm256_shuffle_epi8(lut, lo),
+                _mm256_shuffle_epi8(lut, hi),
+            );
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(counts, zero));
+        }
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        let mut sum: u64 = lanes.iter().sum();
+        for i in 4 * steps..n {
+            sum += (x[i] & y[i]).count_ones() as u64;
+        }
+        sum
+    }
+}
+
+/// The one statement of the packed-operand tile contract, shared by
+/// the serial and pooled kernels so they cannot drift.
+fn check_tile(
     a: &PackedPlanes,
     b: &PackedPlanes,
     row0: usize,
     tm: usize,
     col0: usize,
     tn: usize,
-) -> Result<Vec<i64>> {
+) -> Result<()> {
     anyhow::ensure!(
         a.len == b.len,
         "contracted dims differ: {} vs {}",
@@ -234,6 +504,80 @@ pub fn matmul_packed_tile(
         a.vectors,
         b.vectors
     );
+    Ok(())
+}
+
+/// The single shared plane-pair reducer behind every kind pair:
+/// with `digit = pos − neg` on both sides, the signed binary dot is
+/// `pp − pn − np + nn`, each term one word-`AND` popcount. SBMwC
+/// operands have no negative stream, so their terms vanish — the
+/// SBMwC×SBMwC engine default stays a single `AND`+popcount pass.
+#[inline]
+fn plane_pair_dot(
+    and_pop: AndPop,
+    ap: &[u64],
+    an: Option<&[u64]>,
+    bp: &[u64],
+    bn: Option<&[u64]>,
+) -> i64 {
+    let mut dot = and_pop(ap, bp) as i64;
+    if let Some(bn) = bn {
+        dot -= and_pop(ap, bn) as i64;
+    }
+    if let Some(an) = an {
+        dot -= and_pop(an, bp) as i64;
+        if let Some(bn) = bn {
+            dot += and_pop(an, bn) as i64;
+        }
+    }
+    dot
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
+/// Packed plane-pair matmul: `a` holds the rows of `A` (m vectors of
+/// length k), `b` the columns of `B` (n vectors of length k). Returns
+/// the exact `m × n` i64 accumulators, bit-identical to
+/// [`crate::nn::matmul_native`].
+pub fn matmul_packed_planes(a: &PackedPlanes, b: &PackedPlanes) -> Result<Vec<i64>> {
+    matmul_packed_tile(a, b, 0, a.vectors, 0, b.vectors)
+}
+
+/// Tile view of [`matmul_packed_planes`] with the default
+/// ([`PopcountKernel::Auto`]) reducer: rows `row0 .. row0+tm` of A
+/// against columns `col0 .. col0+tn` of B, selected by index so
+/// neither operand is re-packed per tile. Returns a `tm × tn` tile.
+pub fn matmul_packed_tile(
+    a: &PackedPlanes,
+    b: &PackedPlanes,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+) -> Result<Vec<i64>> {
+    matmul_packed_tile_with(a, b, row0, tm, col0, tn, PopcountKernel::Auto)
+}
+
+/// [`matmul_packed_tile`] with an explicit popcount reducer (benches
+/// sweep these; tests force [`PopcountKernel::Scalar`]).
+///
+/// Realises `A·B = Σ_{i,j} w_i w_j (D_i(A)·D_j(B))` with every binary
+/// plane-pair product going through the one shared [`plane_pair_dot`]
+/// reducer; the signed plane weights carry the SBMwC MSb-plane
+/// correction.
+pub fn matmul_packed_tile_with(
+    a: &PackedPlanes,
+    b: &PackedPlanes,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+    kernel: PopcountKernel,
+) -> Result<Vec<i64>> {
+    check_tile(a, b, row0, tm, col0, tn)?;
+    let and_pop = kernel.and_pop();
     let mut out = vec![0i64; tm * tn];
     for i in 0..a.bits as usize {
         let wa = plane_weight(a.kind, i as u32, a.bits);
@@ -246,47 +590,135 @@ pub fn matmul_packed_tile(
                 for (c, o) in orow.iter_mut().enumerate() {
                     let bp = b.plane_pos(j, col0 + c);
                     let bn = b.plane_neg(j, col0 + c);
-                    // Specialised per kind pair: the SBMwC×SBMwC case
-                    // (the engine default) is a single AND+popcount.
-                    let dot: i64 = match (an, bn) {
-                        (None, None) => ap
-                            .iter()
-                            .zip(bp)
-                            .map(|(x, y)| (x & y).count_ones() as i64)
-                            .sum(),
-                        (Some(an), None) => ap
-                            .iter()
-                            .zip(an)
-                            .zip(bp)
-                            .map(|((x, xn), y)| {
-                                (x & y).count_ones() as i64 - (xn & y).count_ones() as i64
-                            })
-                            .sum(),
-                        (None, Some(bn)) => ap
-                            .iter()
-                            .zip(bp)
-                            .zip(bn)
-                            .map(|((x, y), yn)| {
-                                (x & y).count_ones() as i64 - (x & yn).count_ones() as i64
-                            })
-                            .sum(),
-                        (Some(an), Some(bn)) => ap
-                            .iter()
-                            .zip(an)
-                            .zip(bp)
-                            .zip(bn)
-                            .map(|(((x, xn), y), yn)| {
-                                (x & y).count_ones() as i64 - (x & yn).count_ones() as i64
-                                    - (xn & y).count_ones() as i64
-                                    + (xn & yn).count_ones() as i64
-                            })
-                            .sum(),
-                    };
-                    *o += w * dot;
+                    *o += w * plane_pair_dot(and_pop, ap, an, bp, bn);
                 }
             }
         }
     }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool + row-block threading
+// ---------------------------------------------------------------------------
+
+type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent `std::thread` worker pool for packed-kernel row blocks
+/// (DESIGN.md §Packed-Threading). The inference server builds **one**
+/// pool sized by `server.packed_threads` and shares it (`Arc`) across
+/// every request worker's scheduler, so kernel parallelism *composes
+/// with* — rather than multiplies against — request-level parallelism.
+/// Dropping the pool closes the job channel and joins the workers.
+pub struct PackedPool {
+    tx: Mutex<Option<mpsc::Sender<PoolJob>>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PackedPool {
+    /// Spawn `threads ≥ 1` persistent workers pulling from one shared
+    /// job queue.
+    pub fn new(threads: usize) -> Result<PackedPool> {
+        anyhow::ensure!(threads >= 1, "packed pool needs at least one thread");
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = rx.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bitsmm-packed-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only while dequeueing
+                        let job = rx.lock().expect("packed pool queue poisoned").recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: pool dropped
+                        }
+                    })?,
+            );
+        }
+        Ok(PackedPool {
+            tx: Mutex::new(Some(tx)),
+            workers,
+        })
+    }
+
+    /// Worker count (= concurrent row blocks a matmul is split into).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn execute(&self, job: PoolJob) -> Result<()> {
+        let guard = self.tx.lock().expect("packed pool sender poisoned");
+        let tx = guard
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("packed pool already closed"))?;
+        // send fails only when every worker has exited (e.g. all
+        // panicked): surface an error the caller can handle instead of
+        // taking its thread down
+        tx.send(job)
+            .map_err(|_| anyhow::anyhow!("packed pool workers exited early"))?;
+        Ok(())
+    }
+}
+
+impl Drop for PackedPool {
+    fn drop(&mut self) {
+        // close the queue, then join: workers drain remaining jobs
+        *self.tx.lock().expect("packed pool sender poisoned") = None;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// [`matmul_packed_tile_with`], partitioned across the pool's workers
+/// by contiguous output-row blocks. Each block runs the serial kernel
+/// over its own row range, so the result is bit-identical to the
+/// single-thread path by construction (disjoint output rows, identical
+/// per-row accumulation order). Operands travel as `Arc` clones — no
+/// packing, no copying.
+pub fn matmul_packed_tile_pooled(
+    pool: &PackedPool,
+    a: &Arc<PackedPlanes>,
+    b: &Arc<PackedPlanes>,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+    kernel: PopcountKernel,
+) -> Result<Vec<i64>> {
+    let blocks = pool.threads().min(tm);
+    if blocks <= 1 {
+        return matmul_packed_tile_with(a, b, row0, tm, col0, tn, kernel);
+    }
+    // fail fast on a bad tile before dispatching any work
+    check_tile(a, b, row0, tm, col0, tn)?;
+    let (tx, rx) = mpsc::channel();
+    for bidx in 0..blocks {
+        // balanced partition: every block gets tm/blocks or +1 rows
+        let r0 = row0 + bidx * tm / blocks;
+        let r1 = row0 + (bidx + 1) * tm / blocks;
+        let (a, b, tx) = (a.clone(), b.clone(), tx.clone());
+        pool.execute(Box::new(move || {
+            let block = matmul_packed_tile_with(&a, &b, r0, r1 - r0, col0, tn, kernel);
+            let _ = tx.send((r0 - row0, block));
+        }))?;
+    }
+    drop(tx);
+    let mut out = vec![0i64; tm * tn];
+    let mut seen = 0usize;
+    while let Ok((row_off, block)) = rx.recv() {
+        let block = block?;
+        out[row_off * tn..row_off * tn + block.len()].copy_from_slice(&block);
+        seen += 1;
+    }
+    anyhow::ensure!(
+        seen == blocks,
+        "packed pool lost {} of {blocks} row blocks (worker panicked?)",
+        blocks - seen
+    );
     Ok(out)
 }
 
@@ -312,6 +744,7 @@ mod tests {
                 for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
                     let p = PackedPlanes::pack_rows(&data, 3, len, bits, kind).unwrap();
                     assert_eq!(p.words, (len + 63) / 64);
+                    assert!(p.min_bits <= bits);
                     assert_eq!(p.unpack(), decompose(kind, &data, bits), "{kind:?} {bits}b len={len}");
                 }
             }
@@ -342,6 +775,56 @@ mod tests {
     }
 
     #[test]
+    fn every_popcount_kernel_is_bit_identical() {
+        let mut rng = Pcg32::new(0x4e11);
+        // k values straddle the 4- and 8-word chunk boundaries so every
+        // kernel exercises both its wide loop and its scalar tail
+        for (m, k, n, bits) in [(3usize, 70usize, 4usize, 8u32), (2, 520, 3, 5), (1, 64, 1, 16)] {
+            let a = rand_mat(&mut rng, m * k, bits);
+            let b = rand_mat(&mut rng, k * n, bits);
+            for ka in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                for kb in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                    let pa = PackedPlanes::pack_rows(&a, m, k, bits, ka).unwrap();
+                    let pb = PackedPlanes::pack_cols(&b, k, n, bits, kb).unwrap();
+                    let want =
+                        matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar)
+                            .unwrap();
+                    assert_eq!(want, ref_mm(&a, &b, m, k, n));
+                    for kernel in PopcountKernel::CONCRETE {
+                        assert_eq!(
+                            matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, kernel).unwrap(),
+                            want,
+                            "{} diverged ({ka:?}x{kb:?} {m}x{k}x{n} @{bits}b)",
+                            kernel.name()
+                        );
+                    }
+                    assert_eq!(
+                        matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Auto)
+                            .unwrap(),
+                        want
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn popcount_kernel_parse_and_resolve() {
+        assert_eq!("auto".parse::<PopcountKernel>().unwrap(), PopcountKernel::Auto);
+        assert_eq!("scalar".parse::<PopcountKernel>().unwrap(), PopcountKernel::Scalar);
+        assert_eq!("unroll4".parse::<PopcountKernel>().unwrap(), PopcountKernel::Unroll4);
+        assert_eq!("unroll8".parse::<PopcountKernel>().unwrap(), PopcountKernel::Unroll8);
+        assert_eq!("avx2".parse::<PopcountKernel>().unwrap(), PopcountKernel::Avx2);
+        assert!("simd9000".parse::<PopcountKernel>().is_err());
+        // Auto always resolves to something concrete and available
+        let r = PopcountKernel::Auto.resolve();
+        assert_ne!(r, PopcountKernel::Auto);
+        assert!(r.available());
+        // an unavailable Avx2 request degrades instead of erroring
+        assert!(PopcountKernel::Avx2.resolve().available());
+    }
+
+    #[test]
     fn sign_plane_saturation_is_exact() {
         // every operand at min_value: the SBMwC MSb (sign) plane is
         // all-ones, maximally exercising the −2^(b−1) correction
@@ -351,6 +834,7 @@ mod tests {
             let b = vec![min_value(bits); k * n];
             let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap();
             let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+            assert_eq!(pa.min_bits, bits, "min_value({bits}) needs every plane");
             assert_eq!(matmul_packed_planes(&pa, &pb).unwrap(), ref_mm(&a, &b, m, k, n), "bits={bits}");
         }
     }
@@ -375,6 +859,85 @@ mod tests {
     }
 
     #[test]
+    fn pooled_matmul_matches_serial_and_reports_errors() {
+        let mut rng = Pcg32::new(0x9001);
+        let pool = PackedPool::new(3).unwrap();
+        assert_eq!(pool.threads(), 3);
+        for (m, k, n, bits) in [(1usize, 70usize, 4usize, 8u32), (2, 64, 3, 4), (13, 67, 9, 6)] {
+            let a = rand_mat(&mut rng, m * k, bits);
+            let b = rand_mat(&mut rng, k * n, bits);
+            let pa = Arc::new(PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap());
+            let pb = Arc::new(PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Booth).unwrap());
+            let serial = matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar).unwrap();
+            let pooled =
+                matmul_packed_tile_pooled(&pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto)
+                    .unwrap();
+            assert_eq!(pooled, serial, "{m}x{k}x{n} @{bits}b");
+            // interior tile views thread identically
+            if m >= 3 && n >= 4 {
+                let t_serial = matmul_packed_tile(&pa, &pb, 1, m - 2, 1, n - 2).unwrap();
+                let t_pooled = matmul_packed_tile_pooled(
+                    &pool, &pa, &pb, 1, m - 2, 1, n - 2, PopcountKernel::Auto,
+                )
+                .unwrap();
+                assert_eq!(t_pooled, t_serial);
+            }
+        }
+        // oversize tiles are rejected before dispatch
+        let a = rand_mat(&mut rng, 4 * 10, 4);
+        let pa = Arc::new(PackedPlanes::pack_rows(&a, 4, 10, 4, PlaneKind::Sbmwc).unwrap());
+        assert!(matmul_packed_tile_pooled(&pool, &pa, &pa, 0, 5, 0, 1, PopcountKernel::Auto).is_err());
+    }
+
+    #[test]
+    fn slice_bits_equals_fresh_repack() {
+        let mut rng = Pcg32::new(0x51ce);
+        for (hi, lo) in [(12u32, 8u32), (8, 4), (16, 1), (5, 3), (2, 1)] {
+            for k in [1usize, 63, 64, 65, 130] {
+                let data = rand_mat(&mut rng, 3 * k, lo); // fits the narrow width
+                for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                    let wide = PackedPlanes::pack_rows(&data, 3, k, hi, kind).unwrap();
+                    let fresh = PackedPlanes::pack_rows(&data, 3, k, lo, kind).unwrap();
+                    let sliced = wide.slice_bits(lo).unwrap();
+                    assert_eq!(sliced, fresh, "{kind:?} {hi}->{lo} k={k}");
+                    assert_eq!(sliced.mem_words(), fresh.mem_words());
+                    assert_eq!(sliced.unpack(), decompose(kind, &data, lo));
+                }
+            }
+        }
+        // identity slice, floor guard, and widening rejection
+        let data = vec![-8i32, 7, 3, -1]; // needs exactly 4 bits
+        let p = PackedPlanes::pack_rows(&data, 2, 2, 8, PlaneKind::Sbmwc).unwrap();
+        assert_eq!(p.min_bits, 4);
+        assert_eq!(p.slice_bits(8).unwrap(), p);
+        assert!(p.slice_bits(3).is_err(), "below min_bits would truncate");
+        let q = PackedPlanes::pack_rows(&data, 2, 2, 4, PlaneKind::Sbmwc).unwrap();
+        assert!(q.slice_bits(8).is_err(), "packs only narrow");
+    }
+
+    #[test]
+    fn sliced_operands_compute_exact_matmuls() {
+        let mut rng = Pcg32::new(0x51cf);
+        let (m, k, n, hi, lo) = (4usize, 70usize, 3usize, 12u32, 6u32);
+        let a = rand_mat(&mut rng, m * k, lo);
+        let b = rand_mat(&mut rng, k * n, lo);
+        let want = ref_mm(&a, &b, m, k, n);
+        let pa = PackedPlanes::pack_rows(&a, m, k, lo, PlaneKind::Sbmwc).unwrap();
+        let pb_wide = PackedPlanes::pack_cols(&b, k, n, hi, PlaneKind::Sbmwc).unwrap();
+        let pb = pb_wide.slice_bits(lo).unwrap();
+        assert_eq!(matmul_packed_planes(&pa, &pb).unwrap(), want);
+        // saturated negative fill: the sliced view's top plane becomes
+        // the sign plane at the new width
+        let b_sat = vec![min_value(lo); k * n];
+        let want_sat = ref_mm(&a, &b_sat, m, k, n);
+        let pb_sat = PackedPlanes::pack_cols(&b_sat, k, n, hi, PlaneKind::Sbmwc)
+            .unwrap()
+            .slice_bits(lo)
+            .unwrap();
+        assert_eq!(matmul_packed_planes(&pa, &pb_sat).unwrap(), want_sat);
+    }
+
+    #[test]
     fn packing_validates_range_and_shape() {
         assert!(PackedPlanes::pack_rows(&[1, 2, 3], 2, 2, 4, PlaneKind::Sbmwc).is_err());
         assert!(PackedPlanes::pack_rows(&[8], 1, 1, 4, PlaneKind::Sbmwc).is_err()); // 8 > max 4-bit
@@ -390,5 +953,8 @@ mod tests {
         let packed_bytes = p.mem_words() * 8;
         let byte_planes = bits as usize * rows * cols;
         assert_eq!(packed_bytes * 8, byte_planes, "exactly 8x smaller");
+        // a 4-bit view of the same pack advertises half the footprint
+        // while sharing the same storage
+        assert_eq!(p.slice_bits(4).unwrap().mem_words() * 2, p.mem_words());
     }
 }

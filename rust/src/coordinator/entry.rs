@@ -59,6 +59,8 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
         max_batch: args.req("batch")?,
         linger: std::time::Duration::from_millis(2),
     };
+    cfg.packed_threads = args.req("packed-threads")?;
+    cfg.packed_unroll = args.req::<String>("packed-unroll")?.parse()?;
 
     let d_in = model.input_shape[0];
     let mut rng = Pcg32::new(42);
@@ -142,6 +144,8 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
         ),
     };
     server_cfg.clock_hz = cfg.float_or("server.clock_mhz", 300.0) * 1e6;
+    server_cfg.packed_threads = usize::try_from(cfg.int_or("server.packed_threads", 0))?;
+    server_cfg.packed_unroll = cfg.str_or("server.packed_unroll", "auto").parse()?;
 
     let d_in = model.input_shape[0];
     let mut rng = Pcg32::new(42);
@@ -253,6 +257,39 @@ max_batch = 4
         )
         .unwrap();
         launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_reads_packed_pool_config() {
+        // explicit thread count + forced-scalar reducer via dotted paths
+        let cfg = crate::config::Config::parse(
+            "name = \"pt\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"packed\"
+requests = 4
+workers = 1
+max_batch = 4
+packed_threads = 2
+packed_unroll = \"scalar\"
+",
+        )
+        .unwrap();
+        launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_rejects_unknown_popcount_kernel() {
+        let cfg = crate::config::Config::parse(
+            "[server]
+backend = \"packed\"
+packed_unroll = \"simd9000\"
+",
+        )
+        .unwrap();
+        assert!(launch_from_config(&cfg).is_err());
     }
 
     #[test]

@@ -12,16 +12,22 @@
 //!   < 2²⁴); wider operands are routed natively.
 //! * [`Backend::Native`] — the Rust Booth-plane matmul.
 //! * [`Backend::Packed`] — the word-packed plane engine
-//!   ([`crate::bits::packed`]): AND+popcount per plane pair, the
+//!   ([`crate::bits::packed`]): AND+popcount per plane pair through a
+//!   configurable unrolled/AVX2 reducer ([`PopcountKernel`]), the
 //!   streamed operand packed once per matmul, the stationary operand
 //!   taken pre-packed from the layer's [`crate::nn::PackedCache`] when
-//!   the call arrives through [`crate::nn::MatmulExec`]; per-tile
-//!   slices are routed through the packed kernel by index, so neither
-//!   operand is re-packed per tile.
+//!   the call arrives through [`crate::nn::MatmulExec`] (planes cached
+//!   at a wider precision are *sliced*, never re-packed). When the
+//!   scheduler is handed a shared [`PackedPool`], the kernel is
+//!   partitioned across output-row blocks on the pool's persistent
+//!   workers (DESIGN.md §Packed-Threading) — bit-identical to the
+//!   single-thread path.
 //! * [`Backend::Simulate`] — the cycle-accurate SA simulator itself;
 //!   slowest, but *measures* cycles instead of modelling them.
 
-use crate::bits::packed::{matmul_packed_tile, PackedPlanes};
+use crate::bits::packed::{
+    matmul_packed_tile_pooled, matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
+};
 use crate::bits::plane::PlaneKind;
 use crate::coordinator::tiler::{tile_matmul, TilePlan};
 use crate::nn::layers::{MatmulExec, PackedWeight};
@@ -65,6 +71,9 @@ pub struct ExecutionReport {
     pub sim_passes: u64,
     /// Matmuls executed by the packed plane engine.
     pub packed_execs: u64,
+    /// Cached weight planes reused at a lower precision via a
+    /// plane-subset slice (no re-pack).
+    pub plane_slices: u64,
 }
 
 impl ExecutionReport {
@@ -77,6 +86,7 @@ impl ExecutionReport {
         self.native_fallbacks += o.native_fallbacks;
         self.sim_passes += o.sim_passes;
         self.packed_execs += o.packed_execs;
+        self.plane_slices += o.plane_slices;
     }
 
     /// Simulated-hardware GOPS at a clock (paper convention).
@@ -95,6 +105,13 @@ pub struct Scheduler {
     backend: Backend,
     /// Long-lived simulated array (Simulate backend only).
     sim: Option<SystolicArray>,
+    /// Shared packed-kernel worker pool (`None` = single-thread
+    /// kernel). The server hands every worker's scheduler the *same*
+    /// pool, so kernel threads compose with — rather than multiply
+    /// against — request-level workers.
+    packed_pool: Option<Arc<PackedPool>>,
+    /// Popcount reducer for the packed kernel.
+    popcount: PopcountKernel,
     pub report: ExecutionReport,
 }
 
@@ -108,8 +125,21 @@ impl Scheduler {
             sa,
             backend,
             sim,
+            packed_pool: None,
+            popcount: PopcountKernel::Auto,
             report: ExecutionReport::default(),
         }
+    }
+
+    /// Attach a shared row-block worker pool for the packed kernel.
+    pub fn set_packed_pool(&mut self, pool: Arc<PackedPool>) {
+        self.packed_pool = Some(pool);
+    }
+
+    /// Select the popcount reducer for the packed kernel (defaults to
+    /// [`PopcountKernel::Auto`]: AVX2 when the CPU has it).
+    pub fn set_popcount_kernel(&mut self, kernel: PopcountKernel) {
+        self.popcount = kernel;
     }
 
     /// Execute `A (m×k) · B (k×n)` at `bits` precision. Returns exact
@@ -192,32 +222,47 @@ impl Scheduler {
                 self.report.packed_execs += 1;
                 // the streamed operand is packed once per matmul; the
                 // stationary operand arrives pre-packed from the layer
-                // cache (or is packed here for ad-hoc calls)
-                let pa = PackedPlanes::pack_rows(a, m, k, bits, PlaneKind::Sbmwc)?;
+                // cache (or is packed here for ad-hoc calls). Planes
+                // cached at a *wider* precision are sliced down —
+                // cross-precision reuse, never a re-pack.
+                let pa = Arc::new(PackedPlanes::pack_rows(a, m, k, bits, PlaneKind::Sbmwc)?);
                 let pb = match packed_b {
                     Some(p) => {
                         anyhow::ensure!(
-                            p.len == k && p.vectors == n && p.bits == bits,
-                            "cached planes ({}x{} @{}b) do not match the request ({k}x{n} @{bits}b)",
+                            p.len == k && p.vectors == n,
+                            "cached planes ({}x{}) do not match the request ({k}x{n})",
                             p.len,
-                            p.vectors,
-                            p.bits
+                            p.vectors
                         );
-                        p
+                        if p.bits == bits {
+                            p
+                        } else if p.bits > bits && p.min_bits <= bits {
+                            self.report.plane_slices += 1;
+                            Arc::new(p.slice_bits(bits)?)
+                        } else if p.bits < bits {
+                            anyhow::bail!(
+                                "cached planes @{}b cannot serve a {bits}-bit request (packs only narrow)",
+                                p.bits
+                            );
+                        } else {
+                            anyhow::bail!(
+                                "cached planes @{}b hold values needing {}b — a {bits}-bit slice would truncate them",
+                                p.bits,
+                                p.min_bits
+                            );
+                        }
                     }
                     None => Arc::new(PackedPlanes::pack_cols(b, k, n, bits, PlaneKind::Sbmwc)?),
                 };
-                // per-tile slices go through the packed kernel by
-                // index — no per-tile re-packing of either operand
-                let mut out = vec![0i64; m * n];
-                for job in &plan.jobs {
-                    let tile = matmul_packed_tile(&pa, &pb, job.row0, job.m, job.col0, job.n)?;
-                    for r in 0..job.m {
-                        let dst = (job.row0 + r) * n + job.col0;
-                        out[dst..dst + job.n].copy_from_slice(&tile[r * job.n..(r + 1) * job.n]);
+                // the hardware tiling above is *timing* accounting; the
+                // functional product runs on the packed kernel directly,
+                // row-block threaded across the shared pool when present
+                match &self.packed_pool {
+                    Some(pool) => {
+                        matmul_packed_tile_pooled(pool, &pa, &pb, 0, m, 0, n, self.popcount)?
                     }
+                    None => matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, self.popcount)?,
                 }
-                out
             }
             Backend::Simulate => {
                 let sim = self.sim.as_mut().expect("simulate backend has an array");
@@ -415,7 +460,50 @@ mod tests {
             crate::bits::packed::PackedPlanes::pack_cols(&b, 3, 2, 4, crate::bits::plane::PlaneKind::Sbmwc).unwrap(),
         );
         let w = PackedWeight { data: &b, planes: Some(planes) };
-        // ...offered for an 8-bit request: rejected, not silently wrong
+        // ...offered for an 8-bit request: planes cannot *widen*, so
+        // this is rejected, not silently wrong
         assert!(s.matmul_packed(&[1, 1, 1], &w, 1, 3, 2, 8).is_err());
+    }
+
+    #[test]
+    fn packed_slices_wider_cached_planes_instead_of_erroring() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let b = [1i32, 2, 3, 4, 5, 6]; // fits 4 bits
+        let a = [1i32, -1, 2];
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = nat.matmul(&a, &b, 1, 3, 2, 4).unwrap();
+        // planes cached at 8 bits serve the 4-bit request via a slice
+        let planes = std::sync::Arc::new(
+            crate::bits::packed::PackedPlanes::pack_cols(
+                &b, 3, 2, 8, crate::bits::plane::PlaneKind::Sbmwc,
+            ).unwrap(),
+        );
+        let w = PackedWeight { data: &b, planes: Some(planes) };
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        assert_eq!(s.matmul_packed(&a, &w, 1, 3, 2, 4).unwrap(), want);
+        assert_eq!(s.report.plane_slices, 1);
+        assert_eq!(s.report.packed_execs, 1);
+    }
+
+    #[test]
+    fn pooled_scheduler_matches_native_and_serial_packed() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (23, 70, 9, 7);
+        let mut rng = Pcg32::new(0x70_01);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = nat.matmul(&a, &b, m, k, n, bits).unwrap();
+
+        let mut serial = Scheduler::new(sa, Backend::Packed);
+        serial.set_popcount_kernel(PopcountKernel::Scalar);
+        assert_eq!(serial.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+
+        let pool = std::sync::Arc::new(PackedPool::new(4).unwrap());
+        let mut pooled = Scheduler::new(sa, Backend::Packed);
+        pooled.set_packed_pool(pool);
+        assert_eq!(pooled.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        // threading changes host speed, not the modelled hardware cycles
+        assert_eq!(pooled.report.hw_cycles, serial.report.hw_cycles);
     }
 }

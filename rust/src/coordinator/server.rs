@@ -2,6 +2,7 @@
 //! scheduler and model — the end-to-end serving path of the `e2e`
 //! example (and the paper's future-work integration, §V).
 
+use crate::bits::packed::{PackedPool, PopcountKernel};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Backend, ExecutionReport, Scheduler};
@@ -39,6 +40,15 @@ pub struct ServerConfig {
     /// Hardware clock for GOPS accounting (300 MHz = the paper's FPGA
     /// operating point).
     pub clock_hz: f64,
+    /// Packed-kernel worker threads, shared by **all** request workers
+    /// through one [`PackedPool`] so kernel parallelism composes with
+    /// (not multiplies against) request parallelism. `0` = auto:
+    /// available cores / `workers`, min 1. `1` = single-thread kernel
+    /// (no pool). Ignored by non-packed backends.
+    pub packed_threads: usize,
+    /// Popcount reducer for the packed kernel (`Auto` = AVX2 when the
+    /// CPU has it, else 8-word unrolled chunks).
+    pub packed_unroll: PopcountKernel,
 }
 
 impl ServerConfig {
@@ -49,7 +59,21 @@ impl ServerConfig {
             batcher: BatcherConfig::default(),
             workers: 2,
             clock_hz: 300e6,
+            packed_threads: 0,
+            packed_unroll: PopcountKernel::Auto,
         }
+    }
+
+    /// Resolve `packed_threads = 0` (auto) to a concrete thread count:
+    /// the machine's cores divided across the request workers, min 1.
+    pub fn resolved_packed_threads(&self) -> usize {
+        if self.packed_threads != 0 {
+            return self.packed_threads;
+        }
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        (cores / self.workers.max(1)).max(1)
     }
 }
 
@@ -70,15 +94,30 @@ impl InferenceServer {
             model.input_shape
         );
         let batcher = Arc::new(Batcher::new(cfg.batcher));
+        // one pool for the whole server: every worker's scheduler rides
+        // the same packed_threads kernel lanes (DESIGN.md
+        // §Packed-Threading)
+        let packed_pool = match cfg.backend {
+            Backend::Packed => {
+                let threads = cfg.resolved_packed_threads();
+                if threads > 1 {
+                    Some(Arc::new(PackedPool::new(threads)?))
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
         let mut workers = Vec::new();
         for w in 0..cfg.workers {
             let batcher = batcher.clone();
             let model = model.clone();
             let cfg = cfg.clone();
+            let pool = packed_pool.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bitsmm-worker-{w}"))
-                    .spawn(move || worker_loop(&model, &cfg, &batcher))?,
+                    .spawn(move || worker_loop(&model, &cfg, &batcher, pool))?,
             );
         }
         Ok(InferenceServer { batcher, workers })
@@ -119,8 +158,13 @@ fn worker_loop(
     model: &Model,
     cfg: &ServerConfig,
     batcher: &Batcher<(Request, mpsc::Sender<Response>)>,
+    packed_pool: Option<Arc<PackedPool>>,
 ) -> (ExecutionReport, Metrics) {
     let mut sched = Scheduler::new(cfg.sa, cfg.backend.clone());
+    sched.set_popcount_kernel(cfg.packed_unroll);
+    if let Some(pool) = packed_pool {
+        sched.set_packed_pool(pool);
+    }
     let mut metrics = Metrics::default();
     let t0 = Instant::now();
     let d_in = model.input_shape[0];
@@ -273,5 +317,36 @@ mod tests {
             assert_eq!(a.output, c.output, "native vs packed diverged");
         }
         assert!(rep_p.packed_execs > 0, "packed backend actually ran");
+    }
+
+    #[test]
+    fn packed_thread_and_kernel_config_do_not_change_results() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let ins = inputs(12, 64, 8);
+        let cfg_n = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let (want, _, _) = serve_all(model.clone(), cfg_n, ins.clone()).unwrap();
+        for (threads, kernel) in [
+            (1usize, PopcountKernel::Scalar),
+            (3, PopcountKernel::Unroll4),
+            (4, PopcountKernel::Auto),
+        ] {
+            let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+            cfg.packed_threads = threads;
+            cfg.packed_unroll = kernel;
+            let (got, report, _) = serve_all(model.clone(), cfg, ins.clone()).unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.output, b.output, "t{threads} {} diverged", kernel.name());
+            }
+            assert!(report.packed_execs > 0);
+        }
+    }
+
+    #[test]
+    fn packed_threads_auto_resolution() {
+        let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+        cfg.workers = 1_000_000; // more workers than cores: still >= 1
+        assert_eq!(cfg.resolved_packed_threads(), 1);
+        cfg.packed_threads = 7; // explicit setting wins over auto
+        assert_eq!(cfg.resolved_packed_threads(), 7);
     }
 }

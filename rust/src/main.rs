@@ -110,6 +110,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         .opt("requests", "number of requests to serve", Some("64"))
         .opt("workers", "worker threads", Some("2"))
         .opt("batch", "max batch size", Some("8"))
+        .opt(
+            "packed-threads",
+            "packed-kernel threads shared across workers (0 = auto: cores/workers)",
+            Some("0"),
+        )
+        .opt(
+            "packed-unroll",
+            "packed popcount reducer: auto|scalar|unroll4|unroll8|avx2",
+            Some("auto"),
+        )
         .opt("artifacts", "artifact directory", None)
         .switch("help", "show help");
     let args = cmd.parse(argv)?;

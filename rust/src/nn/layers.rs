@@ -93,6 +93,14 @@ pub struct PackedWeight<'w> {
 /// pack happens under the lock, so concurrent workers cannot
 /// double-pack. The pack counter makes that invariant testable.
 ///
+/// **Cross-precision reuse** (DESIGN.md §Packed-Threading): a weight
+/// packed at `b` bits contains every plane needed for `b' < b`, so a
+/// lower-precision request is served by slicing a plane-subset view of
+/// an existing higher-precision pack ([`PackedPlanes::slice_bits`],
+/// zero copy) instead of re-decomposing the weights. Precision-lowered
+/// serving therefore triggers **zero** re-packs; the reuse counter
+/// makes that testable too.
+///
 /// Invariant: weights are immutable once a model serves. The cache is
 /// never invalidated, so code that mutates a layer's `w` in place
 /// (e.g. requantisation sweeps) must rebuild the layer — or serve on a
@@ -101,6 +109,7 @@ pub struct PackedWeight<'w> {
 pub struct PackedCache {
     planes: Arc<Mutex<HashMap<(u32, u32), Arc<PackedPlanes>>>>,
     pack_count: Arc<AtomicU64>,
+    reuse_count: Arc<AtomicU64>,
 }
 
 impl PackedCache {
@@ -108,14 +117,29 @@ impl PackedCache {
         PackedCache::default()
     }
 
-    /// The packed columns of the 2-D weight `w` at `bits` precision,
-    /// packing at most once per `(slot, bits)`.
+    /// The packed columns of the 2-D weight `w` at `bits` precision:
+    /// a cache hit, a plane-subset slice of a wider cached pack, or —
+    /// only when neither exists — a fresh pack (at most once per
+    /// `(slot, bits)`).
     pub fn get_or_pack(&self, slot: u32, w: &QTensor, bits: u32) -> Result<Arc<PackedPlanes>> {
         let mut cache = self.planes.lock().expect("packed cache poisoned");
         if let Some(p) = cache.get(&(slot, bits)) {
             return Ok(p.clone());
         }
         anyhow::ensure!(w.rank() == 2, "packed weights must be 2-D, got {:?}", w.shape);
+        // cross-precision reuse: the narrowest wider pack of this slot
+        // whose values fit in `bits` planes donates a zero-copy slice
+        let donor = cache
+            .iter()
+            .filter(|&(&(s, b), p)| s == slot && b > bits && p.min_bits <= bits)
+            .min_by_key(|&(&(_, b), _)| b)
+            .map(|(_, p)| p.clone());
+        if let Some(donor) = donor {
+            let sliced = Arc::new(donor.slice_bits(bits)?);
+            self.reuse_count.fetch_add(1, Ordering::Relaxed);
+            cache.insert((slot, bits), sliced.clone());
+            return Ok(sliced);
+        }
         let p = Arc::new(PackedPlanes::pack_cols(
             &w.data,
             w.shape[0],
@@ -129,9 +153,16 @@ impl PackedCache {
     }
 
     /// How many times a weight matrix was actually packed — the
-    /// once-per-(layer, precision) serving invariant.
+    /// once-per-(layer, precision) serving invariant. Plane-subset
+    /// slices do **not** count: lowering precision re-packs nothing.
     pub fn packs(&self) -> u64 {
         self.pack_count.load(Ordering::Relaxed)
+    }
+
+    /// How many requests were served by slicing a plane subset of a
+    /// wider cached pack instead of re-packing.
+    pub fn plane_reuses(&self) -> u64 {
+        self.reuse_count.load(Ordering::Relaxed)
     }
 }
 
@@ -579,11 +610,37 @@ mod tests {
         let b = clone.get_or_pack(0, &w, 4).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "clones share one cache");
         assert_eq!(cache.packs(), 1);
-        // a different precision is a different cache entry
+        // a *wider* precision cannot reuse a narrow pack: fresh entry
         let c = cache.get_or_pack(0, &w, 8).unwrap();
         assert_eq!(c.bits, 8);
         assert_eq!(cache.packs(), 2);
         assert_eq!(clone.packs(), 2);
+    }
+
+    #[test]
+    fn packed_cache_slices_lower_precisions_without_repacking() {
+        // values fit in 4 bits, packed first at 8: every narrower
+        // request must be served by a plane-subset slice, zero re-packs
+        let w = QTensor::new(vec![5, -8, 7, -3, 0, 2], vec![3, 2], 1.0, 4).unwrap();
+        let cache = PackedCache::new();
+        let wide = cache.get_or_pack(0, &w, 8).unwrap();
+        assert_eq!((cache.packs(), cache.plane_reuses()), (1, 0));
+        let sliced = cache.get_or_pack(0, &w, 4).unwrap();
+        assert_eq!((cache.packs(), cache.plane_reuses()), (1, 1));
+        assert_eq!(sliced.bits, 4);
+        // the slice is exactly what a fresh pack would have produced
+        let fresh = PackedPlanes::pack_cols(&w.data, 3, 2, 4, PlaneKind::Sbmwc).unwrap();
+        assert_eq!(*sliced, fresh);
+        // repeat hits are plain cache hits (no new slice, no new pack)
+        cache.get_or_pack(0, &w, 4).unwrap();
+        assert_eq!((cache.packs(), cache.plane_reuses()), (1, 1));
+        // a second slice at another width reuses the same 8-bit donor
+        cache.get_or_pack(0, &w, 6).unwrap();
+        assert_eq!((cache.packs(), cache.plane_reuses()), (1, 2));
+        // a different slot cannot donate
+        cache.get_or_pack(1, &w, 4).unwrap();
+        assert_eq!((cache.packs(), cache.plane_reuses()), (2, 2));
+        drop(wide);
     }
 
     #[test]

@@ -89,12 +89,14 @@ pub fn matmul_planes(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u
 /// Word-packed realisation of the same product: both operands are
 /// decomposed (via the shared [`decompose`] oracle) into SBMwC planes
 /// packed 64 digits per `u64` word, and every plane pair is reduced
-/// with per-word `AND` + `count_ones`
-/// (`A·B = Σ_{i,j} w_i w_j (D_i(A)·D_j(B))`, see
-/// [`crate::bits::packed`]). Bit-identical to [`matmul_native`] and
-/// [`matmul_planes`]; ~8× less memory traffic than the byte-per-digit
-/// plane path. Serving callers should pre-pack the stationary operand
-/// once via [`PackedCache`] instead of calling this per request.
+/// with per-word `AND` + popcount through the runtime-selected
+/// unrolled/AVX2 reducer (`A·B = Σ_{i,j} w_i w_j (D_i(A)·D_j(B))`,
+/// see [`crate::bits::packed`]). Bit-identical to [`matmul_native`]
+/// and [`matmul_planes`]; ~8× less memory traffic than the
+/// byte-per-digit plane path. Serving callers should pre-pack the
+/// stationary operand once via [`PackedCache`] instead of calling this
+/// per request — the cache also serves lower precisions by slicing
+/// plane subsets of wider packs (zero re-packs).
 pub fn matmul_packed(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u32) -> Result<Vec<i64>> {
     crate::validate_bits(bits)?;
     anyhow::ensure!(a.len() == m * k && b.len() == k * n, "shape mismatch");

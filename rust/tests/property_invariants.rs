@@ -5,7 +5,10 @@
 //! packed-plane/native/per-plane equality, and batching conservation.
 
 use bitsmm::bits::booth::booth_digits;
-use bitsmm::bits::packed::{matmul_packed_planes, PackedPlanes};
+use bitsmm::bits::packed::{
+    matmul_packed_planes, matmul_packed_tile_pooled, matmul_packed_tile_with, PackedPlanes,
+    PackedPool, PopcountKernel,
+};
 use bitsmm::bits::plane::{decompose, PlaneKind};
 use bitsmm::bits::twos::{max_value, min_value, Bits};
 use bitsmm::coordinator::tile_matmul;
@@ -83,6 +86,125 @@ fn packed_sign_plane_and_tail_word_edges() {
                 assert_eq!(matmul_packed_planes(&pa, &pb).unwrap(), want, "booth x sbmwc bits={bits} k={k}");
             }
         }
+    }
+}
+
+/// The threaded row-block kernel, the single-thread kernel (forced
+/// scalar — the PR 1 reducer), every unroll/SIMD reducer, and the
+/// native loop agree bit-for-bit for widths 1..=16 under both MAC
+/// variants' plane kinds.
+#[test]
+fn threaded_equals_single_thread_equals_native_all_widths() {
+    let pool = PackedPool::new(4).unwrap();
+    let mut rng = Pcg32::new(0x7bea17);
+    for bits in 1..=16u32 {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        // m both below and above the pool width; k straddles a word
+        for (m, k, n) in [(2usize, 70usize, 3usize), (11, 64, 2)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+            let want = ref_matmul_i64(&a, &b, m, k, n);
+            assert_eq!(matmul_native(&a, &b, m, k, n, bits).unwrap(), want);
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let pa = std::sync::Arc::new(
+                    PackedPlanes::pack_rows(&a, m, k, bits, kind).unwrap(),
+                );
+                let pb = std::sync::Arc::new(
+                    PackedPlanes::pack_cols(&b, k, n, bits, kind).unwrap(),
+                );
+                let serial =
+                    matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar)
+                        .unwrap();
+                assert_eq!(serial, want, "{kind:?} scalar bits={bits} {m}x{k}x{n}");
+                for kernel in PopcountKernel::CONCRETE {
+                    assert_eq!(
+                        matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, kernel).unwrap(),
+                        want,
+                        "{kind:?} {} bits={bits}",
+                        kernel.name()
+                    );
+                }
+                let pooled = matmul_packed_tile_pooled(
+                    &pool,
+                    &pa,
+                    &pb,
+                    0,
+                    m,
+                    0,
+                    n,
+                    PopcountKernel::Auto,
+                )
+                .unwrap();
+                assert_eq!(pooled, want, "{kind:?} pooled bits={bits} {m}x{k}x{n}");
+            }
+        }
+    }
+}
+
+/// Cross-precision plane slicing is exact: a `b'`-bit slice of a
+/// `b`-bit pack equals a fresh re-pack at `b'` (same planes, same
+/// matmul integers) for every legal `(b, b')` pair, both plane kinds,
+/// sign-plane-saturated operands, and k straddling word boundaries.
+#[test]
+fn prop_cross_precision_slice_equals_repack() {
+    let gen = Gen::pair(
+        Gen::pair(Gen::u32s(2, 16), Gen::u32s(0, u32::MAX)), // (hi bits, seed)
+        Gen::pair(Gen::u32s(1, 140), Gen::u32s(1, 15)),      // (k, lo hint)
+    );
+    forall("slice == repack", 100, gen, |&((hi, seed), (k, lo_hint))| {
+        let lo = 1 + lo_hint % (hi - 1); // 1..=hi-1, strictly narrower
+        let (m, k) = (3usize, k as usize);
+        let mut rng = Pcg32::new(seed as u64 ^ 0x51ce);
+        let data: Vec<i32> = (0..m * k)
+            .map(|_| rng.range_i32(min_value(lo), max_value(lo)))
+            .collect();
+        [PlaneKind::Sbmwc, PlaneKind::Booth].iter().all(|&kind| {
+            let wide = PackedPlanes::pack_rows(&data, m, k, hi, kind).unwrap();
+            let fresh = PackedPlanes::pack_rows(&data, m, k, lo, kind).unwrap();
+            wide.slice_bits(lo).unwrap() == fresh
+        })
+    });
+}
+
+/// Slice edges: saturated sign planes and word-boundary tails, plus
+/// sliced operands inside a full matmul, plus the `min_bits` guard.
+#[test]
+fn cross_precision_slice_sign_plane_and_tail_word_edges() {
+    for hi in 2..=16u32 {
+        for lo in 1..hi {
+            let (m, n) = (2usize, 2usize);
+            for k in [1usize, 63, 64, 65, 130] {
+                for fill in [min_value(lo), max_value(lo)] {
+                    let a = vec![fill; m * k];
+                    let mut b = vec![fill; k * n];
+                    b[k / 2 * n] = 0; // non-uniform product
+                    let want = ref_matmul_i64(&a, &b, m, k, n);
+                    for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                        let pa = PackedPlanes::pack_rows(&a, m, k, hi, kind)
+                            .unwrap()
+                            .slice_bits(lo)
+                            .unwrap();
+                        let pb = PackedPlanes::pack_cols(&b, k, n, hi, kind)
+                            .unwrap()
+                            .slice_bits(lo)
+                            .unwrap();
+                        assert_eq!(pa, PackedPlanes::pack_rows(&a, m, k, lo, kind).unwrap());
+                        assert_eq!(
+                            matmul_packed_planes(&pa, &pb).unwrap(),
+                            want,
+                            "{kind:?} {hi}->{lo} k={k} fill={fill}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // the guard: values needing `hi` bits refuse to slice narrower
+    for hi in 2..=16u32 {
+        let data = vec![min_value(hi); 4];
+        let p = PackedPlanes::pack_rows(&data, 2, 2, hi, PlaneKind::Sbmwc).unwrap();
+        assert_eq!(p.min_bits, hi);
+        assert!(p.slice_bits(hi - 1).is_err(), "hi={hi}");
     }
 }
 

@@ -129,6 +129,59 @@ fn packed_backend_identical_results_and_packs_weights_once() {
     }
 }
 
+/// Serving the *same* model at two precisions under `Backend::Packed`
+/// packs each weight matrix exactly once: the higher-precision serve
+/// packs, the precision-lowered serve slices plane subsets out of the
+/// cached packs (zero re-packs) — the cross-precision extension of the
+/// packs-once invariant. Lowering the declared precision must not
+/// change the served integers either (the matmuls are exact).
+#[test]
+fn two_precision_serving_packs_each_weight_once() {
+    let lo = Arc::new(mlp_zoo(9)); // layer precisions 8 / 4 / 4
+    // same layers (weights AND packed caches shared via clone), with
+    // every layer's declared precision raised by 4 bits
+    let mut hi = (*lo).clone();
+    for layer in &mut hi.layers {
+        if let bitsmm::nn::Layer::Linear(l) = layer {
+            l.bits += 4; // 12 / 8 / 8
+        }
+    }
+    let hi = Arc::new(hi);
+    let ins = inputs(24, 17);
+
+    let mut cfg = base_cfg(4);
+    cfg.backend = Backend::Packed;
+    let (resp_hi, _, _) = serve_all(hi.clone(), cfg.clone(), ins.clone()).unwrap();
+    for (i, layer) in hi.layers.iter().enumerate() {
+        if let bitsmm::nn::Layer::Linear(l) = layer {
+            assert_eq!(l.packed.packs(), 1, "layer {i}: first serve packs once");
+            assert_eq!(l.packed.plane_reuses(), 0, "layer {i}: nothing to reuse yet");
+        }
+    }
+
+    // precision-lowered serve: zero additional packs, one slice/layer
+    let (resp_lo, report, _) = serve_all(lo.clone(), cfg, ins).unwrap();
+    assert!(report.packed_execs > 0, "packed engine served the low run");
+    for (i, layer) in lo.layers.iter().enumerate() {
+        if let bitsmm::nn::Layer::Linear(l) = layer {
+            assert_eq!(
+                l.packed.packs(),
+                1,
+                "layer {i}: lowering precision must not re-pack"
+            );
+            assert_eq!(
+                l.packed.plane_reuses(),
+                1,
+                "layer {i}: the lower precision is a plane-subset slice"
+            );
+        }
+    }
+    // exact integer matmuls: the declared width does not change results
+    for (a, b) in resp_hi.iter().zip(&resp_lo) {
+        assert_eq!(a.output, b.output, "precision switch changed results at id {}", a.id);
+    }
+}
+
 #[test]
 fn zero_workers_rejected() {
     let model = Arc::new(mlp_zoo(9));
