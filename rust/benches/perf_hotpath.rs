@@ -1,11 +1,12 @@
 //! Bench PERF: host-side hot-path microbenchmarks feeding the §Perf
 //! iteration log — simulator inner loop, native matmul, the per-plane
 //! and word-packed plane realisations, the popcount-reducer and
-//! thread-count sweeps of the packed engine (the headline comparison
+//! thread-count sweeps of the packed engine, the skewed-shape
+//! equal-slice vs work-stealing scheduler comparison (the headline
 //! for this PR), cross-precision plane slicing, tiler, and (when
 //! artifacts are built) the PJRT request path. Every result is also
-//! written to `BENCH_perf_hotpath.json` so the perf trajectory is
-//! machine-trackable across PRs.
+//! written to `BENCH_perf_hotpath.json` at the repo root so the perf
+//! trajectory is machine-trackable across PRs.
 //!
 //! Set `BITSMM_BENCH_SMOKE=1` (CI does) to run the same matrix on a
 //! small shape with a tight iteration budget — seconds, not minutes —
@@ -13,8 +14,9 @@
 
 use bitsmm::bench_harness::{bench, BenchConfig, BenchResult};
 use bitsmm::bits::packed::{
-    matmul_packed_planes, matmul_packed_tile_pooled, matmul_packed_tile_with, PackedPlanes,
-    PackedPool, PopcountKernel,
+    matmul_packed_planes, matmul_packed_tile_pooled, matmul_packed_tile_rowslice,
+    matmul_packed_tile_stolen, matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
+    TilePolicy,
 };
 use bitsmm::bits::plane::PlaneKind;
 use bitsmm::coordinator::{tile_matmul, Backend, Scheduler};
@@ -215,6 +217,70 @@ fn main() {
         println!(
             "ACCEPTANCE packed {shape3} @8b: t4 vs PR1 scalar t1 = {:.2}x (target >= 2x)",
             scalar_mean / t4_mean
+        );
+    }
+
+    // ---- 5c'. scheduling geometry: equal row slices vs 2-D stealing -----
+    // The PR 2 partitioner (`min(threads, rows)` equal row slices)
+    // against the work-stealing 2-D tile scheduler, at 8 threads, on
+    // skewed shapes (single-row serving, single-column projections,
+    // wide-K attention blocks) plus the square no-regression shape.
+    // Both paths must stay bit-identical to the serial kernel.
+    let pool8 = PackedPool::new(8).unwrap();
+    let skew_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(1, 128, 512), (512, 128, 1), (16, 512, 16), (64, 64, 64)]
+    } else {
+        &[(1, 512, 4096), (4096, 512, 1), (64, 4096, 64), (256, 256, 256)]
+    };
+    for &(sm, sk, sn) in skew_shapes {
+        let lbl = format!("{sm}x{sk}x{sn}");
+        let smacs = (sm * sk * sn) as f64;
+        let sa_m: Vec<i32> = (0..sm * sk).map(|_| rng.range_i32(-128, 127)).collect();
+        let sb_m: Vec<i32> = (0..sk * sn).map(|_| rng.range_i32(-128, 127)).collect();
+        let pa = Arc::new(PackedPlanes::pack_rows(&sa_m, sm, sk, 8, PlaneKind::Sbmwc).unwrap());
+        let pb = Arc::new(PackedPlanes::pack_cols(&sb_m, sk, sn, 8, PlaneKind::Sbmwc).unwrap());
+        // bit-identity first: serial == rowslice == stolen
+        let serial_out =
+            matmul_packed_tile_with(&pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto).unwrap();
+        let rowslice_out =
+            matmul_packed_tile_rowslice(&pool8, &pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto)
+                .unwrap();
+        let (stolen_out, stats) = matmul_packed_tile_stolen(
+            &pool8, &pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto, TilePolicy::AUTO,
+        )
+        .unwrap();
+        assert_eq!(rowslice_out, serial_out, "rowslice diverged on {lbl}");
+        assert_eq!(stolen_out, serial_out, "steal2d diverged on {lbl}");
+        let r = bench(&format!("packed {lbl} @8b t8 rowslice"), big, || {
+            matmul_packed_tile_rowslice(&pool8, &pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto)
+                .unwrap()[0]
+        });
+        let rowslice_mean = r.mean.as_secs_f64();
+        println!("{}   ({} GOPS)", r.format(), fmt_rate(r.per_second(smacs) / 1e9));
+        log.push(r);
+        let r = bench(&format!("packed {lbl} @8b t8 steal2d"), big, || {
+            matmul_packed_tile_pooled(&pool8, &pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto)
+                .unwrap()[0]
+        });
+        let stolen_mean = r.mean.as_secs_f64();
+        println!(
+            "{}   ({} GOPS, {:.2}x vs rowslice)",
+            r.format(),
+            fmt_rate(r.per_second(smacs) / 1e9),
+            safe_ratio(rowslice_mean, stolen_mean),
+        );
+        // steal/share numbers are scheduling-dependent and vary run to
+        // run; these come from the single correctness run above, not
+        // from the timed iterations
+        println!(
+            "  steal2d sample run: {} tiles, {} steals, worker share {}..{}",
+            stats.tiles, stats.steals, stats.min_worker_tiles, stats.max_worker_tiles
+        );
+        log.push(r);
+        let tag = if sm == sk && sk == sn { "no-regression" } else { "skew" };
+        println!(
+            "ACCEPTANCE {tag} {lbl} @8b t8: steal2d vs equal-slice = {:.2}x (bit-identical: yes)",
+            safe_ratio(rowslice_mean, stolen_mean)
         );
     }
 

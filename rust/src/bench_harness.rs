@@ -43,17 +43,20 @@ impl BenchResult {
     }
 }
 
-/// Write `BENCH_<target>.json` next to the working directory so the
-/// perf trajectory is trackable across PRs. Returns the path written.
+/// Write `BENCH_<target>.json` at the repository root (the crate's
+/// `CARGO_MANIFEST_DIR`, *not* the invoker's working directory) so the
+/// perf trajectory lands in a fixed, CI-checkable location across PRs.
+/// Returns the path written.
 pub fn write_json(target: &str, results: &[BenchResult]) -> std::io::Result<String> {
-    let path = format!("BENCH_{target}.json");
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(format!("BENCH_{target}.json"));
     let body: Vec<String> = results.iter().map(|r| format!("  {}", r.json())).collect();
     let text = format!(
         "{{\"target\":\"{target}\",\"results\":[\n{}\n]}}\n",
         body.join(",\n")
     );
     std::fs::write(&path, text)?;
-    Ok(path)
+    Ok(path.display().to_string())
 }
 
 /// Benchmark configuration.
@@ -167,6 +170,27 @@ mod tests {
         assert!(j.contains("\"name\":\"kernel x\""));
         assert!(j.contains("\"mean_ns\":1500"));
         assert!(j.contains("\"min_ns\":1000"));
+    }
+
+    #[test]
+    fn write_json_lands_at_the_repo_root() {
+        let r = BenchResult {
+            name: "probe".into(),
+            iters: 1,
+            mean: Duration::from_nanos(10),
+            median: Duration::from_nanos(10),
+            p95: Duration::from_nanos(10),
+            min: Duration::from_nanos(10),
+        };
+        let path = write_json("harness_selftest", &[r]).unwrap();
+        // anchored to the manifest dir, regardless of the test's cwd
+        assert!(
+            path.starts_with(env!("CARGO_MANIFEST_DIR")),
+            "bench json escaped the repo root: {path}"
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"target\":\"harness_selftest\""));
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

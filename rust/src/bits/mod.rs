@@ -15,9 +15,10 @@
 //!   shared by every plane-based execution path.
 //! * [`packed`] — word-packed planes (`u64` words, 64 digits/word),
 //!   the AND+popcount plane-pair matmul kernel behind
-//!   `Backend::Packed`, its unrolled/AVX2 popcount reducers, the
-//!   persistent row-block worker pool, and cross-precision plane
-//!   slicing (see DESIGN.md §Packed-Planes and §Packed-Threading).
+//!   `Backend::Packed`, its unrolled/AVX2/NEON popcount reducers, the
+//!   persistent worker pool with its work-stealing 2-D tile scheduler,
+//!   and cross-precision plane slicing (see DESIGN.md §Packed-Planes
+//!   and §Packed-Threading).
 
 pub mod booth;
 pub mod packed;
@@ -27,7 +28,8 @@ pub mod twos;
 pub use booth::{booth_digits, booth_mul, BoothAction};
 pub use packed::{
     matmul_packed_planes, matmul_packed_tile, matmul_packed_tile_pooled,
-    matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
+    matmul_packed_tile_rowslice, matmul_packed_tile_stolen, matmul_packed_tile_with,
+    plan_tile_shape, PackedPlanes, PackedPool, PopcountKernel, StealStats, TilePolicy,
 };
 pub use plane::{
     bit_planes_sbmwc, booth_planes, decompose, plane_weight, reconstruct_sbmwc, PlaneKind,

@@ -23,14 +23,20 @@
 //! scalar kernel, pinned by tests):
 //!
 //! * [`PopcountKernel`] — the word reducer behind every plane-pair
-//!   product: scalar, 4-/8-word unrolled chunks, or an AVX2 nibble-LUT
-//!   popcount selected by *runtime* feature detection (`Auto`). All
-//!   kind-pair arms share one [`plane_pair_dot`] reducer, so unroll
-//!   variants cannot diverge from each other.
-//! * [`PackedPool`] — a persistent `std::thread` worker pool that
-//!   partitions a packed matmul across output-row blocks
-//!   ([`matmul_packed_tile_pooled`]); one pool is shared by all of a
-//!   server's request workers.
+//!   product: scalar, 4-/8-word unrolled chunks, an AVX2 nibble-LUT
+//!   popcount, or a NEON `vcntq_u8` popcount, selected by *runtime*
+//!   feature detection (`Auto`). All kind-pair arms share one
+//!   [`plane_pair_dot`] reducer, so unroll variants cannot diverge
+//!   from each other.
+//! * [`PackedPool`] — a persistent `std::thread` worker pool. A pooled
+//!   matmul is decomposed into 2-D row×column output tiles sized
+//!   adaptively from the shape and word count ([`plan_tile_shape`],
+//!   overridable via [`TilePolicy`]), seeded into per-slot deques, and
+//!   executed with steal-on-empty so skewed shapes (tall-thin,
+//!   wide-short) keep every worker busy
+//!   ([`matmul_packed_tile_stolen`]); one pool is shared by all of a
+//!   server's request workers. The PR 2 equal-row-slice partitioner is
+//!   kept as [`matmul_packed_tile_rowslice`] for A/B benchmarking.
 //! * [`PackedPlanes::slice_bits`] — cross-precision plane reuse: the
 //!   plane-major layout makes the planes of every lower precision a
 //!   *prefix* of a higher-precision pack, so a `b'`-bit view of a
@@ -38,6 +44,8 @@
 
 use super::plane::{decompose, plane_weight, PlaneKind};
 use crate::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 /// A matrix operand decomposed into `bits` digit planes, each packed
@@ -315,15 +323,20 @@ pub enum PopcountKernel {
     /// `std::arch` AVX2 nibble-LUT popcount (4 words per 256-bit step).
     /// Falls back to [`PopcountKernel::Unroll8`] where AVX2 is absent.
     Avx2,
+    /// `std::arch` aarch64 NEON popcount (`vcntq_u8` per-byte counts +
+    /// pairwise widening adds, 2 words per 128-bit step). Falls back to
+    /// [`PopcountKernel::Unroll8`] off aarch64.
+    Neon,
 }
 
 impl PopcountKernel {
     /// Every concrete (non-`Auto`) kernel, for sweeps.
-    pub const CONCRETE: [PopcountKernel; 4] = [
+    pub const CONCRETE: [PopcountKernel; 5] = [
         PopcountKernel::Scalar,
         PopcountKernel::Unroll4,
         PopcountKernel::Unroll8,
         PopcountKernel::Avx2,
+        PopcountKernel::Neon,
     ];
 
     pub fn name(self) -> &'static str {
@@ -333,30 +346,35 @@ impl PopcountKernel {
             PopcountKernel::Unroll4 => "unroll4",
             PopcountKernel::Unroll8 => "unroll8",
             PopcountKernel::Avx2 => "avx2",
+            PopcountKernel::Neon => "neon",
         }
     }
 
-    /// Whether this kernel runs natively on the current CPU (`Avx2` is
-    /// the only conditional one; everything else always does).
+    /// Whether this kernel runs natively on the current CPU (`Avx2` and
+    /// `Neon` are the conditional ones; everything else always does).
     pub fn available(self) -> bool {
         match self {
             PopcountKernel::Avx2 => avx2_available(),
+            PopcountKernel::Neon => neon_available(),
             _ => true,
         }
     }
 
-    /// Map `Auto` (and an unavailable `Avx2`) to a concrete kernel via
-    /// runtime feature detection.
+    /// Map `Auto` (and an unavailable `Avx2`/`Neon`) to a concrete
+    /// kernel via runtime feature detection.
     pub fn resolve(self) -> PopcountKernel {
         match self {
             PopcountKernel::Auto => {
                 if avx2_available() {
                     PopcountKernel::Avx2
+                } else if neon_available() {
+                    PopcountKernel::Neon
                 } else {
                     PopcountKernel::Unroll8
                 }
             }
             PopcountKernel::Avx2 if !avx2_available() => PopcountKernel::Unroll8,
+            PopcountKernel::Neon if !neon_available() => PopcountKernel::Unroll8,
             k => k,
         }
     }
@@ -368,6 +386,7 @@ impl PopcountKernel {
             PopcountKernel::Unroll4 => and_pop_unrolled::<4>,
             PopcountKernel::Unroll8 => and_pop_unrolled::<8>,
             PopcountKernel::Avx2 => and_pop_avx2,
+            PopcountKernel::Neon => and_pop_neon,
             PopcountKernel::Auto => unreachable!("resolve() never returns Auto"),
         }
     }
@@ -383,8 +402,9 @@ impl std::str::FromStr for PopcountKernel {
             "unroll4" => Ok(PopcountKernel::Unroll4),
             "unroll8" => Ok(PopcountKernel::Unroll8),
             "avx2" => Ok(PopcountKernel::Avx2),
+            "neon" => Ok(PopcountKernel::Neon),
             other => anyhow::bail!(
-                "unknown popcount kernel '{other}' (auto|scalar|unroll4|unroll8|avx2)"
+                "unknown popcount kernel '{other}' (auto|scalar|unroll4|unroll8|avx2|neon)"
             ),
         }
     }
@@ -476,6 +496,60 @@ mod avx2 {
         _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
         let mut sum: u64 = lanes.iter().sum();
         for i in 4 * steps..n {
+            sum += (x[i] & y[i]).count_ones() as u64;
+        }
+        sum
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn and_pop_neon(x: &[u64], y: &[u64]) -> u64 {
+    // Safety: this entry is only installed by `PopcountKernel::resolve`
+    // after `is_aarch64_feature_detected!("neon")` returned true.
+    unsafe { neon::and_popcount(x, y) }
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn and_pop_neon(x: &[u64], y: &[u64]) -> u64 {
+    and_pop_unrolled::<8>(x, y)
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON popcount: per 128-bit step, AND the operands, count bits
+    //! per byte with `vcntq_u8`, and widen the byte counts into 64-bit
+    //! lanes with the pairwise-add ladder (`vpaddlq_u8/u16/u32`). Lane
+    //! accumulation cannot overflow: each step adds ≤ 128 to a u64.
+    use std::arch::aarch64::*;
+
+    /// `Σ_w popcount(x_w & y_w)` over 2 `u64` words per vector step.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn and_popcount(x: &[u64], y: &[u64]) -> u64 {
+        let n = x.len().min(y.len());
+        let mut acc = vdupq_n_u64(0);
+        let steps = n / 2;
+        for s in 0..steps {
+            let xv = vld1q_u64(x.as_ptr().add(2 * s));
+            let yv = vld1q_u64(y.as_ptr().add(2 * s));
+            let v = vandq_u64(xv, yv);
+            let counts = vcntq_u8(vreinterpretq_u8_u64(v));
+            acc = vaddq_u64(acc, vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(counts))));
+        }
+        let mut sum = vgetq_lane_u64::<0>(acc) + vgetq_lane_u64::<1>(acc);
+        for i in 2 * steps..n {
             sum += (x[i] & y[i]).count_ones() as u64;
         }
         sum
@@ -673,13 +747,325 @@ impl Drop for PackedPool {
     }
 }
 
-/// [`matmul_packed_tile_with`], partitioned across the pool's workers
-/// by contiguous output-row blocks. Each block runs the serial kernel
-/// over its own row range, so the result is bit-identical to the
-/// single-thread path by construction (disjoint output rows, identical
-/// per-row accumulation order). Operands travel as `Arc` clones — no
+// ---------------------------------------------------------------------------
+// Work-stealing 2-D tile scheduler
+// ---------------------------------------------------------------------------
+
+/// Tile-granularity knobs for the work-stealing 2-D scheduler
+/// (`server.packed_tile_rows` / `server.packed_tile_cols` in configs,
+/// `--packed-tile-rows` / `--packed-tile-cols` on `serve`). `0` means
+/// *auto*: adapt the dimension to the shape, word count, and worker
+/// count via [`plan_tile_shape`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TilePolicy {
+    /// Output rows per tile job (0 = auto).
+    pub tile_rows: usize,
+    /// Output columns per tile job (0 = auto).
+    pub tile_cols: usize,
+}
+
+impl TilePolicy {
+    /// Adapt both dimensions (the server default).
+    pub const AUTO: TilePolicy = TilePolicy {
+        tile_rows: 0,
+        tile_cols: 0,
+    };
+}
+
+/// Telemetry of one work-stealing run, surfaced through
+/// `ExecutionReport` and the server metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StealStats {
+    /// Tile jobs the matmul was decomposed into.
+    pub tiles: u64,
+    /// Tiles a slot took from another slot's deque (0 on a perfectly
+    /// pre-balanced run).
+    pub steals: u64,
+    /// Largest per-slot executed-tile count (the caller's inline slot
+    /// included) — with `min_worker_tiles`, the imbalance measure the
+    /// stealing exists to fix.
+    pub max_worker_tiles: u64,
+    /// Smallest per-slot executed-tile count (may be 0 when a shared
+    /// pool's workers were busy elsewhere and the caller drained the
+    /// run itself).
+    pub min_worker_tiles: u64,
+}
+
+impl StealStats {
+    pub fn merge(&mut self, o: &StealStats) {
+        // `tiles` discriminates "recorded a run" from the zero default,
+        // so a genuine 0 minimum share (a starved slot) survives the
+        // merge instead of being mistaken for "no data"
+        self.min_worker_tiles = if self.tiles == 0 {
+            o.min_worker_tiles
+        } else if o.tiles == 0 {
+            self.min_worker_tiles
+        } else {
+            self.min_worker_tiles.min(o.min_worker_tiles)
+        };
+        self.tiles += o.tiles;
+        self.steals += o.steals;
+        self.max_worker_tiles = self.max_worker_tiles.max(o.max_worker_tiles);
+    }
+}
+
+/// Per-slot oversubscription: enough tile jobs per worker that
+/// steal-on-empty can rebalance stragglers, few enough that dispatch
+/// overhead stays negligible against tile work.
+const TILE_OVERSUBSCRIBE: usize = 4;
+
+/// Smallest tile worth its dispatch, in word-AND-popcount operations
+/// (auto-planned tiles grow until they clear this floor or parallelism
+/// would drop below the slot count).
+const MIN_TILE_WORK: u64 = 1 << 15;
+
+/// Plan the `(tile_rows, tile_cols)` job granularity for a `tm × tn`
+/// output executed by `slots` workers, where one output element costs
+/// `cell_work` word operations (`bits_a · bits_b · words`).
+///
+/// Rows are split first (each row job streams contiguous plane words of
+/// the packed left operand); columns supply the parallelism rows cannot
+/// — a `1×k×4096` request still yields `slots`-way parallelism via
+/// column blocks. Auto-planned dimensions then grow (columns first)
+/// until every tile clears [`MIN_TILE_WORK`] or tiles would drop below
+/// the slot count; explicit [`TilePolicy`] dimensions are respected as
+/// given (clamped to the shape).
+pub fn plan_tile_shape(
+    tm: usize,
+    tn: usize,
+    cell_work: u64,
+    slots: usize,
+    policy: TilePolicy,
+) -> (usize, usize) {
+    if tm == 0 || tn == 0 {
+        return (tm.max(1), tn.max(1));
+    }
+    let slots = slots.max(1);
+    let target = slots * TILE_OVERSUBSCRIBE;
+    let row_splits = tm.min(target);
+    let col_splits = tn.min(target.div_ceil(row_splits));
+    let mut tr = match policy.tile_rows {
+        0 => tm.div_ceil(row_splits),
+        r => r.min(tm),
+    };
+    let mut tc = match policy.tile_cols {
+        0 => tn.div_ceil(col_splits),
+        c => c.min(tn),
+    };
+    loop {
+        let tiles = tm.div_ceil(tr) * tn.div_ceil(tc);
+        if tiles <= slots || tr as u64 * tc as u64 * cell_work.max(1) >= MIN_TILE_WORK {
+            break;
+        }
+        if policy.tile_cols == 0 && tc < tn {
+            tc = (tc * 2).min(tn);
+        } else if policy.tile_rows == 0 && tr < tm {
+            tr = (tr * 2).min(tm);
+        } else {
+            break;
+        }
+    }
+    (tr, tc)
+}
+
+/// One 2-D output tile of a stolen matmul; coordinates are relative to
+/// the requested tile view. `idx` is the row-major grid position and
+/// doubles as the deterministic merge order.
+#[derive(Debug, Clone, Copy)]
+struct TileJob2d {
+    idx: usize,
+    r0: usize,
+    rows: usize,
+    c0: usize,
+    cols: usize,
+}
+
+/// Shared state of one work-stealing run: per-slot deques seeded with
+/// contiguous chunks of the tile list, plus the telemetry counters.
+/// Counter loads in the caller are ordered after every increment by the
+/// result channel (each increment is sequenced before that slot's send,
+/// and the caller receives all sends before reading).
+struct StealSet {
+    deques: Vec<Mutex<VecDeque<TileJob2d>>>,
+    steals: AtomicU64,
+    executed: Vec<AtomicU64>,
+}
+
+impl StealSet {
+    fn new(slots: usize, tiles: &[TileJob2d]) -> StealSet {
+        let n = tiles.len();
+        StealSet {
+            // balanced contiguous chunks, like the row-slice partition
+            deques: (0..slots)
+                .map(|s| Mutex::new(tiles[s * n / slots..(s + 1) * n / slots].iter().copied().collect()))
+                .collect(),
+            steals: AtomicU64::new(0),
+            executed: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Own chunk first (front of the own deque, preserving locality),
+    /// then steal from the *back* of the other slots' deques, scanning
+    /// from the next slot so concurrent thieves spread over victims.
+    fn next(&self, slot: usize) -> Option<TileJob2d> {
+        if let Some(t) = self.deques[slot].lock().expect("steal deque poisoned").pop_front() {
+            return Some(t);
+        }
+        let slots = self.deques.len();
+        for off in 1..slots {
+            let victim = (slot + off) % slots;
+            if let Some(t) = self.deques[victim].lock().expect("steal deque poisoned").pop_back() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+/// One slot's drain loop: run tiles (own, then stolen) until every
+/// deque is empty, sending each tile's result to the collector.
+fn run_steal_slot(
+    set: &StealSet,
+    slot: usize,
+    a: &PackedPlanes,
+    b: &PackedPlanes,
+    row0: usize,
+    col0: usize,
+    kernel: PopcountKernel,
+    tx: &mpsc::Sender<(usize, Result<Vec<i64>>)>,
+) {
+    while let Some(t) = set.next(slot) {
+        let part = matmul_packed_tile_with(a, b, row0 + t.r0, t.rows, col0 + t.c0, t.cols, kernel);
+        set.executed[slot].fetch_add(1, Ordering::Relaxed);
+        if tx.send((t.idx, part)).is_err() {
+            break; // collector bailed on an earlier tile error
+        }
+    }
+}
+
+/// [`matmul_packed_tile_with`], decomposed into work-stolen 2-D output
+/// tiles across the pool's workers *and* the calling thread (the
+/// caller drains tiles too, so a shared pool busy with other requests
+/// delays but never starves a run).
+///
+/// **Determinism.** Tiles partition the output without splitting the
+/// contracted dimension: every output element is produced by exactly
+/// one tile, whose serial kernel accumulates that element in the exact
+/// plane-pair order of the single-thread path. Results are buffered and
+/// merged in fixed tile-index order, so pooled output is bit-identical
+/// to [`matmul_packed_tile_with`] by construction, regardless of which
+/// slot ran which tile when. Operands travel as `Arc` clones — no
 /// packing, no copying.
+pub fn matmul_packed_tile_stolen(
+    pool: &PackedPool,
+    a: &Arc<PackedPlanes>,
+    b: &Arc<PackedPlanes>,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+    kernel: PopcountKernel,
+    policy: TilePolicy,
+) -> Result<(Vec<i64>, StealStats)> {
+    // fail fast on a bad tile before dispatching any work
+    check_tile(a, b, row0, tm, col0, tn)?;
+    let slots = pool.threads() + 1; // + the caller's inline slot
+    let cell_work = a.bits as u64 * b.bits as u64 * a.words as u64;
+    let (tr, tc) = plan_tile_shape(tm, tn, cell_work, slots, policy);
+    let grid_r = if tm == 0 { 0 } else { tm.div_ceil(tr) };
+    let grid_c = if tn == 0 { 0 } else { tn.div_ceil(tc) };
+    let ntiles = grid_r * grid_c;
+    if ntiles <= 1 {
+        let out = matmul_packed_tile_with(a, b, row0, tm, col0, tn, kernel)?;
+        let tiles = ntiles as u64;
+        return Ok((
+            out,
+            StealStats {
+                tiles,
+                steals: 0,
+                max_worker_tiles: tiles,
+                min_worker_tiles: tiles,
+            },
+        ));
+    }
+    let mut tiles = Vec::with_capacity(ntiles);
+    for gr in 0..grid_r {
+        for gc in 0..grid_c {
+            let (r0, c0) = (gr * tr, gc * tc);
+            tiles.push(TileJob2d {
+                idx: tiles.len(),
+                r0,
+                rows: tr.min(tm - r0),
+                c0,
+                cols: tc.min(tn - c0),
+            });
+        }
+    }
+    let set = Arc::new(StealSet::new(slots, &tiles));
+    let (tx, rx) = mpsc::channel();
+    for slot in 0..pool.threads() {
+        let (set, a, b, tx) = (set.clone(), a.clone(), b.clone(), tx.clone());
+        pool.execute(Box::new(move || {
+            run_steal_slot(&set, slot, &a, &b, row0, col0, kernel, &tx)
+        }))?;
+    }
+    run_steal_slot(&set, slots - 1, a, b, row0, col0, kernel, &tx);
+    drop(tx);
+    let mut parts: Vec<Option<Vec<i64>>> = (0..ntiles).map(|_| None).collect();
+    let mut seen = 0usize;
+    while let Ok((idx, part)) = rx.recv() {
+        parts[idx] = Some(part?);
+        seen += 1;
+    }
+    anyhow::ensure!(
+        seen == ntiles,
+        "packed pool lost {} of {ntiles} tile jobs (worker panicked?)",
+        ntiles - seen
+    );
+    // deterministic merge: fixed tile-index order over disjoint regions
+    let mut out = vec![0i64; tm * tn];
+    for t in &tiles {
+        let part = parts[t.idx].take().expect("every tile counted above");
+        for r in 0..t.rows {
+            let dst = (t.r0 + r) * tn + t.c0;
+            out[dst..dst + t.cols].copy_from_slice(&part[r * t.cols..(r + 1) * t.cols]);
+        }
+    }
+    let executed: Vec<u64> = set.executed.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    Ok((
+        out,
+        StealStats {
+            tiles: ntiles as u64,
+            steals: set.steals.load(Ordering::Relaxed),
+            max_worker_tiles: executed.iter().copied().max().unwrap_or(0),
+            min_worker_tiles: executed.iter().copied().min().unwrap_or(0),
+        },
+    ))
+}
+
+/// [`matmul_packed_tile_stolen`] with auto tile planning, discarding
+/// the telemetry — the drop-in pooled entry point used by benches and
+/// callers that predate the 2-D scheduler.
 pub fn matmul_packed_tile_pooled(
+    pool: &PackedPool,
+    a: &Arc<PackedPlanes>,
+    b: &Arc<PackedPlanes>,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+    kernel: PopcountKernel,
+) -> Result<Vec<i64>> {
+    Ok(matmul_packed_tile_stolen(pool, a, b, row0, tm, col0, tn, kernel, TilePolicy::AUTO)?.0)
+}
+
+/// The PR 2 equal-row-slice partitioner, kept as the A/B baseline for
+/// `perf_hotpath`'s skewed-shape sweep (and as a differential oracle in
+/// tests): `min(threads, tm)` balanced contiguous row blocks, one job
+/// each, no column parallelism, no stealing. Bit-identical to the
+/// serial kernel for the same reason the stolen scheduler is.
+pub fn matmul_packed_tile_rowslice(
     pool: &PackedPool,
     a: &Arc<PackedPlanes>,
     b: &Arc<PackedPlanes>,
@@ -815,13 +1201,17 @@ mod tests {
         assert_eq!("unroll4".parse::<PopcountKernel>().unwrap(), PopcountKernel::Unroll4);
         assert_eq!("unroll8".parse::<PopcountKernel>().unwrap(), PopcountKernel::Unroll8);
         assert_eq!("avx2".parse::<PopcountKernel>().unwrap(), PopcountKernel::Avx2);
+        assert_eq!("neon".parse::<PopcountKernel>().unwrap(), PopcountKernel::Neon);
         assert!("simd9000".parse::<PopcountKernel>().is_err());
         // Auto always resolves to something concrete and available
         let r = PopcountKernel::Auto.resolve();
         assert_ne!(r, PopcountKernel::Auto);
         assert!(r.available());
-        // an unavailable Avx2 request degrades instead of erroring
+        // unavailable SIMD requests degrade instead of erroring
         assert!(PopcountKernel::Avx2.resolve().available());
+        assert!(PopcountKernel::Neon.resolve().available());
+        // exactly one of the SIMD reducers can be native per arch
+        assert!(!(PopcountKernel::Avx2.available() && PopcountKernel::Neon.available()));
     }
 
     #[test]
@@ -887,6 +1277,123 @@ mod tests {
         let a = rand_mat(&mut rng, 4 * 10, 4);
         let pa = Arc::new(PackedPlanes::pack_rows(&a, 4, 10, 4, PlaneKind::Sbmwc).unwrap());
         assert!(matmul_packed_tile_pooled(&pool, &pa, &pa, 0, 5, 0, 1, PopcountKernel::Auto).is_err());
+    }
+
+    #[test]
+    fn plan_tile_shape_adapts_to_skew() {
+        // tall-thin / wide-short: the starved dimension is recovered
+        // from the other axis — at least `slots` tiles in every case
+        for (tm, tn) in [(1usize, 4096usize), (4096, 1), (1, 9), (64, 4096), (256, 256)] {
+            let (tr, tc) = plan_tile_shape(tm, tn, 256, 9, TilePolicy::AUTO);
+            assert!(tr >= 1 && tr <= tm && tc >= 1 && tc <= tn, "{tm}x{tn} -> {tr}x{tc}");
+            let tiles = tm.div_ceil(tr) * tn.div_ceil(tc);
+            assert!(tiles >= 9, "{tm}x{tn} planned only {tiles} tiles");
+        }
+        // tiny problems stay serial rather than shattering into
+        // sub-dispatch-cost fragments
+        let (tr, tc) = plan_tile_shape(2, 2, 4, 9, TilePolicy::AUTO);
+        assert!(tr * tc >= 1);
+        // explicit knobs are respected (clamped to the shape)
+        let p = TilePolicy { tile_rows: 7, tile_cols: 1000 };
+        assert_eq!(plan_tile_shape(20, 30, 256, 4, p), (7, 30));
+        // degenerate shapes do not divide by zero
+        assert_eq!(plan_tile_shape(0, 5, 1, 4, TilePolicy::AUTO), (1, 5));
+    }
+
+    #[test]
+    fn stolen_matches_rowslice_and_serial_with_stats() {
+        let mut rng = Pcg32::new(0x57ea1);
+        let pool = PackedPool::new(3).unwrap();
+        // skewed shapes (single row, single column) + a square one,
+        // k straddling word boundaries
+        for (m, k, n, bits) in [
+            (1usize, 70usize, 37usize, 8u32),
+            (37, 65, 1, 6),
+            (13, 64, 9, 4),
+            (1, 1, 1, 3),
+        ] {
+            let a = rand_mat(&mut rng, m * k, bits);
+            let b = rand_mat(&mut rng, k * n, bits);
+            let pa = Arc::new(PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap());
+            let pb = Arc::new(PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Booth).unwrap());
+            let serial =
+                matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar).unwrap();
+            assert_eq!(serial, ref_mm(&a, &b, m, k, n));
+            let rowslice =
+                matmul_packed_tile_rowslice(&pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto)
+                    .unwrap();
+            assert_eq!(rowslice, serial, "{m}x{k}x{n}");
+            // every tile policy yields the same integers; forced-small
+            // tiles maximise job count and steal traffic
+            for policy in [
+                TilePolicy::AUTO,
+                TilePolicy { tile_rows: 1, tile_cols: 0 },
+                TilePolicy { tile_rows: 0, tile_cols: 1 },
+                TilePolicy { tile_rows: 1, tile_cols: 1 },
+                TilePolicy { tile_rows: 5, tile_cols: 4 },
+            ] {
+                let (out, stats) = matmul_packed_tile_stolen(
+                    &pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy,
+                )
+                .unwrap();
+                assert_eq!(out, serial, "{m}x{k}x{n} {policy:?}");
+                assert!(stats.tiles >= 1);
+                assert!(stats.max_worker_tiles >= stats.min_worker_tiles);
+                assert!(stats.max_worker_tiles <= stats.tiles);
+            }
+        }
+    }
+
+    #[test]
+    fn stolen_interior_tile_views_match_serial() {
+        let mut rng = Pcg32::new(0x57ea2);
+        let pool = PackedPool::new(2).unwrap();
+        let (m, k, n, bits) = (9usize, 67usize, 11usize, 5u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let pa = Arc::new(PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Booth).unwrap());
+        let pb = Arc::new(PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap());
+        let t_serial = matmul_packed_tile(&pa, &pb, 2, m - 3, 1, n - 2).unwrap();
+        let (t_stolen, _) = matmul_packed_tile_stolen(
+            &pool,
+            &pa,
+            &pb,
+            2,
+            m - 3,
+            1,
+            n - 2,
+            PopcountKernel::Auto,
+            TilePolicy { tile_rows: 2, tile_cols: 3 },
+        )
+        .unwrap();
+        assert_eq!(t_stolen, t_serial);
+        // oversize views rejected before dispatch
+        assert!(matmul_packed_tile_stolen(
+            &pool, &pa, &pb, 0, m + 1, 0, n, PopcountKernel::Auto, TilePolicy::AUTO
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn steal_stats_merge_semantics() {
+        let mut a = StealStats { tiles: 4, steals: 1, max_worker_tiles: 3, min_worker_tiles: 1 };
+        // merging the zero default does not fake a 0 minimum share
+        a.merge(&StealStats::default());
+        assert_eq!(a.min_worker_tiles, 1);
+        a.merge(&StealStats { tiles: 6, steals: 2, max_worker_tiles: 5, min_worker_tiles: 2 });
+        assert_eq!(a.tiles, 10);
+        assert_eq!(a.steals, 3);
+        assert_eq!(a.max_worker_tiles, 5);
+        assert_eq!(a.min_worker_tiles, 1);
+        let mut z = StealStats::default();
+        z.merge(&StealStats { tiles: 2, steals: 0, max_worker_tiles: 2, min_worker_tiles: 2 });
+        assert_eq!(z.min_worker_tiles, 2);
+        // a recorded run whose minimum share is genuinely 0 (caller
+        // drained everything, a pool slot ran nothing) survives merges
+        z.merge(&StealStats { tiles: 3, steals: 3, max_worker_tiles: 3, min_worker_tiles: 0 });
+        assert_eq!(z.min_worker_tiles, 0);
+        z.merge(&StealStats { tiles: 2, steals: 0, max_worker_tiles: 2, min_worker_tiles: 1 });
+        assert_eq!(z.min_worker_tiles, 0, "starved-slot telemetry must not be masked");
     }
 
     #[test]

@@ -61,6 +61,8 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
     };
     cfg.packed_threads = args.req("packed-threads")?;
     cfg.packed_unroll = args.req::<String>("packed-unroll")?.parse()?;
+    cfg.packed_tile_rows = args.req("packed-tile-rows")?;
+    cfg.packed_tile_cols = args.req("packed-tile-cols")?;
 
     let d_in = model.input_shape[0];
     let mut rng = Pcg32::new(42);
@@ -92,6 +94,19 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
         format!(
             "{} / {} / {}",
             report.pjrt_hits, report.native_fallbacks, report.packed_execs
+        ),
+    ]);
+    t.row(&[
+        "pool tiles / steals".into(),
+        format!("{} / {}", report.steal.tiles, report.steal.steals),
+    ]);
+    t.row(&[
+        "worker tile share max/min".into(),
+        format!(
+            "{} / {} (steal rate {})",
+            report.steal.max_worker_tiles,
+            report.steal.min_worker_tiles,
+            f(metrics.steal_rate())
         ),
     ]);
     print!("{}", t.render());
@@ -146,6 +161,8 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     server_cfg.clock_hz = cfg.float_or("server.clock_mhz", 300.0) * 1e6;
     server_cfg.packed_threads = usize::try_from(cfg.int_or("server.packed_threads", 0))?;
     server_cfg.packed_unroll = cfg.str_or("server.packed_unroll", "auto").parse()?;
+    server_cfg.packed_tile_rows = usize::try_from(cfg.int_or("server.packed_tile_rows", 0))?;
+    server_cfg.packed_tile_cols = usize::try_from(cfg.int_or("server.packed_tile_cols", 0))?;
 
     let d_in = model.input_shape[0];
     let mut rng = Pcg32::new(42);
@@ -274,6 +291,29 @@ workers = 1
 max_batch = 4
 packed_threads = 2
 packed_unroll = \"scalar\"
+",
+        )
+        .unwrap();
+        launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_reads_tile_granularity_config() {
+        // explicit 2-D tile knobs via dotted paths; a forced 1-row ×
+        // 4-col grid exercises the column-parallel path end to end
+        let cfg = crate::config::Config::parse(
+            "name = \"tiles\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"packed\"
+requests = 4
+workers = 1
+max_batch = 4
+packed_threads = 2
+packed_tile_rows = 1
+packed_tile_cols = 4
 ",
         )
         .unwrap();

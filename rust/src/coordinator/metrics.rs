@@ -1,5 +1,7 @@
-//! Serving metrics: latency distributions and throughput counters.
+//! Serving metrics: latency distributions, throughput counters, and
+//! packed-pool scheduling telemetry.
 
+use crate::bits::packed::StealStats;
 use std::time::Duration;
 
 /// Online latency statistics (stores samples; serving volumes here are
@@ -55,6 +57,10 @@ pub struct Metrics {
     pub hw_cycles: u64,
     /// Wall-clock of the serving run.
     pub wall: Duration,
+    /// Packed-pool work-stealing telemetry: tile jobs, steals, and the
+    /// max/min per-worker tile share (zero unless the packed backend
+    /// ran with a pool).
+    pub steal: StealStats,
 }
 
 impl Metrics {
@@ -80,6 +86,25 @@ impl Metrics {
             return 0.0;
         }
         self.requests as f64 / self.batches as f64
+    }
+
+    /// Fraction of pooled tile jobs that were stolen rather than run
+    /// from their seeded deque — how much rebalancing the work-stealing
+    /// scheduler actually did.
+    pub fn steal_rate(&self) -> f64 {
+        if self.steal.tiles == 0 {
+            return 0.0;
+        }
+        self.steal.steals as f64 / self.steal.tiles as f64
+    }
+
+    /// Max/min per-worker tile share across pooled runs (1.0 = perfect
+    /// balance; 0.0 when no pooled run happened or a slot ran nothing).
+    pub fn worker_tile_imbalance(&self) -> f64 {
+        if self.steal.min_worker_tiles == 0 {
+            return 0.0;
+        }
+        self.steal.max_worker_tiles as f64 / self.steal.min_worker_tiles as f64
     }
 }
 
@@ -118,5 +143,20 @@ mod tests {
         };
         // 64 OP/cycle × 300 MHz = 19.2 GOPS — the Table II headline
         assert!((m.hw_gops(300e6) - 19.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steal_telemetry_rates() {
+        let mut m = Metrics::default();
+        assert_eq!(m.steal_rate(), 0.0);
+        assert_eq!(m.worker_tile_imbalance(), 0.0);
+        m.steal = StealStats {
+            tiles: 40,
+            steals: 10,
+            max_worker_tiles: 6,
+            min_worker_tiles: 3,
+        };
+        assert!((m.steal_rate() - 0.25).abs() < 1e-12);
+        assert!((m.worker_tile_imbalance() - 2.0).abs() < 1e-12);
     }
 }

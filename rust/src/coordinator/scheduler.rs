@@ -19,14 +19,17 @@
 //!   the call arrives through [`crate::nn::MatmulExec`] (planes cached
 //!   at a wider precision are *sliced*, never re-packed). When the
 //!   scheduler is handed a shared [`PackedPool`], the kernel is
-//!   partitioned across output-row blocks on the pool's persistent
-//!   workers (DESIGN.md §Packed-Threading) — bit-identical to the
-//!   single-thread path.
+//!   decomposed into work-stolen 2-D output tiles (sized by the
+//!   scheduler's [`TilePolicy`], auto by default) on the pool's
+//!   persistent workers (DESIGN.md §Packed-Threading) — bit-identical
+//!   to the single-thread path, with steal/imbalance telemetry folded
+//!   into the report.
 //! * [`Backend::Simulate`] — the cycle-accurate SA simulator itself;
 //!   slowest, but *measures* cycles instead of modelling them.
 
 use crate::bits::packed::{
-    matmul_packed_tile_pooled, matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
+    matmul_packed_tile_stolen, matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
+    StealStats, TilePolicy,
 };
 use crate::bits::plane::PlaneKind;
 use crate::coordinator::tiler::{tile_matmul, TilePlan};
@@ -74,6 +77,10 @@ pub struct ExecutionReport {
     /// Cached weight planes reused at a lower precision via a
     /// plane-subset slice (no re-pack).
     pub plane_slices: u64,
+    /// Work-stealing telemetry of the pooled packed kernel: tile jobs,
+    /// steals, and the max/min per-worker tile share (DESIGN.md
+    /// §Packed-Threading).
+    pub steal: StealStats,
 }
 
 impl ExecutionReport {
@@ -87,6 +94,7 @@ impl ExecutionReport {
         self.sim_passes += o.sim_passes;
         self.packed_execs += o.packed_execs;
         self.plane_slices += o.plane_slices;
+        self.steal.merge(&o.steal);
     }
 
     /// Simulated-hardware GOPS at a clock (paper convention).
@@ -112,6 +120,8 @@ pub struct Scheduler {
     packed_pool: Option<Arc<PackedPool>>,
     /// Popcount reducer for the packed kernel.
     popcount: PopcountKernel,
+    /// Tile granularity for the pooled packed kernel (auto by default).
+    tile_policy: TilePolicy,
     pub report: ExecutionReport,
 }
 
@@ -127,19 +137,26 @@ impl Scheduler {
             sim,
             packed_pool: None,
             popcount: PopcountKernel::Auto,
+            tile_policy: TilePolicy::AUTO,
             report: ExecutionReport::default(),
         }
     }
 
-    /// Attach a shared row-block worker pool for the packed kernel.
+    /// Attach a shared work-stealing worker pool for the packed kernel.
     pub fn set_packed_pool(&mut self, pool: Arc<PackedPool>) {
         self.packed_pool = Some(pool);
     }
 
     /// Select the popcount reducer for the packed kernel (defaults to
-    /// [`PopcountKernel::Auto`]: AVX2 when the CPU has it).
+    /// [`PopcountKernel::Auto`]: AVX2/NEON when the CPU has one).
     pub fn set_popcount_kernel(&mut self, kernel: PopcountKernel) {
         self.popcount = kernel;
+    }
+
+    /// Set the pooled packed kernel's 2-D tile granularity
+    /// (`server.packed_tile_rows` / `packed_tile_cols`; 0 = auto).
+    pub fn set_tile_policy(&mut self, policy: TilePolicy) {
+        self.tile_policy = policy;
     }
 
     /// Execute `A (m×k) · B (k×n)` at `bits` precision. Returns exact
@@ -256,10 +273,22 @@ impl Scheduler {
                 };
                 // the hardware tiling above is *timing* accounting; the
                 // functional product runs on the packed kernel directly,
-                // row-block threaded across the shared pool when present
+                // work-stolen 2-D tiles across the shared pool when present
                 match &self.packed_pool {
                     Some(pool) => {
-                        matmul_packed_tile_pooled(pool, &pa, &pb, 0, m, 0, n, self.popcount)?
+                        let (out, stats) = matmul_packed_tile_stolen(
+                            pool,
+                            &pa,
+                            &pb,
+                            0,
+                            m,
+                            0,
+                            n,
+                            self.popcount,
+                            self.tile_policy,
+                        )?;
+                        self.report.steal.merge(&stats);
+                        out
                     }
                     None => matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, self.popcount)?,
                 }
@@ -505,5 +534,39 @@ mod tests {
         assert_eq!(pooled.matmul(&a, &b, m, k, n, bits).unwrap(), want);
         // threading changes host speed, not the modelled hardware cycles
         assert_eq!(pooled.report.hw_cycles, serial.report.hw_cycles);
+        // the pooled run surfaced its tiling telemetry
+        assert!(pooled.report.steal.tiles >= 1);
+        assert!(pooled.report.steal.max_worker_tiles >= pooled.report.steal.min_worker_tiles);
+        // the single-thread scheduler has none
+        assert_eq!(serial.report.steal.tiles, 0);
+    }
+
+    #[test]
+    fn tile_policy_does_not_change_results_and_reports_merge() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        // skewed: one output row — the shape the 2-D scheduler exists for
+        let (m, k, n, bits) = (1, 70, 40, 8);
+        let mut rng = Pcg32::new(0x71_1e);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = nat.matmul(&a, &b, m, k, n, bits).unwrap();
+
+        let pool = std::sync::Arc::new(PackedPool::new(3).unwrap());
+        let mut merged = ExecutionReport::default();
+        for policy in [
+            TilePolicy::AUTO,
+            TilePolicy { tile_rows: 1, tile_cols: 1 },
+            TilePolicy { tile_rows: 0, tile_cols: 7 },
+        ] {
+            let mut s = Scheduler::new(sa, Backend::Packed);
+            s.set_packed_pool(pool.clone());
+            s.set_tile_policy(policy);
+            assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want, "{policy:?}");
+            merged.merge(&s.report);
+        }
+        // the forced 1x1 policy decomposed into one tile per output col
+        assert!(merged.steal.tiles >= n as u64);
+        assert!(merged.steal.max_worker_tiles >= 1);
     }
 }

@@ -2,7 +2,7 @@
 //! scheduler and model — the end-to-end serving path of the `e2e`
 //! example (and the paper's future-work integration, §V).
 
-use crate::bits::packed::{PackedPool, PopcountKernel};
+use crate::bits::packed::{PackedPool, PopcountKernel, TilePolicy};
 use crate::coordinator::batcher::{Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Backend, ExecutionReport, Scheduler};
@@ -46,9 +46,14 @@ pub struct ServerConfig {
     /// available cores / `workers`, min 1. `1` = single-thread kernel
     /// (no pool). Ignored by non-packed backends.
     pub packed_threads: usize,
-    /// Popcount reducer for the packed kernel (`Auto` = AVX2 when the
-    /// CPU has it, else 8-word unrolled chunks).
+    /// Popcount reducer for the packed kernel (`Auto` = AVX2/NEON when
+    /// the CPU has one, else 8-word unrolled chunks).
     pub packed_unroll: PopcountKernel,
+    /// Output rows per pooled-kernel tile job (`0` = auto: adapt to the
+    /// batch shape and worker count — see DESIGN.md §Packed-Threading).
+    pub packed_tile_rows: usize,
+    /// Output columns per pooled-kernel tile job (`0` = auto).
+    pub packed_tile_cols: usize,
 }
 
 impl ServerConfig {
@@ -61,6 +66,16 @@ impl ServerConfig {
             clock_hz: 300e6,
             packed_threads: 0,
             packed_unroll: PopcountKernel::Auto,
+            packed_tile_rows: 0,
+            packed_tile_cols: 0,
+        }
+    }
+
+    /// The pooled kernel's tile-granularity knobs as one policy.
+    pub fn tile_policy(&self) -> TilePolicy {
+        TilePolicy {
+            tile_rows: self.packed_tile_rows,
+            tile_cols: self.packed_tile_cols,
         }
     }
 
@@ -150,6 +165,9 @@ impl InferenceServer {
             metrics.hw_cycles += m.hw_cycles;
             metrics.wall = metrics.wall.max(m.wall);
         }
+        // single-sourced from the merged report so the two aggregation
+        // paths cannot desynchronize
+        metrics.steal = report.steal;
         (report, metrics)
     }
 }
@@ -162,6 +180,7 @@ fn worker_loop(
 ) -> (ExecutionReport, Metrics) {
     let mut sched = Scheduler::new(cfg.sa, cfg.backend.clone());
     sched.set_popcount_kernel(cfg.packed_unroll);
+    sched.set_tile_policy(cfg.tile_policy());
     if let Some(pool) = packed_pool {
         sched.set_packed_pool(pool);
     }
@@ -338,6 +357,33 @@ mod tests {
                 assert_eq!(a.output, b.output, "t{threads} {} diverged", kernel.name());
             }
             assert!(report.packed_execs > 0);
+        }
+    }
+
+    #[test]
+    fn packed_tile_knobs_do_not_change_results_and_surface_telemetry() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let ins = inputs(12, 64, 8);
+        let cfg_n = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let (want, _, _) = serve_all(model.clone(), cfg_n, ins.clone()).unwrap();
+        for (rows, cols) in [(0usize, 0usize), (1, 0), (0, 4), (2, 8)] {
+            let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+            cfg.packed_threads = 3;
+            cfg.packed_tile_rows = rows;
+            cfg.packed_tile_cols = cols;
+            let (got, report, metrics) = serve_all(model.clone(), cfg, ins.clone()).unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.output, b.output, "tiles {rows}x{cols} diverged");
+            }
+            assert!(report.packed_execs > 0);
+            // pooled runs happened, so tiling telemetry is populated
+            // and mirrored into the serving metrics
+            assert!(report.steal.tiles >= 1, "tiles {rows}x{cols}");
+            assert_eq!(metrics.steal, report.steal);
+            assert!(
+                report.steal.max_worker_tiles >= report.steal.min_worker_tiles,
+                "tiles {rows}x{cols}"
+            );
         }
     }
 

@@ -117,8 +117,18 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         )
         .opt(
             "packed-unroll",
-            "packed popcount reducer: auto|scalar|unroll4|unroll8|avx2",
+            "packed popcount reducer: auto|scalar|unroll4|unroll8|avx2|neon",
             Some("auto"),
+        )
+        .opt(
+            "packed-tile-rows",
+            "output rows per packed-pool tile job (0 = auto)",
+            Some("0"),
+        )
+        .opt(
+            "packed-tile-cols",
+            "output cols per packed-pool tile job (0 = auto)",
+            Some("0"),
         )
         .opt("artifacts", "artifact directory", None)
         .switch("help", "show help");

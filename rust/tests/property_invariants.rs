@@ -6,8 +6,9 @@
 
 use bitsmm::bits::booth::booth_digits;
 use bitsmm::bits::packed::{
-    matmul_packed_planes, matmul_packed_tile_pooled, matmul_packed_tile_with, PackedPlanes,
-    PackedPool, PopcountKernel,
+    matmul_packed_planes, matmul_packed_tile_pooled, matmul_packed_tile_rowslice,
+    matmul_packed_tile_stolen, matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
+    TilePolicy,
 };
 use bitsmm::bits::plane::{decompose, PlaneKind};
 use bitsmm::bits::twos::{max_value, min_value, Bits};
@@ -139,6 +140,140 @@ fn threaded_equals_single_thread_equals_native_all_widths() {
             }
         }
     }
+}
+
+/// The work-stealing 2-D tile scheduler is bit-identical to the serial
+/// kernel, the equal-row-slice PR 2 partitioner, and the native loop
+/// across every width 1..=16, both plane kinds, and the skewed shapes
+/// the scheduler exists for (single-row, single-column, wide-K),
+/// including tail-word k values — under tiling policies that force
+/// maximal tile counts and steal traffic.
+#[test]
+fn stolen_2d_tiles_equal_serial_and_native_all_widths() {
+    let pool = PackedPool::new(4).unwrap();
+    let mut rng = Pcg32::new(0x2d_713e);
+    for bits in 1..=16u32 {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        // tall-thin, wide-short, and a 2-D shape; k straddles words
+        for (m, k, n) in [(1usize, 65usize, 23usize), (23, 63, 1), (7, 128, 9)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+            let want = ref_matmul_i64(&a, &b, m, k, n);
+            assert_eq!(matmul_native(&a, &b, m, k, n, bits).unwrap(), want);
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let pa = std::sync::Arc::new(
+                    PackedPlanes::pack_rows(&a, m, k, bits, kind).unwrap(),
+                );
+                let pb = std::sync::Arc::new(
+                    PackedPlanes::pack_cols(&b, k, n, bits, kind).unwrap(),
+                );
+                let serial =
+                    matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar)
+                        .unwrap();
+                assert_eq!(serial, want, "{kind:?} serial bits={bits} {m}x{k}x{n}");
+                let rowslice = matmul_packed_tile_rowslice(
+                    &pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto,
+                )
+                .unwrap();
+                assert_eq!(rowslice, want, "{kind:?} rowslice bits={bits} {m}x{k}x{n}");
+                for policy in [
+                    TilePolicy::AUTO,
+                    TilePolicy { tile_rows: 1, tile_cols: 1 },
+                    TilePolicy { tile_rows: 0, tile_cols: 2 },
+                    TilePolicy { tile_rows: 3, tile_cols: 0 },
+                ] {
+                    let (stolen, stats) = matmul_packed_tile_stolen(
+                        &pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        stolen, want,
+                        "{kind:?} stolen bits={bits} {m}x{k}x{n} {policy:?}"
+                    );
+                    assert!(stats.tiles >= 1);
+                    assert!(stats.max_worker_tiles >= stats.min_worker_tiles);
+                }
+            }
+        }
+    }
+}
+
+/// Sign-plane and tail-word edges under the stolen scheduler: operands
+/// saturated at the width's minimum make the SBMwC MSb (sign) plane
+/// all-ones, and k values straddle the 64-digit word boundary — the
+/// stolen tiling must not disturb either correction.
+#[test]
+fn stolen_tiling_sign_plane_and_tail_word_edges() {
+    let pool = PackedPool::new(3).unwrap();
+    for bits in [1u32, 2, 8, 16] {
+        let (m, n) = (1usize, 5usize); // single-row: pure column tiling
+        for k in [1usize, 63, 64, 65, 129] {
+            let fill = min_value(bits);
+            let a = vec![fill; m * k];
+            let mut b = vec![fill; k * n];
+            b[k / 2 * n] = 0; // non-uniform product
+            let want = ref_matmul_i64(&a, &b, m, k, n);
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let pa = std::sync::Arc::new(
+                    PackedPlanes::pack_rows(&a, m, k, bits, kind).unwrap(),
+                );
+                let pb = std::sync::Arc::new(
+                    PackedPlanes::pack_cols(&b, k, n, bits, kind).unwrap(),
+                );
+                let (stolen, _) = matmul_packed_tile_stolen(
+                    &pool,
+                    &pa,
+                    &pb,
+                    0,
+                    m,
+                    0,
+                    n,
+                    PopcountKernel::Auto,
+                    TilePolicy { tile_rows: 1, tile_cols: 2 },
+                )
+                .unwrap();
+                assert_eq!(stolen, want, "{kind:?} bits={bits} k={k}");
+            }
+        }
+    }
+}
+
+/// Random tile policies never change the integers: for arbitrary
+/// shapes, widths, and (tile_rows, tile_cols) knob values — including
+/// 0 (auto) and values larger than the shape — the stolen scheduler
+/// reproduces the serial kernel exactly.
+#[test]
+fn prop_stolen_tiling_bit_identical_for_any_policy() {
+    let pool = PackedPool::new(3).unwrap();
+    let gen = Gen::pair(
+        Gen::pair(Gen::u32s(1, 16), Gen::u32s(0, u32::MAX)), // (bits, seed)
+        Gen::pair(
+            Gen::pair(Gen::u32s(1, 9), Gen::pair(Gen::u32s(1, 140), Gen::u32s(1, 40))), // (m,(k,n))
+            Gen::pair(Gen::u32s(0, 12), Gen::u32s(0, 48)), // (tile_rows, tile_cols)
+        ),
+    );
+    forall("stolen == serial for any policy", 60, gen, |&((bits, seed), ((m, (k, n)), (tr, tc)))| {
+        let (m, k, n) = (m as usize, k as usize, n as usize);
+        let mut rng = Pcg32::new(seed as u64 ^ 0x2d7);
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+        let pa = std::sync::Arc::new(
+            PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap(),
+        );
+        let pb = std::sync::Arc::new(
+            PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Booth).unwrap(),
+        );
+        let serial =
+            matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar).unwrap();
+        let policy = TilePolicy { tile_rows: tr as usize, tile_cols: tc as usize };
+        let (stolen, stats) =
+            matmul_packed_tile_stolen(&pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy)
+                .unwrap();
+        serial == ref_matmul_i64(&a, &b, m, k, n)
+            && stolen == serial
+            && stats.max_worker_tiles >= stats.min_worker_tiles
+    });
 }
 
 /// Cross-precision plane slicing is exact: a `b'`-bit slice of a

@@ -182,6 +182,32 @@ fn two_precision_serving_packs_each_weight_once() {
     }
 }
 
+/// The work-stealing 2-D tile scheduler behind `Backend::Packed` must
+/// not change served integers for any tile granularity — including
+/// degenerate 1×1 tiles that maximise steal traffic — and its
+/// steal/imbalance telemetry must surface through the server metrics.
+#[test]
+fn tile_granularity_never_changes_served_results() {
+    let model = Arc::new(mlp_zoo(9));
+    let ins = inputs(24, 21);
+    let (want, _, _) = serve_all(model.clone(), base_cfg(2), ins.clone()).unwrap();
+    for (rows, cols) in [(0usize, 0usize), (1, 1), (0, 3), (4, 0)] {
+        let mut cfg = base_cfg(2);
+        cfg.backend = Backend::Packed;
+        cfg.packed_threads = 3;
+        cfg.packed_tile_rows = rows;
+        cfg.packed_tile_cols = cols;
+        let (got, report, metrics) = serve_all(model.clone(), cfg, ins.clone()).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.output, b.output, "tiles {rows}x{cols} diverged at id {}", a.id);
+        }
+        assert!(report.steal.tiles >= 1, "tiles {rows}x{cols}: no pooled run recorded");
+        assert_eq!(metrics.steal, report.steal, "metrics mirror the report");
+        assert!(report.steal.max_worker_tiles >= report.steal.min_worker_tiles);
+        assert!(metrics.steal_rate() >= 0.0 && metrics.steal_rate() <= 1.0);
+    }
+}
+
 #[test]
 fn zero_workers_rejected() {
     let model = Arc::new(mlp_zoo(9));
