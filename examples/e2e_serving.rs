@@ -8,23 +8,91 @@
 //!   per-layer precision → cycle-accounted serving, with results
 //!   cross-validated against the cycle-accurate hardware simulator.
 //!
-//! Workloads (the space use cases of §I):
-//!   1. MLP classifier over instrument vectors (batched serving, PJRT).
-//!   2. CNN over a 16×16 payload tile (native backend, conv→im2col).
-//!   3. Transformer attention block (native backend).
+//! Workloads (the space use cases of §I), **all served through the
+//! same `serve_all` path** — the server takes tensor-shaped requests,
+//! so the conv and attention zoo models are no longer offline-only:
+//!   1. MLP classifier over instrument vectors (batch-stacked rows).
+//!   2. CNN over 16×16 payload tiles (per-item image requests,
+//!      conv→im2col, packed-vs-native cross-check).
+//!   3. Transformer attention block (per-item token-matrix requests,
+//!      packed-vs-native cross-check).
+//!   4. Trained classifier accuracy (when the artifact exists).
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example e2e_serving
 //! ```
 
-use bitsmm::coordinator::{serve_all, Backend, BatcherConfig, Scheduler, ServerConfig};
-use bitsmm::nn::model::{attention_zoo, cnn_zoo, forward_cnn, mlp_zoo};
+use bitsmm::coordinator::{
+    serve_all, shaped_inputs, Backend, BatcherConfig, Scheduler, ServerConfig,
+};
+use bitsmm::nn::model::{attention_zoo, cnn_zoo, mlp_zoo, Model};
 use bitsmm::nn::tensor::QTensor;
-use bitsmm::prng::Pcg32;
 use bitsmm::report::{f, Table};
 use bitsmm::sim::array::SaConfig;
 use bitsmm::sim::mac_common::MacVariant;
 use std::sync::Arc;
+
+/// Serve a zoo model end-to-end on Native, cross-check request 0
+/// against a direct forward, re-serve on Packed and assert bit
+/// identity, then print the serving table.
+fn serve_tensor_workload(
+    title: &str,
+    model: Arc<Model>,
+    sa: SaConfig,
+    n_requests: usize,
+    seed: u64,
+) -> bitsmm::Result<()> {
+    let ins = shaped_inputs(&model, n_requests, seed);
+    let mut cfg = ServerConfig::new(sa, Backend::Native);
+    cfg.workers = 2;
+    let t0 = std::time::Instant::now();
+    let (responses, report, metrics) = serve_all(model.clone(), cfg, ins.clone())?;
+    let wall = t0.elapsed();
+    assert_eq!(metrics.requests, n_requests as u64);
+    assert_eq!(metrics.errors, 0);
+
+    // cross-check request 0 against a direct forward of the same model
+    let x0 = QTensor::new(
+        ins[0].data.clone(),
+        ins[0].shape.clone(),
+        model.input_scale,
+        model.input_bits,
+    )?;
+    let mut direct = Scheduler::new(sa, Backend::Native);
+    let y0 = model.forward(&x0, &mut direct)?;
+    let expect: Vec<f64> = y0.data.iter().map(|&q| q as f64 * y0.scale).collect();
+    assert_eq!(responses[0].output, Ok(expect), "served vs direct forward");
+
+    // the serving-path MAC accounting equals the static census for the
+    // same request count (per-item batches included)
+    let census = model.stats(n_requests).macs;
+    assert_eq!(report.macs, census, "served MACs vs census");
+
+    // packed backend serves bit-identical outputs
+    let mut pcfg = ServerConfig::new(sa, Backend::Packed);
+    pcfg.workers = 2;
+    let (packed, preport, _) = serve_all(model.clone(), pcfg, ins)?;
+    assert!(preport.packed_execs > 0, "packed engine must have executed");
+    for (a, b) in responses.iter().zip(&packed) {
+        assert_eq!(a.output, b.output, "native vs packed diverged at id {}", a.id);
+    }
+
+    let p = metrics.latency.percentiles(&[50.0, 95.0, 99.0]);
+    let mut t = Table::new(title, &["metric", "value"]);
+    t.row(&["model".into(), format!("{} (input {:?})", model.name, model.input_shape)]);
+    t.row(&["requests".into(), format!("{n_requests}")]);
+    t.row(&["output len / request".into(),
+        format!("{}", responses[0].output.as_ref().unwrap().len())]);
+    t.row(&["wall time".into(), format!("{wall:?}")]);
+    t.row(&["mean batch".into(), f(metrics.mean_batch())]);
+    t.row(&["p50 / p95 / p99 latency (us)".into(), format!("{} / {} / {}", p[0], p[1], p[2])]);
+    t.row(&["MACs served (== census)".into(), format!("{}", report.macs)]);
+    t.row(&["hw cycles (timing model)".into(), format!("{}", report.hw_cycles)]);
+    t.row(&["hw GOPS @300MHz".into(), f(report.hw_gops(300e6))]);
+    t.row(&["packed vs native".into(), "bit-identical".into()]);
+    print!("{}", t.render());
+    Ok(())
+}
 
 fn main() -> bitsmm::Result<()> {
     let sa = SaConfig::new(4, 16, MacVariant::Booth);
@@ -52,10 +120,7 @@ fn main() -> bitsmm::Result<()> {
         linger: std::time::Duration::from_millis(2),
     };
 
-    let mut rng = Pcg32::new(7);
-    let inputs: Vec<Vec<i32>> = (0..n_requests)
-        .map(|_| (0..64).map(|_| rng.range_i32(-128, 127)).collect())
-        .collect();
+    let inputs = shaped_inputs(&model, n_requests, 7);
 
     let t0 = std::time::Instant::now();
     let (responses, report, metrics) = serve_all(model.clone(), cfg, inputs.clone())?;
@@ -66,23 +131,20 @@ fn main() -> bitsmm::Result<()> {
     // hardware simulator (bit-exact co-simulation contract)
     let mut sim_sched = Scheduler::new(sa, Backend::Simulate);
     for (i, resp) in responses.iter().take(3).enumerate() {
-        let x = QTensor::new(inputs[i].clone(), vec![1, 64], model.input_scale, model.input_bits)?;
+        let x = QTensor::new(inputs[i].data.clone(), vec![1, 64], model.input_scale, model.input_bits)?;
         let y = model.forward(&x, &mut sim_sched.as_exec())?;
         let expect: Vec<f64> = y.data.iter().map(|&q| q as f64 * y.scale).collect();
-        assert_eq!(resp.output, expect, "request {i}: served vs simulated hardware");
+        assert_eq!(resp.output, Ok(expect), "request {i}: served vs simulated hardware");
     }
     println!("[e2e] served outputs bit-match the cycle-accurate hardware simulation");
 
+    let p = metrics.latency.percentiles(&[50.0, 95.0, 99.0]);
     let mut t = Table::new("E2E workload 1 — MLP serving (64→64→32→10, per-layer 8/4/4 bits)", &["metric", "value"]);
     t.row(&["requests".into(), format!("{n_requests}")]);
     t.row(&["wall time".into(), format!("{wall:?}")]);
     t.row(&["throughput (req/s)".into(), f(n_requests as f64 / wall.as_secs_f64())]);
     t.row(&["mean batch".into(), f(metrics.mean_batch())]);
-    t.row(&["p50 / p95 / p99 latency (us)".into(),
-        format!("{} / {} / {}",
-            metrics.latency.percentile_us(50.0),
-            metrics.latency.percentile_us(95.0),
-            metrics.latency.percentile_us(99.0))]);
+    t.row(&["p50 / p95 / p99 latency (us)".into(), format!("{} / {} / {}", p[0], p[1], p[2])]);
     t.row(&["MACs served".into(), format!("{}", report.macs)]);
     t.row(&["hw cycles (timing model)".into(), format!("{}", report.hw_cycles)]);
     t.row(&["hw GOPS @300MHz".into(), f(report.hw_gops(300e6))]);
@@ -91,46 +153,23 @@ fn main() -> bitsmm::Result<()> {
     t.row(&["pjrt hits / native fallbacks".into(), format!("{} / {}", report.pjrt_hits, report.native_fallbacks)]);
     print!("{}", t.render());
 
-    // ---------------- workload 2: CNN payload tile -------------------
-    let cnn = cnn_zoo(2);
-    let mut rng = Pcg32::new(8);
-    let img = QTensor::new(
-        (0..256).map(|_| rng.range_i32(-128, 127)).collect(),
-        vec![1, 16, 16],
-        cnn.input_scale,
-        cnn.input_bits,
+    // ---------------- workload 2: CNN payload tiles, served ----------
+    serve_tensor_workload(
+        "E2E workload 2 — CNN 16x16 payload tiles served (per-item batches)",
+        Arc::new(cnn_zoo(2)),
+        sa,
+        16,
+        8,
     )?;
-    let mut sched = Scheduler::new(sa, Backend::Native);
-    let t0 = std::time::Instant::now();
-    let y = forward_cnn(&cnn, &img, &mut sched.as_exec())?;
-    let cnn_wall = t0.elapsed();
-    let stats = cnn.stats(1);
-    let mut t = Table::new("E2E workload 2 — CNN 16x16 payload tile", &["metric", "value"]);
-    t.row(&["output shape".into(), format!("{:?}", y.shape)]);
-    t.row(&["total MACs (census)".into(), format!("{}", stats.macs)]);
-    t.row(&["hw cycles".into(), format!("{}", sched.report.hw_cycles)]);
-    t.row(&["hw latency @300MHz".into(), format!("{:.1} us", sched.report.hw_cycles as f64 / 300e6 * 1e6)]);
-    t.row(&["host wall".into(), format!("{cnn_wall:?}")]);
-    t.row(&["tiles".into(), format!("{}", sched.report.tiles)]);
-    print!("{}", t.render());
 
-    // ---------------- workload 3: attention block --------------------
-    let attn = attention_zoo(3);
-    let mut rng = Pcg32::new(9);
-    let x = QTensor::new(
-        (0..16 * 32).map(|_| rng.range_i32(-128, 127)).collect(),
-        vec![16, 32],
-        attn.input_scale,
-        attn.input_bits,
+    // ---------------- workload 3: attention blocks, served -----------
+    serve_tensor_workload(
+        "E2E workload 3 — transformer attention served (16 tokens, d=32)",
+        Arc::new(attention_zoo(3)),
+        sa,
+        16,
+        9,
     )?;
-    let mut sched = Scheduler::new(sa, Backend::Native);
-    let y = attn.forward(&x, &mut sched.as_exec())?;
-    let mut t = Table::new("E2E workload 3 — transformer attention block (16 tokens, d=32)", &["metric", "value"]);
-    t.row(&["output shape".into(), format!("{:?}", y.shape)]);
-    t.row(&["projection matmuls".into(), format!("{}", sched.report.matmuls)]);
-    t.row(&["hw cycles".into(), format!("{}", sched.report.hw_cycles)]);
-    t.row(&["hw latency @300MHz".into(), format!("{:.1} us", sched.report.hw_cycles as f64 / 300e6 * 1e6)]);
-    print!("{}", t.render());
 
     // ---------------- workload 4: trained classifier -----------------
     // A genuinely trained (JAX/SGD) quantized model: measure the
@@ -159,6 +198,6 @@ fn main() -> bitsmm::Result<()> {
         Err(e) => println!("[e2e] trained model unavailable ({e:#})"),
     }
 
-    println!("\ne2e OK — all workloads served; co-simulation bit-exact.");
+    println!("\ne2e OK — all three zoo models served end-to-end; packed bit-identical; co-simulation bit-exact.");
     Ok(())
 }

@@ -91,18 +91,26 @@ impl<T> Batcher<T> {
                 }
                 g = self.cv.wait(g).unwrap();
             }
-            // have at least one: linger for a full batch
-            let deadline = Instant::now() + self.cfg.linger;
+            // have at least one: linger for a full batch. The deadline
+            // is anchored to when the *oldest currently-queued* item
+            // was enqueued — not to when this consumer woke up — so a
+            // request that already waited while the worker ran the
+            // previous batch never pays a second full linger. It is
+            // re-derived each iteration: if another consumer takes the
+            // front item mid-wait, the new front's (younger) enqueue
+            // time re-anchors the deadline instead of leaking the old,
+            // possibly expired one onto a fresh request.
             while g.queue.len() < self.cfg.max_batch && !g.closed {
+                let front_t = match g.queue.front() {
+                    Some(&(_, t)) => t,
+                    None => break, // raced: re-enter the outer wait
+                };
+                let deadline = front_t + self.cfg.linger;
                 let now = Instant::now();
                 if now >= deadline {
                     break;
                 }
-                let (g2, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
-                g = g2;
-                if timeout.timed_out() {
-                    break;
-                }
+                g = self.cv.wait_timeout(g, deadline - now).unwrap().0;
             }
             if g.queue.is_empty() {
                 continue; // raced with another consumer
@@ -149,6 +157,27 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![42]);
         assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn stale_item_flushes_without_second_linger() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            linger: Duration::from_millis(300),
+        });
+        b.push(7);
+        // simulate the consumer being busy with a previous batch for
+        // longer than the linger: the deadline anchors to the enqueue
+        // time, so the already-stale item must flush immediately
+        std::thread::sleep(Duration::from_millis(400));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items, vec![7]);
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "stale item paid a second linger: {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

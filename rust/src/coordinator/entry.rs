@@ -3,8 +3,9 @@
 
 use crate::cli::Args;
 use crate::coordinator::scheduler::Backend;
-use crate::coordinator::server::{serve_all, ServerConfig};
+use crate::coordinator::server::{serve_all, shaped_inputs, ServerConfig};
 use crate::coordinator::BatcherConfig;
+use crate::nn::model::zoo_model;
 use crate::prng::Pcg32;
 use crate::report::{f, Table};
 use crate::sim::array::SaConfig;
@@ -47,11 +48,7 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown backend '{other}'"),
     };
-    let model = match args.get("model").unwrap() {
-        "mlp" => crate::nn::model::mlp_zoo(1),
-        "attn" => anyhow::bail!("attention serving uses examples/e2e_serving.rs (token inputs)"),
-        other => anyhow::bail!("unknown model '{other}'"),
-    };
+    let model = zoo_model(args.get("model").unwrap(), 1)?;
     let n_requests: usize = args.req("requests")?;
     let mut cfg = ServerConfig::new(sa, backend);
     cfg.workers = args.req("workers")?;
@@ -64,13 +61,10 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
     cfg.packed_tile_rows = args.req("packed-tile-rows")?;
     cfg.packed_tile_cols = args.req("packed-tile-cols")?;
 
-    let d_in = model.input_shape[0];
-    let mut rng = Pcg32::new(42);
-    let lo = crate::bits::twos::min_value(model.input_bits);
-    let hi = crate::bits::twos::max_value(model.input_bits);
-    let inputs: Vec<Vec<i32>> = (0..n_requests)
-        .map(|_| (0..d_in).map(|_| rng.range_i32(lo, hi)).collect())
-        .collect();
+    let inputs = shaped_inputs(&model, n_requests, 42);
+    let model_name = model.name.clone();
+    let input_shape = model.input_shape.clone();
+    let census = model.stats(n_requests).macs;
 
     let backend_name = cfg.backend.name();
     let (responses, report, metrics) = serve_all(Arc::new(model), cfg, inputs)?;
@@ -79,12 +73,15 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
         &format!("serve: {} requests, backend={backend_name}, SA {}", responses.len(), sa.label()),
         &["metric", "value"],
     );
-    t.row(&["requests".into(), format!("{}", metrics.requests)]);
+    t.row(&["model".into(), format!("{model_name} (input {input_shape:?})")]);
+    t.row(&["requests ok / errors".into(), format!("{} / {}", metrics.requests, metrics.errors)]);
     t.row(&["batches".into(), format!("{}", metrics.batches)]);
     t.row(&["mean batch".into(), f(metrics.mean_batch())]);
-    t.row(&["p50 latency (us)".into(), format!("{}", metrics.latency.percentile_us(50.0))]);
-    t.row(&["p95 latency (us)".into(), format!("{}", metrics.latency.percentile_us(95.0))]);
-    t.row(&["p99 latency (us)".into(), format!("{}", metrics.latency.percentile_us(99.0))]);
+    let p = metrics.latency.percentiles(&[50.0, 95.0, 99.0]);
+    t.row(&["p50 latency (us)".into(), format!("{}", p[0])]);
+    t.row(&["p95 latency (us)".into(), format!("{}", p[1])]);
+    t.row(&["p99 latency (us)".into(), format!("{}", p[2])]);
+    t.row(&["MAC census (model)".into(), format!("{census}")]);
     t.row(&["wall throughput (req/s)".into(), f(metrics.throughput_rps())]);
     t.row(&["MACs served".into(), format!("{}", report.macs)]);
     t.row(&["hw cycles (model)".into(), format!("{}", report.hw_cycles)]);
@@ -144,11 +141,7 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
         }
         other => anyhow::bail!("unknown backend '{other}' in config"),
     };
-    anyhow::ensure!(
-        cfg.str_or("server.model", "mlp") == "mlp",
-        "launch currently serves the mlp zoo model"
-    );
-    let model = crate::nn::model::mlp_zoo(1);
+    let model = zoo_model(cfg.str_or("server.model", "mlp"), 1)?;
     let n_requests = usize::try_from(cfg.int_or("server.requests", 64))?;
     let mut server_cfg = ServerConfig::new(sa, backend);
     server_cfg.workers = usize::try_from(cfg.int_or("server.workers", 2))?;
@@ -164,13 +157,9 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     server_cfg.packed_tile_rows = usize::try_from(cfg.int_or("server.packed_tile_rows", 0))?;
     server_cfg.packed_tile_cols = usize::try_from(cfg.int_or("server.packed_tile_cols", 0))?;
 
-    let d_in = model.input_shape[0];
-    let mut rng = Pcg32::new(42);
-    let lo = crate::bits::twos::min_value(model.input_bits);
-    let hi = crate::bits::twos::max_value(model.input_bits);
-    let inputs: Vec<Vec<i32>> = (0..n_requests)
-        .map(|_| (0..d_in).map(|_| rng.range_i32(lo, hi)).collect())
-        .collect();
+    let inputs = shaped_inputs(&model, n_requests, 42);
+    let model_name = model.name.clone();
+    let input_shape = model.input_shape.clone();
     let clock_hz = server_cfg.clock_hz;
     let (responses, report, metrics) = serve_all(Arc::new(model), server_cfg, inputs)?;
     let mut t = Table::new(
@@ -183,9 +172,11 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
         ),
         &["metric", "value"],
     );
+    t.row(&["model".into(), format!("{model_name} (input {input_shape:?})")]);
+    t.row(&["requests ok / errors".into(), format!("{} / {}", metrics.requests, metrics.errors)]);
     t.row(&["throughput (req/s)".into(), f(metrics.throughput_rps())]);
-    t.row(&["p50 / p99 latency (us)".into(),
-        format!("{} / {}", metrics.latency.percentile_us(50.0), metrics.latency.percentile_us(99.0))]);
+    let p = metrics.latency.percentiles(&[50.0, 99.0]);
+    t.row(&["p50 / p99 latency (us)".into(), format!("{} / {}", p[0], p[1])]);
     t.row(&["hw GOPS @config clock".into(), f(report.hw_gops(clock_hz))]);
     t.row(&["MACs / hw cycles".into(), format!("{} / {}", report.macs, report.hw_cycles)]);
     print!("{}", t.render());
@@ -318,6 +309,40 @@ packed_tile_cols = 4
         )
         .unwrap();
         launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_serves_cnn_and_attention_models() {
+        // the full zoo through the config-driven entry point — the
+        // former "launch currently serves the mlp zoo model" bail
+        for (model, backend) in [("cnn", "native"), ("attn", "native"), ("cnn", "packed"), ("attn", "packed")] {
+            let cfg = crate::config::Config::parse(&format!(
+                "name = \"zoo\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"{backend}\"
+model = \"{model}\"
+requests = 2
+workers = 1
+max_batch = 2
+"
+            ))
+            .unwrap();
+            launch_from_config(&cfg).unwrap_or_else(|e| panic!("{model}/{backend}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn launch_rejects_unknown_model() {
+        let cfg = crate::config::Config::parse(
+            "[server]
+model = \"resnet\"
+",
+        )
+        .unwrap();
+        assert!(launch_from_config(&cfg).is_err());
     }
 
     #[test]

@@ -27,15 +27,26 @@ impl LatencyStats {
         self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
     }
 
-    /// Exact percentile (nearest-rank). `p` in [0, 100].
-    pub fn percentile_us(&self, p: f64) -> u64 {
+    /// Exact percentiles (nearest-rank), each `p` in [0, 100]. One sort
+    /// serves every requested percentile — report tables asking for
+    /// p50/p95/p99 pay the sort once, not once per row.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
         if self.samples_us.is_empty() {
-            return 0;
+            return vec![0; ps.len()];
         }
         let mut s = self.samples_us.clone();
         s.sort_unstable();
-        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
-        s[rank.min(s.len() - 1)]
+        ps.iter()
+            .map(|&p| {
+                let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+                s[rank.min(s.len() - 1)]
+            })
+            .collect()
+    }
+
+    /// Single-percentile convenience over [`LatencyStats::percentiles`].
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        self.percentiles(&[p])[0]
     }
 
     pub fn merge(&mut self, other: &LatencyStats) {
@@ -47,8 +58,11 @@ impl LatencyStats {
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub latency: LatencyStats,
-    /// Requests completed.
+    /// Requests completed successfully.
     pub requests: u64,
+    /// Requests that failed validation or execution (their submitters
+    /// received an error response carrying the cause).
+    pub errors: u64,
     /// Batches executed.
     pub batches: u64,
     /// MAC operations served.
@@ -122,6 +136,22 @@ mod tests {
         assert_eq!(l.percentile_us(50.0), 60); // nearest-rank on 10 samples
         assert_eq!(l.percentile_us(100.0), 100);
         assert!((l.mean_us() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_percentiles_match_individual() {
+        let mut l = LatencyStats::default();
+        for us in [5u64, 1, 9, 3, 7] {
+            l.record(Duration::from_micros(us));
+        }
+        assert_eq!(l.percentiles(&[0.0, 50.0, 100.0]), vec![1, 5, 9]);
+        for p in [0.0, 25.0, 50.0, 90.0, 100.0] {
+            assert_eq!(l.percentile_us(p), l.percentiles(&[p])[0]);
+        }
+        assert_eq!(
+            LatencyStats::default().percentiles(&[50.0, 99.0]),
+            vec![0, 0]
+        );
     }
 
     #[test]

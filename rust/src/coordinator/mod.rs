@@ -26,7 +26,9 @@ pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::{LatencyStats, Metrics};
 pub use precision::PrecisionPolicy;
 pub use scheduler::{Backend, ExecutionReport, Scheduler};
-pub use server::{serve_all, InferenceServer, Request, Response, ServerConfig};
+pub use server::{
+    serve_all, shaped_inputs, InferenceServer, Request, Response, ServerConfig, TensorInput,
+};
 pub mod entry;
 pub use entry::{serve_all_entry, simulate_entry, SaParse};
 pub use tiler::{tile_matmul, TileJob, TilePlan};

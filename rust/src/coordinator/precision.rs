@@ -44,6 +44,11 @@ impl PrecisionPolicy {
                         crate::nn::layers::Layer::Linear(l) => &l.w,
                         crate::nn::layers::Layer::Conv2d(l) => &l.w,
                         crate::nn::layers::Layer::Attention(l) => &l.wq,
+                        // no weights, no arithmetic: any legal width
+                        crate::nn::layers::Layer::Flatten => {
+                            out.push(1);
+                            continue;
+                        }
                     };
                     let real: Vec<f64> = w.data.iter().map(|&q| q as f64 * w.scale).collect();
                     let mut chosen = crate::MAX_BITS;

@@ -3,7 +3,7 @@
 //! example (and the paper's future-work integration, §V).
 
 use crate::bits::packed::{PackedPool, PopcountKernel, TilePolicy};
-use crate::coordinator::batcher::{Batcher, BatcherConfig};
+use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Backend, ExecutionReport, Scheduler};
 use crate::nn::model::Model;
@@ -13,11 +13,57 @@ use crate::Result;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
-/// One inference request: a quantized input row for the model.
+/// A shaped request payload: quantized values on the model's input
+/// grid plus their shape, validated server-side against
+/// [`Model::input_shape`] — rank 1 for vector models (MLP rows), rank
+/// 2 for token matrices (attention), rank 3 for images (CNN).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorInput {
+    pub data: Vec<i32>,
+    pub shape: Vec<usize>,
+}
+
+impl TensorInput {
+    pub fn new(data: Vec<i32>, shape: Vec<usize>) -> TensorInput {
+        TensorInput { data, shape }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Plain vectors keep the historical row-request ergonomics.
+impl From<Vec<i32>> for TensorInput {
+    fn from(data: Vec<i32>) -> TensorInput {
+        let shape = vec![data.len()];
+        TensorInput { data, shape }
+    }
+}
+
+/// Random shaped requests on `model`'s input grid (any rank) — the one
+/// generator behind the CLI entries, the e2e example, and the
+/// integration tests, so the request contract cannot drift per caller.
+pub fn shaped_inputs(model: &Model, n: usize, seed: u64) -> Vec<TensorInput> {
+    let numel: usize = model.input_shape.iter().product();
+    let lo = crate::bits::twos::min_value(model.input_bits);
+    let hi = crate::bits::twos::max_value(model.input_bits);
+    let mut rng = crate::prng::Pcg32::new(seed);
+    (0..n)
+        .map(|_| {
+            TensorInput::new(
+                (0..numel).map(|_| rng.range_i32(lo, hi)).collect(),
+                model.input_shape.clone(),
+            )
+        })
+        .collect()
+}
+
+/// One inference request: a quantized, shaped input for the model.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    pub input: Vec<i32>,
+    pub input: TensorInput,
     pub submitted: Instant,
 }
 
@@ -25,8 +71,10 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    /// Output activations (dequantized logits).
-    pub output: Vec<f64>,
+    /// Output activations (dequantized logits), or the serving error —
+    /// validation and execution failures reach the submitter with
+    /// their cause instead of a silently dropped channel.
+    pub output: std::result::Result<Vec<f64>, String>,
     pub latency: std::time::Duration,
 }
 
@@ -99,13 +147,18 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start worker threads serving `model` (2-D inputs: each request
-    /// is one row; batches stack rows into one matmul pass).
+    /// Start worker threads serving `model`. Rank-1 (vector) models
+    /// stack whole batches into one `[rows, d]` matmul pass; rank-2
+    /// (token-matrix) and rank-3 (image) models run per item so conv
+    /// im2col and attention's data-dependent requantization never mix
+    /// requests — responses are bit-identical whether a request is
+    /// served alone or inside a batch.
     pub fn start(model: Arc<Model>, cfg: ServerConfig) -> Result<InferenceServer> {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
         anyhow::ensure!(
-            model.input_shape.len() == 1,
-            "row-serving requires vector inputs (got {:?})",
+            (1..=3).contains(&model.input_shape.len())
+                && model.input_shape.iter().all(|&d| d >= 1),
+            "servable models take non-degenerate rank 1-3 inputs (got {:?})",
             model.input_shape
         );
         let batcher = Arc::new(Batcher::new(cfg.batcher));
@@ -160,6 +213,7 @@ impl InferenceServer {
             report.merge(&r);
             metrics.latency.merge(&m.latency);
             metrics.requests += m.requests;
+            metrics.errors += m.errors;
             metrics.batches += m.batches;
             metrics.macs += m.macs;
             metrics.hw_cycles += m.hw_cycles;
@@ -186,69 +240,175 @@ fn worker_loop(
     }
     let mut metrics = Metrics::default();
     let t0 = Instant::now();
-    let d_in = model.input_shape[0];
+    // Per-kind batch assembly: rank-1 models are row-independent
+    // (linear stacks), so whole batches fuse into one [rows, d]
+    // matmul. Higher-rank inputs (images, token matrices) run per
+    // item — conv im2col is single-image and attention's
+    // data-dependent ctx requantization must never mix requests —
+    // which is also what makes responses bit-identical across batch
+    // compositions (DESIGN.md §Serving).
+    let stack_rows = model.input_shape.len() == 1;
     while let Some(batch) = batcher.next_batch() {
-        let rows = batch.items.len();
-        let mut stacked = Vec::with_capacity(rows * d_in);
-        for (req, _) in &batch.items {
-            debug_assert_eq!(req.input.len(), d_in);
-            stacked.extend_from_slice(&req.input);
-        }
-        let x = match QTensor::new(stacked, vec![rows, d_in], model.input_scale, model.input_bits)
-        {
-            Ok(x) => x,
-            Err(e) => {
-                log_drop(&batch, &e);
-                continue;
-            }
-        };
         let cycles_before = sched.report.hw_cycles;
         let macs_before = sched.report.macs;
+        let served_before = metrics.requests;
         // the scheduler itself is the executor (not an `as_exec`
         // closure) so the packed backend sees layer-cached weight
         // planes and packs each weight once per (layer, precision)
-        let result = model.forward(&x, &mut sched);
-        match result {
-            Ok(y) => {
-                let out_dim = y.shape[1];
-                for (i, (req, tx)) in batch.items.iter().enumerate() {
-                    let output: Vec<f64> = y.data[i * out_dim..(i + 1) * out_dim]
-                        .iter()
-                        .map(|&q| q as f64 * y.scale)
-                        .collect();
-                    let latency = req.submitted.elapsed();
-                    metrics.latency.record(latency);
-                    let _ = tx.send(Response {
-                        id: req.id,
-                        output,
-                        latency,
-                    });
-                }
-                metrics.requests += rows as u64;
-                metrics.batches += 1;
-                metrics.macs += sched.report.macs - macs_before;
-                metrics.hw_cycles += sched.report.hw_cycles - cycles_before;
-            }
-            Err(e) => log_drop(&batch, &e),
+        if stack_rows {
+            serve_stacked(model, &mut sched, batch, &mut metrics);
+        } else {
+            serve_per_item(model, &mut sched, batch, &mut metrics);
+        }
+        metrics.macs += sched.report.macs - macs_before;
+        metrics.hw_cycles += sched.report.hw_cycles - cycles_before;
+        // a batch counts as executed if it produced responses or did
+        // matmul work (e.g. a forward that failed mid-model) — only
+        // all-invalid batches that never reached the scheduler are
+        // excluded, so MACs are never attributed to zero batches
+        if metrics.requests > served_before || sched.report.macs > macs_before {
+            metrics.batches += 1;
         }
     }
     metrics.wall = t0.elapsed();
     (sched.report, metrics)
 }
 
-fn log_drop(batch: &crate::coordinator::batcher::Batch<(Request, mpsc::Sender<Response>)>, e: &anyhow::Error) {
-    eprintln!(
-        "[bitsmm-server] dropping batch of {}: {e:#}",
-        batch.items.len()
+/// Shape + range validation of one request against the model contract.
+/// Rejections become per-request error responses, never batch drops.
+fn validate_input(model: &Model, req: &Request) -> Result<()> {
+    anyhow::ensure!(
+        req.input.shape == model.input_shape,
+        "request {}: input shape {:?} does not match model input shape {:?}",
+        req.id,
+        req.input.shape,
+        model.input_shape
     );
+    anyhow::ensure!(
+        req.input.data.len() == req.input.numel(),
+        "request {}: {} values for shape {:?}",
+        req.id,
+        req.input.data.len(),
+        req.input.shape
+    );
+    let lo = crate::bits::twos::min_value(model.input_bits);
+    let hi = crate::bits::twos::max_value(model.input_bits);
+    anyhow::ensure!(
+        req.input.data.iter().all(|v| (lo..=hi).contains(v)),
+        "request {}: values exceed the model's {}-bit input range",
+        req.id,
+        model.input_bits
+    );
+    Ok(())
+}
+
+/// Deliver one response and account it.
+fn respond(
+    metrics: &mut Metrics,
+    id: u64,
+    submitted: Instant,
+    tx: &mpsc::Sender<Response>,
+    output: std::result::Result<Vec<f64>, String>,
+) {
+    let latency = submitted.elapsed();
+    match &output {
+        Ok(_) => {
+            metrics.latency.record(latency);
+            metrics.requests += 1;
+        }
+        Err(_) => metrics.errors += 1,
+    }
+    let _ = tx.send(Response {
+        id,
+        output,
+        latency,
+    });
+}
+
+/// Rank-1 assembly: stack every valid request into one `[rows, d]`
+/// matmul pass. Row-serving is batch-invariant because every layer of
+/// a vector model treats rows independently.
+fn serve_stacked(
+    model: &Model,
+    sched: &mut Scheduler,
+    batch: Batch<(Request, mpsc::Sender<Response>)>,
+    metrics: &mut Metrics,
+) {
+    let d_in = model.input_shape[0];
+    let mut stacked = Vec::with_capacity(batch.items.len() * d_in);
+    let mut valid: Vec<(&Request, &mpsc::Sender<Response>)> =
+        Vec::with_capacity(batch.items.len());
+    for (req, tx) in &batch.items {
+        match validate_input(model, req) {
+            Ok(()) => {
+                stacked.extend_from_slice(&req.input.data);
+                valid.push((req, tx));
+            }
+            Err(e) => respond(metrics, req.id, req.submitted, tx, Err(format!("{e:#}"))),
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    let rows = valid.len();
+    let run = QTensor::new(stacked, vec![rows, d_in], model.input_scale, model.input_bits)
+        .and_then(|x| model.forward(&x, sched));
+    match run {
+        Ok(y) => {
+            let out_dim = y.numel() / rows;
+            for (i, (req, tx)) in valid.iter().enumerate() {
+                let output = y.data[i * out_dim..(i + 1) * out_dim]
+                    .iter()
+                    .map(|&q| q as f64 * y.scale)
+                    .collect();
+                respond(metrics, req.id, req.submitted, tx, Ok(output));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (req, tx) in &valid {
+                respond(metrics, req.id, req.submitted, tx, Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// Rank-2/3 assembly: each request runs its own forward pass, so
+/// im2col stays single-image, attention's data-dependent `ctx_scale`
+/// requantization never mixes requests, and one request's failure
+/// cannot take its batch-mates down. The batch is consumed so each
+/// payload *moves* into its forward pass — no per-request copy.
+fn serve_per_item(
+    model: &Model,
+    sched: &mut Scheduler,
+    batch: Batch<(Request, mpsc::Sender<Response>)>,
+    metrics: &mut Metrics,
+) {
+    for (req, tx) in batch.items {
+        let (id, submitted) = (req.id, req.submitted);
+        let run = match validate_input(model, &req) {
+            Ok(()) => run_one(model, sched, req.input),
+            Err(e) => Err(e),
+        };
+        respond(metrics, id, submitted, &tx, run.map_err(|e| format!("{e:#}")));
+    }
+}
+
+/// Execute a single validated shaped request (consumes the payload).
+fn run_one(model: &Model, sched: &mut Scheduler, input: TensorInput) -> Result<Vec<f64>> {
+    let x = QTensor::new(input.data, input.shape, model.input_scale, model.input_bits)?;
+    let y = model.forward(&x, sched)?;
+    Ok(y.data.iter().map(|&q| q as f64 * y.scale).collect())
 }
 
 /// Convenience: run a closed set of requests through a fresh server and
-/// gather everything (used by examples/benches).
-pub fn serve_all(
+/// gather everything (used by examples/benches). Accepts anything that
+/// converts into a [`TensorInput`] — plain `Vec<i32>` rows for vector
+/// models, shaped payloads for images / token matrices.
+pub fn serve_all<I: Into<TensorInput>>(
     model: Arc<Model>,
     cfg: ServerConfig,
-    inputs: Vec<Vec<i32>>,
+    inputs: Vec<I>,
 ) -> Result<(Vec<Response>, ExecutionReport, Metrics)> {
     let server = InferenceServer::start(model, cfg)?;
     let rxs: Vec<_> = inputs
@@ -257,7 +417,7 @@ pub fn serve_all(
         .map(|(i, input)| {
             server.submit(Request {
                 id: i as u64,
-                input,
+                input: input.into(),
                 submitted: Instant::now(),
             })
         })
@@ -298,9 +458,10 @@ mod tests {
         assert_eq!(resp.len(), 20);
         for (i, r) in resp.iter().enumerate() {
             assert_eq!(r.id, i as u64);
-            assert_eq!(r.output.len(), 10);
+            assert_eq!(r.output.as_ref().unwrap().len(), 10);
         }
         assert_eq!(metrics.requests, 20);
+        assert_eq!(metrics.errors, 0);
         assert!(report.macs > 0 && report.hw_cycles > 0);
         assert!(metrics.mean_batch() >= 1.0);
     }
@@ -385,6 +546,99 @@ mod tests {
                 "tiles {rows}x{cols}"
             );
         }
+    }
+
+    #[test]
+    fn shaped_requests_serve_image_and_token_models() {
+        for (name, model) in [
+            ("cnn", crate::nn::model::cnn_zoo(2)),
+            ("attn", crate::nn::model::attention_zoo(3)),
+        ] {
+            let model = Arc::new(model);
+            let ins = shaped_inputs(&model, 4, 0xbeef);
+            let cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+            let (resp, report, metrics) = serve_all(model.clone(), cfg, ins.clone()).unwrap();
+            assert_eq!(resp.len(), 4, "{name}");
+            assert_eq!(metrics.requests, 4, "{name}");
+            assert_eq!(metrics.errors, 0, "{name}");
+            // the serving-path MACs equal the static census for the
+            // same request count (per-item batch accounting)
+            assert_eq!(report.macs, model.stats(4).macs, "{name}");
+            // responses match a direct forward of the same payload
+            let mut direct = Scheduler::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+            for (i, r) in resp.iter().enumerate() {
+                let x = QTensor::new(
+                    ins[i].data.clone(),
+                    ins[i].shape.clone(),
+                    model.input_scale,
+                    model.input_bits,
+                )
+                .unwrap();
+                let y = model.forward(&x, &mut direct).unwrap();
+                let want: Vec<f64> = y.data.iter().map(|&q| q as f64 * y.scale).collect();
+                assert_eq!(r.output, Ok(want), "{name} request {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_requests_surface_their_cause() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let server = InferenceServer::start(model, cfg).unwrap();
+        // wrong shape: a 32-vector against the 64-input model
+        let rx = server.submit(Request {
+            id: 0,
+            input: vec![1i32; 32].into(),
+            submitted: Instant::now(),
+        });
+        let r = rx.recv().unwrap();
+        let err = r.output.unwrap_err();
+        assert!(err.contains("shape"), "cause must name the shape: {err}");
+        // out-of-range values against the 8-bit input contract
+        let rx = server.submit(Request {
+            id: 1,
+            input: vec![300i32; 64].into(),
+            submitted: Instant::now(),
+        });
+        let err = rx.recv().unwrap().output.unwrap_err();
+        assert!(err.contains("8-bit"), "cause must name the range: {err}");
+        let (_, metrics) = server.shutdown();
+        assert_eq!((metrics.requests, metrics.errors), (0, 2));
+    }
+
+    #[test]
+    fn failed_forward_surfaces_error_and_counts_executed_batch() {
+        // passes validation but fails mid-forward: layers 1-2 run,
+        // layer 3's weight dims mismatch the incoming activation
+        let mut model = crate::nn::model::mlp_zoo(5);
+        if let crate::nn::Layer::Linear(l) = &mut model.layers[2] {
+            l.w = QTensor::zeros(vec![7, 3], 1.0, 4);
+        }
+        let model = Arc::new(model);
+        let cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let (resp, _, metrics) = serve_all(model, cfg, inputs(3, 64, 8)).unwrap();
+        for r in &resp {
+            let err = r.output.as_ref().unwrap_err();
+            assert!(err.contains("linear dims"), "cause must reach the caller: {err}");
+        }
+        assert_eq!((metrics.requests, metrics.errors), (0, 3));
+        assert!(metrics.macs > 0, "two layers executed before the failure");
+        assert!(metrics.batches >= 1, "a batch that did matmul work is an executed batch");
+    }
+
+    #[test]
+    fn tensor_shaped_models_reject_vector_servers_no_more() {
+        // rank-2 and rank-3 input shapes start; rank-0 is rejected
+        for model in [crate::nn::model::cnn_zoo(1), crate::nn::model::attention_zoo(1)] {
+            let cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+            let server = InferenceServer::start(Arc::new(model), cfg).unwrap();
+            server.shutdown();
+        }
+        let mut degenerate = crate::nn::model::mlp_zoo(1);
+        degenerate.input_shape = vec![];
+        let cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        assert!(InferenceServer::start(Arc::new(degenerate), cfg).is_err());
     }
 
     #[test]

@@ -103,7 +103,7 @@ fn cmd_launch(argv: &[String]) -> Result<()> {
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "run the inference server on a zoo model")
-        .opt("model", "zoo model: mlp", Some("mlp"))
+        .opt("model", "zoo model: mlp|cnn|attn", Some("mlp"))
         .opt("backend", "native|packed|simulate|pjrt", Some("native"))
         .opt("sa", "SA geometry colsxrows (paper order)", Some("16x4"))
         .opt("variant", "MAC variant booth|sbmwc", Some("booth"))

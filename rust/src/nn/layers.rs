@@ -18,7 +18,7 @@ use crate::nn::tensor::{im2col, QTensor};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// A matmul executor. `a` is the multiplier operand (activations,
 /// LSb-first in hardware), `b` the multiplicand (weights, MSb-first).
@@ -248,6 +248,44 @@ impl LinearLayer {
     }
 }
 
+/// Lazily-built cache of a conv kernel's im2col transpose
+/// `[oc, c, kh, kw] → [c·kh·kw, oc]`. Shared across clones (an `Arc`
+/// inside) like [`PackedCache`], and under the same invariant: weights
+/// are immutable once a model serves, so the transpose is derived at
+/// most once and never invalidated — packed conv serving re-derives
+/// nothing per request.
+#[derive(Debug, Clone, Default)]
+pub struct TransposedKernelCache(Arc<OnceLock<QTensor>>);
+
+impl TransposedKernelCache {
+    pub fn new() -> TransposedKernelCache {
+        TransposedKernelCache::default()
+    }
+
+    /// The cached `[c·kh·kw, oc]` transpose of `w`, built on first use.
+    pub fn get_or_build(&self, w: &QTensor) -> Result<&QTensor> {
+        if let Some(t) = self.0.get() {
+            debug_assert!(
+                w.rank() == 4
+                    && t.shape == [w.shape[1] * w.shape[2] * w.shape[3], w.shape[0]],
+                "cached transpose does not match the kernel — conv weights \
+                 mutated after serving started? (rebuild the layer instead)"
+            );
+            return Ok(t);
+        }
+        anyhow::ensure!(w.rank() == 4, "conv kernel must be [oc,c,kh,kw], got {:?}", w.shape);
+        let (oc, ckk) = (w.shape[0], w.shape[1] * w.shape[2] * w.shape[3]);
+        let t = w.reshape(vec![oc, ckk])?.transpose2()?;
+        // racing builders produce identical tensors; the first set wins
+        Ok(self.0.get_or_init(|| t))
+    }
+
+    /// Whether the transpose has been derived yet (for tests).
+    pub fn is_built(&self) -> bool {
+        self.0.get().is_some()
+    }
+}
+
 /// Convolution layer, served through im2col.
 #[derive(Debug, Clone)]
 pub struct Conv2dLayer {
@@ -262,6 +300,9 @@ pub struct Conv2dLayer {
     pub out_bits: u32,
     /// Lazily-built packed planes of the im2col-transposed kernel.
     pub packed: PackedCache,
+    /// Lazily-cached `[c·kh·kw, oc]` transpose of `w` (shared across
+    /// clones next to `packed`), so serving never re-derives it.
+    pub wt: TransposedKernelCache,
 }
 
 impl Conv2dLayer {
@@ -276,14 +317,11 @@ impl Conv2dLayer {
         );
         anyhow::ensure!(c == x.shape[0], "channel mismatch");
         let (a, oh, ow) = im2col(x, kh, kw, self.stride, self.pad)?;
-        // weights reshaped to [oc, c·kh·kw] then transposed → [ckk, oc]
-        let wt = self
-            .w
-            .reshape(vec![oc, c * kh * kw])?
-            .transpose2()?;
+        // cached [c·kh·kw, oc] transpose of the kernel (built once)
+        let wt = self.wt.get_or_build(&self.w)?;
         let m = oh * ow;
         let kdim = c * kh * kw;
-        let acc = exec_layer_matmul(exec, &self.packed, 0, &a, &wt, m, kdim, oc, self.bits)?;
+        let acc = exec_layer_matmul(exec, &self.packed, 0, &a, wt, m, kdim, oc, self.bits)?;
         let acc_scale = x.scale * self.w.scale;
         // output layout (oc, oh, ow): transpose the (m, oc) result
         let mut real = vec![0f64; oc * m];
@@ -296,6 +334,18 @@ impl Conv2dLayer {
         quantize_with_scale(&real, vec![oc, oh, ow], self.out_scale, self.out_bits)
     }
 
+    /// Output spatial dims for an `(h, w)` input, or `None` when the
+    /// kernel exceeds the padded input — the degenerate geometry
+    /// `im2col` rejects; callers must not underflow on it.
+    pub fn out_dims(&self, h: usize, w: usize) -> Option<(usize, usize)> {
+        let (kh, kw) = (self.w.shape[2], self.w.shape[3]);
+        let oh = (h + 2 * self.pad).checked_sub(kh)? / self.stride + 1;
+        let ow = (w + 2 * self.pad).checked_sub(kw)? / self.stride + 1;
+        Some((oh, ow))
+    }
+
+    /// MAC census for an `(h, w)` input; saturates to 0 on degenerate
+    /// geometry instead of underflow-panicking.
     pub fn macs(&self, h: usize, w: usize) -> u64 {
         let (oc, c, kh, kw) = (
             self.w.shape[0],
@@ -303,9 +353,10 @@ impl Conv2dLayer {
             self.w.shape[2],
             self.w.shape[3],
         );
-        let oh = (h + 2 * self.pad - kh) / self.stride + 1;
-        let ow = (w + 2 * self.pad - kw) / self.stride + 1;
-        (oh * ow * c * kh * kw * oc) as u64
+        match self.out_dims(h, w) {
+            Some((oh, ow)) => (oh * ow * c * kh * kw * oc) as u64,
+            None => 0,
+        }
     }
 }
 
@@ -398,6 +449,14 @@ pub enum Layer {
     Linear(LinearLayer),
     Conv2d(Conv2dLayer),
     Attention(AttentionLayer),
+    /// Collapse a higher-rank activation to one `[1, numel]` row — the
+    /// explicit conv→linear bridge. Rank-2 activations pass through
+    /// **unchanged**: stacked row-serving delivers `[rows, d]` batches
+    /// where each row must stay a separate sample, so collapsing
+    /// matrices would destroy batch invariance; a matrix that really
+    /// needs flattening (e.g. attention→linear head) must be reshaped
+    /// by its own explicit layer, not this one.
+    Flatten,
 }
 
 impl Layer {
@@ -406,15 +465,18 @@ impl Layer {
             Layer::Linear(l) => l.forward(x, exec),
             Layer::Conv2d(l) => l.forward(x, exec),
             Layer::Attention(l) => l.forward(x, exec),
+            Layer::Flatten => Ok(if x.rank() == 2 { x.clone() } else { x.flatten_row() }),
         }
     }
 
-    /// This layer's operand precision — the per-layer bit-width knob.
+    /// This layer's operand precision — the per-layer bit-width knob
+    /// (0 for layers that do no arithmetic).
     pub fn bits(&self) -> u32 {
         match self {
             Layer::Linear(l) => l.bits,
             Layer::Conv2d(l) => l.bits,
             Layer::Attention(l) => l.bits,
+            Layer::Flatten => 0,
         }
     }
 
@@ -423,6 +485,7 @@ impl Layer {
             Layer::Linear(_) => "linear",
             Layer::Conv2d(_) => "conv2d",
             Layer::Attention(_) => "attention",
+            Layer::Flatten => "flatten",
         }
     }
 }
@@ -504,6 +567,7 @@ mod tests {
             out_scale: 1.0,
             out_bits: 8,
             packed: PackedCache::new(),
+            wt: TransposedKernelCache::new(),
         };
         let x = QTensor::new(vec![1, 2, 3, 4, 10, 20, 30, 40], vec![2, 2, 2], 1.0, 8).unwrap();
         let y = layer.forward(&x, &mut native_exec()).unwrap();
@@ -524,9 +588,65 @@ mod tests {
             out_scale: 1.0,
             out_bits: 8,
             packed: PackedCache::new(),
+            wt: TransposedKernelCache::new(),
         };
         // 8×8 input, same-padded: 8·8 positions × 2·3·3 × 4
         assert_eq!(layer.macs(8, 8), 64 * 18 * 4);
+    }
+
+    #[test]
+    fn conv_macs_saturate_on_degenerate_geometry() {
+        // 5×5 kernel over an unpadded 2×2 input: im2col rejects this,
+        // and the stats path must saturate instead of underflowing
+        let layer = Conv2dLayer {
+            w: QTensor::zeros(vec![2, 1, 5, 5], 1.0, 8),
+            bias: vec![0; 2],
+            stride: 1,
+            pad: 0,
+            bits: 8,
+            relu: false,
+            out_scale: 1.0,
+            out_bits: 8,
+            packed: PackedCache::new(),
+            wt: TransposedKernelCache::new(),
+        };
+        assert_eq!(layer.out_dims(2, 2), None);
+        assert_eq!(layer.macs(2, 2), 0);
+        // the exact-fit geometry is still counted normally
+        assert_eq!(layer.out_dims(5, 5), Some((1, 1)));
+        assert_eq!(layer.macs(5, 5), (5 * 5 * 2) as u64);
+    }
+
+    #[test]
+    fn conv_kernel_transpose_built_once_and_shared_across_clones() {
+        let w = QTensor::new(vec![1, 2, 3, -4], vec![2, 2, 1, 1], 1.0, 8).unwrap();
+        let cache = TransposedKernelCache::new();
+        assert!(!cache.is_built());
+        let p1 = cache.get_or_build(&w).unwrap() as *const QTensor;
+        let p2 = cache.get_or_build(&w).unwrap() as *const QTensor;
+        assert_eq!(p1, p2, "transpose derived once, then cached");
+        assert!(cache.is_built());
+        // the cached tensor is exactly the on-the-fly derivation
+        let want = w.reshape(vec![2, 2]).unwrap().transpose2().unwrap();
+        assert_eq!(*cache.get_or_build(&w).unwrap(), want);
+        // clones share the same cached transpose
+        let clone = cache.clone();
+        assert_eq!(clone.get_or_build(&w).unwrap() as *const QTensor, p1);
+    }
+
+    #[test]
+    fn flatten_layer_bridges_conv_to_linear() {
+        let mut exec = native_exec();
+        let img = QTensor::new((0..8).collect(), vec![2, 2, 2], 0.5, 8).unwrap();
+        let y = Layer::Flatten.forward(&img, &mut exec).unwrap();
+        assert_eq!(y.shape, vec![1, 8]);
+        assert_eq!(y.data, img.data);
+        // rank-2 activations pass through untouched
+        let mat = QTensor::new((0..6).collect(), vec![2, 3], 1.0, 8).unwrap();
+        let same = Layer::Flatten.forward(&mat, &mut exec).unwrap();
+        assert_eq!(same.shape, vec![2, 3]);
+        assert_eq!(Layer::Flatten.kind(), "flatten");
+        assert_eq!(Layer::Flatten.bits(), 0);
     }
 
     /// Executor that insists on packed weights and computes through the

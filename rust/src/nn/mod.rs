@@ -19,6 +19,7 @@ pub mod weights_io;
 
 pub use layers::{
     AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec, PackedCache, PackedWeight,
+    TransposedKernelCache,
 };
 pub use model::{Model, ModelStats};
 pub use quant::{dequantize, quantize_symmetric, QuantParams};

@@ -6,7 +6,10 @@
 //! the cloud-screening use case of [9]), and transformer workloads
 //! (§II-C).
 
-use crate::nn::layers::{AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec, PackedCache};
+use crate::nn::layers::{
+    AttentionLayer, Conv2dLayer, Layer, LinearLayer, MatmulExec, PackedCache,
+    TransposedKernelCache,
+};
 use crate::nn::tensor::QTensor;
 use crate::prng::Pcg32;
 use crate::Result;
@@ -41,26 +44,58 @@ impl Model {
         Ok(h)
     }
 
-    /// Static MAC census (per-layer precision included) for a batch of
-    /// one 2-D input row set / one image.
+    /// Static MAC census (per-layer precision included) for `batch`
+    /// inputs. `batch` means stacked rows for rank-1 (vector) models
+    /// and independent items for image/token models, matching how the
+    /// server assembles batches — so the census always equals what the
+    /// scheduler reports for the same request count. Degenerate conv
+    /// geometry saturates to zero MACs instead of underflow-panicking
+    /// (the case `im2col` rejects at execution time).
     pub fn stats(&self, batch: usize) -> ModelStats {
         let mut s = ModelStats::default();
+        // the per-item activation shape, tracked through every layer so
+        // chained/composed graphs (conv→conv, conv→flatten→linear,
+        // …→attention) are counted from the shape that layer actually
+        // sees; compositions the executor would reject (wrong rank for
+        // the layer kind) saturate to 0 MACs like degenerate conv
+        // geometry does
         let mut spatial = self.input_shape.clone();
         for layer in &self.layers {
             let macs = match layer {
-                Layer::Linear(l) => l.macs(batch),
-                Layer::Conv2d(l) => {
-                    let m = l.macs(spatial[1], spatial[2]);
-                    // update spatial dims for chained convs
-                    let (kh, kw) = (l.w.shape[2], l.w.shape[3]);
-                    spatial = vec![
-                        l.w.shape[0],
-                        (spatial[1] + 2 * l.pad - kh) / l.stride + 1,
-                        (spatial[2] + 2 * l.pad - kw) / l.stride + 1,
-                    ];
+                Layer::Linear(l) => {
+                    let (w_in, w_out) = (l.w.shape[0], l.w.shape[1]);
+                    match spatial.as_slice() {
+                        // a vector model's per-item row (stacked at serve time)
+                        &[d] if d == w_in => {
+                            spatial = vec![w_out];
+                            l.macs(batch)
+                        }
+                        // an already-matrix activation: every row of each item
+                        &[r, d] if d == w_in => {
+                            spatial = vec![r, w_out];
+                            l.macs(r * batch)
+                        }
+                        // shape mismatch: the executor would reject this forward
+                        _ => 0,
+                    }
+                }
+                Layer::Conv2d(l) if spatial.len() == 3 => {
+                    let m = l.macs(spatial[1], spatial[2]) * batch as u64;
+                    // 0×0 once the geometry degenerates
+                    let (oh, ow) = l.out_dims(spatial[1], spatial[2]).unwrap_or((0, 0));
+                    spatial = vec![l.w.shape[0], oh, ow];
                     m
                 }
-                Layer::Attention(l) => l.macs(batch),
+                // per item: one [seq, dim] token matrix, shape-preserving
+                Layer::Attention(l) if spatial.len() == 2 => {
+                    l.macs(spatial[0]) * batch as u64
+                }
+                Layer::Flatten => {
+                    spatial = vec![1, spatial.iter().product()];
+                    0
+                }
+                // rank mismatch: the executor would reject this forward
+                Layer::Conv2d(_) | Layer::Attention(_) => 0,
             };
             s.macs += macs;
             s.per_layer.push((layer.kind(), layer.bits(), macs));
@@ -107,10 +142,13 @@ pub fn mlp_zoo(seed: u64) -> Model {
 }
 
 /// Small CNN over 1×16×16 tiles: conv3x3(8) → conv3x3(16, stride 2) →
-/// flatten-linear(10). The cloud-screening-style payload workload.
+/// flatten → linear(10). The cloud-screening-style payload workload.
+/// Each layer's `out_bits` matches the next layer's operand precision,
+/// so every matmul is servable on the packed bit-plane path (no
+/// precision-mismatch fallbacks).
 pub fn cnn_zoo(seed: u64) -> Model {
     let mut rng = Pcg32::new(seed);
-    let conv = |rng: &mut Pcg32, oc, c, bits, stride, out_scale| {
+    let conv = |rng: &mut Pcg32, oc, c, bits, stride, out_scale, out_bits| {
         Layer::Conv2d(Conv2dLayer {
             w: rand_q(rng, vec![oc, c, 3, 3], bits, 0.05),
             bias: (0..oc).map(|_| rng.range_i32(-16, 16) as i64).collect(),
@@ -119,17 +157,18 @@ pub fn cnn_zoo(seed: u64) -> Model {
             bits,
             relu: true,
             out_scale,
-            out_bits: bits,
+            out_bits,
             packed: PackedCache::new(),
+            wt: TransposedKernelCache::new(),
         })
     };
     let mut rng2 = Pcg32::new(seed ^ 0xc0ffee);
     Model {
         name: "cnn-16x16".into(),
         layers: vec![
-            conv(&mut rng, 8, 1, 8, 1, 0.1),
-            conv(&mut rng, 16, 8, 6, 2, 0.2),
-            // flatten happens implicitly via reshape in forward_cnn
+            conv(&mut rng, 8, 1, 8, 1, 0.1, 6),
+            conv(&mut rng, 16, 8, 6, 2, 0.2, 6),
+            Layer::Flatten,
             Layer::Linear(LinearLayer {
                 w: rand_q(&mut rng2, vec![16 * 8 * 8, 10], 6, 0.05),
                 bias: vec![0; 10],
@@ -168,18 +207,21 @@ pub fn attention_zoo(seed: u64) -> Model {
     }
 }
 
-/// CNN forward needs a flatten between conv and linear stages; this
-/// wrapper inserts it (kept out of `Model::forward` to keep layer
-/// composition explicit).
+/// Look up a zoo model by its CLI/config name.
+pub fn zoo_model(name: &str, seed: u64) -> Result<Model> {
+    Ok(match name {
+        "mlp" => mlp_zoo(seed),
+        "cnn" => cnn_zoo(seed),
+        "attn" | "attention" => attention_zoo(seed),
+        other => anyhow::bail!("unknown zoo model '{other}' (expected mlp|cnn|attn)"),
+    })
+}
+
+/// Historical alias from when `Model::forward` could not flatten: the
+/// CNN zoo now carries an explicit [`Layer::Flatten`], so the server
+/// path and this wrapper are the same code.
 pub fn forward_cnn(model: &Model, x: &QTensor, exec: &mut dyn MatmulExec) -> Result<QTensor> {
-    let mut h = x.clone();
-    for layer in &model.layers {
-        if let (Layer::Linear(_), 3) = (layer, h.rank()) {
-            h = h.reshape(vec![1, h.numel()])?;
-        }
-        h = layer.forward(&h, exec)?;
-    }
-    Ok(h)
+    model.forward(x, exec)
 }
 
 #[cfg(test)]
@@ -219,9 +261,22 @@ mod tests {
     #[test]
     fn cnn_forward_shape() {
         let m = cnn_zoo(2);
+        // the flatten is an explicit layer now, so plain Model::forward
+        // serves the CNN — the server path and the wrapper are one code
+        assert!(m.layers.iter().any(|l| matches!(l, Layer::Flatten)));
         let x = QTensor::zeros(vec![1, 16, 16], 0.02, 8);
-        let y = forward_cnn(&m, &x, &mut exec()).unwrap();
+        let y = m.forward(&x, &mut exec()).unwrap();
         assert_eq!(y.shape, vec![1, 10]);
+        let via_wrapper = forward_cnn(&m, &x, &mut exec()).unwrap();
+        assert_eq!(y.data, via_wrapper.data);
+    }
+
+    #[test]
+    fn zoo_model_lookup() {
+        assert_eq!(zoo_model("mlp", 1).unwrap().name, "mlp-64-64-32-10");
+        assert_eq!(zoo_model("cnn", 1).unwrap().name, "cnn-16x16");
+        assert_eq!(zoo_model("attn", 1).unwrap().name, "attn-16x32");
+        assert!(zoo_model("resnet", 1).is_err());
     }
 
     #[test]
@@ -252,5 +307,61 @@ mod tests {
         // conv1: 16·16 × 1·3·3 × 8; conv2 (stride 2): 8·8 × 8·3·3 × 16
         assert_eq!(s.per_layer[0].2, 256 * 9 * 8);
         assert_eq!(s.per_layer[1].2, 64 * 72 * 16);
+        // the explicit flatten contributes no arithmetic
+        assert_eq!(s.per_layer[2], ("flatten", 0, 0));
+        // per-item batches scale every layer linearly
+        let s4 = m.stats(4);
+        assert_eq!(s4.macs, 4 * s.macs);
+    }
+
+    #[test]
+    fn attention_stats_census_counts_tokens() {
+        let m = attention_zoo(3);
+        // one item = one [16, 32] token matrix: 4 projections of
+        // seq·d·d each; items scale linearly (per-item batching)
+        assert_eq!(m.stats(1).macs, 4 * 16 * 32 * 32);
+        assert_eq!(m.stats(3).macs, 3 * 4 * 16 * 32 * 32);
+    }
+
+    #[test]
+    fn stats_saturate_on_rank_mismatched_composition() {
+        // attention grafted after conv sees a rank-3 activation the
+        // executor would reject: its census saturates to 0 instead of
+        // silently counting the channel count as a sequence length
+        let attn_layer = attention_zoo(1).layers.remove(0);
+        let mut m = cnn_zoo(2);
+        m.layers.truncate(2); // conv, conv → rank-3 activation
+        m.layers.push(attn_layer);
+        let s = m.stats(1);
+        assert_eq!(s.per_layer[2], ("attention", 8, 0));
+        // the conv layers are still counted normally
+        assert_eq!(s.per_layer[0].2, 256 * 9 * 8);
+    }
+
+    #[test]
+    fn stats_survive_degenerate_conv_geometry() {
+        // a 5×5 kernel over an unpadded 1×2×2 input: im2col would
+        // reject it; the census must saturate, not underflow-panic
+        let m = Model {
+            name: "degenerate".into(),
+            layers: vec![Layer::Conv2d(Conv2dLayer {
+                w: QTensor::zeros(vec![2, 1, 5, 5], 1.0, 8),
+                bias: vec![0; 2],
+                stride: 1,
+                pad: 0,
+                bits: 8,
+                relu: false,
+                out_scale: 1.0,
+                out_bits: 8,
+                packed: PackedCache::new(),
+                wt: TransposedKernelCache::new(),
+            })],
+            input_shape: vec![1, 2, 2],
+            input_bits: 8,
+            input_scale: 1.0,
+        };
+        let s = m.stats(1);
+        assert_eq!(s.macs, 0);
+        assert_eq!(s.per_layer[0], ("conv2d", 8, 0));
     }
 }

@@ -67,6 +67,14 @@ impl QTensor {
         Ok(t)
     }
 
+    /// Collapse to a single row `[1, numel]` — the conv→linear bridge
+    /// used by the explicit `Layer::Flatten` in the CNN zoo graph.
+    pub fn flatten_row(&self) -> QTensor {
+        let mut t = self.clone();
+        t.shape = vec![1, t.data.len()];
+        t
+    }
+
     /// Transposed copy of a 2-D tensor.
     pub fn transpose2(&self) -> Result<QTensor> {
         anyhow::ensure!(self.rank() == 2, "transpose2 on rank {}", self.rank());
@@ -136,6 +144,15 @@ mod tests {
         assert!(QTensor::new(vec![128], vec![1], 1.0, 8).is_err());
         assert!(QTensor::new(vec![1, 2, 3], vec![2], 1.0, 8).is_err());
         assert!(QTensor::new(vec![1], vec![1], 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn flatten_row_collapses_rank() {
+        let t = QTensor::new((0..8).collect(), vec![2, 2, 2], 0.5, 8).unwrap();
+        let flat = t.flatten_row();
+        assert_eq!(flat.shape, vec![1, 8]);
+        assert_eq!(flat.data, t.data);
+        assert_eq!((flat.scale, flat.bits), (t.scale, t.bits));
     }
 
     #[test]

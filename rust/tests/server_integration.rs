@@ -3,9 +3,10 @@
 //! (malformed requests must not take the server down).
 
 use bitsmm::coordinator::{
-    serve_all, Backend, BatcherConfig, InferenceServer, Request, ServerConfig,
+    serve_all, shaped_inputs, Backend, BatcherConfig, InferenceServer, Request, ServerConfig,
 };
-use bitsmm::nn::model::mlp_zoo;
+use bitsmm::nn::model::{mlp_zoo, zoo_model};
+use bitsmm::nn::Layer;
 use bitsmm::prng::Pcg32;
 use bitsmm::sim::array::SaConfig;
 use bitsmm::sim::mac_common::MacVariant;
@@ -54,29 +55,43 @@ fn worker_count_does_not_change_results() {
 }
 
 #[test]
-fn malformed_request_is_dropped_not_fatal() {
+fn malformed_request_gets_error_response_not_silence() {
     let model = Arc::new(mlp_zoo(9));
     let server = InferenceServer::start(model, base_cfg(1)).unwrap();
-    // out-of-range activation (300 exceeds 8-bit) — the batch is
-    // rejected by QTensor validation and dropped
+    // out-of-range activation (300 exceeds 8-bit): the submitter gets
+    // an error response carrying the cause, not an opaque RecvError
     let bad_rx = server.submit(Request {
         id: 0,
-        input: vec![300; 64],
+        input: vec![300; 64].into(),
         submitted: Instant::now(),
     });
-    // wait until the bad batch has been consumed so it cannot merge
-    // with the good request below
-    let bad = bad_rx.recv_timeout(std::time::Duration::from_millis(500));
-    assert!(bad.is_err(), "malformed request must not produce a response");
-    let good_rx = server.submit(Request {
+    let bad = bad_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    let err = bad.output.unwrap_err();
+    assert!(err.contains("8-bit"), "error must name the cause: {err}");
+    // a wrong-shape payload also surfaces its cause
+    let short_rx = server.submit(Request {
         id: 1,
-        input: vec![1; 64],
+        input: vec![1; 32].into(),
+        submitted: Instant::now(),
+    });
+    let err = short_rx
+        .recv_timeout(std::time::Duration::from_secs(5))
+        .unwrap()
+        .output
+        .unwrap_err();
+    assert!(err.contains("shape"), "error must name the cause: {err}");
+    // malformed batch-mates never take a valid request down
+    let good_rx = server.submit(Request {
+        id: 2,
+        input: vec![1; 64].into(),
         submitted: Instant::now(),
     });
     let good = good_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
-    assert_eq!(good.id, 1);
+    assert_eq!(good.id, 2);
+    assert!(good.output.is_ok());
     let (_, metrics) = server.shutdown();
     assert_eq!(metrics.requests, 1);
+    assert_eq!(metrics.errors, 2);
 }
 
 #[test]
@@ -89,7 +104,7 @@ fn queue_depth_reflects_backlog() {
     for (i, input) in inputs(64, 3).into_iter().enumerate() {
         rxs.push(server.submit(Request {
             id: i as u64,
-            input,
+            input: input.into(),
             submitted: Instant::now(),
         }));
     }
@@ -224,4 +239,93 @@ fn latency_metrics_populated() {
     assert!(metrics.latency.percentile_us(50.0) <= metrics.latency.percentile_us(99.0));
     assert!(metrics.throughput_rps() > 0.0);
     assert!(metrics.hw_cycles > 0);
+}
+
+/// The whole zoo serves end-to-end, and serving is **batch-invariant**:
+/// a request's output is bit-identical whether it is served alone
+/// (max_batch = 1) or fused into a batch. For attention this is the
+/// per-item guarantee that the data-dependent `ctx_scale`
+/// requantization never mixes requests.
+#[test]
+fn zoo_models_are_batch_invariant() {
+    for name in ["mlp", "cnn", "attn"] {
+        let model = Arc::new(zoo_model(name, 5).unwrap());
+        let ins = shaped_inputs(&model, 6, 31);
+        let mut solo_cfg = base_cfg(1);
+        solo_cfg.batcher = BatcherConfig {
+            max_batch: 1,
+            linger: std::time::Duration::from_millis(1),
+        };
+        let (solo, _, _) = serve_all(model.clone(), solo_cfg, ins.clone()).unwrap();
+        let mut fused_cfg = base_cfg(1);
+        fused_cfg.batcher = BatcherConfig {
+            max_batch: 6,
+            linger: std::time::Duration::from_millis(20),
+        };
+        let (fused, _, metrics) = serve_all(model, fused_cfg, ins).unwrap();
+        assert_eq!(metrics.requests, 6, "{name}");
+        assert_eq!(metrics.errors, 0, "{name}");
+        for (a, b) in solo.iter().zip(&fused) {
+            assert!(a.output.is_ok(), "{name}: solo request {} failed", a.id);
+            assert_eq!(a.output, b.output, "{name}: solo vs batched diverged at id {}", a.id);
+        }
+    }
+}
+
+/// Cross-backend determinism through the *serving* path for every zoo
+/// model: Native == Simulate == Packed, bit for bit.
+#[test]
+fn zoo_models_deterministic_across_backends() {
+    for name in ["mlp", "cnn", "attn"] {
+        let model = Arc::new(zoo_model(name, 5).unwrap());
+        let ins = shaped_inputs(&model, 4, 47);
+        let (native, _, _) = serve_all(model.clone(), base_cfg(2), ins.clone()).unwrap();
+        let mut sim_cfg = base_cfg(1);
+        sim_cfg.backend = Backend::Simulate;
+        let (sim, _, _) = serve_all(model.clone(), sim_cfg, ins.clone()).unwrap();
+        let mut packed_cfg = base_cfg(2);
+        packed_cfg.backend = Backend::Packed;
+        let (packed, report, _) = serve_all(model, packed_cfg, ins).unwrap();
+        assert!(report.packed_execs > 0, "{name}: packed engine must have executed");
+        for ((a, s), p) in native.iter().zip(&sim).zip(&packed) {
+            assert!(a.output.is_ok(), "{name}: request {} failed", a.id);
+            assert_eq!(a.output, s.output, "{name}: native vs simulate diverged at id {}", a.id);
+            assert_eq!(a.output, p.output, "{name}: native vs packed diverged at id {}", a.id);
+        }
+    }
+}
+
+/// Packed serving packs each conv kernel (slot 0) and each attention
+/// projection (slots 0..=3) exactly once per precision, even with four
+/// workers racing over many per-item batches.
+#[test]
+fn conv_and_attention_weights_pack_once_under_multiworker_serving() {
+    let mut cfg = base_cfg(4);
+    cfg.backend = Backend::Packed;
+
+    let cnn = Arc::new(zoo_model("cnn", 2).unwrap());
+    let (resp, report, _) = serve_all(cnn.clone(), cfg.clone(), shaped_inputs(&cnn, 16, 7)).unwrap();
+    assert!(resp.iter().all(|r| r.output.is_ok()));
+    assert!(report.packed_execs > 0, "cnn must serve on the packed engine");
+    for (i, layer) in cnn.layers.iter().enumerate() {
+        match layer {
+            Layer::Conv2d(l) => {
+                assert_eq!(l.packed.packs(), 1, "conv layer {i} packed more than once");
+                assert!(l.wt.is_built(), "conv layer {i} never cached its transpose");
+            }
+            Layer::Linear(l) => assert_eq!(l.packed.packs(), 1, "linear layer {i}"),
+            Layer::Attention(_) | Layer::Flatten => {}
+        }
+    }
+
+    let attn = Arc::new(zoo_model("attn", 3).unwrap());
+    let (resp, report, _) = serve_all(attn.clone(), cfg, shaped_inputs(&attn, 16, 8)).unwrap();
+    assert!(resp.iter().all(|r| r.output.is_ok()));
+    assert!(report.packed_execs > 0, "attn must serve on the packed engine");
+    let Layer::Attention(l) = &attn.layers[0] else {
+        panic!("attention zoo starts with its attention block");
+    };
+    // four projection slots (q/k/v/o), one pack each, zero re-packs
+    assert_eq!(l.packed.packs(), 4, "q/k/v/o must pack exactly once each");
+    assert_eq!(l.packed.plane_reuses(), 0);
 }
