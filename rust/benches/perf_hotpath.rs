@@ -2,11 +2,12 @@
 //! iteration log — simulator inner loop, native matmul, the per-plane
 //! and word-packed plane realisations, the popcount-reducer and
 //! thread-count sweeps of the packed engine, the skewed-shape
-//! equal-slice vs work-stealing scheduler comparison (the headline
-//! for this PR), cross-precision plane slicing, tiler, and (when
-//! artifacts are built) the PJRT request path. Every result is also
-//! written to `BENCH_perf_hotpath.json` at the repo root so the perf
-//! trajectory is machine-trackable across PRs.
+//! equal-slice vs work-stealing scheduler comparison, the shape-keyed
+//! execution planner's planned-vs-best/worst-static sweep (the
+//! headline for this PR), cross-precision plane slicing, tiler, and
+//! (when artifacts are built) the PJRT request path. Every result is
+//! also written to `BENCH_perf_hotpath.json` at the repo root so the
+//! perf trajectory is machine-trackable across PRs.
 //!
 //! Set `BITSMM_BENCH_SMOKE=1` (CI does) to run the same matrix on a
 //! small shape with a tight iteration budget — seconds, not minutes —
@@ -21,6 +22,7 @@ use bitsmm::bits::packed::{
 use bitsmm::bits::plane::PlaneKind;
 use bitsmm::coordinator::{tile_matmul, Backend, Scheduler};
 use bitsmm::nn::{matmul_native, matmul_packed, matmul_planes};
+use bitsmm::plan::{ExecPlan, PlanKey, Planner, PlannerMode, ShapeRun};
 use bitsmm::prng::Pcg32;
 use bitsmm::sim::array::{SaConfig, SystolicArray};
 use bitsmm::sim::driver::mac_dot;
@@ -226,7 +228,9 @@ fn main() {
     // skewed shapes (single-row serving, single-column projections,
     // wide-K attention blocks) plus the square no-regression shape.
     // Both paths must stay bit-identical to the serial kernel.
-    let pool8 = PackedPool::new(8).unwrap();
+    // Arc-wrapped: the 5c'' ShapeRun below shares it by &Arc; the
+    // direct kernel calls in this section auto-deref through it.
+    let pool8 = Arc::new(PackedPool::new(8).unwrap());
     let skew_shapes: &[(usize, usize, usize)] = if smoke {
         &[(1, 128, 512), (512, 128, 1), (16, 512, 16), (64, 64, 64)]
     } else {
@@ -283,6 +287,119 @@ fn main() {
             safe_ratio(rowslice_mean, stolen_mean)
         );
     }
+
+    // ---- 5c''. shape-keyed planner: planned vs best/worst static --------
+    // Every candidate ExecPlan is a static configuration someone could
+    // have deployed server-wide. The planner must never lose to the
+    // worst of them on any swept shape, and must match (or beat, via
+    // per-shape re-planning) the single best static config across the
+    // whole skewed set — the acceptance bar for making the planner the
+    // serving default. Candidate outputs are asserted bit-identical to
+    // the serial kernel before anything is timed.
+    let plan_cfg = if smoke {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 2,
+            target_time: std::time::Duration::from_millis(30),
+        }
+    } else {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            target_time: std::time::Duration::from_millis(100),
+        }
+    };
+    let slots = pool8.threads() + 1;
+    let planner = Planner::new(PlannerMode::Online, slots);
+    let candidates = ExecPlan::candidates(slots);
+    // sums of per-shape mean times: the cross-shape acceptance compares
+    // the planner against the best single static config applied to ALL
+    // shapes, which is what a static deployment would have to do
+    let mut planned_total = 0f64;
+    let mut worst_case_ok = true;
+    let mut static_totals = vec![0f64; candidates.len()];
+    for &(sm, sk, sn) in skew_shapes {
+        let lbl = format!("{sm}x{sk}x{sn}");
+        let smacs = (sm * sk * sn) as f64;
+        let sa_m: Vec<i32> = (0..sm * sk).map(|_| rng.range_i32(-128, 127)).collect();
+        let sb_m: Vec<i32> = (0..sk * sn).map(|_| rng.range_i32(-128, 127)).collect();
+        let pb = Arc::new(PackedPlanes::pack_cols(&sb_m, sk, sn, 8, PlaneKind::Sbmwc).unwrap());
+        let run = ShapeRun {
+            a: &sa_m,
+            b: &sb_m,
+            m: sm,
+            k: sk,
+            n: sn,
+            bits: 8,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: Some(&pb),
+            pool: Some(&pool8),
+        };
+        let want = matmul_packed_tile_with(
+            &PackedPlanes::pack_rows(&sa_m, sm, sk, 8, PlaneKind::Sbmwc).unwrap(),
+            &pb,
+            0,
+            sm,
+            0,
+            sn,
+            PopcountKernel::Auto,
+        )
+        .unwrap();
+        let mut best = f64::INFINITY;
+        let mut best_label = String::new();
+        let mut worst = 0f64;
+        for (ci, plan) in candidates.iter().enumerate() {
+            let (out, _, _) = run.run(plan).unwrap();
+            assert_eq!(out, want, "{} diverged on {lbl}", plan.label());
+            let r = bench(&format!("plan {lbl} @8b {}", plan.label()), plan_cfg, || {
+                run.run(plan).unwrap().0[0]
+            });
+            let mean = r.mean.as_secs_f64();
+            println!("{}   ({} GOPS)", r.format(), fmt_rate(r.per_second(smacs) / 1e9));
+            log.push(r); // every static baseline reaches the JSON trajectory
+            static_totals[ci] += mean;
+            if mean < best {
+                best = mean;
+                best_label = plan.label();
+            }
+            worst = worst.max(mean);
+        }
+        // calibrate this shape explicitly (plan_run could resolve a
+        // nearby swept shape at the nearest tier instead), then bench
+        // the planned configuration like the statics were
+        let key = PlanKey::for_matmul(sm, sk, sn, 8, 8, PlaneKind::Sbmwc);
+        let (plan, cal_out) = planner.calibrate(key, &run).unwrap();
+        assert_eq!(cal_out.0, want, "planned {lbl}");
+        let r = bench(&format!("plan {lbl} @8b PLANNED {}", plan.label()), plan_cfg, || {
+            run.run(&plan).unwrap().0[0]
+        });
+        let planned = r.mean.as_secs_f64();
+        planned_total += planned;
+        println!(
+            "{}   ({} GOPS)",
+            r.format(),
+            fmt_rate(r.per_second(smacs) / 1e9)
+        );
+        log.push(r);
+        if planned > worst {
+            worst_case_ok = false;
+        }
+        println!(
+            "ACCEPTANCE planner {lbl} @8b: planned [{}] = {:.2}x vs best [{best_label}], \
+{:.2}x vs worst (planned-never-worst: {})",
+            plan.label(),
+            safe_ratio(best, planned),
+            safe_ratio(worst, planned),
+            if planned <= worst { "yes" } else { "NO" },
+        );
+    }
+    let best_static_total = static_totals.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "ACCEPTANCE planner aggregate over the skewed set: planned vs best single static \
+config = {:.2}x (>= 1.00x required), never-slower-than-worst on every shape: {}",
+        safe_ratio(best_static_total, planned_total),
+        if worst_case_ok { "yes" } else { "NO" },
+    );
 
     // ---- 5d. cross-precision plane reuse: slice vs fresh re-pack --------
     // 4-bit-range weights packed at 8 bits: a precision-lowered request

@@ -339,6 +339,13 @@ impl PopcountKernel {
         PopcountKernel::Neon,
     ];
 
+    /// The concrete kernels that run natively on this CPU — the
+    /// reducer axis of the execution planner's candidate space
+    /// ([`crate::plan::ExecPlan::candidates`]) and of bench sweeps.
+    pub fn available_concrete() -> Vec<PopcountKernel> {
+        Self::CONCRETE.iter().copied().filter(|k| k.available()).collect()
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             PopcountKernel::Auto => "auto",
@@ -816,8 +823,10 @@ const TILE_OVERSUBSCRIBE: usize = 4;
 
 /// Smallest tile worth its dispatch, in word-AND-popcount operations
 /// (auto-planned tiles grow until they clear this floor or parallelism
-/// would drop below the slot count).
-const MIN_TILE_WORK: u64 = 1 << 15;
+/// would drop below the slot count). Public because the execution
+/// planner's cost model ([`crate::plan`]) uses the same floor to
+/// decide when a matmul is worth pooling at all.
+pub const MIN_TILE_WORK: u64 = 1 << 15;
 
 /// Plan the `(tile_rows, tile_cols)` job granularity for a `tm × tn`
 /// output executed by `slots` workers, where one output element costs

@@ -6,6 +6,7 @@ use crate::coordinator::scheduler::Backend;
 use crate::coordinator::server::{serve_all, shaped_inputs, ServerConfig};
 use crate::coordinator::BatcherConfig;
 use crate::nn::model::zoo_model;
+use crate::plan::{Planner, PlannerMode};
 use crate::prng::Pcg32;
 use crate::report::{f, Table};
 use crate::sim::array::SaConfig;
@@ -26,6 +27,57 @@ impl SaParse {
         let rows: usize = rows.trim().parse()?;
         anyhow::ensure!(rows >= 1 && cols >= 1, "degenerate geometry {s}");
         Ok(SaConfig::new(rows, cols, variant))
+    }
+}
+
+/// Build the shared execution planner for a serving run: size it to
+/// the resolved kernel slots and seed it from the plan file when one
+/// exists for *this* host — a stale or foreign file is reported and
+/// skipped (the planner falls back to the cost model), never applied.
+fn build_planner(mode: PlannerMode, plan_file: &str, cfg: &ServerConfig) -> Option<Arc<Planner>> {
+    if mode == PlannerMode::Off {
+        return None;
+    }
+    // only the packed backend consults the planner; building one for
+    // native/simulate/pjrt would just print dead all-zero table rows
+    if !matches!(cfg.backend, Backend::Packed) {
+        println!(
+            "planner: '{}' requested but backend '{}' never consults it; planner disabled",
+            mode.name(),
+            cfg.backend.name()
+        );
+        return None;
+    }
+    let planner = Arc::new(Planner::new(mode, cfg.kernel_slots()));
+    let path = std::path::Path::new(plan_file);
+    if path.exists() {
+        match planner.load_file(path) {
+            Ok(n) => println!("planner: loaded {n} plans from {plan_file}"),
+            Err(e) => println!(
+                "planner: ignoring {plan_file} ({e:#}); resolving from the cost model"
+            ),
+        }
+    }
+    Some(planner)
+}
+
+/// Planner rows shared by the serve and launch tables: mode, cache
+/// telemetry, and the chosen plan per shape class.
+fn planner_rows(t: &mut Table, planner: &Planner, metrics: &crate::coordinator::Metrics) {
+    t.row(&[
+        "planner".into(),
+        format!("{} ({} plans cached)", planner.mode().name(), planner.len()),
+    ]);
+    t.row(&[
+        "plan hits / misses / calibrations".into(),
+        format!(
+            "{} / {} / {}",
+            metrics.plan.hits, metrics.plan.misses, metrics.plan.calibrations
+        ),
+    ]);
+    t.row(&["plan hit rate".into(), f(metrics.plan_hit_rate())]);
+    for (key, plan) in planner.summary().into_iter().take(8) {
+        t.row(&[format!("plan {key}"), plan.label()]);
     }
 }
 
@@ -60,6 +112,10 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
     cfg.packed_unroll = args.req::<String>("packed-unroll")?.parse()?;
     cfg.packed_tile_rows = args.req("packed-tile-rows")?;
     cfg.packed_tile_cols = args.req("packed-tile-cols")?;
+    let planner_mode: PlannerMode = args.req::<String>("planner")?.parse()?;
+    let planner = build_planner(planner_mode, args.get("plan-file").unwrap(), &cfg);
+    cfg.planner = planner;
+    let planner_view = cfg.planner.clone();
 
     let inputs = shaped_inputs(&model, n_requests, 42);
     let model_name = model.name.clone();
@@ -106,6 +162,9 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
             f(metrics.steal_rate())
         ),
     ]);
+    if let Some(pl) = &planner_view {
+        planner_rows(&mut t, pl, &metrics);
+    }
     print!("{}", t.render());
     Ok(())
 }
@@ -156,6 +215,14 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     server_cfg.packed_unroll = cfg.str_or("server.packed_unroll", "auto").parse()?;
     server_cfg.packed_tile_rows = usize::try_from(cfg.int_or("server.packed_tile_rows", 0))?;
     server_cfg.packed_tile_cols = usize::try_from(cfg.int_or("server.packed_tile_cols", 0))?;
+    let planner_mode: PlannerMode = cfg.str_or("server.planner", "off").parse()?;
+    let planner = build_planner(
+        planner_mode,
+        cfg.str_or("server.plan_file", "configs/plans.json"),
+        &server_cfg,
+    );
+    server_cfg.planner = planner;
+    let planner_view = server_cfg.planner.clone();
 
     let inputs = shaped_inputs(&model, n_requests, 42);
     let model_name = model.name.clone();
@@ -179,6 +246,9 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     t.row(&["p50 / p99 latency (us)".into(), format!("{} / {}", p[0], p[1])]);
     t.row(&["hw GOPS @config clock".into(), f(report.hw_gops(clock_hz))]);
     t.row(&["MACs / hw cycles".into(), format!("{} / {}", report.macs, report.hw_cycles)]);
+    if let Some(pl) = &planner_view {
+        planner_rows(&mut t, pl, &metrics);
+    }
     print!("{}", t.render());
     Ok(())
 }
@@ -332,6 +402,64 @@ max_batch = 2
             .unwrap();
             launch_from_config(&cfg).unwrap_or_else(|e| panic!("{model}/{backend}: {e:#}"));
         }
+    }
+
+    #[test]
+    fn launch_reads_planner_config() {
+        // the planner threads end-to-end through the dotted config
+        // path; a missing plan file is fine (cost-model resolution)
+        for mode in ["static", "online"] {
+            let cfg = crate::config::Config::parse(&format!(
+                "name = \"plan\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"packed\"
+requests = 4
+workers = 1
+max_batch = 4
+packed_threads = 2
+planner = \"{mode}\"
+plan_file = \"configs/plans-that-do-not-exist.json\"
+"
+            ))
+            .unwrap();
+            launch_from_config(&cfg).unwrap_or_else(|e| panic!("{mode}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn launch_with_planner_on_non_packed_backend_disables_it() {
+        // the planner is a packed-backend concern: requesting it on
+        // native serving runs fine with the planner quietly disabled
+        let cfg = crate::config::Config::parse(
+            "name = \"np\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"native\"
+requests = 2
+workers = 1
+max_batch = 2
+planner = \"static\"
+",
+        )
+        .unwrap();
+        launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_rejects_unknown_planner_mode() {
+        let cfg = crate::config::Config::parse(
+            "[server]
+backend = \"packed\"
+planner = \"turbo\"
+",
+        )
+        .unwrap();
+        assert!(launch_from_config(&cfg).is_err());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! packed-pool scheduling telemetry.
 
 use crate::bits::packed::StealStats;
+use crate::plan::PlanStats;
 use std::time::Duration;
 
 /// Online latency statistics (stores samples; serving volumes here are
@@ -75,6 +76,10 @@ pub struct Metrics {
     /// max/min per-worker tile share (zero unless the packed backend
     /// ran with a pool).
     pub steal: StealStats,
+    /// Execution-planner telemetry: plan-cache hits, misses, and
+    /// on-line calibrations on the request path (zero unless a planner
+    /// is attached — DESIGN.md §Planner).
+    pub plan: PlanStats,
 }
 
 impl Metrics {
@@ -119,6 +124,12 @@ impl Metrics {
             return 0.0;
         }
         self.steal.max_worker_tiles as f64 / self.steal.min_worker_tiles as f64
+    }
+
+    /// Fraction of request-path plan lookups served by an exact
+    /// plan-cache hit (0.0 when no planner ran).
+    pub fn plan_hit_rate(&self) -> f64 {
+        self.plan.hit_rate()
     }
 }
 
@@ -188,5 +199,14 @@ mod tests {
         };
         assert!((m.steal_rate() - 0.25).abs() < 1e-12);
         assert!((m.worker_tile_imbalance() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plan_telemetry_rates() {
+        let mut m = Metrics::default();
+        assert_eq!(m.plan_hit_rate(), 0.0, "no planner ran");
+        m.plan = PlanStats { hits: 6, misses: 2, calibrations: 1 };
+        assert!((m.plan_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(m.plan.lookups(), 8);
     }
 }

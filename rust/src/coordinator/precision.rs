@@ -66,6 +66,20 @@ impl PrecisionPolicy {
         }
     }
 
+    /// The matmul shape census of `model` with this policy's resolved
+    /// widths substituted for the per-layer precisions — the sweep set
+    /// the execution planner (`bitsmm tune`, warm start) seeds its
+    /// plan cache from, so a precision re-plan finds its plans already
+    /// resolved (DESIGN.md §Planner).
+    pub fn shape_census(
+        &self,
+        model: &Model,
+        batch: usize,
+    ) -> Result<Vec<(usize, usize, usize, u32)>> {
+        let widths = self.resolve(model)?;
+        Ok(model.matmul_shapes_with(batch, Some(&widths)))
+    }
+
     /// Relative latency of the policy vs uniform-16-bit on the same
     /// model (eq. 8: cycles scale linearly with width).
     pub fn latency_fraction(&self, model: &Model) -> Result<f64> {
@@ -116,6 +130,19 @@ mod tests {
         for (a, b) in lo.iter().zip(&hi) {
             assert!(a <= b, "{lo:?} vs {hi:?}");
         }
+    }
+
+    #[test]
+    fn shape_census_substitutes_policy_widths() {
+        let m = mlp_zoo(1);
+        let census = PrecisionPolicy::Uniform(6).shape_census(&m, 2).unwrap();
+        assert_eq!(
+            census,
+            vec![(2, 32, 10, 6), (2, 64, 32, 6), (2, 64, 64, 6)]
+        );
+        // per-layer policies carry their widths through layer order
+        let per = PrecisionPolicy::PerLayer(vec![8, 2, 2]).shape_census(&m, 1).unwrap();
+        assert!(per.contains(&(1, 64, 64, 8)) && per.contains(&(1, 32, 10, 2)));
     }
 
     #[test]

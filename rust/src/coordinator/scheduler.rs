@@ -23,18 +23,20 @@
 //!   scheduler's [`TilePolicy`], auto by default) on the pool's
 //!   persistent workers (DESIGN.md §Packed-Threading) — bit-identical
 //!   to the single-thread path, with steal/imbalance telemetry folded
-//!   into the report.
+//!   into the report. With a [`Planner`] attached, reducer / threads /
+//!   partition / tiles — and the native-vs-packed crossover itself —
+//!   are resolved **per (shape, precision)** through the shared plan
+//!   cache instead of the static config (DESIGN.md §Planner); plans
+//!   change speed, never integers.
 //! * [`Backend::Simulate`] — the cycle-accurate SA simulator itself;
 //!   slowest, but *measures* cycles instead of modelling them.
 
-use crate::bits::packed::{
-    matmul_packed_tile_stolen, matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
-    StealStats, TilePolicy,
-};
+use crate::bits::packed::{PackedPlanes, PackedPool, PopcountKernel, StealStats, TilePolicy};
 use crate::bits::plane::PlaneKind;
 use crate::coordinator::tiler::{tile_matmul, TilePlan};
 use crate::nn::layers::{MatmulExec, PackedWeight};
 use crate::nn::matmul_native;
+use crate::plan::{ExecPlan, PlanKey, PlanStats, PlanTier, Planner, ShapeRun};
 use crate::runtime::{EngineHandle, IntMat};
 use crate::sim::array::{SaConfig, SystolicArray};
 use crate::Result;
@@ -81,6 +83,10 @@ pub struct ExecutionReport {
     /// steals, and the max/min per-worker tile share (DESIGN.md
     /// §Packed-Threading).
     pub steal: StealStats,
+    /// Plan-cache telemetry of the execution planner: exact hits,
+    /// below-tier-1 misses, and on-line calibrations (zero unless a
+    /// planner is attached — DESIGN.md §Planner).
+    pub plan: PlanStats,
 }
 
 impl ExecutionReport {
@@ -95,6 +101,7 @@ impl ExecutionReport {
         self.packed_execs += o.packed_execs;
         self.plane_slices += o.plane_slices;
         self.steal.merge(&o.steal);
+        self.plan.merge(&o.plan);
     }
 
     /// Simulated-hardware GOPS at a clock (paper convention).
@@ -122,6 +129,11 @@ pub struct Scheduler {
     popcount: PopcountKernel,
     /// Tile granularity for the pooled packed kernel (auto by default).
     tile_policy: TilePolicy,
+    /// Shape-keyed execution planner (`None` / `Off` = the static
+    /// `popcount` + `tile_policy` config runs every matmul, the
+    /// pre-planner behavior). Shared `Arc` across a server's workers
+    /// so every scheduler resolves from one plan cache.
+    planner: Option<Arc<Planner>>,
     pub report: ExecutionReport,
 }
 
@@ -138,6 +150,7 @@ impl Scheduler {
             packed_pool: None,
             popcount: PopcountKernel::Auto,
             tile_policy: TilePolicy::AUTO,
+            planner: None,
             report: ExecutionReport::default(),
         }
     }
@@ -157,6 +170,14 @@ impl Scheduler {
     /// (`server.packed_tile_rows` / `packed_tile_cols`; 0 = auto).
     pub fn set_tile_policy(&mut self, policy: TilePolicy) {
         self.tile_policy = policy;
+    }
+
+    /// Attach the shared execution planner: the packed backend then
+    /// resolves kernel/threads/partition/tiles (and the native-vs-
+    /// packed crossover) per (shape, precision) through the plan cache
+    /// instead of the static config (DESIGN.md §Planner).
+    pub fn set_planner(&mut self, planner: Arc<Planner>) {
+        self.planner = Some(planner);
     }
 
     /// Execute `A (m×k) · B (k×n)` at `bits` precision. Returns exact
@@ -236,14 +257,11 @@ impl Scheduler {
                     self.report.native_fallbacks += 1;
                     return matmul_native(a, b, m, k, n, bits);
                 }
-                self.report.packed_execs += 1;
-                // the streamed operand is packed once per matmul; the
-                // stationary operand arrives pre-packed from the layer
-                // cache (or is packed here for ad-hoc calls). Planes
-                // cached at a *wider* precision are sliced down —
-                // cross-precision reuse, never a re-pack.
-                let pa = Arc::new(PackedPlanes::pack_rows(a, m, k, bits, PlaneKind::Sbmwc)?);
-                let pb = match packed_b {
+                // the stationary operand arrives pre-packed from the
+                // layer cache (or is packed inside the run for ad-hoc
+                // calls). Planes cached at a *wider* precision are
+                // sliced down — cross-precision reuse, never a re-pack.
+                let pb: Option<Arc<PackedPlanes>> = match packed_b {
                     Some(p) => {
                         anyhow::ensure!(
                             p.len == k && p.vectors == n,
@@ -252,10 +270,10 @@ impl Scheduler {
                             p.vectors
                         );
                         if p.bits == bits {
-                            p
+                            Some(p)
                         } else if p.bits > bits && p.min_bits <= bits {
                             self.report.plane_slices += 1;
-                            Arc::new(p.slice_bits(bits)?)
+                            Some(Arc::new(p.slice_bits(bits)?))
                         } else if p.bits < bits {
                             anyhow::bail!(
                                 "cached planes @{}b cannot serve a {bits}-bit request (packs only narrow)",
@@ -269,29 +287,64 @@ impl Scheduler {
                             );
                         }
                     }
-                    None => Arc::new(PackedPlanes::pack_cols(b, k, n, bits, PlaneKind::Sbmwc)?),
+                    None => None,
                 };
                 // the hardware tiling above is *timing* accounting; the
-                // functional product runs on the packed kernel directly,
-                // work-stolen 2-D tiles across the shared pool when present
-                match &self.packed_pool {
-                    Some(pool) => {
-                        let (out, stats) = matmul_packed_tile_stolen(
-                            pool,
-                            &pa,
-                            &pb,
-                            0,
-                            m,
-                            0,
-                            n,
-                            self.popcount,
-                            self.tile_policy,
-                        )?;
-                        self.report.steal.merge(&stats);
-                        out
+                // functional product runs through the one shared plan
+                // executor: either the plan the shape-keyed planner
+                // resolves for this (shape, precision) class, or the
+                // static server-wide config when no planner is attached
+                // (DESIGN.md §Planner)
+                let pool = self.packed_pool.clone();
+                let pool_slots = pool.as_ref().map_or(1, |p| p.threads() + 1);
+                let run = ShapeRun {
+                    a,
+                    b,
+                    m,
+                    k,
+                    n,
+                    bits,
+                    stream_kind: PlaneKind::Sbmwc,
+                    packed_b: pb.as_ref(),
+                    pool: pool.as_ref(),
+                };
+                let planner = self.planner.clone().filter(|p| p.is_on());
+                let (plan, tier, pre_run) = match &planner {
+                    Some(pl) => {
+                        let kind = pb.as_ref().map_or(PlaneKind::Sbmwc, |p| p.kind);
+                        let key = PlanKey::for_matmul(m, k, n, bits, bits, kind);
+                        let (plan, tier, pre) = pl.plan_run(key, &run)?;
+                        (plan, Some(tier), pre)
                     }
-                    None => matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, self.popcount)?,
+                    None => (
+                        ExecPlan::static_default(self.popcount, self.tile_policy, pool_slots),
+                        None,
+                        None,
+                    ),
+                };
+                match tier {
+                    Some(PlanTier::Exact) => self.report.plan.hits += 1,
+                    Some(PlanTier::Nearest) | Some(PlanTier::CostModel) => {
+                        self.report.plan.misses += 1
+                    }
+                    Some(PlanTier::Calibrated) => {
+                        self.report.plan.misses += 1;
+                        self.report.plan.calibrations += 1;
+                    }
+                    None => {}
                 }
+                let (out, stats, ran_packed) = match pre_run {
+                    Some(r) => r, // calibration already produced the product
+                    None => run.run(&plan)?,
+                };
+                if ran_packed {
+                    self.report.packed_execs += 1;
+                    self.report.steal.merge(&stats);
+                } else {
+                    // the planner chose the native loop for this class
+                    self.report.native_fallbacks += 1;
+                }
+                out
             }
             Backend::Simulate => {
                 let sim = self.sim.as_mut().expect("simulate backend has an array");
@@ -539,6 +592,58 @@ mod tests {
         assert!(pooled.report.steal.max_worker_tiles >= pooled.report.steal.min_worker_tiles);
         // the single-thread scheduler has none
         assert_eq!(serial.report.steal.tiles, 0);
+    }
+
+    #[test]
+    fn planner_modes_resolve_plans_and_stay_bit_identical() {
+        use crate::plan::{Planner, PlannerMode};
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (6, 70, 9, 5);
+        let mut rng = Pcg32::new(0x9147);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = nat.matmul(&a, &b, m, k, n, bits).unwrap();
+        for mode in [PlannerMode::Static, PlannerMode::Online] {
+            let mut s = Scheduler::new(sa, Backend::Packed);
+            s.set_planner(std::sync::Arc::new(Planner::new(mode, 1)));
+            assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want, "{mode:?}");
+            assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want, "{mode:?}");
+            // first touch misses (cost model or calibration), second hits
+            assert_eq!(s.report.plan.misses, 1, "{mode:?}");
+            assert_eq!(s.report.plan.hits, 1, "{mode:?}");
+            let want_cal = if mode == PlannerMode::Online { 1 } else { 0 };
+            assert_eq!(s.report.plan.calibrations, want_cal, "{mode:?}");
+        }
+        // an Off planner leaves the static path untouched
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        s.set_planner(std::sync::Arc::new(Planner::new(PlannerMode::Off, 1)));
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.plan, crate::plan::PlanStats::default());
+        assert_eq!(s.report.packed_execs, 1);
+    }
+
+    #[test]
+    fn planner_routes_wide_precision_to_native_without_changing_results() {
+        use crate::plan::{Planner, PlannerMode};
+        // at 16x16 bits the word-ops cost model crosses over to native
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (8, 70, 8, 16);
+        let mut rng = Pcg32::new(0x9148);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = nat.matmul(&a, &b, m, k, n, bits).unwrap();
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        s.set_planner(std::sync::Arc::new(Planner::new(PlannerMode::Static, 1)));
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.packed_execs, 0, "planner chose the native loop");
+        assert_eq!(s.report.native_fallbacks, 1);
+        // the narrow-precision class still runs packed
+        let (a4, b4) = (rand_mat(&mut rng, m * k, 4), rand_mat(&mut rng, k * n, 4));
+        let want4 = nat.matmul(&a4, &b4, m, k, n, 4).unwrap();
+        assert_eq!(s.matmul(&a4, &b4, m, k, n, 4).unwrap(), want4);
+        assert_eq!(s.report.packed_execs, 1, "precision flip re-plans the backend");
     }
 
     #[test]

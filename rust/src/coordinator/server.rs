@@ -3,11 +3,13 @@
 //! example (and the paper's future-work integration, §V).
 
 use crate::bits::packed::{PackedPool, PopcountKernel, TilePolicy};
+use crate::bits::plane::PlaneKind;
 use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Backend, ExecutionReport, Scheduler};
 use crate::nn::model::Model;
 use crate::nn::tensor::QTensor;
+use crate::plan::{calibrate_shape, PlanKey, Planner, PlannerMode};
 use crate::sim::array::SaConfig;
 use crate::Result;
 use std::sync::{mpsc, Arc, Mutex};
@@ -102,6 +104,11 @@ pub struct ServerConfig {
     pub packed_tile_rows: usize,
     /// Output columns per pooled-kernel tile job (`0` = auto).
     pub packed_tile_cols: usize,
+    /// Shape-keyed execution planner shared by every worker's
+    /// scheduler (`server.planner = off|static|online`, `--planner`).
+    /// `None` (or `Off`): the static knobs above run every matmul —
+    /// the pre-planner behavior. See DESIGN.md §Planner.
+    pub planner: Option<Arc<Planner>>,
 }
 
 impl ServerConfig {
@@ -116,6 +123,7 @@ impl ServerConfig {
             packed_unroll: PopcountKernel::Auto,
             packed_tile_rows: 0,
             packed_tile_cols: 0,
+            planner: None,
         }
     }
 
@@ -138,6 +146,25 @@ impl ServerConfig {
             .unwrap_or(1);
         (cores / self.workers.max(1)).max(1)
     }
+
+    /// Kernel slots a packed matmul under this config can occupy: the
+    /// pool's workers plus the caller's inline slot, or 1 when no pool
+    /// will be built. The single source for sizing the planner's
+    /// candidate plans — must agree with the pool [`InferenceServer`]
+    /// constructs and the slot count the scheduler derives from it.
+    pub fn kernel_slots(&self) -> usize {
+        match self.backend {
+            Backend::Packed => {
+                let threads = self.resolved_packed_threads();
+                if threads > 1 {
+                    threads + 1
+                } else {
+                    1
+                }
+            }
+            _ => 1,
+        }
+    }
 }
 
 /// A running inference server for one model.
@@ -147,12 +174,16 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Start worker threads serving `model`. Rank-1 (vector) models
-    /// stack whole batches into one `[rows, d]` matmul pass; rank-2
-    /// (token-matrix) and rank-3 (image) models run per item so conv
-    /// im2col and attention's data-dependent requantization never mix
-    /// requests — responses are bit-identical whether a request is
-    /// served alone or inside a batch.
+    /// Start worker threads serving `model`. Batch-fusable models —
+    /// rank-1 vectors and attention-free rank-3 image models — stack
+    /// whole batches into one forward pass (convs via batched im2col);
+    /// rank-2 token matrices and anything containing attention run per
+    /// item so the data-dependent requantization never mixes requests.
+    /// Either way responses are bit-identical whether a request is
+    /// served alone or inside a batch. On the packed backend, start-up
+    /// warm-packs every weight's planes and conv transposes (and
+    /// pre-resolves the shape census when a planner is configured), so
+    /// the first request pays no pack latency.
     pub fn start(model: Arc<Model>, cfg: ServerConfig) -> Result<InferenceServer> {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
         anyhow::ensure!(
@@ -176,6 +207,48 @@ impl InferenceServer {
             }
             _ => None,
         };
+        // Warm start (DESIGN.md §Serving): before any request can be
+        // submitted, pre-pack every weight's bit planes and conv
+        // transpose, and pre-resolve (Online: pre-calibrate, on
+        // synthetic operands) the plans of the model's shape census —
+        // the first request pays neither pack latency nor a plan miss.
+        if matches!(cfg.backend, Backend::Packed) {
+            model.warm_packed()?;
+            if let Some(pl) = cfg.planner.as_ref().filter(|p| p.is_on()) {
+                // powers-of-two batch sizes plus max_batch cover every
+                // plan bucket any assembled batch can produce: fused
+                // row counts scale linearly with batch and
+                // `bucket(2x) = bucket(x) + 1`, so a batch size between
+                // 2^i and 2^(i+1) always lands in one of their buckets.
+                // Classes already cached skip their (re-)calibration.
+                let max_batch = cfg.batcher.max_batch.max(1);
+                let mut shapes = Vec::new();
+                let mut batch = 1usize;
+                while batch < max_batch {
+                    shapes.extend(model.matmul_shapes(batch));
+                    batch *= 2;
+                }
+                shapes.extend(model.matmul_shapes(max_batch));
+                shapes.sort_unstable();
+                shapes.dedup();
+                for (m, k, n, bits) in shapes {
+                    if pl.mode() == PlannerMode::Online {
+                        calibrate_shape(
+                            pl,
+                            packed_pool.as_ref(),
+                            m,
+                            k,
+                            n,
+                            bits,
+                            PlaneKind::Sbmwc,
+                            0x5eed_ca1b,
+                        )?;
+                    } else {
+                        pl.resolve(PlanKey::for_matmul(m, k, n, bits, bits, PlaneKind::Sbmwc));
+                    }
+                }
+            }
+        }
         let mut workers = Vec::new();
         for w in 0..cfg.workers {
             let batcher = batcher.clone();
@@ -222,6 +295,7 @@ impl InferenceServer {
         // single-sourced from the merged report so the two aggregation
         // paths cannot desynchronize
         metrics.steal = report.steal;
+        metrics.plan = report.plan;
         (report, metrics)
     }
 }
@@ -238,16 +312,21 @@ fn worker_loop(
     if let Some(pool) = packed_pool {
         sched.set_packed_pool(pool);
     }
+    if let Some(planner) = cfg.planner.clone().filter(|p| p.is_on()) {
+        sched.set_planner(planner);
+    }
     let mut metrics = Metrics::default();
     let t0 = Instant::now();
-    // Per-kind batch assembly: rank-1 models are row-independent
-    // (linear stacks), so whole batches fuse into one [rows, d]
-    // matmul. Higher-rank inputs (images, token matrices) run per
-    // item — conv im2col is single-image and attention's
-    // data-dependent ctx requantization must never mix requests —
-    // which is also what makes responses bit-identical across batch
-    // compositions (DESIGN.md §Serving).
-    let stack_rows = model.input_shape.len() == 1;
+    // Per-kind batch assembly: batch-fusable models — rank-1 vector
+    // rows (stacked into one [rows, d] matmul) and attention-free
+    // rank-3 image models (stacked into one (B,C,H,W) forward whose
+    // convs run batched im2col) — fuse whole batches into one forward
+    // pass. Everything else (attention's data-dependent ctx
+    // requantization must never mix requests) runs per item. Either
+    // way responses are bit-identical across batch compositions:
+    // fused layers treat each request's rows independently
+    // (DESIGN.md §Serving).
+    let fuse = model.fuses_batches();
     while let Some(batch) = batcher.next_batch() {
         let cycles_before = sched.report.hw_cycles;
         let macs_before = sched.report.macs;
@@ -255,8 +334,8 @@ fn worker_loop(
         // the scheduler itself is the executor (not an `as_exec`
         // closure) so the packed backend sees layer-cached weight
         // planes and packs each weight once per (layer, precision)
-        if stack_rows {
-            serve_stacked(model, &mut sched, batch, &mut metrics);
+        if fuse {
+            serve_fused(model, &mut sched, batch, &mut metrics);
         } else {
             serve_per_item(model, &mut sched, batch, &mut metrics);
         }
@@ -325,17 +404,20 @@ fn respond(
     });
 }
 
-/// Rank-1 assembly: stack every valid request into one `[rows, d]`
-/// matmul pass. Row-serving is batch-invariant because every layer of
-/// a vector model treats rows independently.
-fn serve_stacked(
+/// Fused assembly: stack every valid request into one forward pass —
+/// `[rows, d]` for rank-1 vector models, `(rows, C, H, W)` for
+/// attention-free image models (whose convs then run batched im2col:
+/// one matmul per layer per batch instead of per request). Fusing is
+/// batch-invariant because every fused layer treats each request's
+/// rows independently (DESIGN.md §Serving).
+fn serve_fused(
     model: &Model,
     sched: &mut Scheduler,
     batch: Batch<(Request, mpsc::Sender<Response>)>,
     metrics: &mut Metrics,
 ) {
-    let d_in = model.input_shape[0];
-    let mut stacked = Vec::with_capacity(batch.items.len() * d_in);
+    let numel: usize = model.input_shape.iter().product();
+    let mut stacked = Vec::with_capacity(batch.items.len() * numel);
     let mut valid: Vec<(&Request, &mpsc::Sender<Response>)> =
         Vec::with_capacity(batch.items.len());
     for (req, tx) in &batch.items {
@@ -351,7 +433,10 @@ fn serve_stacked(
         return;
     }
     let rows = valid.len();
-    let run = QTensor::new(stacked, vec![rows, d_in], model.input_scale, model.input_bits)
+    let mut shape = Vec::with_capacity(1 + model.input_shape.len());
+    shape.push(rows);
+    shape.extend_from_slice(&model.input_shape);
+    let run = QTensor::new(stacked, shape, model.input_scale, model.input_bits)
         .and_then(|x| model.forward(&x, sched));
     match run {
         Ok(y) => {
@@ -373,11 +458,12 @@ fn serve_stacked(
     }
 }
 
-/// Rank-2/3 assembly: each request runs its own forward pass, so
-/// im2col stays single-image, attention's data-dependent `ctx_scale`
-/// requantization never mixes requests, and one request's failure
-/// cannot take its batch-mates down. The batch is consumed so each
-/// payload *moves* into its forward pass — no per-request copy.
+/// Per-item assembly (token matrices and any model containing
+/// attention): each request runs its own forward pass, so attention's
+/// data-dependent `ctx_scale` requantization never mixes requests, and
+/// one request's failure cannot take its batch-mates down. The batch
+/// is consumed so each payload *moves* into its forward pass — no
+/// per-request copy.
 fn serve_per_item(
     model: &Model,
     sched: &mut Scheduler,
@@ -642,11 +728,84 @@ mod tests {
     }
 
     #[test]
+    fn fused_image_serving_batches_conv_matmuls() {
+        // 6 CNN requests through one single-worker batch: the fused
+        // path runs ~3 matmuls (conv1, conv2, head) for the whole
+        // batch instead of 3 per request, with identical outputs
+        let model = Arc::new(crate::nn::model::cnn_zoo(2));
+        let ins = shaped_inputs(&model, 6, 0x1217);
+        let mut solo_cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        solo_cfg.workers = 1;
+        solo_cfg.batcher = BatcherConfig {
+            max_batch: 1,
+            linger: std::time::Duration::from_millis(1),
+        };
+        let (solo, solo_rep, _) = serve_all(model.clone(), solo_cfg, ins.clone()).unwrap();
+        let mut fused_cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        fused_cfg.workers = 1;
+        fused_cfg.batcher = BatcherConfig {
+            max_batch: 6,
+            linger: std::time::Duration::from_millis(30),
+        };
+        let (fused, fused_rep, metrics) = serve_all(model.clone(), fused_cfg, ins).unwrap();
+        assert_eq!(metrics.errors, 0);
+        for (a, b) in solo.iter().zip(&fused) {
+            assert_eq!(a.output, b.output, "fused image serving diverged at id {}", a.id);
+        }
+        // same MACs (the census), far fewer matmul submissions
+        assert_eq!(fused_rep.macs, solo_rep.macs);
+        assert_eq!(fused_rep.macs, model.stats(6).macs);
+        assert!(
+            fused_rep.matmuls <= solo_rep.matmuls / 2,
+            "fused {} vs solo {} matmuls",
+            fused_rep.matmuls,
+            solo_rep.matmuls
+        );
+    }
+
+    #[test]
+    fn planner_modes_do_not_change_served_results() {
+        use crate::plan::{Planner, PlannerMode};
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let ins = inputs(16, 64, 8);
+        let cfg_n = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let (want, _, _) = serve_all(model.clone(), cfg_n, ins.clone()).unwrap();
+        for mode in [PlannerMode::Static, PlannerMode::Online] {
+            let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+            cfg.packed_threads = 2;
+            let planner = Arc::new(Planner::new(mode, 3));
+            cfg.planner = Some(planner.clone());
+            let (got, report, metrics) = serve_all(model.clone(), cfg, ins.clone()).unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.output, b.output, "{mode:?} diverged at id {}", a.id);
+            }
+            // warm start pre-resolved the census: the request path
+            // planned every matmul, overwhelmingly from cache hits
+            assert!(report.plan.lookups() > 0, "{mode:?}: no lookups recorded");
+            assert!(report.plan.hits > 0, "{mode:?}: warm start should yield hits");
+            assert_eq!(metrics.plan, report.plan, "metrics mirror the report");
+            assert!(planner.len() > 0, "{mode:?}: plans cached");
+            if mode == PlannerMode::Online {
+                assert!(
+                    planner.stats().calibrations > 0,
+                    "online warm start calibrates the census"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn packed_threads_auto_resolution() {
         let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
         cfg.workers = 1_000_000; // more workers than cores: still >= 1
         assert_eq!(cfg.resolved_packed_threads(), 1);
+        assert_eq!(cfg.kernel_slots(), 1, "no pool, no inline slot bonus");
         cfg.packed_threads = 7; // explicit setting wins over auto
         assert_eq!(cfg.resolved_packed_threads(), 7);
+        // pool workers + the caller's inline slot — the count the
+        // planner sizes candidate plans for
+        assert_eq!(cfg.kernel_slots(), 8);
+        let non_packed = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        assert_eq!(non_packed.kernel_slots(), 1);
     }
 }

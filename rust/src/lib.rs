@@ -23,6 +23,9 @@
 //!   linear / conv2d / attention layers, and a tiny model zoo.
 //! * [`coordinator`] — the serving stack: matmul tiler, per-layer
 //!   precision policy, dynamic batcher, scheduler and threaded server.
+//! * [`plan`] — the shape-keyed execution planner: per-(shape,
+//!   precision) kernel/thread/tile plans resolved through a persistent
+//!   cache, a cost model, and on-line calibration (`bitsmm tune`).
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them on
 //!   the request path (Python is never on the request path).
@@ -43,6 +46,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod nn;
+pub mod plan;
 pub mod prng;
 pub mod proptest_lite;
 pub mod report;

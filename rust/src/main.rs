@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   serve      run the inference server on a zoo model
+//!   tune       sweep the zoo shape census and write the plan cache
 //!   simulate   run one matmul on the cycle-accurate SA simulator
 //!   tables     reproduce paper Tables II / III / IV
 //!   fig6       reproduce paper Fig. 6 (peak OP/cycle vs bit width)
@@ -32,6 +33,7 @@ fn run(argv: &[String]) -> Result<()> {
     match sub {
         "serve" => cmd_serve(rest),
         "launch" => cmd_launch(rest),
+        "tune" => cmd_tune(rest),
         "simulate" => cmd_simulate(rest),
         "tables" => cmd_tables(rest),
         "fig6" => cmd_fig6(rest),
@@ -53,6 +55,7 @@ usage: bitsmm <subcommand> [options]
 subcommands:
   serve      run the inference server on a zoo model
   launch     config-file driven serving run (see configs/serve.toml)
+  tune       sweep the zoo shape census, write the plan cache (configs/plans.json)
   simulate   run one matmul on the cycle-accurate SA simulator
   tables     reproduce paper Tables II / III / IV
   fig6       reproduce paper Fig. 6 (peak OP/cycle vs bit width)
@@ -130,6 +133,16 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "output cols per packed-pool tile job (0 = auto)",
             Some("0"),
         )
+        .opt(
+            "planner",
+            "shape-keyed execution planner: off|static|online",
+            Some("off"),
+        )
+        .opt(
+            "plan-file",
+            "persistent plan cache to load (written by `bitsmm tune`)",
+            Some("configs/plans.json"),
+        )
         .opt("artifacts", "artifact directory", None)
         .switch("help", "show help");
     let args = cmd.parse(argv)?;
@@ -138,6 +151,45 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     serve_all_entry(&args)
+}
+
+fn cmd_tune(argv: &[String]) -> Result<()> {
+    let cmd = Command::new(
+        "tune",
+        "calibrate execution plans over the zoo shape census and write the plan cache",
+    )
+    .opt("out", "plan file to write", Some("configs/plans.json"))
+    .opt(
+        "threads",
+        "packed-kernel pool threads for tuning (0 = all cores)",
+        Some("0"),
+    )
+    .opt("models", "comma-separated zoo models to census", Some("mlp,cnn,attn"))
+    .opt("seed", "synthetic operand seed", Some("42"))
+    .switch("smoke", "CI budget: smaller shapes, no precision-override sweep")
+    .switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let models: Vec<String> = args
+        .get("models")
+        .unwrap()
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!models.is_empty(), "--models must name at least one zoo model");
+    let opts = bitsmm::plan::TuneOpts {
+        out: args.get("out").unwrap().into(),
+        threads: args.req("threads")?,
+        smoke: args.switch("smoke"),
+        models,
+        seed: args.req("seed")?,
+    };
+    bitsmm::plan::run_tune(&opts)?;
+    Ok(())
 }
 
 fn cmd_simulate(argv: &[String]) -> Result<()> {

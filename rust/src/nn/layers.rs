@@ -14,7 +14,7 @@
 use crate::bits::packed::PackedPlanes;
 use crate::bits::plane::PlaneKind;
 use crate::nn::quant::quantize_with_scale;
-use crate::nn::tensor::{im2col, QTensor};
+use crate::nn::tensor::{im2col, im2col_batch, QTensor};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -306,32 +306,55 @@ pub struct Conv2dLayer {
 }
 
 impl Conv2dLayer {
-    /// `x`: `(c, h, w)` single image. Produces `(oc, oh, ow)`.
+    /// `x`: `(c, h, w)` single image → `(oc, oh, ow)`, or a
+    /// `(b, c, h, w)` stacked batch → `(b, oc, oh, ow)`. The batched
+    /// path stacks every image's im2col matrix into **one**
+    /// `[b·oh·ow, c·kh·kw]` matmul (ROADMAP batched-im2col item); rows
+    /// stay per-image and the bias/ReLU/requant pipeline is
+    /// elementwise, so the batch is bit-identical to `b` solo
+    /// forwards — batch invariance holds (DESIGN.md §Serving).
     pub fn forward(&self, x: &QTensor, exec: &mut dyn MatmulExec) -> Result<QTensor> {
-        anyhow::ensure!(x.rank() == 3, "conv expects (C,H,W)");
         let (oc, c, kh, kw) = (
             self.w.shape[0],
             self.w.shape[1],
             self.w.shape[2],
             self.w.shape[3],
         );
-        anyhow::ensure!(c == x.shape[0], "channel mismatch");
-        let (a, oh, ow) = im2col(x, kh, kw, self.stride, self.pad)?;
+        let (batch, chan) = match x.rank() {
+            3 => (1, x.shape[0]),
+            4 => (x.shape[0], x.shape[1]),
+            r => anyhow::bail!("conv expects (C,H,W) or (B,C,H,W), got rank {r}"),
+        };
+        anyhow::ensure!(c == chan, "channel mismatch");
+        let (a, oh, ow) = if x.rank() == 4 {
+            im2col_batch(x, kh, kw, self.stride, self.pad)?
+        } else {
+            im2col(x, kh, kw, self.stride, self.pad)?
+        };
         // cached [c·kh·kw, oc] transpose of the kernel (built once)
         let wt = self.wt.get_or_build(&self.w)?;
-        let m = oh * ow;
+        let per = oh * ow;
+        let m = batch * per;
         let kdim = c * kh * kw;
         let acc = exec_layer_matmul(exec, &self.packed, 0, &a, wt, m, kdim, oc, self.bits)?;
         let acc_scale = x.scale * self.w.scale;
-        // output layout (oc, oh, ow): transpose the (m, oc) result
-        let mut real = vec![0f64; oc * m];
-        for r in 0..m {
-            for o in 0..oc {
-                let v = (acc[r * oc + o] + self.bias[o]) as f64 * acc_scale;
-                real[o * m + r] = if self.relu { v.max(0.0) } else { v };
+        // output layout (…, oc, oh, ow): transpose each image's
+        // (per, oc) block independently
+        let mut real = vec![0f64; batch * oc * per];
+        for img in 0..batch {
+            for r in 0..per {
+                for o in 0..oc {
+                    let v = (acc[(img * per + r) * oc + o] + self.bias[o]) as f64 * acc_scale;
+                    real[(img * oc + o) * per + r] = if self.relu { v.max(0.0) } else { v };
+                }
             }
         }
-        quantize_with_scale(&real, vec![oc, oh, ow], self.out_scale, self.out_bits)
+        let shape = if x.rank() == 4 {
+            vec![batch, oc, oh, ow]
+        } else {
+            vec![oc, oh, ow]
+        };
+        quantize_with_scale(&real, shape, self.out_scale, self.out_bits)
     }
 
     /// Output spatial dims for an `(h, w)` input, or `None` when the
@@ -455,7 +478,9 @@ pub enum Layer {
     /// where each row must stay a separate sample, so collapsing
     /// matrices would destroy batch invariance; a matrix that really
     /// needs flattening (e.g. attention→linear head) must be reshaped
-    /// by its own explicit layer, not this one.
+    /// by its own explicit layer, not this one. Rank-4 batched-conv
+    /// activations `(b, oc, oh, ow)` flatten **per image** to
+    /// `[b, oc·oh·ow]` for the same reason — each row is one sample.
     Flatten,
 }
 
@@ -465,7 +490,13 @@ impl Layer {
             Layer::Linear(l) => l.forward(x, exec),
             Layer::Conv2d(l) => l.forward(x, exec),
             Layer::Attention(l) => l.forward(x, exec),
-            Layer::Flatten => Ok(if x.rank() == 2 { x.clone() } else { x.flatten_row() }),
+            Layer::Flatten => match x.rank() {
+                2 => Ok(x.clone()),
+                // batched conv activations: one row per image (the
+                // per-image block is contiguous in row-major NCHW)
+                4 => x.reshape(vec![x.shape[0], x.numel() / x.shape[0].max(1)]),
+                _ => Ok(x.flatten_row()),
+            },
         }
     }
 
@@ -573,6 +604,59 @@ mod tests {
         let y = layer.forward(&x, &mut native_exec()).unwrap();
         assert_eq!(y.shape, vec![1, 2, 2]);
         assert_eq!(y.data, vec![11, 22, 33, 44]);
+    }
+
+    #[test]
+    fn batched_conv_forward_is_bit_identical_to_solo_forwards() {
+        let mut rng = crate::prng::Pcg32::new(0xba7c);
+        let w = QTensor::new(
+            (0..2 * 3 * 3 * 3).map(|_| rng.range_i32(-8, 7)).collect(),
+            vec![2, 3, 3, 3],
+            0.1,
+            4,
+        )
+        .unwrap();
+        let layer = Conv2dLayer {
+            w,
+            bias: vec![3, -2],
+            stride: 1,
+            pad: 1,
+            bits: 8,
+            relu: true,
+            out_scale: 0.05,
+            out_bits: 8,
+            packed: PackedCache::new(),
+            wt: TransposedKernelCache::new(),
+        };
+        let (b, c, h, wd) = (4usize, 3usize, 5usize, 5usize);
+        let data: Vec<i32> = (0..b * c * h * wd).map(|_| rng.range_i32(-100, 100)).collect();
+        let batch = QTensor::new(data.clone(), vec![b, c, h, wd], 0.02, 8).unwrap();
+        let fused = layer.forward(&batch, &mut native_exec()).unwrap();
+        assert_eq!(fused.shape, vec![b, 2, 5, 5]);
+        let per = fused.numel() / b;
+        for img in 0..b {
+            let solo = QTensor::new(
+                data[img * c * h * wd..(img + 1) * c * h * wd].to_vec(),
+                vec![c, h, wd],
+                0.02,
+                8,
+            )
+            .unwrap();
+            let y = layer.forward(&solo, &mut native_exec()).unwrap();
+            assert_eq!(y.shape, vec![2, 5, 5]);
+            assert_eq!(
+                &fused.data[img * per..(img + 1) * per],
+                &y.data[..],
+                "image {img} diverged under batching"
+            );
+        }
+        // rank-4 flatten keeps one row per image
+        let flat = Layer::Flatten.forward(&fused, &mut native_exec()).unwrap();
+        assert_eq!(flat.shape, vec![b, per]);
+        assert_eq!(flat.data, fused.data);
+        // rank-2 and rank-5 conv inputs are rejected
+        let bad = QTensor::zeros(vec![3, 5], 1.0, 8);
+        assert!(layer.forward(&bad, &mut native_exec()).is_err());
     }
 
     #[test]

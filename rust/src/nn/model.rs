@@ -44,6 +44,138 @@ impl Model {
         Ok(h)
     }
 
+    /// Whether the server may fuse a whole batch of this model's
+    /// requests into one stacked forward pass: rank-1 inputs always
+    /// (linear stacks are row-independent), rank-3 image models when no
+    /// layer is attention (conv/flatten/linear treat each image's rows
+    /// independently, so batched im2col is batch-invariant; attention's
+    /// data-dependent `ctx_scale` must never mix requests — DESIGN.md
+    /// §Serving).
+    pub fn fuses_batches(&self) -> bool {
+        match self.input_shape.len() {
+            1 => true,
+            3 => !self
+                .layers
+                .iter()
+                .any(|l| matches!(l, Layer::Attention(_))),
+            _ => false,
+        }
+    }
+
+    /// The matmul shapes `(m, k, n, bits)` a `batch`-request serve
+    /// submits, deduplicated — the shape census the execution planner
+    /// pre-resolves at warm start and `bitsmm tune` sweeps offline.
+    /// Batch-fusing models scale their row dimension by `batch`
+    /// (stacked rows / batched im2col); per-item models repeat the
+    /// same per-item shapes, so `batch` does not change their census.
+    pub fn matmul_shapes(&self, batch: usize) -> Vec<(usize, usize, usize, u32)> {
+        self.matmul_shapes_with(batch, None)
+    }
+
+    /// [`Model::matmul_shapes`] with per-layer precision overrides
+    /// (`widths[i]` replaces layer `i`'s operand width) — how a
+    /// [`crate::coordinator::PrecisionPolicy`] projects its resolved
+    /// widths onto the census.
+    pub fn matmul_shapes_with(
+        &self,
+        batch: usize,
+        widths: Option<&[u32]>,
+    ) -> Vec<(usize, usize, usize, u32)> {
+        let batch = batch.max(1);
+        let bm = if self.fuses_batches() { batch } else { 1 };
+        let mut out = Vec::new();
+        let mut spatial = self.input_shape.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let bits = widths.and_then(|w| w.get(i).copied()).unwrap_or(layer.bits());
+            match layer {
+                Layer::Linear(l) => {
+                    let (w_in, w_out) = (l.w.shape[0], l.w.shape[1]);
+                    match spatial.as_slice() {
+                        // a per-item row; fused serving stacks `batch` of them
+                        &[d] if d == w_in => {
+                            out.push((bm, w_in, w_out, bits));
+                            spatial = vec![w_out];
+                        }
+                        // an already-matrix activation (e.g. after flatten)
+                        &[r, d] if d == w_in => {
+                            out.push((r * bm, w_in, w_out, bits));
+                            spatial = vec![r, w_out];
+                        }
+                        _ => {} // the executor would reject this forward
+                    }
+                }
+                Layer::Conv2d(l) if spatial.len() == 3 => {
+                    let (oh, ow) = l.out_dims(spatial[1], spatial[2]).unwrap_or((0, 0));
+                    let kdim = l.w.shape[1] * l.w.shape[2] * l.w.shape[3];
+                    if oh * ow > 0 {
+                        out.push((bm * oh * ow, kdim, l.w.shape[0], bits));
+                    }
+                    spatial = vec![l.w.shape[0], oh, ow];
+                }
+                // per item, shape-preserving; all five projections
+                // (q/k/v/o + ctx) share one [seq, d] × [d, d] shape
+                Layer::Attention(l) if spatial.len() == 2 => {
+                    let d = l.wq.shape[0];
+                    if spatial[1] == d {
+                        out.push((spatial[0], d, d, bits));
+                    }
+                }
+                Layer::Flatten => {
+                    // mirror Layer::forward: rank-2 activations pass
+                    // through unchanged (each row is one sample)
+                    if spatial.len() != 2 {
+                        spatial = vec![1, spatial.iter().product()];
+                    }
+                }
+                Layer::Conv2d(_) | Layer::Attention(_) => {}
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Warm-start packing: derive every stationary-weight artifact the
+    /// packed backend will need — conv im2col transposes
+    /// ([`TransposedKernelCache`]) and packed weight planes
+    /// ([`PackedCache`], at each layer's declared precision) — so the
+    /// first request pays no pack latency. Mirrors the serving-path
+    /// condition (`w.bits ≤ layer bits`): weights the executor would
+    /// route densely are left unpacked. Returns the number of weight
+    /// slots ensured. Idempotent: the caches make repeats free.
+    pub fn warm_packed(&self) -> Result<u64> {
+        let mut warmed = 0u64;
+        for layer in &self.layers {
+            match layer {
+                Layer::Linear(l) => {
+                    if l.w.bits <= l.bits {
+                        l.packed.get_or_pack(0, &l.w, l.bits)?;
+                        warmed += 1;
+                    }
+                }
+                Layer::Conv2d(l) => {
+                    let wt = l.wt.get_or_build(&l.w)?;
+                    if wt.bits <= l.bits {
+                        l.packed.get_or_pack(0, wt, l.bits)?;
+                        warmed += 1;
+                    }
+                }
+                Layer::Attention(l) => {
+                    for (slot, w) in
+                        [(0u32, &l.wq), (1, &l.wk), (2, &l.wv), (3, &l.wo)]
+                    {
+                        if w.bits <= l.bits {
+                            l.packed.get_or_pack(slot, w, l.bits)?;
+                            warmed += 1;
+                        }
+                    }
+                }
+                Layer::Flatten => {}
+            }
+        }
+        Ok(warmed)
+    }
+
     /// Static MAC census (per-layer precision included) for `batch`
     /// inputs. `batch` means stacked rows for rank-1 (vector) models
     /// and independent items for image/token models, matching how the
@@ -91,7 +223,13 @@ impl Model {
                     l.macs(spatial[0]) * batch as u64
                 }
                 Layer::Flatten => {
-                    spatial = vec![1, spatial.iter().product()];
+                    // mirror Layer::forward: rank-2 activations pass
+                    // through unchanged (each row is one sample), so
+                    // an attention→flatten→linear head is counted
+                    // from the [seq, d] shape the head actually sees
+                    if spatial.len() != 2 {
+                        spatial = vec![1, spatial.iter().product()];
+                    }
                     0
                 }
                 // rank mismatch: the executor would reject this forward
@@ -336,6 +474,105 @@ mod tests {
         assert_eq!(s.per_layer[2], ("attention", 8, 0));
         // the conv layers are still counted normally
         assert_eq!(s.per_layer[0].2, 256 * 9 * 8);
+    }
+
+    #[test]
+    fn batch_fusing_predicate() {
+        assert!(mlp_zoo(1).fuses_batches(), "vector rows always stack");
+        assert!(cnn_zoo(1).fuses_batches(), "conv/flatten/linear is row-independent");
+        assert!(!attention_zoo(1).fuses_batches(), "ctx_scale must never mix requests");
+    }
+
+    #[test]
+    fn matmul_shapes_census_tracks_serving_assembly() {
+        // mlp: stacked rows scale m with batch
+        let mlp = mlp_zoo(1);
+        assert_eq!(
+            mlp.matmul_shapes(1),
+            vec![(1, 32, 10, 4), (1, 64, 32, 4), (1, 64, 64, 8)]
+        );
+        assert_eq!(
+            mlp.matmul_shapes(8),
+            vec![(8, 32, 10, 4), (8, 64, 32, 4), (8, 64, 64, 8)]
+        );
+        // cnn fused at batch 4: batched-im2col rows, then a stacked head
+        let cnn = cnn_zoo(2);
+        let shapes = cnn.matmul_shapes(4);
+        assert!(shapes.contains(&(4 * 256, 9, 8, 8)), "{shapes:?}"); // conv1
+        assert!(shapes.contains(&(4 * 64, 72, 16, 6)), "{shapes:?}"); // conv2, stride 2
+        assert!(shapes.contains(&(4, 16 * 8 * 8, 10, 6)), "{shapes:?}"); // head
+        assert_eq!(shapes.len(), 3);
+        // attention serves per item: batch never changes its census
+        let attn = attention_zoo(3);
+        assert_eq!(attn.matmul_shapes(1), vec![(16, 32, 32, 8)]);
+        assert_eq!(attn.matmul_shapes(8), attn.matmul_shapes(1));
+        // precision overrides replace the per-layer widths
+        let over = mlp.matmul_shapes_with(1, Some(&[6, 6, 6]));
+        assert_eq!(over, vec![(1, 32, 10, 6), (1, 64, 32, 6), (1, 64, 64, 6)]);
+    }
+
+    #[test]
+    fn flatten_census_passes_rank2_through_like_forward_does() {
+        // attention → flatten → linear head: forward feeds the head
+        // the [seq, d] matrix (flatten is a rank-2 passthrough), so
+        // the censuses must count it from that shape, not [1, seq·d]
+        let attn_layer = attention_zoo(1).layers.remove(0);
+        let head = Layer::Linear(LinearLayer {
+            w: QTensor::zeros(vec![32, 10], 0.05, 8),
+            bias: vec![0; 10],
+            bits: 8,
+            relu: false,
+            out_scale: 0.5,
+            out_bits: 8,
+            packed: PackedCache::new(),
+        });
+        let m = Model {
+            name: "attn-head".into(),
+            layers: vec![attn_layer, Layer::Flatten, head],
+            input_shape: vec![16, 32],
+            input_bits: 8,
+            input_scale: 0.05,
+        };
+        // the model actually forwards (the composition is legal) …
+        let x = QTensor::zeros(vec![16, 32], 0.05, 8);
+        let y = m.forward(&x, &mut exec()).unwrap();
+        assert_eq!(y.shape, vec![16, 10]);
+        // … and both censuses see the head's real [16, 32]×[32, 10]
+        let s = m.stats(1);
+        assert_eq!(s.per_layer[2], ("linear", 8, 16 * 32 * 10));
+        assert!(
+            m.matmul_shapes(1).contains(&(16, 32, 10, 8)),
+            "{:?}",
+            m.matmul_shapes(1)
+        );
+    }
+
+    #[test]
+    fn warm_packed_precomputes_every_weight_slot() {
+        let cnn = cnn_zoo(2);
+        assert_eq!(cnn.warm_packed().unwrap(), 3, "conv1 + conv2 + head");
+        for layer in &cnn.layers {
+            match layer {
+                Layer::Conv2d(l) => {
+                    assert!(l.wt.is_built(), "transpose derived at warm start");
+                    assert_eq!(l.packed.packs(), 1);
+                }
+                Layer::Linear(l) => assert_eq!(l.packed.packs(), 1),
+                _ => {}
+            }
+        }
+        // idempotent: a second warm start packs nothing new
+        assert_eq!(cnn.warm_packed().unwrap(), 3);
+        for layer in &cnn.layers {
+            if let Layer::Conv2d(l) = layer {
+                assert_eq!(l.packed.packs(), 1);
+            }
+        }
+        let attn = attention_zoo(3);
+        assert_eq!(attn.warm_packed().unwrap(), 4, "q/k/v/o projections");
+        if let Layer::Attention(l) = &attn.layers[0] {
+            assert_eq!(l.packed.packs(), 4);
+        }
     }
 
     #[test]

@@ -102,36 +102,102 @@ pub fn im2col(
 ) -> Result<(QTensor, usize, usize)> {
     anyhow::ensure!(input.rank() == 3, "im2col expects (C,H,W)");
     let (c, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (oh, ow) = im2col_dims(h, w, kh, kw, stride, pad)?;
+    let cols = c * kh * kw;
+    let mut out = Vec::with_capacity(oh * ow * cols);
+    im2col_fill(&input.data, c, h, w, kh, kw, stride, pad, oh, ow, &mut out);
+    Ok((
+        QTensor::new(out, vec![oh * ow, cols], input.scale, input.bits)?,
+        oh,
+        ow,
+    ))
+}
+
+/// Batched im2col for NCHW rank-4 input: the im2col matrices of every
+/// image in a `(B,C,H,W)` batch stacked into one
+/// `[B·OH·OW, C·KH·KW]` operand, so a whole batch of convolutions is
+/// **one** matmul. Rows stay per-image (image `i` owns rows
+/// `i·OH·OW .. (i+1)·OH·OW`, filled by the exact per-image loop), so
+/// batch invariance holds: fusing changes the matmul count, never the
+/// integers.
+pub fn im2col_batch(
+    input: &QTensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<(QTensor, usize, usize)> {
+    anyhow::ensure!(input.rank() == 4, "im2col_batch expects (B,C,H,W)");
+    let (b, c, h, w) = (
+        input.shape[0],
+        input.shape[1],
+        input.shape[2],
+        input.shape[3],
+    );
+    let (oh, ow) = im2col_dims(h, w, kh, kw, stride, pad)?;
+    let cols = c * kh * kw;
+    let mut out = Vec::with_capacity(b * oh * ow * cols);
+    for img in 0..b {
+        let image = &input.data[img * c * h * w..(img + 1) * c * h * w];
+        im2col_fill(image, c, h, w, kh, kw, stride, pad, oh, ow, &mut out);
+    }
+    Ok((
+        QTensor::new(out, vec![b * oh * ow, cols], input.scale, input.bits)?,
+        oh,
+        ow,
+    ))
+}
+
+/// Output spatial dims of a convolution, validating the geometry.
+fn im2col_dims(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Result<(usize, usize)> {
     anyhow::ensure!(kh >= 1 && kw >= 1 && stride >= 1, "bad conv params");
     anyhow::ensure!(h + 2 * pad >= kh && w + 2 * pad >= kw, "kernel larger than input");
-    let oh = (h + 2 * pad - kh) / stride + 1;
-    let ow = (w + 2 * pad - kw) / stride + 1;
-    let cols = c * kh * kw;
-    let mut out = vec![0i32; oh * ow * cols];
+    Ok(((h + 2 * pad - kh) / stride + 1, (w + 2 * pad - kw) / stride + 1))
+}
+
+/// The per-image im2col inner loop, appending `oh·ow` rows of
+/// `c·kh·kw` patch values to `out` (push order equals row-major index
+/// order, shared by the single-image and batched entry points so the
+/// two cannot drift).
+#[allow(clippy::too_many_arguments)]
+fn im2col_fill(
+    data: &[i32],
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut Vec<i32>,
+) {
     for oy in 0..oh {
         for ox in 0..ow {
-            let row = oy * ow + ox;
             for ch in 0..c {
                 for ky in 0..kh {
                     for kx in 0..kw {
                         let iy = (oy * stride + ky) as isize - pad as isize;
                         let ix = (ox * stride + kx) as isize - pad as isize;
                         let v = if iy >= 0 && ix >= 0 && (iy as usize) < h && (ix as usize) < w {
-                            input.data[ch * h * w + iy as usize * w + ix as usize]
+                            data[ch * h * w + iy as usize * w + ix as usize]
                         } else {
                             0
                         };
-                        out[row * cols + ch * kh * kw + ky * kw + kx] = v;
+                        out.push(v);
                     }
                 }
             }
         }
     }
-    Ok((
-        QTensor::new(out, vec![oh * ow, cols], input.scale, input.bits)?,
-        oh,
-        ow,
-    ))
 }
 
 #[cfg(test)]
@@ -198,5 +264,39 @@ mod tests {
         let img = QTensor::new((0..16).collect(), vec![1, 4, 4], 1.0, 8).unwrap();
         let (_, oh, ow) = im2col(&img, 2, 2, 2, 0).unwrap();
         assert_eq!((oh, ow), (2, 2));
+    }
+
+    #[test]
+    fn im2col_batch_stacks_per_image_matrices_exactly() {
+        // 3 images of (2, 3, 3): the batched matrix is the per-image
+        // im2col matrices concatenated row-block by row-block
+        let (b, c, h, w) = (3usize, 2usize, 3usize, 3usize);
+        let data: Vec<i32> = (0..(b * c * h * w) as i32).map(|v| v % 50).collect();
+        let batch = QTensor::new(data.clone(), vec![b, c, h, w], 0.5, 8).unwrap();
+        let (stacked, oh, ow) = im2col_batch(&batch, 2, 2, 1, 1).unwrap();
+        assert_eq!((oh, ow), (4, 4));
+        assert_eq!(stacked.shape, vec![b * oh * ow, c * 2 * 2]);
+        for img in 0..b {
+            let solo = QTensor::new(
+                data[img * c * h * w..(img + 1) * c * h * w].to_vec(),
+                vec![c, h, w],
+                0.5,
+                8,
+            )
+            .unwrap();
+            let (a, soh, sow) = im2col(&solo, 2, 2, 1, 1).unwrap();
+            assert_eq!((soh, sow), (oh, ow));
+            let rows = oh * ow * c * 2 * 2;
+            assert_eq!(
+                &stacked.data[img * rows..(img + 1) * rows],
+                &a.data[..],
+                "image {img} block diverged"
+            );
+        }
+        // rank and geometry validation
+        let solo = QTensor::zeros(vec![1, 2, 2], 1.0, 8);
+        assert!(im2col_batch(&solo, 2, 2, 1, 0).is_err(), "rank-3 rejected");
+        let tiny = QTensor::zeros(vec![1, 1, 2, 2], 1.0, 8);
+        assert!(im2col_batch(&tiny, 5, 5, 1, 0).is_err(), "kernel exceeds input");
     }
 }

@@ -1,0 +1,99 @@
+//! The built-in cost model — tier 3 of plan resolution (DESIGN.md
+//! §Planner): when a shape class has no cached or nearby plan, seed
+//! one from first principles.
+//!
+//! The packed engine reduces one output element with
+//! `bits_a · bits_b` plane pairs of `ceil(k/64)` word-AND-popcounts
+//! each, while the native loop spends `k` multiply-adds — so the
+//! crossover is `bits_a · bits_b · ceil(k/64) ≶ k`, which flips with
+//! operand precision exactly as `benches/eq_crossover.rs` shows for
+//! the hardware equations (eq. 8 vs eq. 6): word packing amortizes 64
+//! digits per op, plane pairing costs precision². At 8×8 bits the two
+//! sides tie and the tie breaks packed (SIMD popcounts and cached
+//! weight planes are not in the formula but always favour packed);
+//! at 16×16 native wins, at ≤4 bits packed wins outright.
+
+use super::exec::{ExecPlan, Partition};
+use super::key::PlanKey;
+use crate::bits::packed::{PopcountKernel, TilePolicy, MIN_TILE_WORK};
+
+/// Word operations the packed engine spends on an `m×k×n` matmul at
+/// `ba × bb` bits: one AND+popcount per word per plane pair per output
+/// element.
+pub fn packed_word_ops(m: usize, k: usize, n: usize, ba: u32, bb: u32) -> u128 {
+    let words = k.div_ceil(64) as u128;
+    ba as u128 * bb as u128 * words * m as u128 * n as u128
+}
+
+/// Element operations of the native i-k-j loop: one multiply-add per
+/// `(row, k, col)` triple.
+pub fn native_elem_ops(m: usize, k: usize, n: usize) -> u128 {
+    m as u128 * k as u128 * n as u128
+}
+
+/// Whether the cost model routes this shape class to the packed
+/// engine (ties break packed — see module docs).
+pub fn prefers_packed(m: usize, k: usize, n: usize, ba: u32, bb: u32) -> bool {
+    packed_word_ops(m, k, n, ba, bb) <= native_elem_ops(m, k, n)
+}
+
+/// Seed an [`ExecPlan`] for a shape class from the cost model alone:
+/// backend by the word-ops crossover, the best runtime-detected
+/// popcount reducer, and the pool (work-stolen, auto tiles) whenever
+/// the class carries enough word work to amortize dispatch
+/// ([`MIN_TILE_WORK`], the same floor the tile planner uses).
+pub fn seed_plan(key: &PlanKey, pool_slots: usize) -> ExecPlan {
+    let (m, k, n) = key.rep_shape();
+    let (ba, bb) = (key.bits_a as u32, key.bits_b as u32);
+    if !prefers_packed(m, k, n, ba, bb) {
+        return ExecPlan::native();
+    }
+    let kernel = PopcountKernel::Auto.resolve();
+    if pool_slots > 1 && packed_word_ops(m, k, n, ba, bb) >= MIN_TILE_WORK as u128 {
+        ExecPlan::packed(kernel, pool_slots as u32, Partition::Stolen, TilePolicy::AUTO)
+    } else {
+        ExecPlan::packed(kernel, 1, Partition::Serial, TilePolicy::AUTO)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::plane::PlaneKind;
+    use crate::plan::exec::PlanBackend;
+
+    #[test]
+    fn crossover_flips_with_precision() {
+        // ≤ 7×7 bits: 49 plane pairs on 1/64th the words beats native
+        assert!(prefers_packed(64, 512, 64, 4, 4));
+        assert!(prefers_packed(64, 512, 64, 7, 7));
+        // 8×8 on word-aligned k ties, and the tie breaks packed
+        assert!(prefers_packed(64, 512, 64, 8, 8));
+        // 16×16: 256 plane pairs overwhelm the 64× word amortization
+        assert!(!prefers_packed(64, 512, 64, 16, 16));
+        // asymmetric widths follow the product
+        assert!(prefers_packed(64, 512, 64, 16, 3));
+    }
+
+    #[test]
+    fn seed_plan_tracks_the_crossover_and_work_floor() {
+        let lo = PlanKey::for_matmul(256, 256, 256, 4, 4, PlaneKind::Sbmwc);
+        let p = seed_plan(&lo, 9);
+        assert_eq!(p.backend, PlanBackend::Packed);
+        assert_eq!(p.partition, Partition::Stolen, "big class uses the pool");
+        assert!(p.kernel.available());
+
+        let hi = PlanKey::for_matmul(256, 256, 256, 16, 16, PlaneKind::Sbmwc);
+        assert_eq!(seed_plan(&hi, 9).backend, PlanBackend::Native);
+
+        // tiny packed class: serial, the pool cannot amortize dispatch
+        let tiny = PlanKey::for_matmul(2, 16, 2, 2, 2, PlaneKind::Sbmwc);
+        let p = seed_plan(&tiny, 9);
+        assert_eq!(p.backend, PlanBackend::Packed);
+        assert_eq!(p.partition, Partition::Serial);
+
+        // no pool: never plans a pooled partition
+        let p = seed_plan(&lo, 1);
+        assert_eq!(p.partition, Partition::Serial);
+    }
+}

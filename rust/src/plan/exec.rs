@@ -1,0 +1,448 @@
+//! Executable plans: what the planner chooses between, and the one
+//! function that runs a plan (DESIGN.md §Planner).
+//!
+//! An [`ExecPlan`] is a point in the discrete configuration space the
+//! serving stack accumulated across PRs 1–4: native-vs-packed backend,
+//! popcount reducer, kernel thread intent, equal-slice vs work-stolen
+//! partitioning, and 2-D tile policy. Every plan is **bit-transparent**
+//! — all candidates compute the same integers (each leg is pinned to
+//! the serial packed oracle and the native reference by the property
+//! suite), so the planner is free to pick any of them purely on
+//! measured or modelled speed.
+//!
+//! [`ShapeRun::run`] is the single execution path for a plan, shared by
+//! the scheduler's request path, the planner's on-line calibration, the
+//! `bitsmm tune` sweep, benches, and the property tests — so what gets
+//! timed is exactly what gets served.
+
+use super::cost;
+use super::key::PlanKey;
+use crate::bits::packed::{
+    matmul_packed_tile_rowslice, matmul_packed_tile_stolen, matmul_packed_tile_with, PackedPlanes,
+    PackedPool, PopcountKernel, StealStats, TilePolicy,
+};
+use crate::bits::plane::PlaneKind;
+use crate::nn::matmul_native;
+use crate::Result;
+use std::sync::Arc;
+
+/// Which functional engine a plan routes the matmul to. (The PJRT and
+/// cycle-accurate backends are fidelity choices, not speed choices —
+/// the planner only arbitrates the two host-speed engines.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlanBackend {
+    /// The dense i-k-j integer loop (`matmul_native`).
+    Native,
+    /// The word-packed plane-pair engine (`bits::packed`).
+    Packed,
+}
+
+impl PlanBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanBackend::Native => "native",
+            PlanBackend::Packed => "packed",
+        }
+    }
+}
+
+impl std::str::FromStr for PlanBackend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<PlanBackend> {
+        match s {
+            "native" => Ok(PlanBackend::Native),
+            "packed" => Ok(PlanBackend::Packed),
+            other => anyhow::bail!("unknown plan backend '{other}' (native|packed)"),
+        }
+    }
+}
+
+/// How a packed matmul is spread over the kernel pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Partition {
+    /// Single-thread kernel — no pool dispatch at all.
+    Serial,
+    /// PR 2 equal row slices (`matmul_packed_tile_rowslice`).
+    Rowslice,
+    /// Work-stealing 2-D tiles (`matmul_packed_tile_stolen`).
+    Stolen,
+}
+
+impl Partition {
+    pub fn name(self) -> &'static str {
+        match self {
+            Partition::Serial => "serial",
+            Partition::Rowslice => "rowslice",
+            Partition::Stolen => "stolen",
+        }
+    }
+}
+
+impl std::str::FromStr for Partition {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Partition> {
+        match s {
+            "serial" => Ok(Partition::Serial),
+            "rowslice" => Ok(Partition::Rowslice),
+            "stolen" => Ok(Partition::Stolen),
+            other => anyhow::bail!("unknown partition '{other}' (serial|rowslice|stolen)"),
+        }
+    }
+}
+
+/// One executable configuration of the serving hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecPlan {
+    pub backend: PlanBackend,
+    /// Popcount reducer (packed backend only).
+    pub kernel: PopcountKernel,
+    /// Kernel slots the plan was chosen for (1 = serial; informational
+    /// when the executing pool is a different size — the partition is
+    /// what actually dispatches).
+    pub threads: u32,
+    pub partition: Partition,
+    /// 2-D tile policy (stolen partition only).
+    pub tile: TilePolicy,
+}
+
+impl ExecPlan {
+    pub fn native() -> ExecPlan {
+        ExecPlan {
+            backend: PlanBackend::Native,
+            kernel: PopcountKernel::Scalar,
+            threads: 1,
+            partition: Partition::Serial,
+            tile: TilePolicy::AUTO,
+        }
+    }
+
+    pub fn packed(
+        kernel: PopcountKernel,
+        threads: u32,
+        partition: Partition,
+        tile: TilePolicy,
+    ) -> ExecPlan {
+        ExecPlan {
+            backend: PlanBackend::Packed,
+            kernel,
+            threads: threads.max(1),
+            partition,
+            tile,
+        }
+    }
+
+    /// The plan the pre-planner scheduler always ran: packed, the
+    /// configured reducer and tile policy, stolen across the pool when
+    /// one is attached. Keeping it as an explicit plan means the
+    /// planner-off path and the planned path share one executor.
+    pub fn static_default(
+        kernel: PopcountKernel,
+        tile: TilePolicy,
+        pool_slots: usize,
+    ) -> ExecPlan {
+        if pool_slots > 1 {
+            ExecPlan::packed(kernel, pool_slots as u32, Partition::Stolen, tile)
+        } else {
+            ExecPlan::packed(kernel, 1, Partition::Serial, tile)
+        }
+    }
+
+    /// Human/plan-file label, e.g. `packed/avx2/t9/stolen/auto`.
+    pub fn label(&self) -> String {
+        match self.backend {
+            PlanBackend::Native => "native".to_string(),
+            PlanBackend::Packed => {
+                let tile = if self.tile == TilePolicy::AUTO {
+                    "auto".to_string()
+                } else {
+                    format!("{}x{}", self.tile.tile_rows, self.tile.tile_cols)
+                };
+                format!(
+                    "packed/{}/t{}/{}/{tile}",
+                    self.kernel.name(),
+                    self.threads,
+                    self.partition.name()
+                )
+            }
+        }
+    }
+
+    /// The full candidate space for `pool_slots` kernel slots: native,
+    /// every available reducer serially, and (when a pool exists) every
+    /// available reducer under rowslice and under stolen with a small
+    /// spread of tile policies. This is the sweep `bitsmm tune` times
+    /// and the set the bit-transparency property test pins — every
+    /// member computes identical integers.
+    pub fn candidates(pool_slots: usize) -> Vec<ExecPlan> {
+        let mut v = vec![ExecPlan::native()];
+        let kernels = PopcountKernel::available_concrete();
+        for &kern in &kernels {
+            v.push(ExecPlan::packed(kern, 1, Partition::Serial, TilePolicy::AUTO));
+        }
+        if pool_slots > 1 {
+            let t = pool_slots as u32;
+            for &kern in &kernels {
+                v.push(ExecPlan::packed(kern, t, Partition::Rowslice, TilePolicy::AUTO));
+                for tile in [
+                    TilePolicy::AUTO,
+                    TilePolicy { tile_rows: 1, tile_cols: 0 },
+                    TilePolicy { tile_rows: 0, tile_cols: 1 },
+                ] {
+                    v.push(ExecPlan::packed(kern, t, Partition::Stolen, tile));
+                }
+            }
+        }
+        v
+    }
+
+    /// The short list on-line calibration times on a *live* request:
+    /// the cost-model seed plus the structurally distinct alternatives
+    /// (native, serial packed, pooled stolen/rowslice with the best
+    /// reducer), deduplicated, capped at `limit`. Small on purpose —
+    /// calibration runs on the request path.
+    pub fn top_candidates(key: &PlanKey, pool_slots: usize, limit: usize) -> Vec<ExecPlan> {
+        let auto = PopcountKernel::Auto.resolve();
+        let mut v = vec![
+            cost::seed_plan(key, pool_slots),
+            ExecPlan::native(),
+            ExecPlan::packed(auto, 1, Partition::Serial, TilePolicy::AUTO),
+        ];
+        if pool_slots > 1 {
+            let t = pool_slots as u32;
+            v.push(ExecPlan::packed(auto, t, Partition::Stolen, TilePolicy::AUTO));
+            v.push(ExecPlan::packed(auto, t, Partition::Rowslice, TilePolicy::AUTO));
+        }
+        let mut out: Vec<ExecPlan> = Vec::with_capacity(v.len());
+        for p in v {
+            if !out.contains(&p) {
+                out.push(p);
+            }
+        }
+        out.truncate(limit.max(1));
+        out
+    }
+}
+
+/// The result of running one plan: the exact i64 accumulators, the
+/// stolen-scheduler telemetry (zero unless the stolen partition ran),
+/// and whether the packed engine (vs the native loop) produced it.
+pub type RunOut = (Vec<i64>, StealStats, bool);
+
+/// One matmul's operands and execution context, bundled so the
+/// scheduler, the calibrator, and the tuner all run plans through the
+/// same code.
+pub struct ShapeRun<'r> {
+    /// Streamed operand, row-major `m × k`.
+    pub a: &'r [i32],
+    /// Stationary operand, row-major `k × n` (dense — used by the
+    /// native backend and to pack ad-hoc when `packed_b` is absent).
+    pub b: &'r [i32],
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub bits: u32,
+    /// Plane kind used to pack the streamed operand (and the
+    /// stationary one when no cached planes are supplied).
+    pub stream_kind: PlaneKind,
+    /// Pre-packed stationary planes at exactly `bits` (the layer-cache
+    /// steady state); `None` means pack per call, which the timing then
+    /// honestly includes.
+    pub packed_b: Option<&'r Arc<PackedPlanes>>,
+    /// Kernel worker pool for pooled partitions; plans wanting a pool
+    /// degrade to the serial kernel without one.
+    pub pool: Option<&'r Arc<PackedPool>>,
+}
+
+impl ShapeRun<'_> {
+    /// Execute `plan` on these operands. Bit-identical across every
+    /// plan by construction: the native leg is the reference loop, and
+    /// every packed leg is pinned to it by the property suite.
+    pub fn run(&self, plan: &ExecPlan) -> Result<RunOut> {
+        let (m, k, n, bits) = (self.m, self.k, self.n, self.bits);
+        match plan.backend {
+            PlanBackend::Native => Ok((
+                matmul_native(self.a, self.b, m, k, n, bits)?,
+                StealStats::default(),
+                false,
+            )),
+            PlanBackend::Packed => {
+                let pa = Arc::new(PackedPlanes::pack_rows(self.a, m, k, bits, self.stream_kind)?);
+                let pb = match self.packed_b {
+                    Some(p) => {
+                        anyhow::ensure!(
+                            p.len == k && p.vectors == n && p.bits == bits,
+                            "supplied planes ({}x{} @{}b) do not match the run ({k}x{n} @{bits}b)",
+                            p.len,
+                            p.vectors,
+                            p.bits
+                        );
+                        p.clone()
+                    }
+                    None => Arc::new(PackedPlanes::pack_cols(self.b, k, n, bits, self.stream_kind)?),
+                };
+                match (plan.partition, self.pool) {
+                    (Partition::Serial, _) | (_, None) => Ok((
+                        matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, plan.kernel)?,
+                        StealStats::default(),
+                        true,
+                    )),
+                    (Partition::Rowslice, Some(pool)) => Ok((
+                        matmul_packed_tile_rowslice(pool, &pa, &pb, 0, m, 0, n, plan.kernel)?,
+                        StealStats::default(),
+                        true,
+                    )),
+                    (Partition::Stolen, Some(pool)) => {
+                        let (out, stats) = matmul_packed_tile_stolen(
+                            pool, &pa, &pb, 0, m, 0, n, plan.kernel, plan.tile,
+                        )?;
+                        Ok((out, stats, true))
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::twos::{max_value, min_value};
+    use crate::prng::Pcg32;
+    use crate::sim::driver::ref_matmul_i64;
+
+    fn rand_mat(rng: &mut Pcg32, len: usize, bits: u32) -> Vec<i32> {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        (0..len).map(|_| rng.range_i32(lo, hi)).collect()
+    }
+
+    #[test]
+    fn candidate_space_covers_the_knobs() {
+        let pooled = ExecPlan::candidates(4);
+        assert!(pooled.contains(&ExecPlan::native()));
+        assert!(pooled.iter().any(|p| p.partition == Partition::Serial
+            && p.backend == PlanBackend::Packed));
+        assert!(pooled.iter().any(|p| p.partition == Partition::Rowslice));
+        assert!(pooled.iter().any(|p| p.partition == Partition::Stolen
+            && p.tile != TilePolicy::AUTO));
+        // no duplicates
+        for (i, p) in pooled.iter().enumerate() {
+            assert!(!pooled[i + 1..].contains(p), "duplicate candidate {p:?}");
+        }
+        // without a pool, nothing pooled is offered
+        let serial = ExecPlan::candidates(1);
+        assert!(serial.iter().all(|p| p.partition == Partition::Serial));
+        assert!(serial.len() >= 2, "native + at least the scalar reducer");
+    }
+
+    #[test]
+    fn top_candidates_are_small_and_lead_with_the_seed() {
+        let key = crate::plan::PlanKey::for_matmul(64, 512, 64, 4, 4, PlaneKind::Sbmwc);
+        let top = ExecPlan::top_candidates(&key, 5, 5);
+        assert!(top.len() <= 5 && !top.is_empty());
+        assert_eq!(top[0], super::cost::seed_plan(&key, 5));
+        assert!(top.contains(&ExecPlan::native()));
+        for (i, p) in top.iter().enumerate() {
+            assert!(!top[i + 1..].contains(p), "duplicate top candidate {p:?}");
+        }
+    }
+
+    #[test]
+    fn every_plan_runs_bit_identical_on_a_spot_shape() {
+        let pool = Arc::new(PackedPool::new(2).unwrap());
+        let mut rng = Pcg32::new(0x9147);
+        let (m, k, n, bits) = (5usize, 70usize, 9usize, 6u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+        let pb = Arc::new(
+            PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap(),
+        );
+        for packed_b in [None, Some(&pb)] {
+            let run = ShapeRun {
+                a: &a,
+                b: &b,
+                m,
+                k,
+                n,
+                bits,
+                stream_kind: PlaneKind::Sbmwc,
+                packed_b,
+                pool: Some(&pool),
+            };
+            for plan in ExecPlan::candidates(pool.threads() + 1) {
+                let (out, stats, ran_packed) = run.run(&plan).unwrap();
+                assert_eq!(out, want, "{} diverged", plan.label());
+                assert_eq!(ran_packed, plan.backend == PlanBackend::Packed);
+                if plan.partition != Partition::Stolen {
+                    assert_eq!(stats, StealStats::default());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_plans_degrade_serially_without_a_pool() {
+        let mut rng = Pcg32::new(0x9148);
+        let (m, k, n, bits) = (3usize, 64usize, 4usize, 4u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let run = ShapeRun {
+            a: &a,
+            b: &b,
+            m,
+            k,
+            n,
+            bits,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: None,
+            pool: None,
+        };
+        let plan = ExecPlan::packed(
+            PopcountKernel::Auto,
+            8,
+            Partition::Stolen,
+            TilePolicy::AUTO,
+        );
+        let (out, _, ran_packed) = run.run(&plan).unwrap();
+        assert_eq!(out, ref_matmul_i64(&a, &b, m, k, n));
+        assert!(ran_packed);
+    }
+
+    #[test]
+    fn mismatched_supplied_planes_are_rejected() {
+        let a = [1i32, 2, 3];
+        let b = [1i32, 2, 3, 4, 5, 6];
+        let pb = Arc::new(PackedPlanes::pack_cols(&b, 3, 2, 8, PlaneKind::Sbmwc).unwrap());
+        let run = ShapeRun {
+            a: &a,
+            b: &b,
+            m: 1,
+            k: 3,
+            n: 2,
+            bits: 4, // planes above are 8-bit: the run must reject them
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: Some(&pb),
+            pool: None,
+        };
+        let plan = ExecPlan::packed(PopcountKernel::Scalar, 1, Partition::Serial, TilePolicy::AUTO);
+        assert!(run.run(&plan).is_err());
+    }
+
+    #[test]
+    fn labels_and_parses() {
+        assert_eq!(ExecPlan::native().label(), "native");
+        let p = ExecPlan::packed(
+            PopcountKernel::Scalar,
+            9,
+            Partition::Stolen,
+            TilePolicy { tile_rows: 2, tile_cols: 8 },
+        );
+        assert_eq!(p.label(), "packed/scalar/t9/stolen/2x8");
+        assert_eq!("native".parse::<PlanBackend>().unwrap(), PlanBackend::Native);
+        assert_eq!("stolen".parse::<Partition>().unwrap(), Partition::Stolen);
+        assert!("gpu".parse::<PlanBackend>().is_err());
+        assert!("diagonal".parse::<Partition>().is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Shape-class keys for the execution planner (DESIGN.md §Planner).
+//!
+//! A [`PlanKey`] names a *class* of matmuls, not one shape: the three
+//! dimensions are bucketed geometrically (one bucket per power of two)
+//! while the operand precisions and the stationary operand's plane
+//! kind stay exact — precision is what flips the native/packed
+//! crossover (`benches/eq_crossover.rs`), so it must never be blurred,
+//! whereas a 100-row and a 128-row request want the same plan. The
+//! bucket count is tiny (≤ 64 per dimension), so a serving run touches
+//! a handful of keys and the plan cache stays small.
+
+use crate::bits::plane::PlaneKind;
+
+/// Geometric bucket of a dimension: the smallest `b` with `dim ≤ 2^b`
+/// (`bucket(1) = 0`, `bucket(3) = bucket(4) = 2`, …). Zero-sized
+/// dimensions share bucket 0 with `dim = 1`.
+pub fn bucket(dim: usize) -> u8 {
+    let dim = dim.max(1);
+    (usize::BITS - (dim - 1).leading_zeros()) as u8
+}
+
+/// Representative (upper-bound) dimension of a bucket: `2^b`. The cost
+/// model evaluates keys at this size so every member of the class gets
+/// the plan its largest member would.
+pub fn bucket_dim(b: u8) -> usize {
+    1usize << b.min(usize::BITS as u8 - 2)
+}
+
+/// One shape class: bucketed `m × k × n`, exact operand precisions,
+/// exact stationary plane kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Bucket of the output-row dimension m.
+    pub mb: u8,
+    /// Bucket of the contracted dimension k.
+    pub kb: u8,
+    /// Bucket of the output-column dimension n.
+    pub nb: u8,
+    /// Streamed-operand precision (bits of A).
+    pub bits_a: u8,
+    /// Stationary-operand precision (bits of B).
+    pub bits_b: u8,
+    /// Plane kind of the stationary operand (the cached one).
+    pub kind: PlaneKind,
+}
+
+impl PlanKey {
+    pub fn for_matmul(
+        m: usize,
+        k: usize,
+        n: usize,
+        bits_a: u32,
+        bits_b: u32,
+        kind: PlaneKind,
+    ) -> PlanKey {
+        PlanKey {
+            mb: bucket(m),
+            kb: bucket(k),
+            nb: bucket(n),
+            bits_a: bits_a.min(255) as u8,
+            bits_b: bits_b.min(255) as u8,
+            kind,
+        }
+    }
+
+    /// Representative shape of the class (each bucket's upper bound).
+    pub fn rep_shape(&self) -> (usize, usize, usize) {
+        (bucket_dim(self.mb), bucket_dim(self.kb), bucket_dim(self.nb))
+    }
+
+    /// Bucket distance to another key of the *same* precisions and
+    /// plane kind (`None` otherwise — plans never cross precision or
+    /// kind, that is exactly the blur the key exists to prevent).
+    pub fn distance(&self, o: &PlanKey) -> Option<u32> {
+        if self.bits_a != o.bits_a || self.bits_b != o.bits_b || self.kind != o.kind {
+            return None;
+        }
+        let d = |a: u8, b: u8| a.abs_diff(b) as u32;
+        Some(d(self.mb, o.mb) + d(self.kb, o.kb) + d(self.nb, o.nb))
+    }
+
+    /// Total sort key for stable summaries / plan files (PlaneKind has
+    /// no `Ord`, so map it explicitly).
+    pub fn sort_key(&self) -> (u8, u8, u8, u8, u8, u8) {
+        let kind = match self.kind {
+            PlaneKind::Sbmwc => 0u8,
+            PlaneKind::Booth => 1,
+        };
+        (self.bits_a, self.bits_b, kind, self.mb, self.kb, self.nb)
+    }
+}
+
+impl std::fmt::Display for PlanKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let (m, k, n) = self.rep_shape();
+        write!(
+            f,
+            "{m}x{k}x{n} @{}x{}b {}",
+            self.bits_a,
+            self.bits_b,
+            self.kind.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_geometric() {
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(2), 1);
+        assert_eq!(bucket(3), 2);
+        assert_eq!(bucket(4), 2);
+        assert_eq!(bucket(5), 3);
+        assert_eq!(bucket(64), 6);
+        assert_eq!(bucket(65), 7);
+        assert_eq!(bucket(4096), 12);
+        for d in 1..=4096usize {
+            let b = bucket(d);
+            assert!(bucket_dim(b) >= d, "dim {d} escaped its bucket");
+            assert!(b == 0 || bucket_dim(b - 1) < d, "dim {d} over-bucketed");
+        }
+    }
+
+    #[test]
+    fn keys_collapse_shapes_but_not_precision() {
+        let a = PlanKey::for_matmul(100, 512, 4096, 8, 8, PlaneKind::Sbmwc);
+        let b = PlanKey::for_matmul(128, 400, 3000, 8, 8, PlaneKind::Sbmwc);
+        assert_eq!(a, b, "same buckets, same class");
+        let c = PlanKey::for_matmul(100, 512, 4096, 3, 8, PlaneKind::Sbmwc);
+        assert_ne!(a, c, "precision is exact, never bucketed");
+        let d = PlanKey::for_matmul(100, 512, 4096, 8, 8, PlaneKind::Booth);
+        assert_ne!(a, d, "plane kind is exact");
+    }
+
+    #[test]
+    fn distance_is_bucket_manhattan_within_a_precision() {
+        let a = PlanKey::for_matmul(1, 512, 4096, 8, 8, PlaneKind::Sbmwc);
+        let b = PlanKey::for_matmul(4, 512, 2048, 8, 8, PlaneKind::Sbmwc);
+        assert_eq!(a.distance(&b), Some(2 + 0 + 1));
+        assert_eq!(a.distance(&a), Some(0));
+        let c = PlanKey::for_matmul(1, 512, 4096, 4, 8, PlaneKind::Sbmwc);
+        assert_eq!(a.distance(&c), None, "plans never cross precision");
+        let d = PlanKey::for_matmul(1, 512, 4096, 8, 8, PlaneKind::Booth);
+        assert_eq!(a.distance(&d), None, "plans never cross plane kind");
+    }
+
+    #[test]
+    fn display_names_the_class() {
+        let k = PlanKey::for_matmul(1, 512, 4096, 8, 6, PlaneKind::Sbmwc);
+        assert_eq!(format!("{k}"), "1x512x4096 @8x6b sbmwc");
+    }
+}

@@ -1,0 +1,48 @@
+//! Shape-keyed execution planner — the autotuning subsystem that picks
+//! the kernel/thread/tile plan per (shape, precision) and serves it
+//! from a persistent plan cache (DESIGN.md §Planner).
+//!
+//! PRs 1–4 grew a large discrete plan space on the packed hot path —
+//! five [`crate::bits::packed::PopcountKernel`] reducers, the pool
+//! width, 2-D tile rows/cols, rowslice-vs-stealing partitioning, and a
+//! native-vs-packed crossover that flips with operand precision
+//! (`benches/eq_crossover.rs`) — but every knob was one static
+//! server-wide value, so a deployment tuned for 256³ @ 8 b served
+//! 1×512×4096 @ 3 b with the wrong plan. This module turns those knobs
+//! into a self-tuning runtime, the BISMO-style "select a configuration
+//! from a cost model at runtime" idea (PAPERS.md, Umuroglu et al.)
+//! applied to the software stack — which is what bitSMM's
+//! runtime-configurable 1–16-bit precision (PAPER.md §III) needs to
+//! actually pay off when precision changes:
+//!
+//! * [`key`] — [`PlanKey`]: geometric shape buckets × exact precision
+//!   × plane kind.
+//! * [`exec`] — [`ExecPlan`]: one executable configuration, its
+//!   candidate space, and [`ShapeRun`], the single plan executor the
+//!   scheduler, calibrator, tuner, benches, and tests all share.
+//! * [`cost`] — the built-in word-ops cost model
+//!   (`bits_a·bits_b·⌈k/64⌉·m·n` vs native `m·k·n`).
+//! * [`planner`] — [`Planner`]: the `Arc`-shared three-tier resolver
+//!   (exact hit → nearest bucket/cost model → on-line calibration)
+//!   with hit/miss/calibration telemetry.
+//! * [`store`] — [`PlanFile`]: the versioned, host-fingerprinted
+//!   `configs/plans.json` persistence.
+//! * [`tune`] — the `bitsmm tune` sweep over the zoo shape census.
+//!
+//! The planner is **bit-transparent**: every candidate plan computes
+//! identical integers (pinned against the serial packed oracle and the
+//! native reference by the property suite), so planning changes speed,
+//! never results.
+
+pub mod cost;
+pub mod exec;
+pub mod key;
+pub mod planner;
+pub mod store;
+pub mod tune;
+
+pub use exec::{ExecPlan, Partition, PlanBackend, RunOut, ShapeRun};
+pub use key::PlanKey;
+pub use planner::{PlanStats, PlanTier, Planner, PlannerMode};
+pub use store::{host_fingerprint, PlanFile};
+pub use tune::{calibrate_shape, run_tune, TuneOpts};

@@ -1,0 +1,645 @@
+//! The shape-keyed execution planner — tier resolution and the shared
+//! concurrent plan cache (DESIGN.md §Planner).
+//!
+//! One `Arc<Planner>` is shared by every request worker's scheduler.
+//! A lookup resolves through three tiers:
+//!
+//! 1. **Exact hit** — the bucketed key is in the cache (loaded from
+//!    `configs/plans.json`, pre-resolved at warm start, or installed by
+//!    an earlier miss).
+//! 2. **Nearest bucket** — a cached *tuned* plan (calibrated, loaded
+//!    from the plan file, or deliberately installed — never a
+//!    cost-model seed or a nearest-tier copy, so reuse cannot chain
+//!    past the distance cap) for the same precisions and plane kind
+//!    in a nearby shape bucket is reused (tuned classes a few powers
+//!    of two apart almost always want the same plan); with no such
+//!    neighbour, the built-in cost model seeds the plan
+//!    ([`crate::plan::cost`]).
+//! 3. **On-line calibration** (`PlannerMode::Online` only, replacing
+//!    the cost-model fallback when no neighbour exists) — the top
+//!    candidate plans are *run* on the live operands, the fastest one
+//!    is installed, and its (bit-identical) output is returned so the
+//!    request pays for at most a handful of extra matmuls, once per
+//!    shape class.
+//!
+//! Whatever the tier, the resolved plan is installed under the exact
+//! key, so every class converges to hit-steady-state. Plans may change
+//! speed, never integers: every candidate is pinned bit-identical by
+//! the property suite, which is what makes the planner safe to drop
+//! into the serving path.
+
+use super::exec::{ExecPlan, RunOut, ShapeRun};
+use super::key::PlanKey;
+use super::store::PlanFile;
+use super::cost;
+use crate::Result;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// How much planning the server does (`server.planner` /
+/// `--planner`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerMode {
+    /// No planner: the static server-wide config runs everything.
+    Off,
+    /// Cache + nearest-bucket + cost model; never benchmarks on the
+    /// request path.
+    Static,
+    /// `Static`, plus first-touch micro-calibration of unseen shape
+    /// classes on the live operands.
+    Online,
+}
+
+impl PlannerMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlannerMode::Off => "off",
+            PlannerMode::Static => "static",
+            PlannerMode::Online => "online",
+        }
+    }
+}
+
+impl std::str::FromStr for PlannerMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<PlannerMode> {
+        match s {
+            "off" => Ok(PlannerMode::Off),
+            "static" => Ok(PlannerMode::Static),
+            "online" => Ok(PlannerMode::Online),
+            other => anyhow::bail!("unknown planner mode '{other}' (off|static|online)"),
+        }
+    }
+}
+
+/// Which tier resolved a lookup (reported per-scheduler via
+/// `ExecutionReport.plan`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanTier {
+    /// Cache hit on the exact key.
+    Exact,
+    /// Reused a nearby bucket's plan (same precisions and kind).
+    Nearest,
+    /// Seeded from the built-in cost model.
+    CostModel,
+    /// Micro-benchmarked on the live shape (Online mode).
+    Calibrated,
+}
+
+/// Plan-cache telemetry, merged like the steal stats: per-scheduler in
+/// `ExecutionReport`, mirrored into the server `Metrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Exact-key cache hits.
+    pub hits: u64,
+    /// Lookups resolved below tier 1 (nearest bucket, cost model, or
+    /// calibration).
+    pub misses: u64,
+    /// Misses that ran an on-line micro-benchmark.
+    pub calibrations: u64,
+}
+
+impl PlanStats {
+    pub fn merge(&mut self, o: &PlanStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.calibrations += o.calibrations;
+    }
+
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups() as f64
+    }
+}
+
+/// Neighbour reuse gives up beyond this bucket distance — classes that
+/// far apart (≥ ~2⁴× in some dimension product) genuinely may want
+/// different plans, so the cost model takes over.
+const NEAREST_MAX_DISTANCE: u32 = 4;
+
+/// Candidate plans an on-line calibration times (kept small: it runs
+/// on the request path, once per shape class).
+const CALIBRATION_CANDIDATES: usize = 5;
+
+/// One cached resolution. `donor` marks *tuned* entries — calibrated,
+/// loaded from a plan file, or deliberately [`Planner::insert`]ed —
+/// the only ones that may seed neighbouring buckets. Cost-model seeds
+/// are not donors (the cost model is free to re-evaluate at the
+/// neighbour's own representative shape, where e.g. the pooling work
+/// floor may cut the other way), and nearest-tier copies are not
+/// donors either, so reuse cannot chain transitively past
+/// [`NEAREST_MAX_DISTANCE`] (a plan copied to distance 4 copied again
+/// to distance 4 would otherwise govern a class 8 buckets away).
+#[derive(Debug, Clone, Copy)]
+struct Cached {
+    plan: ExecPlan,
+    donor: bool,
+}
+
+/// The shape-keyed planner: mode + shared plan cache + counters.
+pub struct Planner {
+    mode: PlannerMode,
+    /// Kernel slots plans are sized for (pool threads + the caller's
+    /// inline slot; 1 = no pool).
+    pool_slots: usize,
+    cache: Mutex<HashMap<PlanKey, Cached>>,
+    /// Shape classes currently being calibrated by some worker —
+    /// concurrent first-touch misses on the same class run the
+    /// cost-model seed once instead of duplicating the benchmark.
+    calibrating: Mutex<HashSet<PlanKey>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    calibrations: AtomicU64,
+}
+
+impl Planner {
+    pub fn new(mode: PlannerMode, pool_slots: usize) -> Planner {
+        Planner {
+            mode,
+            pool_slots: pool_slots.max(1),
+            cache: Mutex::new(HashMap::new()),
+            calibrating: Mutex::new(HashSet::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            calibrations: AtomicU64::new(0),
+        }
+    }
+
+    pub fn mode(&self) -> PlannerMode {
+        self.mode
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.mode != PlannerMode::Off
+    }
+
+    pub fn pool_slots(&self) -> usize {
+        self.pool_slots
+    }
+
+    /// Cached plan count.
+    pub fn len(&self) -> usize {
+        self.cache.lock().expect("plan cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter-free cache probe (tools and warm start; request-path
+    /// lookups go through [`Planner::resolve`] / [`Planner::plan_run`]).
+    pub fn peek(&self, key: &PlanKey) -> Option<ExecPlan> {
+        self.cache
+            .lock()
+            .expect("plan cache poisoned")
+            .get(key)
+            .map(|c| c.plan)
+    }
+
+    /// Deliberately install a plan (tools, tests, plan files): a donor
+    /// entry, eligible to seed neighbouring buckets.
+    pub fn insert(&self, key: PlanKey, plan: ExecPlan) {
+        self.cache
+            .lock()
+            .expect("plan cache poisoned")
+            .insert(key, Cached { plan, donor: true });
+    }
+
+    /// Nearest *donor* neighbour of `key` (same precisions and plane
+    /// kind, within the bucket-distance cap) — the shared tier-2 step
+    /// of both resolution paths. Nearest-tier copies never donate, so
+    /// the distance cap is a true bound, not a per-hop one.
+    fn nearest_in(cache: &HashMap<PlanKey, Cached>, key: &PlanKey) -> Option<ExecPlan> {
+        cache
+            .iter()
+            .filter(|(_, c)| c.donor)
+            .filter_map(|(k, c)| key.distance(k).map(|d| (d, c.plan)))
+            .filter(|&(d, _)| d <= NEAREST_MAX_DISTANCE)
+            .min_by_key(|&(d, _)| d)
+            .map(|(_, p)| p)
+    }
+
+    /// Tier-resolve without touching operands (Static mode, warm
+    /// start): exact hit → nearest bucket → cost model. The result is
+    /// installed under the exact key, so repeats are hits.
+    pub fn resolve(&self, key: PlanKey) -> (ExecPlan, PlanTier) {
+        let mut cache = self.cache.lock().expect("plan cache poisoned");
+        if let Some(c) = cache.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (c.plan, PlanTier::Exact);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let (plan, tier) = match Self::nearest_in(&cache, &key) {
+            Some(p) => (p, PlanTier::Nearest),
+            None => (cost::seed_plan(&key, self.pool_slots), PlanTier::CostModel),
+        };
+        // neither tier installs a donor: copies must not chain, and
+        // cost-model seeds are better re-derived per class (see Cached)
+        cache.insert(key, Cached { plan, donor: false });
+        (plan, tier)
+    }
+
+    /// Request-path resolution, honouring the tier order in every
+    /// mode: exact hit, then nearest-bucket reuse (a tuned neighbour —
+    /// e.g. loaded from the plan file — beats re-measuring), and only
+    /// then, in `Online` mode, first-touch calibration on the live
+    /// operands — which hands back the winning run's output
+    /// (`Some(RunOut)`) so the caller skips re-running. Static mode
+    /// falls to the cost model where Online would calibrate.
+    pub fn plan_run(
+        &self,
+        key: PlanKey,
+        run: &ShapeRun<'_>,
+    ) -> Result<(ExecPlan, PlanTier, Option<RunOut>)> {
+        if self.mode != PlannerMode::Online {
+            let (plan, tier) = self.resolve(key);
+            return Ok((plan, tier, None));
+        }
+        {
+            let mut cache = self.cache.lock().expect("plan cache poisoned");
+            if let Some(c) = cache.get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((c.plan, PlanTier::Exact, None));
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            if let Some(p) = Self::nearest_in(&cache, &key) {
+                cache.insert(key, Cached { plan: p, donor: false });
+                return Ok((p, PlanTier::Nearest, None));
+            }
+        } // drop the lock before the (potentially long) calibration
+        // claim the class: a concurrent worker that misses the same
+        // uncached class while we benchmark runs the cost-model seed
+        // once (without installing it) instead of duplicating the
+        // calibration — the winner lands exactly once
+        if !self
+            .calibrating
+            .lock()
+            .expect("calibration set poisoned")
+            .insert(key)
+        {
+            return Ok((cost::seed_plan(&key, self.pool_slots), PlanTier::CostModel, None));
+        }
+        // re-peek after claiming: a racer that missed alongside us may
+        // have calibrated and released between our miss and our claim —
+        // serve its installed winner instead of re-benchmarking
+        if let Some(p) = self.peek(&key) {
+            self.calibrating
+                .lock()
+                .expect("calibration set poisoned")
+                .remove(&key);
+            return Ok((p, PlanTier::Exact, None));
+        }
+        let result = self.calibrate(key, run);
+        self.calibrating
+            .lock()
+            .expect("calibration set poisoned")
+            .remove(&key);
+        let (plan, out) = result?;
+        Ok((plan, PlanTier::Calibrated, Some(out)))
+    }
+
+    /// Micro-benchmark the top candidate plans on `run`, install the
+    /// fastest under `key`, and return it with its output. Each
+    /// candidate runs twice — an untimed warm-up absorbing one-time
+    /// cold-start costs (pool worker wake-up, cache warmth, first
+    /// allocations) that would otherwise systematically penalize
+    /// whichever candidate happens to run first, then the timed run.
+    /// Every candidate computes identical integers (the
+    /// bit-transparency the property suite pins), so *which* run's
+    /// output is returned is immaterial — calibration costs a handful
+    /// of redundant matmuls, never a different answer.
+    pub fn calibrate(&self, key: PlanKey, run: &ShapeRun<'_>) -> Result<(ExecPlan, RunOut)> {
+        let candidates = ExecPlan::top_candidates(&key, self.pool_slots, CALIBRATION_CANDIDATES);
+        let mut best: Option<(f64, ExecPlan, RunOut)> = None;
+        for plan in candidates {
+            let _warm = run.run(&plan)?;
+            let t0 = Instant::now();
+            let out = run.run(&plan)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if best.as_ref().map_or(true, |(b, _, _)| dt < *b) {
+                best = Some((dt, plan, out));
+            }
+        }
+        let (_, plan, out) = best.expect("top_candidates is never empty");
+        self.insert(key, plan);
+        self.calibrations.fetch_add(1, Ordering::Relaxed);
+        Ok((plan, out))
+    }
+
+    /// Global counters (the per-request view lives in
+    /// `ExecutionReport.plan`; this one also counts warm-start and
+    /// tune-time work).
+    pub fn stats(&self) -> PlanStats {
+        PlanStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            calibrations: self.calibrations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The cached plans in stable order — the serve table's
+    /// plan-per-shape-class rows and the plan file's contents.
+    pub fn summary(&self) -> Vec<(PlanKey, ExecPlan)> {
+        let mut v: Vec<(PlanKey, ExecPlan)> = self
+            .cache
+            .lock()
+            .expect("plan cache poisoned")
+            .iter()
+            .map(|(k, c)| (*k, c.plan))
+            .collect();
+        v.sort_by_key(|(k, _)| k.sort_key());
+        v
+    }
+
+    /// Install every entry of a plan file after the version/host check
+    /// — a stale or foreign file errs here and the planner keeps
+    /// resolving from the cost model instead (the fallback the
+    /// fingerprint exists for). Returns the entry count installed.
+    pub fn load_file(&self, path: &std::path::Path) -> Result<usize> {
+        let file = PlanFile::load(path)?;
+        file.check_host()?;
+        let n = file.entries.len();
+        let mut cache = self.cache.lock().expect("plan cache poisoned");
+        for (k, p) in file.entries {
+            // tuned entries are donors: a loaded plan may seed its
+            // neighbouring buckets like a locally calibrated one
+            cache.insert(k, Cached { plan: p, donor: true });
+        }
+        Ok(n)
+    }
+
+    /// Persist the cache as a fingerprinted plan file (what `bitsmm
+    /// tune` writes). Returns the entry count written.
+    pub fn save_file(&self, path: &std::path::Path) -> Result<usize> {
+        let entries = self.summary();
+        let n = entries.len();
+        PlanFile::new(entries).save(path)?;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::packed::{PackedPlanes, PackedPool, PopcountKernel, TilePolicy};
+    use crate::bits::plane::PlaneKind;
+    use crate::bits::twos::{max_value, min_value};
+    use crate::plan::exec::{Partition, PlanBackend};
+    use crate::prng::Pcg32;
+    use crate::sim::driver::ref_matmul_i64;
+    use std::sync::Arc;
+
+    fn key(m: usize, k: usize, n: usize, bits: u32) -> PlanKey {
+        PlanKey::for_matmul(m, k, n, bits, bits, PlaneKind::Sbmwc)
+    }
+
+    #[test]
+    fn three_tier_resolution_and_install() {
+        let p = Planner::new(PlannerMode::Static, 4);
+        // empty cache, no tuned neighbour: cost model
+        let (plan1, tier1) = p.resolve(key(64, 512, 64, 4));
+        assert_eq!(tier1, PlanTier::CostModel);
+        assert_eq!(plan1.backend, PlanBackend::Packed);
+        // the resolution was installed: second lookup is an exact hit
+        let (plan2, tier2) = p.resolve(key(60, 500, 33, 4));
+        assert_eq!(tier2, PlanTier::Exact, "same buckets hit the installed plan");
+        assert_eq!(plan2, plan1);
+        // cost-model seeds never donate: a nearby class re-derives
+        // its own seed instead of inheriting one
+        let (_, tier3) = p.resolve(key(64, 512, 128, 4));
+        assert_eq!(tier3, PlanTier::CostModel);
+        // a deliberately installed (tuned) plan does donate (tier 2)…
+        let tuned = ExecPlan::packed(
+            PopcountKernel::Unroll4,
+            4,
+            Partition::Rowslice,
+            TilePolicy::AUTO,
+        );
+        p.insert(key(32, 512, 64, 4), tuned); // bucket (5, 9, 6)
+        let (plan4, tier4) = p.resolve(key(16, 512, 64, 4)); // (4,9,6): distance 1
+        assert_eq!(tier4, PlanTier::Nearest);
+        assert_eq!(plan4, tuned);
+        // …but its nearest-tier copy does not re-donate: a key in
+        // range of the copy yet out of range of the tuned entry falls
+        // to the cost model instead of chaining past the distance cap
+        let (plan5, tier5) = p.resolve(key(1, 512, 64, 4)); // d(tuned)=5, d(copy)=4
+        assert_eq!(tier5, PlanTier::CostModel);
+        assert_ne!(plan5, tuned);
+        // precision wall: a tuned 4-bit plan never crosses to 16-bit
+        let (_, tier6) = p.resolve(key(32, 512, 64, 16));
+        assert_eq!(tier6, PlanTier::CostModel);
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses, s.calibrations), (1, 5, 0));
+        assert_eq!(p.len(), 6);
+    }
+
+    #[test]
+    fn distant_buckets_fall_to_the_cost_model() {
+        let p = Planner::new(PlannerMode::Static, 4);
+        p.insert(key(1, 1, 1, 8), ExecPlan::native());
+        let (_, tier) = p.resolve(key(4096, 4096, 4096, 8));
+        assert_eq!(tier, PlanTier::CostModel, "too far to inherit a plan");
+    }
+
+    #[test]
+    fn online_calibration_returns_exact_output_and_installs_winner() {
+        let pool = Arc::new(PackedPool::new(2).unwrap());
+        let planner = Planner::new(PlannerMode::Online, pool.threads() + 1);
+        let mut rng = Pcg32::new(0xca1b);
+        let (m, k, n, bits) = (7usize, 70usize, 9usize, 5u32);
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+        let pb = Arc::new(PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap());
+        let run = ShapeRun {
+            a: &a,
+            b: &b,
+            m,
+            k,
+            n,
+            bits,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: Some(&pb),
+            pool: Some(&pool),
+        };
+        let k1 = key(m, k, n, bits);
+        let (plan, tier, out) = planner.plan_run(k1, &run).unwrap();
+        assert_eq!(tier, PlanTier::Calibrated);
+        let out = out.expect("calibration returns the winning run's output");
+        assert_eq!(out.0, ref_matmul_i64(&a, &b, m, k, n), "calibrated output exact");
+        assert_eq!(planner.peek(&k1), Some(plan), "winner installed");
+        // second touch of the class: exact hit, no output (caller runs)
+        let (plan2, tier2, out2) = planner.plan_run(k1, &run).unwrap();
+        assert_eq!((plan2, tier2), (plan, PlanTier::Exact));
+        assert!(out2.is_none());
+        let s = planner.stats();
+        assert_eq!((s.hits, s.misses, s.calibrations), (1, 1, 1));
+    }
+
+    #[test]
+    fn online_mode_reuses_a_tuned_neighbour_before_calibrating() {
+        // a plan for a nearby bucket (e.g. loaded from the plan file)
+        // is reused at tier 2 — no live-request calibration
+        let planner = Planner::new(PlannerMode::Online, 1);
+        let tuned = ExecPlan::packed(
+            PopcountKernel::Unroll4,
+            1,
+            Partition::Serial,
+            TilePolicy::AUTO,
+        );
+        planner.insert(key(8, 64, 8, 5), tuned);
+        let mut rng = Pcg32::new(0xca1c);
+        let (m, k, n, bits) = (4usize, 64usize, 8usize, 5u32); // distance 1
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+        let run = ShapeRun {
+            a: &a,
+            b: &b,
+            m,
+            k,
+            n,
+            bits,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: None,
+            pool: None,
+        };
+        let (plan, tier, out) = planner.plan_run(key(m, k, n, bits), &run).unwrap();
+        assert_eq!(tier, PlanTier::Nearest);
+        assert_eq!(plan, tuned);
+        assert!(out.is_none(), "nearest reuse never runs the matmul itself");
+        assert_eq!(planner.stats().calibrations, 0);
+        // a class with no neighbour in range (other precision: the
+        // wall blocks reuse) still calibrates
+        let a2 = vec![1i32; 4];
+        let b2 = vec![1i32; 4];
+        let run2 = ShapeRun {
+            a: &a2,
+            b: &b2,
+            m: 2,
+            k: 2,
+            n: 2,
+            bits: 9,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: None,
+            pool: None,
+        };
+        let (_, tier2, _) = planner.plan_run(key(2, 2, 2, 9), &run2).unwrap();
+        assert_eq!(tier2, PlanTier::Calibrated);
+        assert_eq!(planner.stats().calibrations, 1);
+    }
+
+    #[test]
+    fn concurrent_calibration_is_claimed_once() {
+        let planner = Planner::new(PlannerMode::Online, 1);
+        let k1 = key(4, 64, 8, 6);
+        let a = vec![1i32; 4 * 64];
+        let b = vec![1i32; 64 * 8];
+        let run = ShapeRun {
+            a: &a,
+            b: &b,
+            m: 4,
+            k: 64,
+            n: 8,
+            bits: 6,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: None,
+            pool: None,
+        };
+        // simulate another worker mid-calibration on this class: the
+        // racer gets the cost-model seed once and installs nothing
+        planner.calibrating.lock().unwrap().insert(k1);
+        let (plan, tier, out) = planner.plan_run(k1, &run).unwrap();
+        assert_eq!(tier, PlanTier::CostModel);
+        assert_eq!(plan, crate::plan::cost::seed_plan(&k1, 1));
+        assert!(out.is_none());
+        assert!(planner.peek(&k1).is_none(), "the racer must not install");
+        assert_eq!(planner.stats().calibrations, 0);
+        // once the claim clears, the class calibrates normally
+        planner.calibrating.lock().unwrap().remove(&k1);
+        let (_, tier, _) = planner.plan_run(k1, &run).unwrap();
+        assert_eq!(tier, PlanTier::Calibrated);
+        assert_eq!(planner.stats().calibrations, 1);
+        assert!(
+            planner.calibrating.lock().unwrap().is_empty(),
+            "the claim is released after calibration"
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_resolutions() {
+        let p = Planner::new(PlannerMode::Static, 9);
+        let keys = [key(1, 512, 4096, 8), key(256, 256, 256, 16), key(8, 64, 64, 4)];
+        for k in keys {
+            p.resolve(k);
+        }
+        // pin one deliberately non-default plan
+        let forced = ExecPlan::packed(
+            PopcountKernel::Unroll4,
+            9,
+            Partition::Rowslice,
+            TilePolicy { tile_rows: 2, tile_cols: 4 },
+        );
+        p.insert(keys[0], forced);
+        let dir = std::env::temp_dir().join("bitsmm_planner_roundtrip");
+        let path = dir.join("plans.json");
+        assert_eq!(p.save_file(&path).unwrap(), 3);
+
+        let q = Planner::new(PlannerMode::Static, 9);
+        assert_eq!(q.load_file(&path).unwrap(), 3);
+        for k in keys {
+            assert_eq!(q.peek(&k), p.peek(&k), "{k}");
+        }
+        assert_eq!(q.peek(&keys[0]), Some(forced));
+        // loaded entries resolve as exact hits
+        let (_, tier) = q.resolve(keys[1]);
+        assert_eq!(tier, PlanTier::Exact);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn stale_fingerprint_rejected_and_cost_model_takes_over() {
+        let p = Planner::new(PlannerMode::Static, 4);
+        p.resolve(key(64, 512, 64, 4));
+        let dir = std::env::temp_dir().join("bitsmm_planner_stale");
+        let path = dir.join("plans.json");
+        p.save_file(&path).unwrap();
+        // doctor the fingerprint in place
+        let doctored = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace(&crate::plan::host_fingerprint(), "other-box/neon/c2");
+        std::fs::write(&path, doctored).unwrap();
+
+        let q = Planner::new(PlannerMode::Static, 4);
+        let err = q.load_file(&path).unwrap_err().to_string();
+        assert!(err.contains("foreign"), "{err}");
+        assert_eq!(q.len(), 0, "nothing foreign installed");
+        // the planner still plans — from the cost model
+        let (_, tier) = q.resolve(key(64, 512, 64, 4));
+        assert_eq!(tier, PlanTier::CostModel);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn mode_parse_and_stats_merge() {
+        assert_eq!("off".parse::<PlannerMode>().unwrap(), PlannerMode::Off);
+        assert_eq!("static".parse::<PlannerMode>().unwrap(), PlannerMode::Static);
+        assert_eq!("online".parse::<PlannerMode>().unwrap(), PlannerMode::Online);
+        assert!("turbo".parse::<PlannerMode>().is_err());
+        assert!(!Planner::new(PlannerMode::Off, 1).is_on());
+        let mut s = PlanStats { hits: 3, misses: 1, calibrations: 1 };
+        s.merge(&PlanStats { hits: 1, misses: 3, calibrations: 0 });
+        assert_eq!(s, PlanStats { hits: 4, misses: 4, calibrations: 1 });
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(PlanStats::default().hit_rate(), 0.0);
+    }
+}

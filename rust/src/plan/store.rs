@@ -1,0 +1,492 @@
+//! The persistent plan cache file: `configs/plans.json` (DESIGN.md
+//! §Planner).
+//!
+//! The file is versioned and **host-fingerprinted**: a plan tuned on an
+//! AVX2 x86 box encodes reducer and threading choices that are wrong on
+//! a NEON or narrow machine, so a loader on a different host rejects
+//! the whole file and falls back to the cost model instead of applying
+//! foreign plans. Rejection is loud but non-fatal — the planner still
+//! works, it just re-derives (or re-calibrates) plans locally.
+//!
+//! Offline environment: no `serde`/`serde_json` (DESIGN.md
+//! substitutions), so this module carries a writer and a minimal JSON
+//! reader for the subset the plan file uses (objects, arrays, strings,
+//! integers, booleans).
+
+use super::exec::{ExecPlan, Partition, PlanBackend};
+use super::key::PlanKey;
+use crate::bits::packed::{PopcountKernel, TilePolicy};
+use crate::bits::plane::PlaneKind;
+use crate::Result;
+
+/// Identify the plan-relevant host: architecture, the SIMD popcount
+/// actually available at runtime, and the core count (thread choices
+/// tuned for one width are wrong on another).
+pub fn host_fingerprint() -> String {
+    let simd = if PopcountKernel::Avx2.available() {
+        "avx2"
+    } else if PopcountKernel::Neon.available() {
+        "neon"
+    } else {
+        "scalar"
+    };
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    format!("{}/{simd}/c{cores}", std::env::consts::ARCH)
+}
+
+/// A versioned, fingerprinted set of `(PlanKey, ExecPlan)` entries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanFile {
+    pub version: u32,
+    pub fingerprint: String,
+    pub entries: Vec<(PlanKey, ExecPlan)>,
+}
+
+impl PlanFile {
+    pub const VERSION: u32 = 1;
+
+    /// A file stamped for *this* host.
+    pub fn new(entries: Vec<(PlanKey, ExecPlan)>) -> PlanFile {
+        PlanFile {
+            version: Self::VERSION,
+            fingerprint: host_fingerprint(),
+            entries,
+        }
+    }
+
+    /// Reject files another host (or another format version) wrote —
+    /// the caller falls back to the cost model.
+    pub fn check_host(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.version == Self::VERSION,
+            "plan file version {} (this build reads {})",
+            self.version,
+            Self::VERSION
+        );
+        let here = host_fingerprint();
+        anyhow::ensure!(
+            self.fingerprint == here,
+            "plan file was tuned on '{}' but this host is '{here}' — refusing foreign plans",
+            self.fingerprint
+        );
+        Ok(())
+    }
+
+    /// Render as JSON, one plan entry per line (diff-friendly).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"version\": {},\n", self.version));
+        s.push_str(&format!("  \"fingerprint\": \"{}\",\n", self.fingerprint));
+        s.push_str("  \"plans\": [\n");
+        let lines: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(k, p)| {
+                format!(
+                    "    {{\"mb\":{},\"kb\":{},\"nb\":{},\"ba\":{},\"bb\":{},\"kind\":\"{}\",\
+\"backend\":\"{}\",\"kernel\":\"{}\",\"threads\":{},\"partition\":\"{}\",\
+\"tile_rows\":{},\"tile_cols\":{}}}",
+                    k.mb,
+                    k.kb,
+                    k.nb,
+                    k.bits_a,
+                    k.bits_b,
+                    k.kind.name(),
+                    p.backend.name(),
+                    p.kernel.name(),
+                    p.threads,
+                    p.partition.name(),
+                    p.tile.tile_rows,
+                    p.tile.tile_cols
+                )
+            })
+            .collect();
+        s.push_str(&lines.join(",\n"));
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
+
+    /// Structural parse (no host check — `check_host` is separate so
+    /// tests and tools can inspect foreign files).
+    pub fn parse(text: &str) -> Result<PlanFile> {
+        let root = Json::parse(text)?;
+        let version = root.field("version")?.as_int()? as u32;
+        let fingerprint = root.field("fingerprint")?.as_str()?.to_string();
+        let mut entries = Vec::new();
+        for (i, e) in root.field("plans")?.as_arr()?.iter().enumerate() {
+            entries.push(
+                parse_entry(e).map_err(|err| anyhow::anyhow!("plan entry {i}: {err}"))?,
+            );
+        }
+        Ok(PlanFile {
+            version,
+            fingerprint,
+            entries,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<PlanFile> {
+        PlanFile::parse(&std::fs::read_to_string(path)?)
+    }
+}
+
+fn parse_kind(s: &str) -> Result<PlaneKind> {
+    match s {
+        "sbmwc" => Ok(PlaneKind::Sbmwc),
+        "booth" => Ok(PlaneKind::Booth),
+        other => anyhow::bail!("unknown plane kind '{other}' (sbmwc|booth)"),
+    }
+}
+
+fn parse_entry(e: &Json) -> Result<(PlanKey, ExecPlan)> {
+    let int = |name: &str| -> Result<i64> { e.field(name)?.as_int() };
+    let key = PlanKey {
+        mb: u8::try_from(int("mb")?)?,
+        kb: u8::try_from(int("kb")?)?,
+        nb: u8::try_from(int("nb")?)?,
+        bits_a: u8::try_from(int("ba")?)?,
+        bits_b: u8::try_from(int("bb")?)?,
+        kind: parse_kind(e.field("kind")?.as_str()?)?,
+    };
+    let backend: PlanBackend = e.field("backend")?.as_str()?.parse()?;
+    let kernel: PopcountKernel = e.field("kernel")?.as_str()?.parse()?;
+    let partition: Partition = e.field("partition")?.as_str()?.parse()?;
+    let threads = u32::try_from(int("threads")?)?;
+    let tile = TilePolicy {
+        tile_rows: usize::try_from(int("tile_rows")?)?,
+        tile_cols: usize::try_from(int("tile_cols")?)?,
+    };
+    let plan = match backend {
+        PlanBackend::Native => ExecPlan::native(),
+        PlanBackend::Packed => ExecPlan::packed(kernel, threads, partition, tile),
+    };
+    Ok((key, plan))
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON reader (offline: no serde_json)
+// ---------------------------------------------------------------------------
+
+/// The JSON subset the plan file (and the bench logs) use: objects,
+/// arrays, strings with basic escapes, i64 integers, booleans.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Obj(Vec<(String, Json)>),
+    Arr(Vec<Json>),
+    Str(String),
+    Int(i64),
+    Bool(bool),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser {
+            s: text.as_bytes(),
+            i: 0,
+        };
+        let v = p.value()?;
+        p.skip_ws();
+        anyhow::ensure!(p.i == p.s.len(), "trailing garbage at byte {}", p.i);
+        Ok(v)
+    }
+
+    pub fn field(&self, name: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(fields) => fields
+                .iter()
+                .find(|(k, _)| k == name)
+                .map(|(_, v)| v)
+                .ok_or_else(|| anyhow::anyhow!("missing field '{name}'")),
+            _ => anyhow::bail!("expected an object looking up '{name}'"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Json::Int(i) => Ok(*i),
+            other => anyhow::bail!("expected an integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => anyhow::bail!("expected a string, got {other:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => anyhow::bail!("expected an array, got {other:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.s
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, ch: u8) -> Result<()> {
+        let got = self.peek()?;
+        anyhow::ensure!(
+            got == ch,
+            "expected '{}' at byte {}, got '{}'",
+            ch as char,
+            self.i,
+            got as char
+        );
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' | b'f' => self.boolean(),
+            b'-' | b'0'..=b'9' => self.integer(),
+            other => anyhow::bail!("unexpected '{}' at byte {}", other as char, self.i),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            let key = {
+                self.skip_ws();
+                self.string()?
+            };
+            self.expect(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                other => anyhow::bail!("expected ',' or '}}', got '{}'", other as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => anyhow::bail!("expected ',' or ']', got '{}'", other as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        // collect raw bytes and decode once at the closing quote, so
+        // multi-byte UTF-8 content round-trips instead of being
+        // reassembled byte-by-byte into mojibake
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let ch = *self
+                .s
+                .get(self.i)
+                .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+            self.i += 1;
+            match ch {
+                b'"' => return Ok(String::from_utf8(out)?),
+                b'\\' => {
+                    let esc = *self
+                        .s
+                        .get(self.i)
+                        .ok_or_else(|| anyhow::anyhow!("unterminated escape"))?;
+                    self.i += 1;
+                    out.push(match esc {
+                        b'"' => b'"',
+                        b'\\' => b'\\',
+                        b'/' => b'/',
+                        b'n' => b'\n',
+                        b't' => b'\t',
+                        other => anyhow::bail!("unsupported escape '\\{}'", other as char),
+                    });
+                }
+                other => out.push(other),
+            }
+        }
+    }
+
+    fn boolean(&mut self) -> Result<Json> {
+        self.skip_ws();
+        if self.s[self.i..].starts_with(b"true") {
+            self.i += 4;
+            Ok(Json::Bool(true))
+        } else if self.s[self.i..].starts_with(b"false") {
+            self.i += 5;
+            Ok(Json::Bool(false))
+        } else {
+            anyhow::bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn integer(&mut self) -> Result<Json> {
+        self.skip_ws();
+        let start = self.i;
+        if self.s.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        anyhow::ensure!(
+            self.s.get(self.i) != Some(&b'.'),
+            "plan files carry integers only (byte {})",
+            self.i
+        );
+        let text = std::str::from_utf8(&self.s[start..self.i])?;
+        Ok(Json::Int(text.parse::<i64>()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_entries() -> Vec<(PlanKey, ExecPlan)> {
+        vec![
+            (
+                PlanKey::for_matmul(1, 512, 4096, 8, 8, PlaneKind::Sbmwc),
+                ExecPlan::packed(
+                    PopcountKernel::Unroll8,
+                    9,
+                    Partition::Stolen,
+                    TilePolicy { tile_rows: 1, tile_cols: 0 },
+                ),
+            ),
+            (
+                PlanKey::for_matmul(256, 256, 256, 16, 16, PlaneKind::Booth),
+                ExecPlan::native(),
+            ),
+            (
+                PlanKey::for_matmul(8, 64, 64, 4, 4, PlaneKind::Sbmwc),
+                ExecPlan::packed(PopcountKernel::Scalar, 1, Partition::Serial, TilePolicy::AUTO),
+            ),
+        ]
+    }
+
+    #[test]
+    fn render_parse_roundtrip_is_exact() {
+        let f = PlanFile::new(sample_entries());
+        let g = PlanFile::parse(&f.render()).unwrap();
+        assert_eq!(f, g);
+        assert!(g.check_host().is_ok(), "same host accepts its own file");
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("bitsmm_plan_store_test");
+        let path = dir.join("plans.json");
+        let f = PlanFile::new(sample_entries());
+        f.save(&path).unwrap();
+        let g = PlanFile::load(&path).unwrap();
+        assert_eq!(f, g);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn foreign_fingerprint_is_rejected() {
+        let mut f = PlanFile::new(sample_entries());
+        f.fingerprint = "alien-arch/avx512/c999".into();
+        // still *parses* (tools can inspect it) …
+        let g = PlanFile::parse(&f.render()).unwrap();
+        assert_eq!(g.fingerprint, f.fingerprint);
+        // … but the host check refuses to apply it
+        let err = g.check_host().unwrap_err().to_string();
+        assert!(err.contains("foreign"), "{err}");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut f = PlanFile::new(vec![]);
+        f.version = 999;
+        assert!(PlanFile::parse(&f.render()).unwrap().check_host().is_err());
+    }
+
+    #[test]
+    fn malformed_files_error_with_context() {
+        assert!(PlanFile::parse("").is_err());
+        assert!(PlanFile::parse("{\"version\": 1}").is_err(), "missing fields");
+        assert!(PlanFile::parse("{\"version\": 1, \"fingerprint\": \"x\", \"plans\": [{}]}")
+            .unwrap_err()
+            .to_string()
+            .contains("plan entry 0"));
+        // bad kernel name inside an entry
+        let bad = PlanFile::new(sample_entries())
+            .render()
+            .replace("\"kernel\":\"scalar\"", "\"kernel\":\"simd9000\"");
+        assert!(PlanFile::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn json_reader_handles_the_subset() {
+        let v = Json::parse(" {\"a\": [1, -2, true], \"s\": \"x\\\"y\"} ").unwrap();
+        assert_eq!(v.field("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.field("a").unwrap().as_arr().unwrap()[1].as_int().unwrap(), -2);
+        assert_eq!(v.field("s").unwrap().as_str().unwrap(), "x\"y");
+        // multi-byte UTF-8 content round-trips, byte-exact
+        let u = Json::parse("{\"fp\": \"café-box/neon/c2\"}").unwrap();
+        assert_eq!(u.field("fp").unwrap().as_str().unwrap(), "café-box/neon/c2");
+        assert!(Json::parse("{\"a\": 1,}").is_err(), "trailing comma");
+        assert!(Json::parse("{\"a\": 1} garbage").is_err());
+        assert!(Json::parse("{\"a\": 1.5}").is_err(), "floats rejected");
+        assert!(Json::parse("[1, 2").is_err(), "unterminated array");
+    }
+
+    #[test]
+    fn fingerprint_names_this_host() {
+        let fp = host_fingerprint();
+        assert!(fp.contains(std::env::consts::ARCH));
+        assert!(fp.contains("/c"), "core count present: {fp}");
+    }
+}

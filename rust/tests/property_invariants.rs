@@ -15,6 +15,7 @@ use bitsmm::bits::twos::{max_value, min_value, Bits};
 use bitsmm::coordinator::tile_matmul;
 use bitsmm::nn::quant::{dequantize, quantize_symmetric};
 use bitsmm::nn::{matmul_native, matmul_packed, matmul_planes};
+use bitsmm::plan::{ExecPlan, PlanKey, Planner, PlannerMode, ShapeRun};
 use bitsmm::prng::Pcg32;
 use bitsmm::proptest_lite::{forall, Gen};
 use bitsmm::sim::array::SaConfig;
@@ -274,6 +275,130 @@ fn prop_stolen_tiling_bit_identical_for_any_policy() {
             && stolen == serial
             && stats.max_worker_tiles >= stats.min_worker_tiles
     });
+}
+
+/// Planner bit-transparency: **every** candidate `ExecPlan` — all
+/// available popcount kernels × serial/pooled × rowslice/stolen ×
+/// forced tile policies × native/packed — produces bit-identical
+/// output over widths 1..=16, both plane kinds, and the skewed shapes
+/// the planner exists for. Plans may change speed, never results:
+/// this is the invariant that makes the planner safe to drop into the
+/// serving path.
+#[test]
+fn every_candidate_plan_is_bit_transparent_all_widths() {
+    let pool = std::sync::Arc::new(PackedPool::new(2).unwrap());
+    let candidates = ExecPlan::candidates(pool.threads() + 1);
+    assert!(candidates.len() >= 5, "candidate space unexpectedly small");
+    let mut rng = Pcg32::new(0x914a);
+    for bits in 1..=16u32 {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        // tall-thin, wide-short, word-boundary k — the skew set
+        for (m, k, n) in [(1usize, 65usize, 17usize), (17, 63, 1), (5, 128, 7)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+            let want = ref_matmul_i64(&a, &b, m, k, n);
+            // the serial packed oracle agrees with the native reference
+            assert_eq!(matmul_native(&a, &b, m, k, n, bits).unwrap(), want);
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let pb = std::sync::Arc::new(
+                    PackedPlanes::pack_cols(&b, k, n, bits, kind).unwrap(),
+                );
+                let serial = matmul_packed_tile_with(
+                    &PackedPlanes::pack_rows(&a, m, k, bits, kind).unwrap(),
+                    &pb,
+                    0,
+                    m,
+                    0,
+                    n,
+                    PopcountKernel::Scalar,
+                )
+                .unwrap();
+                assert_eq!(serial, want, "{kind:?} serial oracle bits={bits}");
+                let run = ShapeRun {
+                    a: &a,
+                    b: &b,
+                    m,
+                    k,
+                    n,
+                    bits,
+                    stream_kind: kind,
+                    packed_b: Some(&pb),
+                    pool: Some(&pool),
+                };
+                for plan in &candidates {
+                    let (out, _, _) = run.run(plan).unwrap();
+                    assert_eq!(
+                        out,
+                        want,
+                        "{} diverged ({kind:?} {m}x{k}x{n} @{bits}b)",
+                        plan.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Planner resolution is bit-transparent end to end: whatever tier a
+/// plan comes from (cost model, nearest bucket, loaded plan file, or
+/// on-line calibration), executing it reproduces the reference
+/// integers — including after a save → load round trip of the plan
+/// cache.
+#[test]
+fn planner_resolutions_roundtrip_and_stay_exact() {
+    let pool = std::sync::Arc::new(PackedPool::new(2).unwrap());
+    let planner = Planner::new(PlannerMode::Online, pool.threads() + 1);
+    let mut rng = Pcg32::new(0x914b);
+    let shapes = [(1usize, 70usize, 33usize, 3u32), (9, 64, 9, 8), (4, 129, 2, 16)];
+    for &(m, k, n, bits) in &shapes {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+        let run = ShapeRun {
+            a: &a,
+            b: &b,
+            m,
+            k,
+            n,
+            bits,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: None,
+            pool: Some(&pool),
+        };
+        let key = PlanKey::for_matmul(m, k, n, bits, bits, PlaneKind::Sbmwc);
+        let (_, _, out) = planner.plan_run(key, &run).unwrap();
+        assert_eq!(out.expect("first touch calibrates").0, want, "{m}x{k}x{n}@{bits}b");
+    }
+    // round-trip the cache and check the loaded plans still execute
+    // to the same integers
+    let path = std::env::temp_dir().join("bitsmm_prop_plans.json");
+    planner.save_file(&path).unwrap();
+    let loaded = Planner::new(PlannerMode::Static, pool.threads() + 1);
+    assert_eq!(loaded.load_file(&path).unwrap(), planner.len());
+    for &(m, k, n, bits) in &shapes {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+        let key = PlanKey::for_matmul(m, k, n, bits, bits, PlaneKind::Sbmwc);
+        let (plan, tier) = loaded.resolve(key);
+        assert_eq!(tier, bitsmm::plan::PlanTier::Exact, "loaded plans hit exactly");
+        assert_eq!(plan, planner.peek(&key).unwrap(), "round trip preserved the plan");
+        let run = ShapeRun {
+            a: &a,
+            b: &b,
+            m,
+            k,
+            n,
+            bits,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: None,
+            pool: Some(&pool),
+        };
+        let (out, _, _) = run.run(&plan).unwrap();
+        assert_eq!(out, ref_matmul_i64(&a, &b, m, k, n));
+    }
+    std::fs::remove_file(&path).unwrap();
 }
 
 /// Cross-precision plane slicing is exact: a `b'`-bit slice of a

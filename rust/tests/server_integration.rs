@@ -7,6 +7,7 @@ use bitsmm::coordinator::{
 };
 use bitsmm::nn::model::{mlp_zoo, zoo_model};
 use bitsmm::nn::Layer;
+use bitsmm::plan::{Planner, PlannerMode};
 use bitsmm::prng::Pcg32;
 use bitsmm::sim::array::SaConfig;
 use bitsmm::sim::mac_common::MacVariant;
@@ -221,6 +222,111 @@ fn tile_granularity_never_changes_served_results() {
         assert!(report.steal.max_worker_tiles >= report.steal.min_worker_tiles);
         assert!(metrics.steal_rate() >= 0.0 && metrics.steal_rate() <= 1.0);
     }
+}
+
+/// Warm-start serving: a packed server pre-packs **every** weight's
+/// bit planes (and conv im2col transposes) during `start`, before any
+/// request can be submitted — the first request pays zero pack
+/// latency, and serving afterwards still packs nothing new.
+#[test]
+fn warm_start_packs_every_weight_before_first_submit() {
+    for name in ["mlp", "cnn", "attn"] {
+        let model = Arc::new(zoo_model(name, 13).unwrap());
+        let mut cfg = base_cfg(2);
+        cfg.backend = Backend::Packed;
+        let server = InferenceServer::start(model.clone(), cfg).unwrap();
+        // no request has been submitted yet: everything is packed
+        for (i, layer) in model.layers.iter().enumerate() {
+            match layer {
+                Layer::Linear(l) => {
+                    assert_eq!(l.packed.packs(), 1, "{name} layer {i}: packed before submit")
+                }
+                Layer::Conv2d(l) => {
+                    assert_eq!(l.packed.packs(), 1, "{name} layer {i}: packed before submit");
+                    assert!(l.wt.is_built(), "{name} layer {i}: transpose before submit");
+                }
+                Layer::Attention(l) => {
+                    assert_eq!(l.packed.packs(), 4, "{name} layer {i}: q/k/v/o before submit")
+                }
+                Layer::Flatten => {}
+            }
+        }
+        // serving afterwards reuses the warm packs — zero new packs
+        let inputs = shaped_inputs(&model, 6, 0x77);
+        let rxs: Vec<_> = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(i, input)| {
+                server.submit(Request {
+                    id: i as u64,
+                    input,
+                    submitted: Instant::now(),
+                })
+            })
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().output.is_ok(), "{name}");
+        }
+        let (report, _) = server.shutdown();
+        assert!(report.packed_execs > 0, "{name}: served on the packed engine");
+        for layer in model.layers.iter() {
+            match layer {
+                Layer::Linear(l) => assert_eq!(l.packed.packs(), 1, "{name}"),
+                Layer::Conv2d(l) => assert_eq!(l.packed.packs(), 1, "{name}"),
+                Layer::Attention(l) => assert_eq!(l.packed.packs(), 4, "{name}"),
+                Layer::Flatten => {}
+            }
+        }
+    }
+}
+
+/// The execution planner serves bit-identical results in every mode,
+/// and a `tune`-written plan file round-trips into a serving run: the
+/// server loads it, resolves the census from exact hits, and reports
+/// the plan telemetry through the metrics.
+#[test]
+fn planner_serving_is_bit_identical_and_roundtrips_plan_files() {
+    let model = Arc::new(mlp_zoo(9));
+    let ins = inputs(24, 19);
+    let (want, _, _) = serve_all(model.clone(), base_cfg(2), ins.clone()).unwrap();
+
+    // online serve: calibrates its census at warm start
+    let mut cfg = base_cfg(2);
+    cfg.backend = Backend::Packed;
+    cfg.packed_threads = 2;
+    let online = Arc::new(Planner::new(PlannerMode::Online, 3));
+    cfg.planner = Some(online.clone());
+    let (got, report, metrics) = serve_all(model.clone(), cfg, ins.clone()).unwrap();
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.output, b.output, "online planner diverged at id {}", a.id);
+    }
+    assert!(report.plan.lookups() > 0);
+    assert!(report.plan.hits > 0, "warm-start calibration fills the cache");
+    assert_eq!(metrics.plan, report.plan);
+    assert!(online.stats().calibrations > 0);
+    assert!(online.len() > 0);
+
+    // persist the calibrated cache, load it into a *static* planner,
+    // serve again: identical results, and the loaded entries resolve
+    let path = std::env::temp_dir().join("bitsmm_serve_plans.json");
+    let written = online.save_file(&path).unwrap();
+    assert!(written > 0);
+    let mut cfg = base_cfg(2);
+    cfg.backend = Backend::Packed;
+    cfg.packed_threads = 2;
+    let loaded = Arc::new(Planner::new(PlannerMode::Static, 3));
+    assert_eq!(loaded.load_file(&path).unwrap(), written);
+    cfg.planner = Some(loaded.clone());
+    let (got, report, _) = serve_all(model, cfg, ins).unwrap();
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.output, b.output, "loaded-plan serving diverged at id {}", a.id);
+    }
+    assert!(report.plan.hits > 0, "loaded plans hit on the request path");
+    assert_eq!(
+        loaded.stats().calibrations, 0,
+        "static mode never benchmarks on the request path"
+    );
+    std::fs::remove_file(&path).unwrap();
 }
 
 #[test]
