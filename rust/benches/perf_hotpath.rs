@@ -3,8 +3,11 @@
 //! and word-packed plane realisations, the popcount-reducer and
 //! thread-count sweeps of the packed engine, the skewed-shape
 //! equal-slice vs work-stealing scheduler comparison, the shape-keyed
-//! execution planner's planned-vs-best/worst-static sweep (the
-//! headline for this PR), cross-precision plane slicing, tiler, and
+//! execution planner's planned-vs-best/worst-static sweep, the
+//! low-precision RSR-vs-popcount sweep and the huge-k
+//! k-split-on/off sweep (the headlines for this PR — both assert the
+//! chosen plan never loses to its forced baseline in-bench),
+//! cross-precision plane slicing, tiler, and
 //! (when artifacts are built) the PJRT request path. Every result is
 //! also written to `BENCH_perf_hotpath.json` at the repo root so the
 //! perf trajectory is machine-trackable across PRs.
@@ -15,14 +18,14 @@
 
 use bitsmm::bench_harness::{bench, BenchConfig, BenchResult};
 use bitsmm::bits::packed::{
-    matmul_packed_planes, matmul_packed_tile_pooled, matmul_packed_tile_rowslice,
-    matmul_packed_tile_stolen, matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
-    TilePolicy,
+    matmul_packed_planes, matmul_packed_rsr, matmul_packed_tile_pooled,
+    matmul_packed_tile_rowslice, matmul_packed_tile_stolen, matmul_packed_tile_stolen_with,
+    matmul_packed_tile_with, KernelFamily, PackedPlanes, PackedPool, PopcountKernel, TilePolicy,
 };
 use bitsmm::bits::plane::PlaneKind;
 use bitsmm::coordinator::{tile_matmul, Backend, Scheduler};
 use bitsmm::nn::{matmul_native, matmul_packed, matmul_planes};
-use bitsmm::plan::{ExecPlan, PlanKey, Planner, PlannerMode, ShapeRun};
+use bitsmm::plan::{codebook_cols, ExecPlan, PlanKey, Planner, PlannerMode, ShapeRun};
 use bitsmm::prng::Pcg32;
 use bitsmm::sim::array::{SaConfig, SystolicArray};
 use bitsmm::sim::driver::mac_dot;
@@ -401,7 +404,198 @@ config = {:.2}x (>= 1.00x required), never-slower-than-worst on every shape: {}"
         if worst_case_ok { "yes" } else { "NO" },
     );
 
-    // ---- 5d. cross-precision plane reuse: slice vs fresh re-pack --------
+    // ---- 5d. sub-popcount low-precision sweep: RSR vs popcount ----------
+    // The 1–2 bit regime where quantized weight columns repeat: the RSR
+    // segment kernel dedupes the stationary operand's column
+    // word-patterns and serves outputs from shared segment dots. The
+    // stationary operand draws from a 16-column codebook (the regime
+    // real low-bit weights live in); the planner calibrates on the live
+    // operands, and its chosen plan must never lose to the forced
+    // popcount baselines beyond timing noise — asserted in-bench.
+    let lowprec_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(64, 256, 64), (16, 512, 16)]
+    } else {
+        &[(256, 256, 256), (64, 4096, 64)]
+    };
+    for &(sm, sk, sn) in lowprec_shapes {
+        for bits in [1u32, 2] {
+            let lbl = format!("{sm}x{sk}x{sn}");
+            let smacs = (sm * sk * sn) as f64;
+            let lo = bitsmm::bits::twos::min_value(bits);
+            let hi = bitsmm::bits::twos::max_value(bits);
+            let sa_m: Vec<i32> = (0..sm * sk).map(|_| rng.range_i32(lo, hi)).collect();
+            let sb_m = codebook_cols(&mut rng, sk, sn, lo, hi, 16);
+            let pa = Arc::new(PackedPlanes::pack_rows(&sa_m, sm, sk, bits, PlaneKind::Sbmwc).unwrap());
+            let pb = Arc::new(PackedPlanes::pack_cols(&sb_m, sk, sn, bits, PlaneKind::Sbmwc).unwrap());
+            // bit-identity before anything is timed
+            let want =
+                matmul_packed_tile_with(&pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto).unwrap();
+            let rsr_out =
+                matmul_packed_rsr(&pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto, 0).unwrap();
+            assert_eq!(rsr_out, want, "rsr diverged on {lbl} @{bits}b");
+            let r = bench(&format!("lowprec {lbl} @{bits}b popcount t1"), big, || {
+                matmul_packed_tile_with(&pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto).unwrap()[0]
+            });
+            let pop_serial = r.mean.as_secs_f64();
+            println!("{}   ({} GMAC/s)", r.format(), fmt_rate(r.per_second(smacs) / 1e9));
+            log.push(r);
+            let r = bench(&format!("lowprec {lbl} @{bits}b popcount t8 steal2d"), big, || {
+                matmul_packed_tile_pooled(&pool8, &pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto)
+                    .unwrap()[0]
+            });
+            let pop_pooled = r.mean.as_secs_f64();
+            println!("{}   ({} GMAC/s)", r.format(), fmt_rate(r.per_second(smacs) / 1e9));
+            log.push(r);
+            let r = bench(&format!("lowprec {lbl} @{bits}b rsr t1"), big, || {
+                matmul_packed_rsr(&pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto, 0).unwrap()[0]
+            });
+            let rsr_serial = r.mean.as_secs_f64();
+            println!(
+                "{}   ({} GMAC/s, {:.2}x vs popcount t1)",
+                r.format(),
+                fmt_rate(r.per_second(smacs) / 1e9),
+                safe_ratio(pop_serial, rsr_serial)
+            );
+            log.push(r);
+            // the planner's chosen plan, calibrated on these operands
+            let run = ShapeRun {
+                a: &sa_m,
+                b: &sb_m,
+                m: sm,
+                k: sk,
+                n: sn,
+                bits,
+                stream_kind: PlaneKind::Sbmwc,
+                packed_b: Some(&pb),
+                pool: Some(&pool8),
+            };
+            let key = PlanKey::for_matmul(sm, sk, sn, bits, bits, PlaneKind::Sbmwc);
+            let (plan, cal_out) = planner.calibrate(key, &run).unwrap();
+            assert_eq!(cal_out.0, want, "chosen plan diverged on {lbl} @{bits}b");
+            let r = bench(&format!("lowprec {lbl} @{bits}b CHOSEN {}", plan.label()), big, || {
+                run.run(&plan).unwrap().0[0]
+            });
+            let chosen = r.mean.as_secs_f64();
+            println!("{}   ({} GMAC/s)", r.format(), fmt_rate(r.per_second(smacs) / 1e9));
+            log.push(r);
+            // never slower than the forced popcount baseline (best of
+            // serial/pooled), with a noise margin for CI boxes
+            let pop_best = pop_serial.min(pop_pooled);
+            assert!(
+                chosen <= pop_best * 1.25,
+                "chosen plan [{}] lost to forced popcount on {lbl} @{bits}b: {:.3}ms vs {:.3}ms",
+                plan.label(),
+                chosen * 1e3,
+                pop_best * 1e3
+            );
+            println!(
+                "ACCEPTANCE lowprec {lbl} @{bits}b: chosen [{}] vs forced popcount = {:.2}x, \
+vs rsr-t1 = {:.2}x (never-slower-than-popcount: yes)",
+                plan.label(),
+                safe_ratio(pop_best, chosen),
+                safe_ratio(rsr_serial, chosen),
+            );
+        }
+    }
+
+    // ---- 5e. huge-k sweep: deterministic k-split on/off -----------------
+    // 1×hugek×n shapes leave a 2-D tile grid starved (few output cells,
+    // enormous contracted dimension): k-split fans word-aligned chunks
+    // across the pool's slots and merges exact i64 partials in fixed
+    // job-index order. The chosen plan must never lose to the forced
+    // no-split baseline — asserted in-bench.
+    let hugek_shapes: &[(usize, usize, usize)] = if smoke {
+        &[(1, 4096, 64), (4, 8192, 16)]
+    } else {
+        &[(1, 8192, 512), (16, 16384, 64)]
+    };
+    for &(sm, sk, sn) in hugek_shapes {
+        let lbl = format!("{sm}x{sk}x{sn}");
+        let smacs = (sm * sk * sn) as f64;
+        let sa_m: Vec<i32> = (0..sm * sk).map(|_| rng.range_i32(-128, 127)).collect();
+        let sb_m: Vec<i32> = (0..sk * sn).map(|_| rng.range_i32(-128, 127)).collect();
+        let pa = Arc::new(PackedPlanes::pack_rows(&sa_m, sm, sk, 8, PlaneKind::Sbmwc).unwrap());
+        let pb = Arc::new(PackedPlanes::pack_cols(&sb_m, sk, sn, 8, PlaneKind::Sbmwc).unwrap());
+        let want = matmul_packed_tile_with(&pa, &pb, 0, sm, 0, sn, PopcountKernel::Auto).unwrap();
+        let (nosplit_out, _) = matmul_packed_tile_stolen_with(
+            &pool8, &pa, &pb, 0, sm, 0, sn,
+            PopcountKernel::Auto, TilePolicy::NO_KSPLIT, KernelFamily::Popcount,
+        )
+        .unwrap();
+        assert_eq!(nosplit_out, want, "no-split diverged on {lbl}");
+        let (split_out, stats) = matmul_packed_tile_stolen_with(
+            &pool8, &pa, &pb, 0, sm, 0, sn,
+            PopcountKernel::Auto, TilePolicy::AUTO, KernelFamily::Popcount,
+        )
+        .unwrap();
+        assert_eq!(split_out, want, "k-split diverged on {lbl}");
+        let r = bench(&format!("hugek {lbl} @8b t8 no-ksplit"), big, || {
+            matmul_packed_tile_stolen_with(
+                &pool8, &pa, &pb, 0, sm, 0, sn,
+                PopcountKernel::Auto, TilePolicy::NO_KSPLIT, KernelFamily::Popcount,
+            )
+            .unwrap()
+            .0[0]
+        });
+        let nosplit = r.mean.as_secs_f64();
+        println!("{}   ({} GOPS)", r.format(), fmt_rate(r.per_second(smacs) / 1e9));
+        log.push(r);
+        let r = bench(&format!("hugek {lbl} @8b t8 ksplit-auto"), big, || {
+            matmul_packed_tile_stolen_with(
+                &pool8, &pa, &pb, 0, sm, 0, sn,
+                PopcountKernel::Auto, TilePolicy::AUTO, KernelFamily::Popcount,
+            )
+            .unwrap()
+            .0[0]
+        });
+        let auto_split = r.mean.as_secs_f64();
+        println!(
+            "{}   ({} GOPS, {:.2}x vs no-split; sample run: {} jobs, {} steals)",
+            r.format(),
+            fmt_rate(r.per_second(smacs) / 1e9),
+            safe_ratio(nosplit, auto_split),
+            stats.tiles,
+            stats.steals,
+        );
+        log.push(r);
+        // the planner's chosen plan, calibrated on these operands
+        let run = ShapeRun {
+            a: &sa_m,
+            b: &sb_m,
+            m: sm,
+            k: sk,
+            n: sn,
+            bits: 8,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: Some(&pb),
+            pool: Some(&pool8),
+        };
+        let key = PlanKey::for_matmul(sm, sk, sn, 8, 8, PlaneKind::Sbmwc);
+        let (plan, cal_out) = planner.calibrate(key, &run).unwrap();
+        assert_eq!(cal_out.0, want, "chosen plan diverged on {lbl}");
+        let r = bench(&format!("hugek {lbl} @8b CHOSEN {}", plan.label()), big, || {
+            run.run(&plan).unwrap().0[0]
+        });
+        let chosen = r.mean.as_secs_f64();
+        println!("{}   ({} GOPS)", r.format(), fmt_rate(r.per_second(smacs) / 1e9));
+        log.push(r);
+        assert!(
+            chosen <= nosplit * 1.25,
+            "chosen plan [{}] lost to forced no-split on {lbl}: {:.3}ms vs {:.3}ms",
+            plan.label(),
+            chosen * 1e3,
+            nosplit * 1e3
+        );
+        println!(
+            "ACCEPTANCE hugek {lbl} @8b: chosen [{}] vs forced no-split = {:.2}x, \
+auto-ksplit vs no-split = {:.2}x (never-slower-than-no-split: yes)",
+            plan.label(),
+            safe_ratio(nosplit, chosen),
+            safe_ratio(nosplit, auto_split),
+        );
+    }
+
+    // ---- 5f. cross-precision plane reuse: slice vs fresh re-pack --------
     // 4-bit-range weights packed at 8 bits: a precision-lowered request
     // slices a plane-subset view where PR 1 re-decomposed the matrix
     let b_lo: Vec<i32> = (0..k3 * n3).map(|_| rng.range_i32(-8, 7)).collect();

@@ -41,10 +41,24 @@
 //!   plane-major layout makes the planes of every lower precision a
 //!   *prefix* of a higher-precision pack, so a `b'`-bit view of a
 //!   `b`-bit pack (`b' ≥ min_bits`) is a zero-copy `Arc` share.
+//!
+//! Two further plan-selectable levers (DESIGN.md
+//! §Sub-popcount-Kernels), both bit-identical by construction:
+//!
+//! * [`KernelFamily::Rsr`] — redundant-segment-reuse kernels
+//!   ([`SegmentTable`], [`matmul_packed_rsr`]): dedupe the stationary
+//!   operand's column word-patterns per segment and serve each output
+//!   as a sum of shared segment dots instead of per-column popcounts —
+//!   the sub-popcount path for the 1–2 bit regime where quantized
+//!   weight columns repeat (RSR/RSR++, arXiv 2411.06360).
+//! * [`TilePolicy::k_chunks`] — deterministic k-split: stolen tiles may
+//!   split the contracted dimension into fixed-order word-aligned
+//!   chunks ([`plan_k_chunks`]) whose exact i64 partials merge in
+//!   chunk-index order, so `1×hugek×n` shapes fan out across slots.
 
 use super::plane::{decompose, plane_weight, PlaneKind};
 use crate::Result;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
@@ -657,7 +671,34 @@ pub fn matmul_packed_tile_with(
     tn: usize,
     kernel: PopcountKernel,
 ) -> Result<Vec<i64>> {
+    let nw = a.words;
+    matmul_packed_tile_words(a, b, row0, tm, col0, tn, kernel, 0, nw)
+}
+
+/// [`matmul_packed_tile_with`] restricted to packed words
+/// `w0 .. w0+nw` of the contracted dimension — the per-chunk kernel of
+/// the deterministic k-split. Tail bits are masked at pack time, so
+/// word-aligned chunks partition every dot product exactly: summing the
+/// chunk tiles (in any fixed order — i64 adds are exact) reproduces the
+/// full-range kernel bit for bit. The full range `(0, words)` *is* the
+/// classic kernel.
+fn matmul_packed_tile_words(
+    a: &PackedPlanes,
+    b: &PackedPlanes,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+    kernel: PopcountKernel,
+    w0: usize,
+    nw: usize,
+) -> Result<Vec<i64>> {
     check_tile(a, b, row0, tm, col0, tn)?;
+    anyhow::ensure!(
+        w0 + nw <= a.words,
+        "k-chunk words {w0}+{nw} exceed the {}-word pack",
+        a.words
+    );
     let and_pop = kernel.and_pop();
     let mut out = vec![0i64; tm * tn];
     for i in 0..a.bits as usize {
@@ -665,13 +706,264 @@ pub fn matmul_packed_tile_with(
         for j in 0..b.bits as usize {
             let w = wa * plane_weight(b.kind, j as u32, b.bits);
             for r in 0..tm {
-                let ap = a.plane_pos(i, row0 + r);
-                let an = a.plane_neg(i, row0 + r);
+                let ap = &a.plane_pos(i, row0 + r)[w0..w0 + nw];
+                let an = a.plane_neg(i, row0 + r).map(|s| &s[w0..w0 + nw]);
                 let orow = &mut out[r * tn..(r + 1) * tn];
                 for (c, o) in orow.iter_mut().enumerate() {
-                    let bp = b.plane_pos(j, col0 + c);
-                    let bn = b.plane_neg(j, col0 + c);
+                    let bp = &b.plane_pos(j, col0 + c)[w0..w0 + nw];
+                    let bn = b.plane_neg(j, col0 + c).map(|s| &s[w0..w0 + nw]);
                     *o += w * plane_pair_dot(and_pop, ap, an, bp, bn);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// RSR segment kernels (redundant-segment reuse)
+// ---------------------------------------------------------------------------
+
+/// The plane-pair kernel family a plan runs — the family axis of
+/// [`crate::plan::ExecPlan`] (DESIGN.md §Sub-popcount-Kernels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelFamily {
+    /// The direct AND+popcount engine: one [`plane_pair_dot`] per
+    /// (row, column, plane pair).
+    Popcount,
+    /// Redundant-segment reuse: dedupe the stationary operand's column
+    /// word-patterns per segment ([`SegmentTable`]) and serve each
+    /// output column from shared segment dots — sub-popcount exactly
+    /// when columns repeat (the 1–2 bit quantized-weight regime).
+    Rsr {
+        /// Packed words per shared segment (0 = auto via
+        /// [`SegmentTable::auto_seg_words`]).
+        seg_words: u32,
+    },
+}
+
+impl Default for KernelFamily {
+    fn default() -> KernelFamily {
+        KernelFamily::Popcount
+    }
+}
+
+impl KernelFamily {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelFamily::Popcount => "popcount",
+            KernelFamily::Rsr { .. } => "rsr",
+        }
+    }
+}
+
+/// Deduplicated column word-patterns of a stationary-operand tile,
+/// per (plane, stream, segment) — built **once per (plane, tile)** and
+/// amortized over every streamed row and plane of the left operand.
+///
+/// The contracted dimension's `words` packed words split into segments
+/// of `seg_words` words. Within one segment, two columns whose word
+/// patterns agree need only one AND+popcount against any left-operand
+/// row: the kernel computes each segment's `D` distinct dots, then
+/// serves all `tn` columns by indexed add. Against the direct kernel's
+/// `tn` popcounts per segment this wins exactly when `D` (plus the
+/// per-column add) undercuts `tn` — real 1–2 bit quantized weights are
+/// heavily redundant, uniform random operands are not, which is why the
+/// planner calibrates rather than assumes (see `plan/cost.rs`).
+pub struct SegmentTable {
+    /// Words per segment actually used (auto resolved at build time).
+    pub seg_words: usize,
+    bits: u32,
+    kind: PlaneKind,
+    len: usize,
+    tn: usize,
+    nstreams: usize,
+    /// Per (plane, stream) segment lists, plane-major:
+    /// `streams[plane * nstreams + stream]`; stream 0 = pos, 1 = neg.
+    streams: Vec<Vec<SegPatterns>>,
+}
+
+/// One segment's deduplicated patterns: `patterns` holds `D` distinct
+/// `nw`-word patterns flattened, `ids[c]` names column `c`'s pattern.
+struct SegPatterns {
+    w0: usize,
+    nw: usize,
+    patterns: Vec<u64>,
+    ids: Vec<u32>,
+}
+
+impl SegmentTable {
+    /// Auto segment length in words: short segments maximise pattern
+    /// collisions (`D` is capped by the distinct patterns that *can*
+    /// occur), longer ones amortise the per-column indexed adds; two
+    /// words only pays once there are enough words to share and few
+    /// enough columns that collisions survive the doubled pattern
+    /// space.
+    pub fn auto_seg_words(words: usize, tn: usize) -> usize {
+        if tn <= 64 && words >= 4 {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Dedupe columns `col0 .. col0+tn` of the stationary pack `b`
+    /// (`seg_words = 0` → auto).
+    pub fn build(b: &PackedPlanes, col0: usize, tn: usize, seg_words: usize) -> Result<SegmentTable> {
+        anyhow::ensure!(
+            col0 + tn <= b.vectors,
+            "segment table {col0}+{tn} exceeds {} packed columns",
+            b.vectors
+        );
+        let seg_words = match seg_words {
+            0 => Self::auto_seg_words(b.words, tn),
+            s => s,
+        }
+        .min(b.words.max(1));
+        let nstreams = if b.neg.is_empty() { 1 } else { 2 };
+        let mut streams = Vec::with_capacity(b.bits as usize * nstreams);
+        for plane in 0..b.bits as usize {
+            for stream in 0..nstreams {
+                let mut segs = Vec::new();
+                let mut w0 = 0usize;
+                while w0 < b.words {
+                    let nw = seg_words.min(b.words - w0);
+                    let mut patterns: Vec<u64> = Vec::new();
+                    let mut ids = Vec::with_capacity(tn);
+                    let mut index: HashMap<Vec<u64>, u32> = HashMap::new();
+                    for c in 0..tn {
+                        let col = if stream == 0 {
+                            b.plane_pos(plane, col0 + c)
+                        } else {
+                            b.plane_neg(plane, col0 + c).expect("stream 1 only for Booth")
+                        };
+                        let id = *index.entry(col[w0..w0 + nw].to_vec()).or_insert_with_key(|k| {
+                            let id = (patterns.len() / nw) as u32;
+                            patterns.extend_from_slice(k);
+                            id
+                        });
+                        ids.push(id);
+                    }
+                    segs.push(SegPatterns { w0, nw, patterns, ids });
+                    w0 += nw;
+                }
+                streams.push(segs);
+            }
+        }
+        Ok(SegmentTable {
+            seg_words,
+            bits: b.bits,
+            kind: b.kind,
+            len: b.len,
+            tn,
+            nstreams,
+            streams,
+        })
+    }
+
+    /// Total distinct patterns across every (plane, stream, segment) —
+    /// `≪ tn × segments × planes` exactly when RSR pays off.
+    pub fn distinct(&self) -> usize {
+        self.streams
+            .iter()
+            .flatten()
+            .map(|s| s.patterns.len() / s.nw.max(1))
+            .sum()
+    }
+
+    /// Column patterns the table replaced (`tn` per segment per plane
+    /// per stream) — `distinct() / replaced()` is the measured
+    /// redundancy ratio ρ the cost model assumes for 1–2 bit operands.
+    pub fn replaced(&self) -> usize {
+        self.streams.iter().map(|s| s.len() * self.tn).sum()
+    }
+}
+
+/// The RSR matmul tile: [`matmul_packed_tile_with`]'s contract, served
+/// from a [`SegmentTable`] built once for the whole tile.
+///
+/// **Bit-identity.** Per (row, plane pair) the direct kernel computes
+/// `pp − pn − np + nn` over the full word range; the word-wise AND
+/// popcount distributes over word-aligned segments, so summing each
+/// column's (shared) segment dots — all exact i64 integers — is a pure
+/// re-association of the same sum and yields the identical value, for
+/// both plane kinds and any segment length.
+pub fn matmul_packed_rsr(
+    a: &PackedPlanes,
+    b: &PackedPlanes,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+    kernel: PopcountKernel,
+    seg_words: usize,
+) -> Result<Vec<i64>> {
+    check_tile(a, b, row0, tm, col0, tn)?;
+    let table = SegmentTable::build(b, col0, tn, seg_words)?;
+    matmul_packed_rsr_with_table(a, &table, row0, tm, kernel)
+}
+
+/// [`matmul_packed_rsr`] against a pre-built [`SegmentTable`] (the
+/// serving steady state: the stationary operand's table outlives many
+/// streamed rows).
+pub fn matmul_packed_rsr_with_table(
+    a: &PackedPlanes,
+    t: &SegmentTable,
+    row0: usize,
+    tm: usize,
+    kernel: PopcountKernel,
+) -> Result<Vec<i64>> {
+    anyhow::ensure!(
+        a.len == t.len,
+        "contracted dims differ: {} vs {}",
+        a.len,
+        t.len
+    );
+    anyhow::ensure!(
+        row0 + tm <= a.vectors,
+        "rows {row0}+{tm} exceed {} packed rows",
+        a.vectors
+    );
+    let and_pop = kernel.and_pop();
+    let tn = t.tn;
+    let a_streams = if a.neg.is_empty() { 1 } else { 2 };
+    let mut out = vec![0i64; tm * tn];
+    let mut dots: Vec<i64> = Vec::new();
+    let mut col_acc = vec![0i64; tn];
+    for i in 0..a.bits as usize {
+        let wa = plane_weight(a.kind, i as u32, a.bits);
+        for j in 0..t.bits as usize {
+            let w = wa * plane_weight(t.kind, j as u32, t.bits);
+            for r in 0..tm {
+                for v in col_acc.iter_mut() {
+                    *v = 0;
+                }
+                // signed plane-pair dot per column (pp − pn − np + nn),
+                // each term served from this stream pair's segment sums
+                for sa in 0..a_streams {
+                    let aw = if sa == 0 {
+                        a.plane_pos(i, row0 + r)
+                    } else {
+                        a.plane_neg(i, row0 + r).expect("stream 1 only for Booth")
+                    };
+                    for sb in 0..t.nstreams {
+                        let sign: i64 = if sa == sb { 1 } else { -1 };
+                        for seg in &t.streams[j * t.nstreams + sb] {
+                            let d = seg.patterns.len() / seg.nw;
+                            dots.clear();
+                            for p in 0..d {
+                                let pat = &seg.patterns[p * seg.nw..(p + 1) * seg.nw];
+                                dots.push(and_pop(&aw[seg.w0..seg.w0 + seg.nw], pat) as i64);
+                            }
+                            for (acc, &id) in col_acc.iter_mut().zip(&seg.ids) {
+                                *acc += sign * dots[id as usize];
+                            }
+                        }
+                    }
+                }
+                let orow = &mut out[r * tn..(r + 1) * tn];
+                for (o, &acc) in orow.iter_mut().zip(&col_acc) {
+                    *o += w * acc;
                 }
             }
         }
@@ -759,23 +1051,39 @@ impl Drop for PackedPool {
 // ---------------------------------------------------------------------------
 
 /// Tile-granularity knobs for the work-stealing 2-D scheduler
-/// (`server.packed_tile_rows` / `server.packed_tile_cols` in configs,
-/// `--packed-tile-rows` / `--packed-tile-cols` on `serve`). `0` means
+/// (`server.packed_tile_rows` / `server.packed_tile_cols` /
+/// `server.packed_ksplit` in configs, `--packed-tile-rows` /
+/// `--packed-tile-cols` / `--packed-ksplit` on `serve`). `0` means
 /// *auto*: adapt the dimension to the shape, word count, and worker
-/// count via [`plan_tile_shape`].
+/// count via [`plan_tile_shape`] (and [`plan_k_chunks`] for the
+/// contracted dimension).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct TilePolicy {
     /// Output rows per tile job (0 = auto).
     pub tile_rows: usize,
     /// Output columns per tile job (0 = auto).
     pub tile_cols: usize,
+    /// Contracted-dimension chunks per tile (0 = auto: split only when
+    /// the output grid alone cannot feed every slot; 1 = never split —
+    /// the pre-k-split scheduler; n ≥ 2 = force n word-aligned chunks,
+    /// clamped to the word count).
+    pub k_chunks: usize,
 }
 
 impl TilePolicy {
-    /// Adapt both dimensions (the server default).
+    /// Adapt every dimension (the server default).
     pub const AUTO: TilePolicy = TilePolicy {
         tile_rows: 0,
         tile_cols: 0,
+        k_chunks: 0,
+    };
+
+    /// Auto output tiles with k-splitting disabled — the exact PR 4
+    /// scheduler, kept as the forced baseline for A/B sweeps.
+    pub const NO_KSPLIT: TilePolicy = TilePolicy {
+        tile_rows: 0,
+        tile_cols: 0,
+        k_chunks: 1,
     };
 }
 
@@ -828,6 +1136,43 @@ const TILE_OVERSUBSCRIBE: usize = 4;
 /// decide when a matmul is worth pooling at all.
 pub const MIN_TILE_WORK: u64 = 1 << 15;
 
+/// Smallest k-chunk of a split tile worth its dispatch, in word
+/// operations — an eighth of [`MIN_TILE_WORK`]: chunk jobs reuse the
+/// tile's packed operands and merge at one i64 add per output cell, so
+/// they stay profitable well below the tile floor.
+pub const MIN_KSPLIT_WORK: u64 = MIN_TILE_WORK / 8;
+
+/// Plan the contracted-dimension chunk count for a stolen run whose
+/// output grid came out as `ntiles` tiles of `tile_work` word
+/// operations each, over `words` packed words.
+///
+/// Auto (`k_chunks = 0`) splits only when the output grid alone cannot
+/// feed every slot — the huge-k regime (`1×hugek×n`) where tiles would
+/// otherwise serialize — and grows the chunk count toward the
+/// oversubscription target while every chunk still clears
+/// [`MIN_KSPLIT_WORK`]. Forced counts are clamped to the word count:
+/// chunks are always word-aligned, so pack-time tail masking keeps
+/// every chunk's dot products exact.
+pub fn plan_k_chunks(
+    words: usize,
+    ntiles: usize,
+    slots: usize,
+    tile_work: u64,
+    policy: TilePolicy,
+) -> usize {
+    match policy.k_chunks {
+        0 => {
+            if words <= 1 || ntiles >= slots.max(1) {
+                return 1;
+            }
+            let target = (slots.max(1) * TILE_OVERSUBSCRIBE).div_ceil(ntiles.max(1));
+            let by_work = (tile_work / MIN_KSPLIT_WORK).max(1) as usize;
+            words.min(target).min(by_work).max(1)
+        }
+        c => c.min(words.max(1)),
+    }
+}
+
 /// Plan the `(tile_rows, tile_cols)` job granularity for a `tm × tn`
 /// output executed by `slots` workers, where one output element costs
 /// `cell_work` word operations (`bits_a · bits_b · words`).
@@ -877,9 +1222,11 @@ pub fn plan_tile_shape(
     (tr, tc)
 }
 
-/// One 2-D output tile of a stolen matmul; coordinates are relative to
-/// the requested tile view. `idx` is the row-major grid position and
-/// doubles as the deterministic merge order.
+/// One job of a stolen matmul: a 2-D output tile restricted to the
+/// packed words `w0 .. w0+nwords` of the contracted dimension (the full
+/// range when the tile is not k-split); coordinates are relative to the
+/// requested tile view. `idx` is the row-major (tile, chunk) position
+/// and doubles as the deterministic merge order.
 #[derive(Debug, Clone, Copy)]
 struct TileJob2d {
     idx: usize,
@@ -887,6 +1234,8 @@ struct TileJob2d {
     rows: usize,
     c0: usize,
     cols: usize,
+    w0: usize,
+    nwords: usize,
 }
 
 /// Shared state of one work-stealing run: per-slot deques seeded with
@@ -942,10 +1291,21 @@ fn run_steal_slot(
     row0: usize,
     col0: usize,
     kernel: PopcountKernel,
+    family: KernelFamily,
     tx: &mpsc::Sender<(usize, Result<Vec<i64>>)>,
 ) {
     while let Some(t) = set.next(slot) {
-        let part = matmul_packed_tile_with(a, b, row0 + t.r0, t.rows, col0 + t.c0, t.cols, kernel);
+        let part = match family {
+            KernelFamily::Popcount => matmul_packed_tile_words(
+                a, b, row0 + t.r0, t.rows, col0 + t.c0, t.cols, kernel, t.w0, t.nwords,
+            ),
+            // RSR jobs always carry the full word range (the scheduler
+            // never k-splits them); the segment table is built once per
+            // tile, amortized over the tile's rows × plane pairs
+            KernelFamily::Rsr { seg_words } => matmul_packed_rsr(
+                a, b, row0 + t.r0, t.rows, col0 + t.c0, t.cols, kernel, seg_words as usize,
+            ),
+        };
         set.executed[slot].fetch_add(1, Ordering::Relaxed);
         if tx.send((t.idx, part)).is_err() {
             break; // collector bailed on an earlier tile error
@@ -958,14 +1318,15 @@ fn run_steal_slot(
 /// caller drains tiles too, so a shared pool busy with other requests
 /// delays but never starves a run).
 ///
-/// **Determinism.** Tiles partition the output without splitting the
-/// contracted dimension: every output element is produced by exactly
-/// one tile, whose serial kernel accumulates that element in the exact
-/// plane-pair order of the single-thread path. Results are buffered and
-/// merged in fixed tile-index order, so pooled output is bit-identical
-/// to [`matmul_packed_tile_with`] by construction, regardless of which
-/// slot ran which tile when. Operands travel as `Arc` clones — no
-/// packing, no copying.
+/// **Determinism.** Output tiles partition the output: every element
+/// is produced by the tile(s) covering it. An unsplit tile accumulates
+/// its elements in the exact plane-pair order of the single-thread
+/// path; a k-split tile's word-aligned chunk partials are exact i64
+/// sums that merge by addition in fixed chunk-index order — a pure
+/// re-association of the same integer sum, so either way the pooled
+/// output is bit-identical to [`matmul_packed_tile_with`] by
+/// construction, regardless of which slot ran which job when. Operands
+/// travel as `Arc` clones — no packing, no copying.
 pub fn matmul_packed_tile_stolen(
     pool: &PackedPool,
     a: &Arc<PackedPlanes>,
@@ -977,6 +1338,36 @@ pub fn matmul_packed_tile_stolen(
     kernel: PopcountKernel,
     policy: TilePolicy,
 ) -> Result<(Vec<i64>, StealStats)> {
+    matmul_packed_tile_stolen_with(
+        pool,
+        a,
+        b,
+        row0,
+        tm,
+        col0,
+        tn,
+        kernel,
+        policy,
+        KernelFamily::Popcount,
+    )
+}
+
+/// [`matmul_packed_tile_stolen`] with an explicit [`KernelFamily`] —
+/// the executor entry the plan layer drives. RSR tiles are never
+/// k-split (their segment tables span the full contracted dimension);
+/// popcount tiles split per [`plan_k_chunks`].
+pub fn matmul_packed_tile_stolen_with(
+    pool: &PackedPool,
+    a: &Arc<PackedPlanes>,
+    b: &Arc<PackedPlanes>,
+    row0: usize,
+    tm: usize,
+    col0: usize,
+    tn: usize,
+    kernel: PopcountKernel,
+    policy: TilePolicy,
+    family: KernelFamily,
+) -> Result<(Vec<i64>, StealStats)> {
     // fail fast on a bad tile before dispatching any work
     check_tile(a, b, row0, tm, col0, tn)?;
     let slots = pool.threads() + 1; // + the caller's inline slot
@@ -985,9 +1376,21 @@ pub fn matmul_packed_tile_stolen(
     let grid_r = if tm == 0 { 0 } else { tm.div_ceil(tr) };
     let grid_c = if tn == 0 { 0 } else { tn.div_ceil(tc) };
     let ntiles = grid_r * grid_c;
-    if ntiles <= 1 {
-        let out = matmul_packed_tile_with(a, b, row0, tm, col0, tn, kernel)?;
-        let tiles = ntiles as u64;
+    let chunks = match family {
+        KernelFamily::Rsr { .. } => 1,
+        KernelFamily::Popcount => {
+            plan_k_chunks(a.words, ntiles, slots, tr as u64 * tc as u64 * cell_work, policy)
+        }
+    };
+    let njobs = ntiles * chunks;
+    if njobs <= 1 {
+        let out = match family {
+            KernelFamily::Popcount => matmul_packed_tile_with(a, b, row0, tm, col0, tn, kernel)?,
+            KernelFamily::Rsr { seg_words } => {
+                matmul_packed_rsr(a, b, row0, tm, col0, tn, kernel, seg_words as usize)?
+            }
+        };
+        let tiles = njobs as u64;
         return Ok((
             out,
             StealStats {
@@ -998,54 +1401,71 @@ pub fn matmul_packed_tile_stolen(
             },
         ));
     }
-    let mut tiles = Vec::with_capacity(ntiles);
+    let words = a.words;
+    let mut jobs = Vec::with_capacity(njobs);
     for gr in 0..grid_r {
         for gc in 0..grid_c {
             let (r0, c0) = (gr * tr, gc * tc);
-            tiles.push(TileJob2d {
-                idx: tiles.len(),
-                r0,
-                rows: tr.min(tm - r0),
-                c0,
-                cols: tc.min(tn - c0),
-            });
+            for ch in 0..chunks {
+                // balanced word-aligned chunk ranges (tail chunks may
+                // be one word shorter)
+                let w0 = ch * words / chunks;
+                let w1 = (ch + 1) * words / chunks;
+                jobs.push(TileJob2d {
+                    idx: jobs.len(),
+                    r0,
+                    rows: tr.min(tm - r0),
+                    c0,
+                    cols: tc.min(tn - c0),
+                    w0,
+                    nwords: w1 - w0,
+                });
+            }
         }
     }
-    let set = Arc::new(StealSet::new(slots, &tiles));
+    let set = Arc::new(StealSet::new(slots, &jobs));
     let (tx, rx) = mpsc::channel();
     for slot in 0..pool.threads() {
         let (set, a, b, tx) = (set.clone(), a.clone(), b.clone(), tx.clone());
         pool.execute(Box::new(move || {
-            run_steal_slot(&set, slot, &a, &b, row0, col0, kernel, &tx)
+            run_steal_slot(&set, slot, &a, &b, row0, col0, kernel, family, &tx)
         }))?;
     }
-    run_steal_slot(&set, slots - 1, a, b, row0, col0, kernel, &tx);
+    run_steal_slot(&set, slots - 1, a, b, row0, col0, kernel, family, &tx);
     drop(tx);
-    let mut parts: Vec<Option<Vec<i64>>> = (0..ntiles).map(|_| None).collect();
+    let mut parts: Vec<Option<Vec<i64>>> = (0..njobs).map(|_| None).collect();
     let mut seen = 0usize;
     while let Ok((idx, part)) = rx.recv() {
         parts[idx] = Some(part?);
         seen += 1;
     }
     anyhow::ensure!(
-        seen == ntiles,
-        "packed pool lost {} of {ntiles} tile jobs (worker panicked?)",
-        ntiles - seen
+        seen == njobs,
+        "packed pool lost {} of {njobs} tile jobs (worker panicked?)",
+        njobs - seen
     );
-    // deterministic merge: fixed tile-index order over disjoint regions
+    // deterministic merge: fixed job-index order — distinct tiles cover
+    // disjoint regions, and one tile's k-chunk partials add in
+    // chunk-index order (exact i64 adds: any fixed order is
+    // bit-identical; fixing it makes determinism syntactic)
     let mut out = vec![0i64; tm * tn];
-    for t in &tiles {
-        let part = parts[t.idx].take().expect("every tile counted above");
-        for r in 0..t.rows {
-            let dst = (t.r0 + r) * tn + t.c0;
-            out[dst..dst + t.cols].copy_from_slice(&part[r * t.cols..(r + 1) * t.cols]);
+    for j in &jobs {
+        let part = parts[j.idx].take().expect("every job counted above");
+        for r in 0..j.rows {
+            let dst = (j.r0 + r) * tn + j.c0;
+            for (o, p) in out[dst..dst + j.cols]
+                .iter_mut()
+                .zip(&part[r * j.cols..(r + 1) * j.cols])
+            {
+                *o += p;
+            }
         }
     }
     let executed: Vec<u64> = set.executed.iter().map(|c| c.load(Ordering::Relaxed)).collect();
     Ok((
         out,
         StealStats {
-            tiles: ntiles as u64,
+            tiles: njobs as u64,
             steals: set.steals.load(Ordering::Relaxed),
             max_worker_tiles: executed.iter().copied().max().unwrap_or(0),
             min_worker_tiles: executed.iter().copied().min().unwrap_or(0),
@@ -1303,7 +1723,7 @@ mod tests {
         let (tr, tc) = plan_tile_shape(2, 2, 4, 9, TilePolicy::AUTO);
         assert!(tr * tc >= 1);
         // explicit knobs are respected (clamped to the shape)
-        let p = TilePolicy { tile_rows: 7, tile_cols: 1000 };
+        let p = TilePolicy { tile_rows: 7, tile_cols: 1000, ..TilePolicy::AUTO };
         assert_eq!(plan_tile_shape(20, 30, 256, 4, p), (7, 30));
         // degenerate shapes do not divide by zero
         assert_eq!(plan_tile_shape(0, 5, 1, 4, TilePolicy::AUTO), (1, 5));
@@ -1333,13 +1753,18 @@ mod tests {
                     .unwrap();
             assert_eq!(rowslice, serial, "{m}x{k}x{n}");
             // every tile policy yields the same integers; forced-small
-            // tiles maximise job count and steal traffic
+            // tiles maximise job count and steal traffic, forced
+            // k-chunks exercise the split-merge path (clamped to the
+            // word count on short-k shapes)
             for policy in [
                 TilePolicy::AUTO,
-                TilePolicy { tile_rows: 1, tile_cols: 0 },
-                TilePolicy { tile_rows: 0, tile_cols: 1 },
-                TilePolicy { tile_rows: 1, tile_cols: 1 },
-                TilePolicy { tile_rows: 5, tile_cols: 4 },
+                TilePolicy::NO_KSPLIT,
+                TilePolicy { tile_rows: 1, tile_cols: 0, ..TilePolicy::AUTO },
+                TilePolicy { tile_rows: 0, tile_cols: 1, ..TilePolicy::AUTO },
+                TilePolicy { tile_rows: 1, tile_cols: 1, ..TilePolicy::AUTO },
+                TilePolicy { tile_rows: 5, tile_cols: 4, ..TilePolicy::AUTO },
+                TilePolicy { tile_rows: 0, tile_cols: 0, k_chunks: 2 },
+                TilePolicy { tile_rows: 5, tile_cols: 4, k_chunks: 3 },
             ] {
                 let (out, stats) = matmul_packed_tile_stolen(
                     &pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy,
@@ -1372,7 +1797,7 @@ mod tests {
             1,
             n - 2,
             PopcountKernel::Auto,
-            TilePolicy { tile_rows: 2, tile_cols: 3 },
+            TilePolicy { tile_rows: 2, tile_cols: 3, ..TilePolicy::AUTO },
         )
         .unwrap();
         assert_eq!(t_stolen, t_serial);
@@ -1472,5 +1897,200 @@ mod tests {
         // a 4-bit view of the same pack advertises half the footprint
         // while sharing the same storage
         assert_eq!(p.slice_bits(4).unwrap().mem_words() * 2, p.mem_words());
+    }
+
+    /// A `k × n` matrix whose columns are drawn from a small codebook —
+    /// the redundancy profile of real low-precision quantized weights,
+    /// which is what makes RSR sub-popcount.
+    fn codebook_mat(rng: &mut Pcg32, k: usize, n: usize, bits: u32, distinct: usize) -> Vec<i32> {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        let code: Vec<Vec<i32>> = (0..distinct.max(1))
+            .map(|_| (0..k).map(|_| rng.range_i32(lo, hi)).collect())
+            .collect();
+        let mut b = vec![0i32; k * n];
+        for c in 0..n {
+            let pick = rng.range_i32(0, distinct.max(1) as i32 - 1) as usize;
+            for r in 0..k {
+                b[r * n + c] = code[pick][r];
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn rsr_matches_serial_all_kind_pairs_and_seg_lengths() {
+        let mut rng = Pcg32::new(0x4542);
+        for bits in [1u32, 2, 3, 8] {
+            // k straddles word boundaries so segment tails are exercised
+            for (m, k, n) in [(3usize, 70usize, 5usize), (1, 64, 9), (4, 257, 3), (1, 1, 1)] {
+                let a = rand_mat(&mut rng, m * k, bits);
+                let b = codebook_mat(&mut rng, k, n, bits, 3);
+                let want = ref_mm(&a, &b, m, k, n);
+                for ka in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                    for kb in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                        let pa = PackedPlanes::pack_rows(&a, m, k, bits, ka).unwrap();
+                        let pb = PackedPlanes::pack_cols(&b, k, n, bits, kb).unwrap();
+                        for seg_words in [0usize, 1, 2, 5] {
+                            assert_eq!(
+                                matmul_packed_rsr(
+                                    &pa, &pb, 0, m, 0, n, PopcountKernel::Scalar, seg_words
+                                )
+                                .unwrap(),
+                                want,
+                                "{ka:?}x{kb:?} {m}x{k}x{n} @{bits}b seg={seg_words}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rsr_interior_tile_and_sign_saturation() {
+        let mut rng = Pcg32::new(0x4543);
+        // saturated operands: the sign plane is all-ones, the worst case
+        // for the −2^(b−1) correction — and maximally redundant columns
+        for bits in [1u32, 2, 16] {
+            let (m, k, n) = (2usize, 70usize, 4usize);
+            let a = vec![min_value(bits); m * k];
+            let b = vec![min_value(bits); k * n];
+            let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap();
+            let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+            assert_eq!(
+                matmul_packed_rsr(&pa, &pb, 0, m, 0, n, PopcountKernel::Auto, 0).unwrap(),
+                ref_mm(&a, &b, m, k, n),
+                "saturated @{bits}b"
+            );
+        }
+        // interior tile views match the serial tile kernel
+        let (m, k, n, bits) = (7usize, 130usize, 9usize, 2u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = codebook_mat(&mut rng, k, n, bits, 4);
+        let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Booth).unwrap();
+        let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+        let want = matmul_packed_tile(&pa, &pb, 2, 3, 4, 5).unwrap();
+        assert_eq!(
+            matmul_packed_rsr(&pa, &pb, 2, 3, 4, 5, PopcountKernel::Scalar, 1).unwrap(),
+            want
+        );
+        // oversize views rejected before any table is built
+        assert!(matmul_packed_rsr(&pa, &pb, 0, m + 1, 0, n, PopcountKernel::Auto, 0).is_err());
+    }
+
+    #[test]
+    fn segment_table_dedupes_redundant_columns() {
+        let mut rng = Pcg32::new(0x4544);
+        let (k, n, bits, distinct) = (128usize, 64usize, 1u32, 4usize);
+        let b = codebook_mat(&mut rng, k, n, bits, distinct);
+        let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+        let t = SegmentTable::build(&pb, 0, n, 1).unwrap();
+        assert_eq!(t.seg_words, 1);
+        // identical columns collapse: at most `distinct` patterns per
+        // segment, against `n` replaced popcounts per segment
+        assert!(
+            t.distinct() <= distinct * pb.words,
+            "{} distinct patterns for a {distinct}-column codebook",
+            t.distinct()
+        );
+        assert_eq!(t.replaced(), n * pb.words);
+        // uniform random columns barely dedupe — the case the planner's
+        // measured calibration exists to catch
+        let r = rand_mat(&mut rng, k * n, 8);
+        let pr = PackedPlanes::pack_cols(&r, k, n, 8, PlaneKind::Sbmwc).unwrap();
+        let tr = SegmentTable::build(&pr, 0, n, 1).unwrap();
+        assert!(tr.distinct() > t.distinct());
+        // auto segment length stays within the pack
+        assert!(SegmentTable::build(&pb, 0, n, 0).unwrap().seg_words >= 1);
+        assert!(SegmentTable::build(&pb, 0, n, 99).unwrap().seg_words <= pb.words);
+        assert!(SegmentTable::build(&pb, 60, 10, 1).is_err(), "column overrun");
+    }
+
+    #[test]
+    fn plan_k_chunks_auto_and_forced() {
+        // single output tile over many words: auto fans k out
+        let chunks = plan_k_chunks(128, 1, 9, 1 << 20, TilePolicy::AUTO);
+        assert!(chunks >= 2, "huge-k single tile must split, got {chunks}");
+        assert!(chunks <= 128);
+        // a grid that already feeds every slot never splits
+        assert_eq!(plan_k_chunks(128, 9, 9, 1 << 20, TilePolicy::AUTO), 1);
+        assert_eq!(plan_k_chunks(128, 36, 9, 1 << 20, TilePolicy::AUTO), 1);
+        // single-word and tiny-work tiles stay whole
+        assert_eq!(plan_k_chunks(1, 1, 9, 1 << 20, TilePolicy::AUTO), 1);
+        assert_eq!(plan_k_chunks(128, 1, 9, MIN_KSPLIT_WORK, TilePolicy::AUTO), 1);
+        // forced counts are clamped to the word count
+        let forced = |c| TilePolicy { tile_rows: 0, tile_cols: 0, k_chunks: c };
+        assert_eq!(plan_k_chunks(128, 9, 9, 1 << 20, forced(4)), 4);
+        assert_eq!(plan_k_chunks(2, 1, 9, 1 << 20, forced(7)), 2);
+        assert_eq!(plan_k_chunks(128, 1, 9, 1 << 20, forced(1)), 1);
+    }
+
+    #[test]
+    fn ksplit_stolen_matches_serial_including_tail_words() {
+        let mut rng = Pcg32::new(0x4545);
+        let pool = PackedPool::new(3).unwrap();
+        // k = 257 → 5 words: 2- and 3-chunk splits leave unequal
+        // word-aligned chunks, and the last word is tail-masked
+        for (m, k, n, bits) in [(1usize, 257usize, 37usize, 8u32), (4, 700, 3, 2), (2, 64, 2, 16)] {
+            let a = rand_mat(&mut rng, m * k, bits);
+            let b = rand_mat(&mut rng, k * n, bits);
+            let pa = Arc::new(PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Booth).unwrap());
+            let pb = Arc::new(PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap());
+            let serial =
+                matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar).unwrap();
+            assert_eq!(serial, ref_mm(&a, &b, m, k, n));
+            for chunks in [0usize, 1, 2, 3, 64] {
+                let policy = TilePolicy { tile_rows: 0, tile_cols: 0, k_chunks: chunks };
+                let (out, stats) = matmul_packed_tile_stolen(
+                    &pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy,
+                )
+                .unwrap();
+                assert_eq!(out, serial, "{m}x{k}x{n} @{bits}b k_chunks={chunks}");
+                assert!(stats.tiles >= 1);
+            }
+        }
+        // auto k-split: a 1×hugek×2 run has only 2 output tiles for 4
+        // slots, so the planner must fan the contracted dimension out
+        let a = rand_mat(&mut rng, 8192, 8);
+        let b = rand_mat(&mut rng, 8192 * 2, 8);
+        let pa = Arc::new(PackedPlanes::pack_rows(&a, 1, 8192, 8, PlaneKind::Sbmwc).unwrap());
+        let pb = Arc::new(PackedPlanes::pack_cols(&b, 8192, 2, 8, PlaneKind::Sbmwc).unwrap());
+        let serial = matmul_packed_tile_with(&pa, &pb, 0, 1, 0, 2, PopcountKernel::Scalar).unwrap();
+        let (out, stats) = matmul_packed_tile_stolen(
+            &pool, &pa, &pb, 0, 1, 0, 2, PopcountKernel::Auto, TilePolicy::AUTO,
+        )
+        .unwrap();
+        assert_eq!(out, serial, "auto-k-split 1x8192x2");
+        assert!(stats.tiles > 2, "auto k-split must fan out the huge-k run, got {} jobs", stats.tiles);
+        let (out, stats) = matmul_packed_tile_stolen(
+            &pool, &pa, &pb, 0, 1, 0, 2, PopcountKernel::Auto, TilePolicy::NO_KSPLIT,
+        )
+        .unwrap();
+        assert_eq!(out, serial);
+        assert!(stats.tiles <= 2, "NO_KSPLIT must keep tiles whole");
+
+        // stolen RSR: per-tile segment tables under the same scheduler
+        let (m, k, n, bits) = (9usize, 130usize, 33usize, 2u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = codebook_mat(&mut rng, k, n, bits, 4);
+        let pa = Arc::new(PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap());
+        let pb = Arc::new(PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap());
+        let serial = matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar).unwrap();
+        for seg_words in [0u32, 1, 2] {
+            let (out, _) = matmul_packed_tile_stolen_with(
+                &pool,
+                &pa,
+                &pb,
+                0,
+                m,
+                0,
+                n,
+                PopcountKernel::Auto,
+                TilePolicy { tile_rows: 2, tile_cols: 8, ..TilePolicy::AUTO },
+                KernelFamily::Rsr { seg_words },
+            )
+            .unwrap();
+            assert_eq!(out, serial, "stolen rsr seg_words={seg_words}");
+        }
     }
 }

@@ -112,9 +112,18 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
     cfg.packed_unroll = args.req::<String>("packed-unroll")?.parse()?;
     cfg.packed_tile_rows = args.req("packed-tile-rows")?;
     cfg.packed_tile_cols = args.req("packed-tile-cols")?;
+    cfg.packed_ksplit = args.req("packed-ksplit")?;
+    cfg.packed_rsr = args.switch("packed-rsr");
     let planner_mode: PlannerMode = args.req::<String>("planner")?.parse()?;
-    let planner = build_planner(planner_mode, args.get("plan-file").unwrap(), &cfg);
+    let plan_file = args.get("plan-file").unwrap();
+    let planner = build_planner(planner_mode, plan_file, &cfg);
     cfg.planner = planner;
+    // only on-line runs learn anything worth writing back: calibrated
+    // winners flow to the plan file on graceful shutdown (merge, never
+    // clobber — see Planner::persist_file)
+    if planner_mode == PlannerMode::Online && cfg.planner.is_some() {
+        cfg.plan_persist = Some(std::path::PathBuf::from(plan_file));
+    }
     let planner_view = cfg.planner.clone();
 
     let inputs = shaped_inputs(&model, n_requests, 42);
@@ -153,12 +162,16 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
         "pool tiles / steals".into(),
         format!("{} / {}", report.steal.tiles, report.steal.steals),
     ]);
+    // a starved slot is infinite imbalance — render it as `inf`, never
+    // as a number that could be confused with "balanced" or "no work"
+    let imb = metrics.worker_tile_imbalance();
     t.row(&[
         "worker tile share max/min".into(),
         format!(
-            "{} / {} (steal rate {})",
+            "{} / {} (imbalance {}, steal rate {})",
             report.steal.max_worker_tiles,
             report.steal.min_worker_tiles,
+            if imb.is_infinite() { "inf".into() } else { f(imb) },
             f(metrics.steal_rate())
         ),
     ]);
@@ -215,13 +228,18 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     server_cfg.packed_unroll = cfg.str_or("server.packed_unroll", "auto").parse()?;
     server_cfg.packed_tile_rows = usize::try_from(cfg.int_or("server.packed_tile_rows", 0))?;
     server_cfg.packed_tile_cols = usize::try_from(cfg.int_or("server.packed_tile_cols", 0))?;
+    server_cfg.packed_ksplit = usize::try_from(cfg.int_or("server.packed_ksplit", 0))?;
+    server_cfg.packed_rsr = cfg.bool_or("server.packed_rsr", false);
     let planner_mode: PlannerMode = cfg.str_or("server.planner", "off").parse()?;
-    let planner = build_planner(
-        planner_mode,
-        cfg.str_or("server.plan_file", "configs/plans.json"),
-        &server_cfg,
-    );
+    let plan_file = cfg.str_or("server.plan_file", "configs/plans.json");
+    let planner = build_planner(planner_mode, plan_file, &server_cfg);
     server_cfg.planner = planner;
+    // graceful shutdown writes on-line calibrated winners back to the
+    // plan file so the next run starts warm (satellite of the planner:
+    // merge-don't-clobber, atomic rename — Planner::persist_file)
+    if planner_mode == PlannerMode::Online && server_cfg.planner.is_some() {
+        server_cfg.plan_persist = Some(std::path::PathBuf::from(plan_file));
+    }
     let planner_view = server_cfg.planner.clone();
 
     let inputs = shaped_inputs(&model, n_requests, 42);
@@ -407,8 +425,13 @@ max_batch = 2
     #[test]
     fn launch_reads_planner_config() {
         // the planner threads end-to-end through the dotted config
-        // path; a missing plan file is fine (cost-model resolution)
+        // path; a missing plan file is fine (cost-model resolution).
+        // the plan file lives in a temp dir because online mode now
+        // persists calibrated plans back to it on shutdown.
+        let dir = std::env::temp_dir().join(format!("bitsmm-launch-plan-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
         for mode in ["static", "online"] {
+            let plan_file = dir.join(format!("{mode}.json"));
             let cfg = crate::config::Config::parse(&format!(
                 "name = \"plan\"
 [sa]
@@ -421,11 +444,46 @@ workers = 1
 max_batch = 4
 packed_threads = 2
 planner = \"{mode}\"
-plan_file = \"configs/plans-that-do-not-exist.json\"
-"
+plan_file = \"{}\"
+",
+                plan_file.display()
             ))
             .unwrap();
             launch_from_config(&cfg).unwrap_or_else(|e| panic!("{mode}: {e:#}"));
+            // static never writes; online persists calibrated winners
+            match mode {
+                "static" => assert!(!plan_file.exists(), "static mode must not persist"),
+                _ => assert!(plan_file.exists(), "online mode persists on shutdown"),
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn launch_reads_subpopcount_kernel_config() {
+        // the PR-6 knobs thread through dotted config paths: a forced
+        // RSR family and a forced k-split chunk count both serve
+        // correctly (results stay bit-identical by construction, so a
+        // clean run is the assertion)
+        for (rsr, ksplit) in [("true", 0), ("false", 2), ("true", 2)] {
+            let cfg = crate::config::Config::parse(&format!(
+                "name = \"subpop\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"packed\"
+requests = 4
+workers = 1
+max_batch = 4
+packed_threads = 2
+packed_rsr = {rsr}
+packed_ksplit = {ksplit}
+"
+            ))
+            .unwrap();
+            launch_from_config(&cfg)
+                .unwrap_or_else(|e| panic!("rsr={rsr} ksplit={ksplit}: {e:#}"));
         }
     }
 

@@ -117,11 +117,18 @@ impl Metrics {
         self.steal.steals as f64 / self.steal.tiles as f64
     }
 
-    /// Max/min per-worker tile share across pooled runs (1.0 = perfect
-    /// balance; 0.0 when no pooled run happened or a slot ran nothing).
+    /// Max/min per-worker tile share across pooled runs: 1.0 = perfect
+    /// balance, 0.0 when no pooled run happened, and `f64::INFINITY`
+    /// when some slot ran nothing while another ran tiles — a fully
+    /// starved worker is the *worst* imbalance and must never read as
+    /// the 0.0 that looks like "no pooled work" (the serve table
+    /// renders it as `inf`).
     pub fn worker_tile_imbalance(&self) -> f64 {
-        if self.steal.min_worker_tiles == 0 {
+        if self.steal.max_worker_tiles == 0 {
             return 0.0;
+        }
+        if self.steal.min_worker_tiles == 0 {
+            return f64::INFINITY;
         }
         self.steal.max_worker_tiles as f64 / self.steal.min_worker_tiles as f64
     }
@@ -199,6 +206,15 @@ mod tests {
         };
         assert!((m.steal_rate() - 0.25).abs() < 1e-12);
         assert!((m.worker_tile_imbalance() - 2.0).abs() < 1e-12);
+        // a fully starved worker is infinite imbalance, not the 0.0
+        // that means "no pooled work ran"
+        m.steal = StealStats {
+            tiles: 6,
+            steals: 0,
+            max_worker_tiles: 6,
+            min_worker_tiles: 0,
+        };
+        assert_eq!(m.worker_tile_imbalance(), f64::INFINITY);
     }
 
     #[test]

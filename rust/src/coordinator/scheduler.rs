@@ -31,7 +31,9 @@
 //! * [`Backend::Simulate`] — the cycle-accurate SA simulator itself;
 //!   slowest, but *measures* cycles instead of modelling them.
 
-use crate::bits::packed::{PackedPlanes, PackedPool, PopcountKernel, StealStats, TilePolicy};
+use crate::bits::packed::{
+    KernelFamily, PackedPlanes, PackedPool, PopcountKernel, StealStats, TilePolicy,
+};
 use crate::bits::plane::PlaneKind;
 use crate::coordinator::tiler::{tile_matmul, TilePlan};
 use crate::nn::layers::{MatmulExec, PackedWeight};
@@ -129,6 +131,9 @@ pub struct Scheduler {
     popcount: PopcountKernel,
     /// Tile granularity for the pooled packed kernel (auto by default).
     tile_policy: TilePolicy,
+    /// Plane-pair kernel family for the packed backend when no planner
+    /// decides per class (`server.packed_rsr` / `--packed-rsr`).
+    family: KernelFamily,
     /// Shape-keyed execution planner (`None` / `Off` = the static
     /// `popcount` + `tile_policy` config runs every matmul, the
     /// pre-planner behavior). Shared `Arc` across a server's workers
@@ -150,6 +155,7 @@ impl Scheduler {
             packed_pool: None,
             popcount: PopcountKernel::Auto,
             tile_policy: TilePolicy::AUTO,
+            family: KernelFamily::Popcount,
             planner: None,
             report: ExecutionReport::default(),
         }
@@ -170,6 +176,15 @@ impl Scheduler {
     /// (`server.packed_tile_rows` / `packed_tile_cols`; 0 = auto).
     pub fn set_tile_policy(&mut self, policy: TilePolicy) {
         self.tile_policy = policy;
+    }
+
+    /// Select the packed backend's plane-pair kernel family for the
+    /// static (planner-off) path — [`KernelFamily::Rsr`] routes every
+    /// packed matmul through the segment-reuse kernel
+    /// (`server.packed_rsr` / `--packed-rsr`; bit-identical, see
+    /// DESIGN.md §Sub-popcount-Kernels).
+    pub fn set_kernel_family(&mut self, family: KernelFamily) {
+        self.family = family;
     }
 
     /// Attach the shared execution planner: the packed backend then
@@ -316,11 +331,14 @@ impl Scheduler {
                         let (plan, tier, pre) = pl.plan_run(key, &run)?;
                         (plan, Some(tier), pre)
                     }
-                    None => (
-                        ExecPlan::static_default(self.popcount, self.tile_policy, pool_slots),
-                        None,
-                        None,
-                    ),
+                    None => {
+                        let mut plan =
+                            ExecPlan::static_default(self.popcount, self.tile_policy, pool_slots);
+                        if let KernelFamily::Rsr { seg_words } = self.family {
+                            plan = plan.rsr(seg_words);
+                        }
+                        (plan, None, None)
+                    }
                 };
                 match tier {
                     Some(PlanTier::Exact) => self.report.plan.hits += 1,
@@ -647,6 +665,29 @@ mod tests {
     }
 
     #[test]
+    fn static_rsr_family_stays_bit_identical() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (6, 70, 9, 2);
+        let mut rng = Pcg32::new(0x5151);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = nat.matmul(&a, &b, m, k, n, bits).unwrap();
+
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        s.set_kernel_family(KernelFamily::Rsr { seg_words: 0 });
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.packed_execs, 1);
+
+        let pool = std::sync::Arc::new(PackedPool::new(2).unwrap());
+        let mut p = Scheduler::new(sa, Backend::Packed);
+        p.set_packed_pool(pool);
+        p.set_kernel_family(KernelFamily::Rsr { seg_words: 1 });
+        assert_eq!(p.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(p.report.packed_execs, 1);
+    }
+
+    #[test]
     fn tile_policy_does_not_change_results_and_reports_merge() {
         let sa = SaConfig::new(4, 16, MacVariant::Booth);
         // skewed: one output row — the shape the 2-D scheduler exists for
@@ -661,8 +702,9 @@ mod tests {
         let mut merged = ExecutionReport::default();
         for policy in [
             TilePolicy::AUTO,
-            TilePolicy { tile_rows: 1, tile_cols: 1 },
-            TilePolicy { tile_rows: 0, tile_cols: 7 },
+            TilePolicy { tile_rows: 1, tile_cols: 1, ..TilePolicy::AUTO },
+            TilePolicy { tile_rows: 0, tile_cols: 7, ..TilePolicy::AUTO },
+            TilePolicy { k_chunks: 2, ..TilePolicy::AUTO },
         ] {
             let mut s = Scheduler::new(sa, Backend::Packed);
             s.set_packed_pool(pool.clone());

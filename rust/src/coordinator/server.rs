@@ -2,7 +2,7 @@
 //! scheduler and model — the end-to-end serving path of the `e2e`
 //! example (and the paper's future-work integration, §V).
 
-use crate::bits::packed::{PackedPool, PopcountKernel, TilePolicy};
+use crate::bits::packed::{KernelFamily, PackedPool, PopcountKernel, TilePolicy};
 use crate::bits::plane::PlaneKind;
 use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
@@ -104,11 +104,26 @@ pub struct ServerConfig {
     pub packed_tile_rows: usize,
     /// Output columns per pooled-kernel tile job (`0` = auto).
     pub packed_tile_cols: usize,
+    /// Contracted-dimension chunks per pooled tile job
+    /// (`server.packed_ksplit`, `--packed-ksplit`; `0` = auto: split
+    /// only when the output grid alone cannot feed the pool, `1` =
+    /// never split). Deterministic and bit-identical — see DESIGN.md
+    /// §Sub-popcount-Kernels.
+    pub packed_ksplit: usize,
+    /// Route static-path packed matmuls through the RSR segment-reuse
+    /// kernel family (`server.packed_rsr`, `--packed-rsr`) instead of
+    /// direct popcount. With a planner attached the family is chosen
+    /// per shape class and this knob is ignored.
+    pub packed_rsr: bool,
     /// Shape-keyed execution planner shared by every worker's
     /// scheduler (`server.planner = off|static|online`, `--planner`).
     /// `None` (or `Off`): the static knobs above run every matmul —
     /// the pre-planner behavior. See DESIGN.md §Planner.
     pub planner: Option<Arc<Planner>>,
+    /// Persist the planner's tuned plans to this file on graceful
+    /// shutdown (atomic rename, fingerprint-stamped, merged into any
+    /// same-host file already there). `None` = never persist.
+    pub plan_persist: Option<std::path::PathBuf>,
 }
 
 impl ServerConfig {
@@ -123,7 +138,10 @@ impl ServerConfig {
             packed_unroll: PopcountKernel::Auto,
             packed_tile_rows: 0,
             packed_tile_cols: 0,
+            packed_ksplit: 0,
+            packed_rsr: false,
             planner: None,
+            plan_persist: None,
         }
     }
 
@@ -132,6 +150,7 @@ impl ServerConfig {
         TilePolicy {
             tile_rows: self.packed_tile_rows,
             tile_cols: self.packed_tile_cols,
+            k_chunks: self.packed_ksplit,
         }
     }
 
@@ -171,6 +190,10 @@ impl ServerConfig {
 pub struct InferenceServer {
     batcher: Arc<Batcher<(Request, mpsc::Sender<Response>)>>,
     workers: Vec<std::thread::JoinHandle<(ExecutionReport, Metrics)>>,
+    /// Plan file the planner's tuned entries are persisted to on
+    /// graceful shutdown (`ServerConfig::plan_persist` + an active
+    /// planner).
+    persist: Option<(std::path::PathBuf, Arc<Planner>)>,
 }
 
 impl InferenceServer {
@@ -261,7 +284,11 @@ impl InferenceServer {
                     .spawn(move || worker_loop(&model, &cfg, &batcher, pool))?,
             );
         }
-        Ok(InferenceServer { batcher, workers })
+        let persist = match (&cfg.plan_persist, cfg.planner.as_ref().filter(|p| p.is_on())) {
+            (Some(path), Some(pl)) => Some((path.clone(), pl.clone())),
+            _ => None,
+        };
+        Ok(InferenceServer { batcher, workers, persist })
     }
 
     /// Submit a request; the response arrives on the returned channel.
@@ -296,6 +323,20 @@ impl InferenceServer {
         // paths cannot desynchronize
         metrics.steal = report.steal;
         metrics.plan = report.plan;
+        // graceful shutdown persists what this run learned: tuned
+        // plans merge into the configured plan file (atomic rename),
+        // so the next `--planner static` start serves them as exact
+        // hits. Persistence failing (foreign file, unwritable path)
+        // is logged, never fatal — metrics still come back.
+        if let Some((path, planner)) = &self.persist {
+            match planner.persist_file(path) {
+                Ok(n) => eprintln!("persisted {n} tuned plans to {}", path.display()),
+                Err(e) => eprintln!(
+                    "plan persistence to {} skipped: {e:#}",
+                    path.display()
+                ),
+            }
+        }
         (report, metrics)
     }
 }
@@ -309,6 +350,9 @@ fn worker_loop(
     let mut sched = Scheduler::new(cfg.sa, cfg.backend.clone());
     sched.set_popcount_kernel(cfg.packed_unroll);
     sched.set_tile_policy(cfg.tile_policy());
+    if cfg.packed_rsr {
+        sched.set_kernel_family(KernelFamily::Rsr { seg_words: 0 });
+    }
     if let Some(pool) = packed_pool {
         sched.set_packed_pool(pool);
     }
@@ -792,6 +836,49 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn packed_rsr_and_ksplit_knobs_do_not_change_results() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let ins = inputs(12, 64, 8);
+        let cfg_n = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let (want, _, _) = serve_all(model.clone(), cfg_n, ins.clone()).unwrap();
+        for (rsr, ksplit) in [(true, 0usize), (false, 2), (true, 2)] {
+            let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+            cfg.packed_threads = 3;
+            cfg.packed_rsr = rsr;
+            cfg.packed_ksplit = ksplit;
+            assert_eq!(cfg.tile_policy().k_chunks, ksplit);
+            let (got, report, _) = serve_all(model.clone(), cfg, ins.clone()).unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.output, b.output, "rsr={rsr} ksplit={ksplit} diverged");
+            }
+            assert!(report.packed_execs > 0);
+        }
+    }
+
+    #[test]
+    fn graceful_shutdown_persists_tuned_plans() {
+        use crate::plan::{Planner, PlannerMode};
+        let dir = std::env::temp_dir().join("bitsmm_server_persist");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+        cfg.packed_threads = 2;
+        cfg.planner = Some(Arc::new(Planner::new(PlannerMode::Online, 3)));
+        cfg.plan_persist = Some(path.clone());
+        let (_, _, metrics) = serve_all(model, cfg, inputs(4, 64, 8)).unwrap();
+        assert_eq!(metrics.errors, 0);
+
+        // shutdown wrote a same-host file holding the calibrated census
+        let q = Planner::new(PlannerMode::Static, 3);
+        let n = q.load_file(&path).unwrap();
+        assert!(n > 0, "warm-start calibrations were persisted");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

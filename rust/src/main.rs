@@ -134,6 +134,15 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             Some("0"),
         )
         .opt(
+            "packed-ksplit",
+            "k-split chunks per packed tile (0 = auto, 1 = never split)",
+            Some("0"),
+        )
+        .switch(
+            "packed-rsr",
+            "force the RSR segment kernel for statically-planned packed matmuls",
+        )
+        .opt(
             "planner",
             "shape-keyed execution planner: off|static|online",
             Some("off"),

@@ -13,6 +13,16 @@
 //! weight planes are not in the formula but always favour packed);
 //! at 16×16 native wins, at ≤4 bits packed wins outright.
 
+//!
+//! Two further regimes ride the same seeding path (DESIGN.md
+//! §Sub-popcount-Kernels): 1–2 bit classes whose operands are
+//! redundant enough for RSR segment reuse to undercut popcount, and
+//! huge-k classes (`k ≥ 4096`) whose output grids cannot feed the pool
+//! without splitting the contracted dimension. Both are *assumption*
+//! seeds — the online calibrator measures and overrides them, which is
+//! why [`RSR_DISTINCT_FRACTION_X16`] may be optimistic without ever
+//! serving a slow plan.
+
 use super::exec::{ExecPlan, Partition};
 use super::key::PlanKey;
 use crate::bits::packed::{PopcountKernel, TilePolicy, MIN_TILE_WORK};
@@ -37,6 +47,65 @@ pub fn prefers_packed(m: usize, k: usize, n: usize, ba: u32, bb: u32) -> bool {
     packed_word_ops(m, k, n, ba, bb) <= native_elem_ops(m, k, n)
 }
 
+/// Assumed distinct-fraction ρ of an RSR segment at 1–2 bits, in
+/// sixteenths: real quantized weight columns are drawn from small
+/// codebooks, so ~4 of every 16 column patterns per segment are
+/// distinct. Uniform random operands have ρ ≈ 1 and RSR loses — the
+/// calibrator measures the truth; this constant only decides which
+/// side the *seed* starts on.
+pub const RSR_DISTINCT_FRACTION_X16: u128 = 4;
+
+/// Cost of one RSR per-column indexed add relative to a word
+/// AND+popcount, in sixteenths.
+pub const RSR_ADD_COST_X16: u128 = 4;
+
+/// Word-op-equivalents the RSR engine spends on an `m×k×n` matmul:
+/// per plane pair and segment, `ρ·n` distinct popcounts plus `n`
+/// cheap indexed adds replace the direct kernel's `n` popcounts.
+pub fn rsr_word_ops(m: usize, k: usize, n: usize, ba: u32, bb: u32) -> u128 {
+    packed_word_ops(m, k, n, ba, bb) * (RSR_DISTINCT_FRACTION_X16 + RSR_ADD_COST_X16) / 16
+}
+
+/// Segment-table amortization floor: the table is built once per
+/// (plane, tile) and paid back over `m · bits_a` streamed row-plane
+/// passes; below this many passes the build dominates.
+pub const RSR_MIN_AMORTIZE: usize = 8;
+
+/// Whether the cost model seeds the RSR family for this class: the
+/// binary/ternary regime (both operands ≤ 2 bits — where segment
+/// patterns can actually collide), with enough streamed passes to
+/// amortize the table build.
+pub fn prefers_rsr(key: &PlanKey) -> bool {
+    let (m, _, _) = key.rep_shape();
+    key.bits_a <= 2
+        && key.bits_b <= 2
+        && m * key.bits_a as usize >= RSR_MIN_AMORTIZE
+}
+
+/// k-split threshold: classes whose contracted dimension reaches this
+/// size (`kb ≥ 12`) qualify for seeded k-splitting — below it the
+/// output grid almost always feeds the pool by itself.
+pub const KSPLIT_MIN_K: usize = 4096;
+
+/// Whether the cost model seeds a concrete k-split for this class: a
+/// pool to fan out over and a huge contracted dimension. The k-split
+/// merge costs `chunks` i64 adds per output cell — noise against the
+/// per-chunk word work above [`crate::bits::packed::MIN_KSPLIT_WORK`],
+/// so the model charges it nothing and lets calibration arbitrate
+/// between the split and unsplit candidates it offers.
+pub fn prefers_ksplit(key: &PlanKey, pool_slots: usize) -> bool {
+    let (_, k, _) = key.rep_shape();
+    pool_slots > 1 && k >= KSPLIT_MIN_K
+}
+
+/// Concrete chunk count seeded for a huge-k class: enough chunks to
+/// feed every slot, never more than the packed words available,
+/// floored at 2 so the split is visible in plan files and sweeps.
+pub fn seed_k_chunks(key: &PlanKey, pool_slots: usize) -> usize {
+    let (_, k, _) = key.rep_shape();
+    k.div_ceil(64).min(pool_slots.max(2)).max(2)
+}
+
 /// Seed an [`ExecPlan`] for a shape class from the cost model alone:
 /// backend by the word-ops crossover, the best runtime-detected
 /// popcount reducer, and the pool (work-stolen, auto tiles) whenever
@@ -49,11 +118,19 @@ pub fn seed_plan(key: &PlanKey, pool_slots: usize) -> ExecPlan {
         return ExecPlan::native();
     }
     let kernel = PopcountKernel::Auto.resolve();
-    if pool_slots > 1 && packed_word_ops(m, k, n, ba, bb) >= MIN_TILE_WORK as u128 {
-        ExecPlan::packed(kernel, pool_slots as u32, Partition::Stolen, TilePolicy::AUTO)
+    let rsr = prefers_rsr(key) && rsr_word_ops(m, k, n, ba, bb) < packed_word_ops(m, k, n, ba, bb);
+    let pooled = pool_slots > 1 && packed_word_ops(m, k, n, ba, bb) >= MIN_TILE_WORK as u128;
+    let plan = if pooled {
+        let tile = if !rsr && prefers_ksplit(key, pool_slots) {
+            TilePolicy { k_chunks: seed_k_chunks(key, pool_slots), ..TilePolicy::AUTO }
+        } else {
+            TilePolicy::AUTO
+        };
+        ExecPlan::packed(kernel, pool_slots as u32, Partition::Stolen, tile)
     } else {
         ExecPlan::packed(kernel, 1, Partition::Serial, TilePolicy::AUTO)
-    }
+    };
+    if rsr { plan.rsr(0) } else { plan }
 }
 
 #[cfg(test)]
@@ -95,5 +172,50 @@ mod tests {
         // no pool: never plans a pooled partition
         let p = seed_plan(&lo, 1);
         assert_eq!(p.partition, Partition::Serial);
+    }
+
+    #[test]
+    fn seed_plan_selects_rsr_in_the_low_precision_regime() {
+        use crate::bits::packed::KernelFamily;
+        for bits in [1u32, 2] {
+            let key = PlanKey::for_matmul(64, 512, 64, bits, bits, PlaneKind::Sbmwc);
+            assert!(prefers_rsr(&key));
+            let p = seed_plan(&key, 9);
+            assert_eq!(p.backend, PlanBackend::Packed);
+            assert!(
+                matches!(p.family, KernelFamily::Rsr { .. }),
+                "{bits}b seed must be RSR, got {}",
+                p.label()
+            );
+            assert_eq!(p.tile.k_chunks, 0, "RSR tiles never k-split");
+        }
+        // too few streamed passes to amortize the table build
+        let thin = PlanKey::for_matmul(2, 512, 64, 1, 1, PlaneKind::Sbmwc);
+        assert!(!prefers_rsr(&thin));
+        // mid precision stays popcount
+        let mid = PlanKey::for_matmul(64, 512, 64, 4, 4, PlaneKind::Sbmwc);
+        assert_eq!(seed_plan(&mid, 9).family, KernelFamily::Popcount);
+    }
+
+    #[test]
+    fn seed_plan_ksplits_huge_k_starved_grids() {
+        use crate::bits::packed::KernelFamily;
+        let hugek = PlanKey::for_matmul(1, 8192, 512, 8, 8, PlaneKind::Sbmwc);
+        assert!(prefers_ksplit(&hugek, 8));
+        let p = seed_plan(&hugek, 8);
+        assert_eq!(p.partition, Partition::Stolen);
+        assert_eq!(p.family, KernelFamily::Popcount);
+        assert!(
+            p.tile.k_chunks >= 2,
+            "huge-k starved grid must seed a visible split, got {}",
+            p.label()
+        );
+        assert!(p.tile.k_chunks <= 8192usize.div_ceil(64));
+
+        // small k never qualifies, nor does a poolless host
+        let smallk = PlanKey::for_matmul(1, 512, 512, 8, 8, PlaneKind::Sbmwc);
+        assert!(!prefers_ksplit(&smallk, 8));
+        assert!(!prefers_ksplit(&hugek, 1));
+        assert_eq!(seed_plan(&smallk, 8).tile.k_chunks, 0);
     }
 }

@@ -18,7 +18,8 @@
 use super::cost;
 use super::key::PlanKey;
 use crate::bits::packed::{
-    matmul_packed_tile_rowslice, matmul_packed_tile_stolen, matmul_packed_tile_with, PackedPlanes,
+    matmul_packed_rsr, matmul_packed_tile_rowslice, matmul_packed_tile_stolen,
+    matmul_packed_tile_stolen_with, matmul_packed_tile_with, KernelFamily, PackedPlanes,
     PackedPool, PopcountKernel, StealStats, TilePolicy,
 };
 use crate::bits::plane::PlaneKind;
@@ -103,8 +104,12 @@ pub struct ExecPlan {
     /// what actually dispatches).
     pub threads: u32,
     pub partition: Partition,
-    /// 2-D tile policy (stolen partition only).
+    /// Tile policy: 2-D output tiles plus the contracted-dimension
+    /// chunk count (stolen partition only).
     pub tile: TilePolicy,
+    /// Plane-pair kernel family: direct popcount or RSR segment reuse
+    /// (packed backend only).
+    pub family: KernelFamily,
 }
 
 impl ExecPlan {
@@ -115,6 +120,7 @@ impl ExecPlan {
             threads: 1,
             partition: Partition::Serial,
             tile: TilePolicy::AUTO,
+            family: KernelFamily::Popcount,
         }
     }
 
@@ -130,7 +136,15 @@ impl ExecPlan {
             threads: threads.max(1),
             partition,
             tile,
+            family: KernelFamily::Popcount,
         }
+    }
+
+    /// This plan with the RSR segment-kernel family (`seg_words = 0`
+    /// for auto segment length).
+    pub fn rsr(mut self, seg_words: u32) -> ExecPlan {
+        self.family = KernelFamily::Rsr { seg_words };
+        self
     }
 
     /// The plan the pre-planner scheduler always ran: packed, the
@@ -149,16 +163,28 @@ impl ExecPlan {
         }
     }
 
-    /// Human/plan-file label, e.g. `packed/avx2/t9/stolen/auto`.
+    /// Human/plan-file label, e.g. `packed/avx2/t9/stolen/auto`;
+    /// non-default k-chunk counts and the RSR family append suffixes
+    /// (`.../auto/k4`, `.../auto/rsr2`) so default labels are
+    /// unchanged across plan-file generations.
     pub fn label(&self) -> String {
         match self.backend {
             PlanBackend::Native => "native".to_string(),
             PlanBackend::Packed => {
-                let tile = if self.tile == TilePolicy::AUTO {
+                let mut tile = if self.tile.tile_rows == 0 && self.tile.tile_cols == 0 {
                     "auto".to_string()
                 } else {
                     format!("{}x{}", self.tile.tile_rows, self.tile.tile_cols)
                 };
+                if self.tile.k_chunks != 0 {
+                    tile.push_str(&format!("/k{}", self.tile.k_chunks));
+                }
+                if let KernelFamily::Rsr { seg_words } = self.family {
+                    tile.push_str("/rsr");
+                    if seg_words != 0 {
+                        tile.push_str(&seg_words.to_string());
+                    }
+                }
                 format!(
                     "packed/{}/t{}/{}/{tile}",
                     self.kernel.name(),
@@ -187,12 +213,30 @@ impl ExecPlan {
                 v.push(ExecPlan::packed(kern, t, Partition::Rowslice, TilePolicy::AUTO));
                 for tile in [
                     TilePolicy::AUTO,
-                    TilePolicy { tile_rows: 1, tile_cols: 0 },
-                    TilePolicy { tile_rows: 0, tile_cols: 1 },
+                    TilePolicy { tile_rows: 1, tile_cols: 0, ..TilePolicy::AUTO },
+                    TilePolicy { tile_rows: 0, tile_cols: 1, ..TilePolicy::AUTO },
                 ] {
                     v.push(ExecPlan::packed(kern, t, Partition::Stolen, tile));
                 }
             }
+        }
+        // the sub-popcount family and the k-split axis: serial RSR at
+        // two segment lengths, and — pooled — stolen RSR, an explicit
+        // no-split baseline, and a forced 2-chunk split. All enter the
+        // same bit-transparency sweep as the popcount plans.
+        let auto = PopcountKernel::Auto.resolve();
+        v.push(ExecPlan::packed(auto, 1, Partition::Serial, TilePolicy::AUTO).rsr(1));
+        v.push(ExecPlan::packed(auto, 1, Partition::Serial, TilePolicy::AUTO).rsr(2));
+        if pool_slots > 1 {
+            let t = pool_slots as u32;
+            v.push(ExecPlan::packed(auto, t, Partition::Stolen, TilePolicy::AUTO).rsr(0));
+            v.push(ExecPlan::packed(auto, t, Partition::Stolen, TilePolicy::NO_KSPLIT));
+            v.push(ExecPlan::packed(
+                auto,
+                t,
+                Partition::Stolen,
+                TilePolicy { tile_rows: 0, tile_cols: 0, k_chunks: 2 },
+            ));
         }
         v
     }
@@ -209,9 +253,28 @@ impl ExecPlan {
             ExecPlan::native(),
             ExecPlan::packed(auto, 1, Partition::Serial, TilePolicy::AUTO),
         ];
+        let low_prec = key.bits_a <= 2 && key.bits_b <= 2;
+        if low_prec {
+            v.push(ExecPlan::packed(auto, 1, Partition::Serial, TilePolicy::AUTO).rsr(0));
+        }
         if pool_slots > 1 {
             let t = pool_slots as u32;
-            v.push(ExecPlan::packed(auto, t, Partition::Stolen, TilePolicy::AUTO));
+            // huge-k classes calibrate the stolen candidate with the
+            // cost model's concrete chunk count, so a winning k-split
+            // plan is visible (and persistable) as one
+            let stolen_tile = if cost::prefers_ksplit(key, pool_slots) {
+                TilePolicy {
+                    tile_rows: 0,
+                    tile_cols: 0,
+                    k_chunks: cost::seed_k_chunks(key, pool_slots),
+                }
+            } else {
+                TilePolicy::AUTO
+            };
+            v.push(ExecPlan::packed(auto, t, Partition::Stolen, stolen_tile));
+            if low_prec {
+                v.push(ExecPlan::packed(auto, t, Partition::Stolen, TilePolicy::AUTO).rsr(0));
+            }
             v.push(ExecPlan::packed(auto, t, Partition::Rowslice, TilePolicy::AUTO));
         }
         let mut out: Vec<ExecPlan> = Vec::with_capacity(v.len());
@@ -282,23 +345,42 @@ impl ShapeRun<'_> {
                     }
                     None => Arc::new(PackedPlanes::pack_cols(self.b, k, n, bits, self.stream_kind)?),
                 };
-                match (plan.partition, self.pool) {
-                    (Partition::Serial, _) | (_, None) => Ok((
-                        matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, plan.kernel)?,
-                        StealStats::default(),
-                        true,
-                    )),
-                    (Partition::Rowslice, Some(pool)) => Ok((
-                        matmul_packed_tile_rowslice(pool, &pa, &pb, 0, m, 0, n, plan.kernel)?,
-                        StealStats::default(),
-                        true,
-                    )),
-                    (Partition::Stolen, Some(pool)) => {
-                        let (out, stats) = matmul_packed_tile_stolen(
-                            pool, &pa, &pb, 0, m, 0, n, plan.kernel, plan.tile,
-                        )?;
-                        Ok((out, stats, true))
-                    }
+                match plan.family {
+                    KernelFamily::Rsr { seg_words } => match (plan.partition, self.pool) {
+                        (Partition::Stolen, Some(pool)) => {
+                            let (out, stats) = matmul_packed_tile_stolen_with(
+                                pool, &pa, &pb, 0, m, 0, n, plan.kernel, plan.tile, plan.family,
+                            )?;
+                            Ok((out, stats, true))
+                        }
+                        // serial (or pool-less degrade): one segment
+                        // table spanning the whole output
+                        _ => Ok((
+                            matmul_packed_rsr(
+                                &pa, &pb, 0, m, 0, n, plan.kernel, seg_words as usize,
+                            )?,
+                            StealStats::default(),
+                            true,
+                        )),
+                    },
+                    KernelFamily::Popcount => match (plan.partition, self.pool) {
+                        (Partition::Serial, _) | (_, None) => Ok((
+                            matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, plan.kernel)?,
+                            StealStats::default(),
+                            true,
+                        )),
+                        (Partition::Rowslice, Some(pool)) => Ok((
+                            matmul_packed_tile_rowslice(pool, &pa, &pb, 0, m, 0, n, plan.kernel)?,
+                            StealStats::default(),
+                            true,
+                        )),
+                        (Partition::Stolen, Some(pool)) => {
+                            let (out, stats) = matmul_packed_tile_stolen(
+                                pool, &pa, &pb, 0, m, 0, n, plan.kernel, plan.tile,
+                            )?;
+                            Ok((out, stats, true))
+                        }
+                    },
                 }
             }
         }
@@ -326,6 +408,16 @@ mod tests {
         assert!(pooled.iter().any(|p| p.partition == Partition::Rowslice));
         assert!(pooled.iter().any(|p| p.partition == Partition::Stolen
             && p.tile != TilePolicy::AUTO));
+        // the PR 6 axes: RSR family serial and stolen, a forced k-split
+        // and an explicit no-split stolen baseline
+        assert!(pooled.iter().any(
+            |p| matches!(p.family, KernelFamily::Rsr { .. }) && p.partition == Partition::Serial
+        ));
+        assert!(pooled.iter().any(
+            |p| matches!(p.family, KernelFamily::Rsr { .. }) && p.partition == Partition::Stolen
+        ));
+        assert!(pooled.iter().any(|p| p.tile.k_chunks >= 2));
+        assert!(pooled.iter().any(|p| p.tile == TilePolicy::NO_KSPLIT));
         // no duplicates
         for (i, p) in pooled.iter().enumerate() {
             assert!(!pooled[i + 1..].contains(p), "duplicate candidate {p:?}");
@@ -334,6 +426,29 @@ mod tests {
         let serial = ExecPlan::candidates(1);
         assert!(serial.iter().all(|p| p.partition == Partition::Serial));
         assert!(serial.len() >= 2, "native + at least the scalar reducer");
+    }
+
+    #[test]
+    fn top_candidates_cover_the_new_regimes() {
+        // 1–2 bit classes offer RSR…
+        let low = crate::plan::PlanKey::for_matmul(64, 512, 64, 1, 1, PlaneKind::Sbmwc);
+        let top = ExecPlan::top_candidates(&low, 5, 6);
+        assert!(
+            top.iter().any(|p| matches!(p.family, KernelFamily::Rsr { .. })),
+            "no RSR candidate for a 1-bit class: {top:?}"
+        );
+        // …huge-k classes offer a concrete k-split…
+        let hugek = crate::plan::PlanKey::for_matmul(1, 8192, 512, 8, 8, PlaneKind::Sbmwc);
+        let top = ExecPlan::top_candidates(&hugek, 5, 6);
+        assert!(
+            top.iter().any(|p| p.partition == Partition::Stolen && p.tile.k_chunks >= 2),
+            "no k-split candidate for a huge-k class: {top:?}"
+        );
+        // …and mid shapes at high precision offer neither
+        let mid = crate::plan::PlanKey::for_matmul(64, 512, 64, 8, 8, PlaneKind::Sbmwc);
+        let top = ExecPlan::top_candidates(&mid, 5, 6);
+        assert!(top.iter().all(|p| p.family == KernelFamily::Popcount));
+        assert!(top.iter().all(|p| p.tile.k_chunks == 0));
     }
 
     #[test]
@@ -437,9 +552,20 @@ mod tests {
             PopcountKernel::Scalar,
             9,
             Partition::Stolen,
-            TilePolicy { tile_rows: 2, tile_cols: 8 },
+            TilePolicy { tile_rows: 2, tile_cols: 8, ..TilePolicy::AUTO },
         );
         assert_eq!(p.label(), "packed/scalar/t9/stolen/2x8");
+        // the PR 6 axes only append when non-default
+        let ks = ExecPlan::packed(
+            PopcountKernel::Scalar,
+            9,
+            Partition::Stolen,
+            TilePolicy { tile_rows: 0, tile_cols: 0, k_chunks: 4 },
+        );
+        assert_eq!(ks.label(), "packed/scalar/t9/stolen/auto/k4");
+        let rsr = ExecPlan::packed(PopcountKernel::Scalar, 1, Partition::Serial, TilePolicy::AUTO);
+        assert_eq!(rsr.rsr(0).label(), "packed/scalar/t1/serial/auto/rsr");
+        assert_eq!(rsr.rsr(2).label(), "packed/scalar/t1/serial/auto/rsr2");
         assert_eq!("native".parse::<PlanBackend>().unwrap(), PlanBackend::Native);
         assert_eq!("stolen".parse::<Partition>().unwrap(), Partition::Stolen);
         assert!("gpu".parse::<PlanBackend>().is_err());

@@ -45,4 +45,4 @@ pub use exec::{ExecPlan, Partition, PlanBackend, RunOut, ShapeRun};
 pub use key::PlanKey;
 pub use planner::{PlanStats, PlanTier, Planner, PlannerMode};
 pub use store::{host_fingerprint, PlanFile};
-pub use tune::{calibrate_shape, run_tune, TuneOpts};
+pub use tune::{calibrate_shape, codebook_cols, run_tune, TuneOpts};

@@ -127,8 +127,10 @@ impl PlanStats {
 const NEAREST_MAX_DISTANCE: u32 = 4;
 
 /// Candidate plans an on-line calibration times (kept small: it runs
-/// on the request path, once per shape class).
-const CALIBRATION_CANDIDATES: usize = 5;
+/// on the request path, once per shape class). Six covers the PR 6
+/// axes: the regime-ranked head always includes the RSR candidate at
+/// 1–2 bits and the forced k-split candidate at huge k.
+const CALIBRATION_CANDIDATES: usize = 6;
 
 /// One cached resolution. `donor` marks *tuned* entries — calibrated,
 /// loaded from a plan file, or deliberately [`Planner::insert`]ed —
@@ -385,6 +387,41 @@ impl Planner {
         PlanFile::new(entries).save(path)?;
         Ok(n)
     }
+
+    /// Persist the *tuned* plans back to `path` on graceful server
+    /// shutdown. Only donor entries qualify — calibrated winners,
+    /// file-loaded plans, deliberate inserts — never cost-model seeds
+    /// or nearest-tier copies, which are better re-derived. Merge,
+    /// don't clobber: an existing same-host file's entries are kept
+    /// and overlaid by this run's donors, so serving sessions
+    /// accumulate coverage instead of erasing each other; a foreign or
+    /// stale-version file errs and is left untouched (the caller logs
+    /// and moves on). The write is atomic — temp file in the same
+    /// directory, then `rename` — so a crash mid-write can never
+    /// truncate the live plan file. Returns the entry count written.
+    pub fn persist_file(&self, path: &std::path::Path) -> Result<usize> {
+        let mut merged: HashMap<PlanKey, ExecPlan> = HashMap::new();
+        if path.exists() {
+            let existing = PlanFile::load(path)?;
+            existing.check_host()?;
+            merged.extend(existing.entries);
+        }
+        {
+            let cache = self.cache.lock().expect("plan cache poisoned");
+            for (k, c) in cache.iter() {
+                if c.donor {
+                    merged.insert(*k, c.plan);
+                }
+            }
+        }
+        let mut entries: Vec<(PlanKey, ExecPlan)> = merged.into_iter().collect();
+        entries.sort_by_key(|(k, _)| k.sort_key());
+        let n = entries.len();
+        let tmp = path.with_extension("json.tmp");
+        PlanFile::new(entries).save(&tmp)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(n)
+    }
 }
 
 #[cfg(test)]
@@ -587,7 +624,7 @@ mod tests {
             PopcountKernel::Unroll4,
             9,
             Partition::Rowslice,
-            TilePolicy { tile_rows: 2, tile_cols: 4 },
+            TilePolicy { tile_rows: 2, tile_cols: 4, ..TilePolicy::AUTO },
         );
         p.insert(keys[0], forced);
         let dir = std::env::temp_dir().join("bitsmm_planner_roundtrip");
@@ -603,6 +640,72 @@ mod tests {
         // loaded entries resolve as exact hits
         let (_, tier) = q.resolve(keys[1]);
         assert_eq!(tier, PlanTier::Exact);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn persist_merges_donors_without_clobbering() {
+        let dir = std::env::temp_dir().join("bitsmm_planner_persist");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let _ = std::fs::remove_file(&path);
+
+        // session 1: one tuned plan, one cost-model resolution
+        let p = Planner::new(PlannerMode::Static, 9);
+        let tuned1 = ExecPlan::packed(
+            PopcountKernel::Unroll8,
+            9,
+            Partition::Stolen,
+            TilePolicy::AUTO,
+        );
+        p.insert(key(1, 512, 4096, 8), tuned1);
+        p.resolve(key(64, 512, 64, 4)); // non-donor: must not persist
+        assert_eq!(p.persist_file(&path).unwrap(), 1, "donors only");
+
+        // session 2: a different tuned class merges in; session 1's
+        // entry survives, and the shared key is overlaid by the newer
+        // donor rather than duplicated
+        let q = Planner::new(PlannerMode::Static, 9);
+        let tuned2 = ExecPlan::packed(
+            PopcountKernel::Unroll4,
+            9,
+            Partition::Stolen,
+            TilePolicy { k_chunks: 4, ..TilePolicy::AUTO },
+        );
+        q.insert(key(8, 64, 64, 4), tuned2);
+        q.insert(key(1, 512, 4096, 8), tuned2); // overlays session 1
+        assert_eq!(q.persist_file(&path).unwrap(), 2);
+
+        let r = Planner::new(PlannerMode::Static, 9);
+        assert_eq!(r.load_file(&path).unwrap(), 2);
+        assert_eq!(r.peek(&key(8, 64, 64, 4)), Some(tuned2));
+        assert_eq!(r.peek(&key(1, 512, 4096, 8)), Some(tuned2), "newer donor wins");
+        assert!(
+            !path.with_extension("json.tmp").exists(),
+            "temp file renamed away"
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn persist_refuses_to_touch_a_foreign_file() {
+        let dir = std::env::temp_dir().join("bitsmm_planner_persist_foreign");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plans.json");
+        let foreign = PlanFile::new(vec![])
+            .render()
+            .replace(&crate::plan::host_fingerprint(), "other-box/neon/c2");
+        std::fs::write(&path, &foreign).unwrap();
+
+        let p = Planner::new(PlannerMode::Static, 4);
+        p.insert(key(8, 64, 64, 4), ExecPlan::native());
+        let err = p.persist_file(&path).unwrap_err().to_string();
+        assert!(err.contains("foreign"), "{err}");
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            foreign,
+            "foreign file left byte-identical"
+        );
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -15,7 +15,7 @@
 
 use super::exec::{ExecPlan, Partition, PlanBackend};
 use super::key::PlanKey;
-use crate::bits::packed::{PopcountKernel, TilePolicy};
+use crate::bits::packed::{KernelFamily, PopcountKernel, TilePolicy};
 use crate::bits::plane::PlaneKind;
 use crate::Result;
 
@@ -83,10 +83,14 @@ impl PlanFile {
             .entries
             .iter()
             .map(|(k, p)| {
+                let seg_words = match p.family {
+                    KernelFamily::Rsr { seg_words } => seg_words,
+                    KernelFamily::Popcount => 0,
+                };
                 format!(
                     "    {{\"mb\":{},\"kb\":{},\"nb\":{},\"ba\":{},\"bb\":{},\"kind\":\"{}\",\
 \"backend\":\"{}\",\"kernel\":\"{}\",\"threads\":{},\"partition\":\"{}\",\
-\"tile_rows\":{},\"tile_cols\":{}}}",
+\"tile_rows\":{},\"tile_cols\":{},\"k_chunks\":{},\"family\":\"{}\",\"seg_words\":{}}}",
                     k.mb,
                     k.kb,
                     k.nb,
@@ -98,7 +102,10 @@ impl PlanFile {
                     p.threads,
                     p.partition.name(),
                     p.tile.tile_rows,
-                    p.tile.tile_cols
+                    p.tile.tile_cols,
+                    p.tile.k_chunks,
+                    p.family.name(),
+                    seg_words
                 )
             })
             .collect();
@@ -151,6 +158,14 @@ fn parse_kind(s: &str) -> Result<PlaneKind> {
 
 fn parse_entry(e: &Json) -> Result<(PlanKey, ExecPlan)> {
     let int = |name: &str| -> Result<i64> { e.field(name)?.as_int() };
+    // Fields PR 6 added are optional with pre-PR-6 defaults, so plan
+    // files written by older builds (same format version) still load.
+    let int_or = |name: &str, default: i64| -> Result<i64> {
+        match e.field(name) {
+            Ok(v) => v.as_int(),
+            Err(_) => Ok(default),
+        }
+    };
     let key = PlanKey {
         mb: u8::try_from(int("mb")?)?,
         kb: u8::try_from(int("kb")?)?,
@@ -166,10 +181,22 @@ fn parse_entry(e: &Json) -> Result<(PlanKey, ExecPlan)> {
     let tile = TilePolicy {
         tile_rows: usize::try_from(int("tile_rows")?)?,
         tile_cols: usize::try_from(int("tile_cols")?)?,
+        k_chunks: usize::try_from(int_or("k_chunks", 0)?)?,
+    };
+    let family = match e.field("family") {
+        Ok(v) => v.as_str()?,
+        Err(_) => "popcount",
     };
     let plan = match backend {
         PlanBackend::Native => ExecPlan::native(),
-        PlanBackend::Packed => ExecPlan::packed(kernel, threads, partition, tile),
+        PlanBackend::Packed => {
+            let p = ExecPlan::packed(kernel, threads, partition, tile);
+            match family {
+                "popcount" => p,
+                "rsr" => p.rsr(u32::try_from(int_or("seg_words", 0)?)?),
+                other => anyhow::bail!("unknown kernel family '{other}' (popcount|rsr)"),
+            }
+        }
     };
     Ok((key, plan))
 }
@@ -401,7 +428,7 @@ mod tests {
                     PopcountKernel::Unroll8,
                     9,
                     Partition::Stolen,
-                    TilePolicy { tile_rows: 1, tile_cols: 0 },
+                    TilePolicy { tile_rows: 1, tile_cols: 0, ..TilePolicy::AUTO },
                 ),
             ),
             (
@@ -411,6 +438,20 @@ mod tests {
             (
                 PlanKey::for_matmul(8, 64, 64, 4, 4, PlaneKind::Sbmwc),
                 ExecPlan::packed(PopcountKernel::Scalar, 1, Partition::Serial, TilePolicy::AUTO),
+            ),
+            (
+                PlanKey::for_matmul(64, 512, 64, 1, 1, PlaneKind::Sbmwc),
+                ExecPlan::packed(PopcountKernel::Scalar, 1, Partition::Serial, TilePolicy::AUTO)
+                    .rsr(2),
+            ),
+            (
+                PlanKey::for_matmul(1, 8192, 512, 8, 8, PlaneKind::Booth),
+                ExecPlan::packed(
+                    PopcountKernel::Unroll8,
+                    8,
+                    Partition::Stolen,
+                    TilePolicy { k_chunks: 4, ..TilePolicy::AUTO },
+                ),
             ),
         ]
     }
@@ -466,6 +507,54 @@ mod tests {
             .render()
             .replace("\"kernel\":\"scalar\"", "\"kernel\":\"simd9000\"");
         assert!(PlanFile::parse(&bad).is_err());
+        // bad family name inside an entry
+        let bad = PlanFile::new(sample_entries())
+            .render()
+            .replace("\"family\":\"rsr\"", "\"family\":\"oracle\"");
+        assert!(PlanFile::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn pre_pr6_entries_parse_with_default_family_and_ksplit() {
+        // An entry written before family/seg_words/k_chunks existed
+        // (same format version) loads as popcount with no k-split.
+        let old = format!(
+            "{{\n  \"version\": 1,\n  \"fingerprint\": \"{}\",\n  \"plans\": [\n    \
+{{\"mb\":0,\"kb\":9,\"nb\":12,\"ba\":8,\"bb\":8,\"kind\":\"sbmwc\",\"backend\":\"packed\",\
+\"kernel\":\"scalar\",\"threads\":9,\"partition\":\"stolen\",\"tile_rows\":1,\"tile_cols\":0}}\n  ]\n}}\n",
+            host_fingerprint()
+        );
+        let f = PlanFile::parse(&old).unwrap();
+        assert!(f.check_host().is_ok());
+        let (_, p) = &f.entries[0];
+        assert_eq!(p.family, KernelFamily::Popcount);
+        assert_eq!(p.tile.k_chunks, 0);
+        assert_eq!(p.tile.tile_rows, 1);
+    }
+
+    #[test]
+    fn rsr_and_ksplit_fields_roundtrip() {
+        let f = PlanFile::new(sample_entries());
+        let text = f.render();
+        assert!(text.contains("\"family\":\"rsr\""), "{text}");
+        assert!(text.contains("\"seg_words\":2"), "{text}");
+        assert!(text.contains("\"k_chunks\":4"), "{text}");
+        let g = PlanFile::parse(&text).unwrap();
+        let rsr = g
+            .entries
+            .iter()
+            .find(|(k, _)| k.bits_a == 1)
+            .map(|(_, p)| p)
+            .unwrap();
+        assert_eq!(rsr.family, KernelFamily::Rsr { seg_words: 2 });
+        let split = g
+            .entries
+            .iter()
+            .find(|(_, p)| p.tile.k_chunks != 0)
+            .map(|(_, p)| p)
+            .unwrap();
+        assert_eq!(split.tile.k_chunks, 4);
+        assert_eq!(split.family, KernelFamily::Popcount);
     }
 
     #[test]

@@ -76,7 +76,16 @@ pub fn calibrate_shape(
     let hi = crate::bits::twos::max_value(bits);
     let mut rng = Pcg32::new(seed ^ ((m as u64) << 40) ^ ((k as u64) << 20) ^ n as u64 ^ bits as u64);
     let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
-    let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+    // 1–2 bit stationary operands calibrate on codebook-redundant
+    // columns — the repetition profile of real quantized weights that
+    // the RSR family exploits. Uniform random columns are the RSR
+    // worst case and would veto in calibration a kernel that wins in
+    // production (DESIGN.md §Sub-popcount-Kernels).
+    let b: Vec<i32> = if bits <= 2 {
+        codebook_cols(&mut rng, k, n, lo, hi, 16)
+    } else {
+        (0..k * n).map(|_| rng.range_i32(lo, hi)).collect()
+    };
     let pb = Arc::new(PackedPlanes::pack_cols(&b, k, n, bits, kind)?);
     let run = ShapeRun {
         a: &a,
@@ -91,6 +100,31 @@ pub fn calibrate_shape(
     };
     let (plan, _out) = planner.calibrate(key, &run)?;
     Ok(plan)
+}
+
+/// A row-major `k × n` stationary operand whose columns are drawn
+/// from a codebook of at most `distinct` column patterns — the
+/// redundancy real low-precision quantized weights exhibit.
+pub fn codebook_cols(
+    rng: &mut Pcg32,
+    k: usize,
+    n: usize,
+    lo: i32,
+    hi: i32,
+    distinct: usize,
+) -> Vec<i32> {
+    let distinct = distinct.max(1);
+    let book: Vec<Vec<i32>> = (0..distinct)
+        .map(|_| (0..k).map(|_| rng.range_i32(lo, hi)).collect())
+        .collect();
+    let mut b = vec![0i32; k * n];
+    for j in 0..n {
+        let col = &book[rng.range_i32(0, distinct as i32 - 1) as usize];
+        for (r, &v) in col.iter().enumerate() {
+            b[r * n + j] = v;
+        }
+    }
+    b
 }
 
 /// The matmul shape census of the named zoo models: solo and fused
@@ -131,6 +165,27 @@ pub fn skewed_shape_census(smoke: bool) -> Vec<(usize, usize, usize, u32)> {
         for bits in [3u32, 8] {
             shapes.push((m, k, n, bits));
         }
+    }
+    // PR 6 regimes (perf_hotpath §5d/§5e): 1–2 bit classes where the
+    // RSR family competes, and huge-k classes where the deterministic
+    // k-split fans out across the pool.
+    let low: &[(usize, usize, usize)] = if smoke {
+        &[(64, 512, 64)]
+    } else {
+        &[(256, 256, 256), (64, 4096, 64)]
+    };
+    for &(m, k, n) in low {
+        for bits in [1u32, 2] {
+            shapes.push((m, k, n, bits));
+        }
+    }
+    let hugek: &[(usize, usize, usize)] = if smoke {
+        &[(1, 16384, 64)]
+    } else {
+        &[(1, 8192, 512), (16, 16384, 64)]
+    };
+    for &(m, k, n) in hugek {
+        shapes.push((m, k, n, 8));
     }
     shapes
 }
@@ -213,7 +268,31 @@ mod tests {
     fn skewed_census_straddles_the_crossover() {
         let s = skewed_shape_census(true);
         assert!(s.contains(&(1, 128, 512, 8)) && s.contains(&(1, 128, 512, 3)));
-        assert_eq!(s.len(), 8);
+        // PR 6: the RSR regime at 1–2 bits and one huge-k class ride
+        // the smoke census, so `tune --smoke` calibrates (and the CI
+        // grep can find) both new plan axes
+        assert!(s.contains(&(64, 512, 64, 1)) && s.contains(&(64, 512, 64, 2)));
+        assert!(s.contains(&(1, 16384, 64, 8)));
+        assert_eq!(s.len(), 11);
+        let f = skewed_shape_census(false);
+        assert!(f.contains(&(256, 256, 256, 1)) && f.contains(&(64, 4096, 64, 2)));
+        assert!(f.contains(&(1, 8192, 512, 8)) && f.contains(&(16, 16384, 64, 8)));
+        assert_eq!(f.len(), 14);
+    }
+
+    #[test]
+    fn codebook_cols_bound_distinct_columns() {
+        let mut rng = Pcg32::new(0xc0de);
+        let (k, n) = (64usize, 48usize);
+        let b = codebook_cols(&mut rng, k, n, -1, 1, 4);
+        assert_eq!(b.len(), k * n);
+        assert!(b.iter().all(|&v| (-1..=1).contains(&v)));
+        let mut cols: Vec<Vec<i32>> = (0..n)
+            .map(|j| (0..k).map(|r| b[r * n + j]).collect())
+            .collect();
+        cols.sort();
+        cols.dedup();
+        assert!(cols.len() <= 4, "{} distinct columns from a 4-codebook", cols.len());
     }
 
     #[test]

@@ -6,9 +6,9 @@
 
 use bitsmm::bits::booth::booth_digits;
 use bitsmm::bits::packed::{
-    matmul_packed_planes, matmul_packed_tile_pooled, matmul_packed_tile_rowslice,
-    matmul_packed_tile_stolen, matmul_packed_tile_with, PackedPlanes, PackedPool, PopcountKernel,
-    TilePolicy,
+    matmul_packed_planes, matmul_packed_rsr, matmul_packed_tile_pooled,
+    matmul_packed_tile_rowslice, matmul_packed_tile_stolen, matmul_packed_tile_stolen_with,
+    matmul_packed_tile_with, KernelFamily, PackedPlanes, PackedPool, PopcountKernel, TilePolicy,
 };
 use bitsmm::bits::plane::{decompose, PlaneKind};
 use bitsmm::bits::twos::{max_value, min_value, Bits};
@@ -179,9 +179,9 @@ fn stolen_2d_tiles_equal_serial_and_native_all_widths() {
                 assert_eq!(rowslice, want, "{kind:?} rowslice bits={bits} {m}x{k}x{n}");
                 for policy in [
                     TilePolicy::AUTO,
-                    TilePolicy { tile_rows: 1, tile_cols: 1 },
-                    TilePolicy { tile_rows: 0, tile_cols: 2 },
-                    TilePolicy { tile_rows: 3, tile_cols: 0 },
+                    TilePolicy { tile_rows: 1, tile_cols: 1, ..TilePolicy::AUTO },
+                    TilePolicy { tile_rows: 0, tile_cols: 2, ..TilePolicy::AUTO },
+                    TilePolicy { tile_rows: 3, tile_cols: 0, ..TilePolicy::AUTO },
                 ] {
                     let (stolen, stats) = matmul_packed_tile_stolen(
                         &pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy,
@@ -230,7 +230,7 @@ fn stolen_tiling_sign_plane_and_tail_word_edges() {
                     0,
                     n,
                     PopcountKernel::Auto,
-                    TilePolicy { tile_rows: 1, tile_cols: 2 },
+                    TilePolicy { tile_rows: 1, tile_cols: 2, ..TilePolicy::AUTO },
                 )
                 .unwrap();
                 assert_eq!(stolen, want, "{kind:?} bits={bits} k={k}");
@@ -267,7 +267,7 @@ fn prop_stolen_tiling_bit_identical_for_any_policy() {
         );
         let serial =
             matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar).unwrap();
-        let policy = TilePolicy { tile_rows: tr as usize, tile_cols: tc as usize };
+        let policy = TilePolicy { tile_rows: tr as usize, tile_cols: tc as usize, ..TilePolicy::AUTO };
         let (stolen, stats) =
             matmul_packed_tile_stolen(&pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy)
                 .unwrap();
@@ -275,6 +275,174 @@ fn prop_stolen_tiling_bit_identical_for_any_policy() {
             && stolen == serial
             && stats.max_worker_tiles >= stats.min_worker_tiles
     });
+}
+
+/// The RSR segment kernel (PR 6) is bit-identical to the serial packed
+/// oracle and the native reference for **every** width 1..=16, both
+/// plane kinds, skewed shapes with tail-word k, and every seg_words
+/// choice (auto, single-word, multi-word, longer than the operand) —
+/// on both uniform-random operands (RSR's worst case, where segment
+/// dedup finds almost nothing to share) and codebook-redundant columns
+/// (its target regime). Segment reuse is a pure re-association of the
+/// same exact i64 dot, so speed may change but integers never do.
+#[test]
+fn rsr_segment_kernel_equals_serial_and_native_all_widths() {
+    let mut rng = Pcg32::new(0x5e6_2024);
+    for bits in 1..=16u32 {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        // tall-thin, small 2-D, and word-boundary-straddling k
+        for (m, k, n) in [(1usize, 65usize, 23usize), (6, 70, 9), (3, 129, 17)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+            // codebook-redundant stationary operand: 4 distinct columns
+            // repeated — the regime segment dedup exists for
+            let book: Vec<Vec<i32>> =
+                (0..4).map(|_| (0..k).map(|_| rng.range_i32(lo, hi)).collect()).collect();
+            let mut b = vec![0i32; k * n];
+            for j in 0..n {
+                for (r, &v) in book[j % 4].iter().enumerate() {
+                    b[r * n + j] = v;
+                }
+            }
+            let want = ref_matmul_i64(&a, &b, m, k, n);
+            assert_eq!(matmul_native(&a, &b, m, k, n, bits).unwrap(), want);
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let pa = PackedPlanes::pack_rows(&a, m, k, bits, kind).unwrap();
+                let pb = PackedPlanes::pack_cols(&b, k, n, bits, kind).unwrap();
+                let serial =
+                    matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar)
+                        .unwrap();
+                assert_eq!(serial, want, "{kind:?} serial oracle bits={bits}");
+                for seg_words in [0usize, 1, 2, 3, 64] {
+                    let got = matmul_packed_rsr(
+                        &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, seg_words,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        got, want,
+                        "{kind:?} rsr seg_words={seg_words} bits={bits} {m}x{k}x{n}"
+                    );
+                }
+            }
+        }
+    }
+    // sign-plane saturation: operands pinned at the width's min/max
+    // make the SBMwC sign plane all-ones; segment dedup then collapses
+    // every column to one pattern — the maximal-sharing edge
+    for bits in 1..=16u32 {
+        let (m, n) = (2usize, 5usize);
+        for k in [1usize, 63, 64, 65, 129] {
+            for fill in [min_value(bits), max_value(bits)] {
+                let a = vec![fill; m * k];
+                let mut b = vec![fill; k * n];
+                b[k / 2 * n] = 0; // non-uniform product
+                let want = ref_matmul_i64(&a, &b, m, k, n);
+                for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                    let pa = PackedPlanes::pack_rows(&a, m, k, bits, kind).unwrap();
+                    let pb = PackedPlanes::pack_cols(&b, k, n, bits, kind).unwrap();
+                    for seg_words in [0usize, 1, 2] {
+                        assert_eq!(
+                            matmul_packed_rsr(&pa, &pb, 0, m, 0, n, PopcountKernel::Auto, seg_words)
+                                .unwrap(),
+                            want,
+                            "{kind:?} rsr bits={bits} k={k} fill={fill} seg_words={seg_words}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The deterministic k-split (PR 6) is bit-identical to the serial
+/// packed oracle and the native reference for every width 1..=16, both
+/// plane kinds, and forced chunk counts that do **not** divide the
+/// word count — including tail-word k, chunk counts exceeding the
+/// words (clamped), sign-saturated operands, and the RSR family riding
+/// the same stolen scheduler (where k-split is defined to clamp to 1).
+#[test]
+fn ksplit_stolen_tiles_equal_serial_and_native_all_widths() {
+    let pool = PackedPool::new(3).unwrap();
+    let mut rng = Pcg32::new(0x6b5_2024);
+    for bits in 1..=16u32 {
+        let (lo, hi) = (min_value(bits), max_value(bits));
+        // 1×hugek×n (the shape k-split exists for), a 2-D shape, and a
+        // single-word k that any chunk count must clamp against; k=257
+        // and k=200 leave tail words not divisible by the chunk counts
+        for (m, k, n) in [(1usize, 257usize, 23usize), (5, 200, 3), (2, 64, 2)] {
+            let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+            let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+            let want = ref_matmul_i64(&a, &b, m, k, n);
+            assert_eq!(matmul_native(&a, &b, m, k, n, bits).unwrap(), want);
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let pa = std::sync::Arc::new(
+                    PackedPlanes::pack_rows(&a, m, k, bits, kind).unwrap(),
+                );
+                let pb = std::sync::Arc::new(
+                    PackedPlanes::pack_cols(&b, k, n, bits, kind).unwrap(),
+                );
+                let serial =
+                    matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar)
+                        .unwrap();
+                assert_eq!(serial, want, "{kind:?} serial oracle bits={bits}");
+                for k_chunks in [0usize, 1, 2, 3, 5, 7] {
+                    let policy = TilePolicy { k_chunks, ..TilePolicy::AUTO };
+                    let (got, stats) = matmul_packed_tile_stolen_with(
+                        &pool, &pa, &pb, 0, m, 0, n,
+                        PopcountKernel::Auto, policy, KernelFamily::Popcount,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        got, want,
+                        "{kind:?} k_chunks={k_chunks} bits={bits} {m}x{k}x{n}"
+                    );
+                    assert!(stats.tiles >= 1);
+                }
+                // RSR through the stolen executor under a forced-split
+                // policy: the scheduler must clamp the split to 1 and
+                // still match
+                let (rsr, _) = matmul_packed_tile_stolen_with(
+                    &pool, &pa, &pb, 0, m, 0, n,
+                    PopcountKernel::Auto,
+                    TilePolicy { k_chunks: 3, ..TilePolicy::AUTO },
+                    KernelFamily::Rsr { seg_words: 0 },
+                )
+                .unwrap();
+                assert_eq!(rsr, want, "{kind:?} stolen rsr bits={bits} {m}x{k}x{n}");
+            }
+        }
+    }
+    // sign-plane saturation under forced k-splits: the per-chunk
+    // partials each carry a slice of the all-ones sign plane; their
+    // fixed-order merge must reproduce the correction exactly
+    let pool2 = PackedPool::new(2).unwrap();
+    for bits in [1u32, 2, 8, 16] {
+        let (m, n) = (1usize, 4usize);
+        for k in [65usize, 129, 257] {
+            let fill = min_value(bits);
+            let a = vec![fill; m * k];
+            let mut b = vec![fill; k * n];
+            b[k / 2 * n] = 0;
+            let want = ref_matmul_i64(&a, &b, m, k, n);
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let pa = std::sync::Arc::new(
+                    PackedPlanes::pack_rows(&a, m, k, bits, kind).unwrap(),
+                );
+                let pb = std::sync::Arc::new(
+                    PackedPlanes::pack_cols(&b, k, n, bits, kind).unwrap(),
+                );
+                for k_chunks in [2usize, 3] {
+                    let (got, _) = matmul_packed_tile_stolen_with(
+                        &pool2, &pa, &pb, 0, m, 0, n,
+                        PopcountKernel::Auto,
+                        TilePolicy { k_chunks, ..TilePolicy::AUTO },
+                        KernelFamily::Popcount,
+                    )
+                    .unwrap();
+                    assert_eq!(got, want, "{kind:?} bits={bits} k={k} k_chunks={k_chunks}");
+                }
+            }
+        }
+    }
 }
 
 /// Planner bit-transparency: **every** candidate `ExecPlan` — all
