@@ -1,0 +1,248 @@
+//! Chaos-serving drill — the resilience layer end to end
+//! (DESIGN.md §Resilience).
+//!
+//! Five phases against the packed backend:
+//!
+//! 1. **Baseline** — a fault-free run records every request's exact
+//!    output (the bit-identity reference).
+//! 2. **Fault injection** — a deterministic plan (worker panic,
+//!    dropped pool job, SEU bit-flip) with ABFT on: the server keeps
+//!    serving, every submitter gets a terminal typed answer, and every
+//!    request that still produced an output matches the baseline
+//!    bit for bit.
+//! 3. **Overload** — a stalled worker (injected delay) plus a bounded
+//!    queue and an age budget: a second submission wave is refused at
+//!    admission and the stale queue is shed — no submitter ever hangs.
+//! 4. **Deadlines** — pre-expired deadlines are answered
+//!    `DeadlineExceeded` at dequeue instead of being served late.
+//! 5. **Degradation** — under backlog, low-priority requests serve on
+//!    the precision-degraded clone; outputs still match the baseline
+//!    (the downshift is clamped to be bit-exact).
+//!
+//! Prints a greppable summary line (CI asserts `panics>=1`,
+//! `sheds>=1`, `unmasked=0`).
+//!
+//! ```sh
+//! cargo run --release --example chaos_serving
+//! ```
+
+use bitsmm::coordinator::{
+    shaped_inputs, Backend, BatcherConfig, DegradePolicy, FaultPlan, FaultState, InferenceServer,
+    Metrics, Request, Response, ServeError, ServerConfig,
+};
+use bitsmm::nn::model::mlp_headroom_zoo;
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::mac_common::MacVariant;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+const N_REQUESTS: usize = 24;
+
+fn base_cfg() -> ServerConfig {
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+    let mut cfg = ServerConfig::new(sa, Backend::Packed);
+    cfg.workers = 1; // deterministic batch order for the fault plan
+    cfg.packed_threads = 2;
+    cfg.batcher = BatcherConfig {
+        max_batch: 4,
+        linger: Duration::from_millis(1),
+        ..BatcherConfig::default()
+    };
+    cfg
+}
+
+fn requests() -> Vec<Request> {
+    shaped_inputs(&mlp_headroom_zoo(3), N_REQUESTS, 42)
+        .into_iter()
+        .enumerate()
+        .map(|(i, x)| Request::new(i as u64, x))
+        .collect()
+}
+
+/// Wait for every answer — a submitter that never hears back is the
+/// failure mode this whole drill exists to rule out.
+fn collect(rxs: Vec<mpsc::Receiver<Response>>) -> Vec<Response> {
+    rxs.into_iter()
+        .enumerate()
+        .map(|(i, rx)| {
+            rx.recv()
+                .unwrap_or_else(|_| panic!("submitter {i} never got a terminal response"))
+        })
+        .collect()
+}
+
+fn run_phase(cfg: ServerConfig, reqs: Vec<Request>) -> bitsmm::Result<(Vec<Response>, Metrics)> {
+    let server = InferenceServer::start(Arc::new(mlp_headroom_zoo(3)), cfg)?;
+    let rxs: Vec<_> = reqs.into_iter().map(|r| server.submit(r)).collect();
+    let responses = collect(rxs);
+    let (_, metrics) = server.shutdown();
+    Ok((responses, metrics))
+}
+
+fn main() -> bitsmm::Result<()> {
+    // ---- phase 1: fault-free baseline --------------------------------
+    let (baseline, base_metrics) = run_phase(base_cfg(), requests())?;
+    let reference: HashMap<u64, Vec<f64>> = baseline
+        .iter()
+        .map(|r| (r.id, r.output.clone().expect("baseline run must be clean")))
+        .collect();
+    assert_eq!(reference.len(), N_REQUESTS);
+    assert_eq!(base_metrics.panics, 0);
+    println!("phase 1 baseline: {} clean responses", reference.len());
+
+    // ---- phase 2: panic + dropped pool job + SEU, ABFT on ------------
+    let mut cfg = base_cfg();
+    cfg.abft = true;
+    cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse(
+        "panic@1,drop@2,seu@3,seed=42",
+    )?)));
+    let (responses, chaos) = run_phase(cfg, requests())?;
+    let mut ok = 0usize;
+    let mut faulted = 0usize;
+    for r in &responses {
+        match &r.output {
+            Ok(out) => {
+                assert_eq!(
+                    out, &reference[&r.id],
+                    "request {} diverged from the fault-free baseline",
+                    r.id
+                );
+                ok += 1;
+            }
+            Err(ServeError::WorkerFault(_)) => faulted += 1,
+            Err(e) => panic!("unexpected terminal error under fault plan: {e}"),
+        }
+    }
+    assert!(chaos.panics >= 1, "the planned panic must have fired");
+    assert!(faulted >= 1, "the panicked batch answers its own requests");
+    assert_eq!(ok + faulted, N_REQUESTS);
+    assert!(chaos.faults.injected >= 2, "drop + SEU were injected");
+    assert_eq!(chaos.faults.unmasked, 0, "ABFT + work stealing mask all");
+    println!(
+        "phase 2 chaos: {ok} bit-identical, {faulted} worker-faulted, \
+         {} faults injected / {} masked",
+        chaos.faults.injected, chaos.faults.masked
+    );
+
+    // ---- phase 3: overload — bounded admission + age shedding --------
+    let mut cfg = base_cfg();
+    cfg.batcher.max_queue = 4;
+    cfg.batcher.shed_after = Some(Duration::from_millis(10));
+    // stall the first batch so the second wave piles up behind it
+    cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse("delay@0:300ms")?)));
+    let server = InferenceServer::start(Arc::new(mlp_headroom_zoo(3)), cfg)?;
+    let mut reqs = requests().into_iter();
+    let mut rxs = Vec::new();
+    // wave 1 fills the first batch; give the worker time to dequeue it
+    // and enter the injected 300ms stall
+    for req in reqs.by_ref().take(4) {
+        rxs.push(server.submit(req));
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    // wave 2 floods the stalled server: the queue holds `max_queue`,
+    // the rest are refused at admission, and whatever queued ages far
+    // past the 10ms shed budget before the worker comes back
+    for req in reqs {
+        rxs.push(server.submit(req));
+    }
+    let responses = collect(rxs);
+    let (_, overload) = server.shutdown();
+    let mut served = 0usize;
+    let (mut rejected, mut shed) = (0usize, 0usize);
+    for r in &responses {
+        match &r.output {
+            Ok(out) => {
+                assert_eq!(out, &reference[&r.id], "survivors stay bit-identical");
+                served += 1;
+            }
+            Err(ServeError::Rejected { depth }) => {
+                assert!(*depth >= 4, "refused at the admission bound");
+                rejected += 1;
+            }
+            Err(ServeError::Overloaded { waited }) => {
+                assert!(*waited >= Duration::from_millis(10));
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected terminal error under overload: {e}"),
+        }
+    }
+    assert_eq!(served + rejected + shed, N_REQUESTS);
+    assert!(rejected >= 1, "the bounded queue must refuse the flood");
+    assert!(overload.sheds >= 1, "the age budget must shed stale work");
+    println!("phase 3 overload: {served} served, {rejected} rejected, {shed} shed");
+
+    // ---- phase 4: pre-expired deadlines ------------------------------
+    let now = Instant::now();
+    let reqs: Vec<Request> = requests()
+        .into_iter()
+        .map(|r| {
+            let expired = r.id % 3 == 0;
+            if expired {
+                r.with_deadline(now)
+            } else {
+                r
+            }
+        })
+        .collect();
+    let (responses, deadlines) = run_phase(base_cfg(), reqs)?;
+    let mut missed = 0usize;
+    for r in &responses {
+        match &r.output {
+            Ok(out) => assert_eq!(out, &reference[&r.id], "on-time requests unaffected"),
+            Err(ServeError::DeadlineExceeded) => {
+                assert_eq!(r.id % 3, 0, "only the expired requests miss");
+                missed += 1;
+            }
+            Err(e) => panic!("unexpected terminal error in deadline phase: {e}"),
+        }
+    }
+    assert_eq!(missed, N_REQUESTS.div_ceil(3));
+    assert_eq!(deadlines.deadline_misses as usize, missed);
+    println!("phase 4 deadlines: {missed} expired requests answered at dequeue");
+
+    // ---- phase 5: degraded low-priority serving ----------------------
+    let mut cfg = base_cfg();
+    cfg.degrade = Some(DegradePolicy {
+        high_water: 0, // any backlog downshifts low-priority work
+        floor_bits: 4,
+    });
+    // stall batch 0 so later submissions queue up behind it
+    cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse("delay@0:150ms")?)));
+    let reqs: Vec<Request> = requests().into_iter().map(Request::low_priority).collect();
+    let (responses, degrade) = run_phase(cfg, reqs)?;
+    for r in &responses {
+        let out = r.output.as_ref().unwrap_or_else(|e| panic!("{}: {e}", r.id));
+        assert_eq!(
+            out, &reference[&r.id],
+            "degraded serving must stay bit-identical (request {})",
+            r.id
+        );
+    }
+    assert!(
+        degrade.degraded >= 1,
+        "backlogged low-priority requests must take the degraded clone"
+    );
+    println!(
+        "phase 5 degrade: {} responses, {} served at narrowed precision, all bit-identical",
+        responses.len(),
+        degrade.degraded
+    );
+
+    // ---- greppable summary (CI contract) -----------------------------
+    println!(
+        "chaos_serving summary: answered={} panics={} sheds={} rejected={} \
+         deadline_misses={} degraded={} injected={} masked={} unmasked={}",
+        5 * N_REQUESTS,
+        chaos.panics,
+        overload.sheds,
+        overload.rejected,
+        deadlines.deadline_misses,
+        degrade.degraded,
+        chaos.faults.injected + overload.faults.injected + degrade.faults.injected,
+        chaos.faults.masked + overload.faults.masked + degrade.faults.masked,
+        chaos.faults.unmasked + overload.faults.unmasked + degrade.faults.unmasked,
+    );
+    println!("chaos_serving: OK");
+    Ok(())
+}

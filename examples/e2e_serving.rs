@@ -118,6 +118,7 @@ fn main() -> bitsmm::Result<()> {
     cfg.batcher = BatcherConfig {
         max_batch: 8, // matches the exported artifact batch shape
         linger: std::time::Duration::from_millis(2),
+        ..BatcherConfig::default()
     };
 
     let inputs = shaped_inputs(&model, n_requests, 7);

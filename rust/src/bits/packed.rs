@@ -174,8 +174,10 @@ impl PackedPlanes {
     }
 
     /// Smallest width every value of `data` fits in (1..=16; `check`
-    /// guarantees it does not exceed the declared pack width).
-    fn needed_bits(data: &[i32]) -> u32 {
+    /// guarantees it does not exceed the declared pack width). Public
+    /// because the degrade policy clamps its precision floor to this —
+    /// a downshift below it would truncate live weight values.
+    pub fn needed_bits(data: &[i32]) -> u32 {
         let mut bits = 1u32;
         for &v in data {
             while v < crate::bits::twos::min_value(bits)
@@ -986,6 +988,12 @@ type PoolJob = Box<dyn FnOnce() + Send + 'static>;
 pub struct PackedPool {
     tx: Mutex<Option<mpsc::Sender<PoolJob>>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Fault injection: how many upcoming slot jobs to drop instead of
+    /// enqueueing (chaos testing). Dropping is masked by construction:
+    /// the caller's inline steal slot drains every deque, so the tiles
+    /// seeded to a dropped job are stolen and the merge still sees all
+    /// of them.
+    drop_next: std::sync::atomic::AtomicUsize,
 }
 
 impl PackedPool {
@@ -1002,8 +1010,10 @@ impl PackedPool {
                 std::thread::Builder::new()
                     .name(format!("bitsmm-packed-{i}"))
                     .spawn(move || loop {
-                        // hold the lock only while dequeueing
-                        let job = rx.lock().expect("packed pool queue poisoned").recv();
+                        // hold the lock only while dequeueing; recover
+                        // the guard if a sibling panicked mid-dequeue —
+                        // the channel itself is never left inconsistent
+                        let job = rx.lock().unwrap_or_else(|e| e.into_inner()).recv();
                         match job {
                             Ok(job) => job(),
                             Err(_) => break, // channel closed: pool dropped
@@ -1014,6 +1024,7 @@ impl PackedPool {
         Ok(PackedPool {
             tx: Mutex::new(Some(tx)),
             workers,
+            drop_next: std::sync::atomic::AtomicUsize::new(0),
         })
     }
 
@@ -1022,8 +1033,28 @@ impl PackedPool {
         self.workers.len()
     }
 
+    /// Fault injection: silently drop the next `n` submitted jobs (as
+    /// if their worker died before running them). Work-stealing masks
+    /// the loss — see the field doc on `drop_next`.
+    pub fn inject_drop_jobs(&self, n: usize) {
+        self.drop_next
+            .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
+    }
+
     fn execute(&self, job: PoolJob) -> Result<()> {
-        let guard = self.tx.lock().expect("packed pool sender poisoned");
+        if self
+            .drop_next
+            .fetch_update(
+                std::sync::atomic::Ordering::Relaxed,
+                std::sync::atomic::Ordering::Relaxed,
+                |v| v.checked_sub(1),
+            )
+            .is_ok()
+        {
+            drop(job); // injected fault: the job never reaches a worker
+            return Ok(());
+        }
+        let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
         let tx = guard
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("packed pool already closed"))?;
@@ -1039,7 +1070,7 @@ impl PackedPool {
 impl Drop for PackedPool {
     fn drop(&mut self) {
         // close the queue, then join: workers drain remaining jobs
-        *self.tx.lock().expect("packed pool sender poisoned") = None;
+        *self.tx.lock().unwrap_or_else(|e| e.into_inner()) = None;
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -1265,14 +1296,27 @@ impl StealSet {
     /// Own chunk first (front of the own deque, preserving locality),
     /// then steal from the *back* of the other slots' deques, scanning
     /// from the next slot so concurrent thieves spread over victims.
+    /// Poisoned deques are recovered, not propagated: a tile job that
+    /// panicked mid-run must not cascade panics into every other
+    /// kernel worker — the collector's lost-job count already surfaces
+    /// the real failure as an `Err` (tiles are popped *before* they
+    /// run, so a recovered deque is always structurally sound).
     fn next(&self, slot: usize) -> Option<TileJob2d> {
-        if let Some(t) = self.deques[slot].lock().expect("steal deque poisoned").pop_front() {
+        if let Some(t) = self.deques[slot]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop_front()
+        {
             return Some(t);
         }
         let slots = self.deques.len();
         for off in 1..slots {
             let victim = (slot + off) % slots;
-            if let Some(t) = self.deques[victim].lock().expect("steal deque poisoned").pop_back() {
+            if let Some(t) = self.deques[victim]
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .pop_back()
+            {
                 self.steals.fetch_add(1, Ordering::Relaxed);
                 return Some(t);
             }
@@ -1776,6 +1820,41 @@ mod tests {
                 assert!(stats.max_worker_tiles <= stats.tiles);
             }
         }
+    }
+
+    #[test]
+    fn dropped_pool_jobs_are_masked_by_the_inline_slot() {
+        // Fault injection: `inject_drop_jobs` makes the pool silently
+        // swallow the next N submitted slot-jobs. The caller's inline
+        // slot drains *every* deque, so the tiles seeded for a dropped
+        // slot are still executed (stolen) and the merge sees all
+        // `njobs` parts — the fault is masked by construction.
+        let mut rng = Pcg32::new(0xd09);
+        let pool = PackedPool::new(3).unwrap();
+        let (m, k, n, bits) = (13usize, 70usize, 9usize, 6u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let pa = Arc::new(PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap());
+        let pb = Arc::new(PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Booth).unwrap());
+        let serial = matmul_packed_tile_with(&pa, &pb, 0, m, 0, n, PopcountKernel::Scalar).unwrap();
+        // tiny forced tiles maximise the job count so the surviving
+        // slots have real stealing to do
+        let policy = TilePolicy { tile_rows: 2, tile_cols: 2, ..TilePolicy::AUTO };
+        for drops in [1usize, 3] {
+            pool.inject_drop_jobs(drops);
+            let (out, stats) =
+                matmul_packed_tile_stolen(&pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy)
+                    .unwrap();
+            assert_eq!(out, serial, "drops={drops}");
+            assert!(stats.tiles > 1);
+        }
+        // dropping every slot-job degrades to caller-only execution,
+        // still bit-identical
+        pool.inject_drop_jobs(usize::MAX);
+        let (out, _) =
+            matmul_packed_tile_stolen(&pool, &pa, &pb, 0, m, 0, n, PopcountKernel::Auto, policy)
+                .unwrap();
+        assert_eq!(out, serial);
     }
 
     #[test]

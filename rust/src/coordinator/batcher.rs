@@ -2,6 +2,12 @@
 //! occupancy (larger effective M per matmul → more MAC rows active),
 //! bounded by a maximum batch size and a linger deadline — the standard
 //! serving trade between throughput and tail latency.
+//!
+//! The batcher is also the admission-control point of the serving
+//! stack: a bounded queue refuses pushes once `max_queue` items are
+//! waiting, and a queue-age budget (`shed_after`) sheds items the
+//! consumer is too late to serve so a worker never spends a matmul on
+//! a request whose client has already given up (DESIGN.md §Resilience).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -14,6 +20,15 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// How long an incomplete batch may wait for more requests.
     pub linger: Duration,
+    /// Bounded-queue admission limit; `0` means unbounded (the
+    /// pre-resilience behaviour). Pushes beyond the limit are refused
+    /// with [`PushRefused::Full`].
+    pub max_queue: usize,
+    /// Queue-age budget: items that have waited longer than this when
+    /// a batch is formed are moved to [`Batch::shed`] instead of
+    /// [`Batch::items`], for the consumer to answer with an overload
+    /// error. `None` disables shedding.
+    pub shed_after: Option<Duration>,
 }
 
 impl Default for BatcherConfig {
@@ -21,8 +36,21 @@ impl Default for BatcherConfig {
         BatcherConfig {
             max_batch: 8,
             linger: Duration::from_millis(2),
+            max_queue: 0,
+            shed_after: None,
         }
     }
+}
+
+/// Why [`Batcher::push`] refused an item. The item is handed back so
+/// the caller can answer its submitter instead of losing it.
+#[derive(Debug)]
+pub enum PushRefused<T> {
+    /// The bounded queue is at `max_queue`; `depth` is the queue depth
+    /// observed at refusal time.
+    Full { item: T, depth: usize },
+    /// `close()` already ran: no consumer will ever drain this item.
+    Closed { item: T },
 }
 
 /// A batch handed to the execution engine.
@@ -31,6 +59,11 @@ pub struct Batch<T> {
     pub items: Vec<T>,
     /// When the oldest item entered the queue (for latency accounting).
     pub oldest: Instant,
+    /// Items whose queue age exceeded `shed_after`, paired with how
+    /// long each actually waited. The consumer must still answer them
+    /// (with an overload error) — they are shed from execution, not
+    /// from accounting.
+    pub shed: Vec<(T, Duration)>,
 }
 
 struct Inner<T> {
@@ -58,12 +91,22 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Enqueue one request.
-    pub fn push(&self, item: T) {
+    /// Enqueue one request. Refuses (returning the item) when the
+    /// bounded queue is full or the batcher is closed, so no request
+    /// is ever silently stranded in a queue nobody will drain.
+    pub fn push(&self, item: T) -> Result<(), PushRefused<T>> {
         let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushRefused::Closed { item });
+        }
+        if self.cfg.max_queue > 0 && g.queue.len() >= self.cfg.max_queue {
+            let depth = g.queue.len();
+            return Err(PushRefused::Full { item, depth });
+        }
         g.queue.push_back((item, Instant::now()));
         drop(g);
         self.cv.notify_one();
+        Ok(())
     }
 
     /// Signal that no more requests will arrive; blocked `next_batch`
@@ -80,7 +123,10 @@ impl<T> Batcher<T> {
 
     /// Block for the next batch: returns as soon as `max_batch` items
     /// are available, or when the linger deadline passes with at least
-    /// one item, or `None` once closed and drained.
+    /// one item, or `None` once closed and drained. Items older than
+    /// `shed_after` come back in [`Batch::shed`] rather than
+    /// [`Batch::items`]; a batch may be shed-only if everything queued
+    /// was overdue.
     pub fn next_batch(&self) -> Option<Batch<T>> {
         let mut g = self.inner.lock().unwrap();
         loop {
@@ -99,7 +145,10 @@ impl<T> Batcher<T> {
             // re-derived each iteration: if another consumer takes the
             // front item mid-wait, the new front's (younger) enqueue
             // time re-anchors the deadline instead of leaking the old,
-            // possibly expired one onto a fresh request.
+            // possibly expired one onto a fresh request. An over-age
+            // front (past `shed_after`) also expires the linger, so
+            // sheds are answered promptly rather than after a wait
+            // they have already lost.
             while g.queue.len() < self.cfg.max_batch && !g.closed {
                 let front_t = match g.queue.front() {
                     Some(&(_, t)) => t,
@@ -110,12 +159,35 @@ impl<T> Batcher<T> {
                 if now >= deadline {
                     break;
                 }
+                if let Some(budget) = self.cfg.shed_after {
+                    if now.duration_since(front_t) > budget {
+                        break;
+                    }
+                }
                 g = self.cv.wait_timeout(g, deadline - now).unwrap().0;
             }
             if g.queue.is_empty() {
                 continue; // raced with another consumer
             }
+            // shed-by-age: enqueue times are monotonic front-to-back
+            // (pushes append under the same lock), so over-budget items
+            // form a prefix — pop until the front is young enough.
+            let mut shed = Vec::new();
+            if let Some(budget) = self.cfg.shed_after {
+                let now = Instant::now();
+                while let Some((_, t)) = g.queue.front() {
+                    let waited = now.duration_since(*t);
+                    if waited <= budget {
+                        break;
+                    }
+                    let (item, _) = g.queue.pop_front().unwrap();
+                    shed.push((item, waited));
+                }
+            }
             let take = g.queue.len().min(self.cfg.max_batch);
+            if take == 0 && shed.is_empty() {
+                continue; // raced: everything vanished under the lock
+            }
             let mut items = Vec::with_capacity(take);
             let mut oldest = Instant::now();
             for _ in 0..take {
@@ -123,7 +195,11 @@ impl<T> Batcher<T> {
                 oldest = oldest.min(t);
                 items.push(item);
             }
-            return Some(Batch { items, oldest });
+            return Some(Batch {
+                items,
+                oldest,
+                shed,
+            });
         }
     }
 }
@@ -138,12 +214,14 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 3,
             linger: Duration::from_secs(10), // would hang if linger waited
+            ..BatcherConfig::default()
         });
         for i in 0..3 {
-            b.push(i);
+            b.push(i).unwrap();
         }
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![0, 1, 2]);
+        assert!(batch.shed.is_empty());
     }
 
     #[test]
@@ -151,8 +229,9 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 100,
             linger: Duration::from_millis(5),
+            ..BatcherConfig::default()
         });
-        b.push(42);
+        b.push(42).unwrap();
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![42]);
@@ -164,8 +243,9 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 100,
             linger: Duration::from_millis(300),
+            ..BatcherConfig::default()
         });
-        b.push(7);
+        b.push(7).unwrap();
         // simulate the consumer being busy with a previous batch for
         // longer than the linger: the deadline anchors to the enqueue
         // time, so the already-stale item must flush immediately
@@ -185,8 +265,9 @@ mod tests {
         let b = Batcher::new(BatcherConfig {
             max_batch: 2,
             linger: Duration::from_millis(1),
+            ..BatcherConfig::default()
         });
-        b.push(1);
+        b.push(1).unwrap();
         b.close();
         assert_eq!(b.next_batch().unwrap().items, vec![1]);
         assert!(b.next_batch().is_none());
@@ -197,6 +278,7 @@ mod tests {
         let b = Arc::new(Batcher::new(BatcherConfig {
             max_batch: 4,
             linger: Duration::from_millis(1),
+            ..BatcherConfig::default()
         }));
         let n = 64;
         let mut handles = Vec::new();
@@ -204,7 +286,7 @@ mod tests {
             let b2 = b.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..n / 4 {
-                    b2.push(t * 1000 + i);
+                    b2.push(t * 1000 + i).unwrap();
                 }
             }));
         }
@@ -218,5 +300,104 @@ mod tests {
             seen += batch.items.len();
         }
         assert_eq!(seen, n as usize);
+    }
+
+    #[test]
+    fn queue_full_rejects_with_depth() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            linger: Duration::from_millis(1),
+            max_queue: 2,
+            ..BatcherConfig::default()
+        });
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        match b.push(3) {
+            Err(PushRefused::Full { item, depth }) => {
+                assert_eq!(item, 3);
+                assert_eq!(depth, 2);
+            }
+            other => panic!("expected Full refusal, got {other:?}"),
+        }
+        // draining makes room again
+        assert_eq!(b.next_batch().unwrap().items, vec![1, 2]);
+        b.push(4).unwrap();
+    }
+
+    #[test]
+    fn push_after_close_refused() {
+        let b = Batcher::new(BatcherConfig::default());
+        b.close();
+        match b.push(9) {
+            Err(PushRefused::Closed { item }) => assert_eq!(item, 9),
+            other => panic!("expected Closed refusal, got {other:?}"),
+        }
+        // nothing silently enqueued
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn shed_by_age_keeps_young_items() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            linger: Duration::from_millis(1),
+            shed_after: Some(Duration::from_millis(50)),
+            ..BatcherConfig::default()
+        });
+        b.push(1).unwrap(); // will exceed the age budget
+        std::thread::sleep(Duration::from_millis(120));
+        b.push(2).unwrap(); // still fresh
+        let batch = b.next_batch().unwrap();
+        let shed_items: Vec<i32> = batch.shed.iter().map(|(i, _)| *i).collect();
+        assert_eq!(shed_items, vec![1], "older-than-budget item shed");
+        assert!(
+            batch.shed[0].1 >= Duration::from_millis(100),
+            "shed carries the observed wait"
+        );
+        assert_eq!(batch.items, vec![2], "younger item kept");
+    }
+
+    #[test]
+    fn shed_only_batch_when_everything_overdue() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            linger: Duration::from_millis(1),
+            shed_after: Some(Duration::from_millis(20)),
+            ..BatcherConfig::default()
+        });
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let batch = b.next_batch().unwrap();
+        assert!(batch.items.is_empty());
+        let shed_items: Vec<i32> = batch.shed.iter().map(|(i, _)| *i).collect();
+        assert_eq!(shed_items, vec![1, 2], "FIFO order preserved in shed");
+    }
+
+    #[test]
+    fn shedding_reanchors_linger_to_surviving_front() {
+        // An overdue front must not make the batcher linger a full
+        // period on its behalf, and after the shed the young survivor
+        // flushes with the batch — total wait stays far below the
+        // linger that anchored to the dead item.
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 100,
+            linger: Duration::from_millis(400),
+            shed_after: Some(Duration::from_millis(60)),
+            ..BatcherConfig::default()
+        });
+        b.push(1).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        b.push(2).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "over-age front should expire the linger, waited {:?}",
+            t0.elapsed()
+        );
+        let shed_items: Vec<i32> = batch.shed.iter().map(|(i, _)| *i).collect();
+        assert_eq!(shed_items, vec![1]);
+        assert_eq!(batch.items, vec![2]);
     }
 }

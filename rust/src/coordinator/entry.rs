@@ -2,8 +2,9 @@
 //! integration tests can exercise them).
 
 use crate::cli::Args;
+use crate::coordinator::faults::{FaultPlan, FaultState};
 use crate::coordinator::scheduler::Backend;
-use crate::coordinator::server::{serve_all, shaped_inputs, ServerConfig};
+use crate::coordinator::server::{serve_all, shaped_inputs, DegradePolicy, ServerConfig};
 use crate::coordinator::BatcherConfig;
 use crate::nn::model::zoo_model;
 use crate::plan::{Planner, PlannerMode};
@@ -61,6 +62,66 @@ fn build_planner(mode: PlannerMode, plan_file: &str, cfg: &ServerConfig) -> Opti
     Some(planner)
 }
 
+/// Resilience rows shared by the serve and launch tables: admission/
+/// shedding/deadline counters, supervision outcomes, degraded serves,
+/// and the fault-injection ledger (DESIGN.md §Resilience). Printed
+/// unconditionally — all-zero rows are the "healthy run" statement,
+/// and CI greps them.
+fn resilience_rows(t: &mut Table, metrics: &crate::coordinator::Metrics) {
+    t.row(&[
+        "rejected / sheds / deadline misses".into(),
+        format!(
+            "{} / {} / {}",
+            metrics.rejected, metrics.sheds, metrics.deadline_misses
+        ),
+    ]);
+    t.row(&[
+        "worker panics / deaths".into(),
+        format!("{} / {}", metrics.panics, metrics.worker_deaths),
+    ]);
+    t.row(&["degraded serves".into(), format!("{}", metrics.degraded)]);
+    t.row(&[
+        "faults injected / masked / unmasked".into(),
+        format!(
+            "{} / {} / {}",
+            metrics.faults.injected, metrics.faults.masked, metrics.faults.unmasked
+        ),
+    ]);
+}
+
+/// Resolve the resilience knobs shared by the CLI and config entry
+/// points onto a [`ServerConfig`]: bounded admission, age shedding,
+/// the optional degrade policy, ABFT verification, and a parsed fault
+/// plan (`spec` empty = no injection).
+#[allow(clippy::too_many_arguments)]
+fn apply_resilience(
+    cfg: &mut ServerConfig,
+    max_queue: usize,
+    shed_after_ms: f64,
+    degrade_high_water: usize,
+    degrade_bits: u32,
+    abft: bool,
+    fault_plan: Option<&str>,
+) -> Result<()> {
+    cfg.batcher.max_queue = max_queue;
+    cfg.batcher.shed_after = if shed_after_ms > 0.0 {
+        Some(std::time::Duration::from_secs_f64(shed_after_ms / 1e3))
+    } else {
+        None
+    };
+    if degrade_high_water > 0 {
+        cfg.degrade = Some(DegradePolicy {
+            high_water: degrade_high_water,
+            floor_bits: degrade_bits,
+        });
+    }
+    cfg.abft = abft;
+    if let Some(spec) = fault_plan.filter(|s| !s.trim().is_empty()) {
+        cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse(spec)?)));
+    }
+    Ok(())
+}
+
 /// Planner rows shared by the serve and launch tables: mode, cache
 /// telemetry, and the chosen plan per shape class.
 fn planner_rows(t: &mut Table, planner: &Planner, metrics: &crate::coordinator::Metrics) {
@@ -107,7 +168,17 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
     cfg.batcher = BatcherConfig {
         max_batch: args.req("batch")?,
         linger: std::time::Duration::from_millis(2),
+        ..BatcherConfig::default()
     };
+    apply_resilience(
+        &mut cfg,
+        args.req("max-queue")?,
+        args.req::<f64>("shed-after-ms")?,
+        args.req("degrade-high-water")?,
+        args.req("degrade-bits")?,
+        args.switch("abft"),
+        args.get("fault-plan"),
+    )?;
     cfg.packed_threads = args.req("packed-threads")?;
     cfg.packed_unroll = args.req::<String>("packed-unroll")?.parse()?;
     cfg.packed_tile_rows = args.req("packed-tile-rows")?;
@@ -175,6 +246,7 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
             f(metrics.steal_rate())
         ),
     ]);
+    resilience_rows(&mut t, &metrics);
     if let Some(pl) = &planner_view {
         planner_rows(&mut t, pl, &metrics);
     }
@@ -222,7 +294,17 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
         linger: std::time::Duration::from_secs_f64(
             cfg.float_or("server.linger_ms", 2.0) / 1e3,
         ),
+        ..BatcherConfig::default()
     };
+    apply_resilience(
+        &mut server_cfg,
+        usize::try_from(cfg.int_or("server.max_queue", 0))?,
+        cfg.float_or("server.shed_after_ms", 0.0),
+        usize::try_from(cfg.int_or("server.degrade_high_water", 0))?,
+        u32::try_from(cfg.int_or("server.degrade_bits", 4))?,
+        cfg.bool_or("server.abft", false),
+        Some(cfg.str_or("server.fault_plan", "")),
+    )?;
     server_cfg.clock_hz = cfg.float_or("server.clock_mhz", 300.0) * 1e6;
     server_cfg.packed_threads = usize::try_from(cfg.int_or("server.packed_threads", 0))?;
     server_cfg.packed_unroll = cfg.str_or("server.packed_unroll", "auto").parse()?;
@@ -264,6 +346,7 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     t.row(&["p50 / p99 latency (us)".into(), format!("{} / {}", p[0], p[1])]);
     t.row(&["hw GOPS @config clock".into(), f(report.hw_gops(clock_hz))]);
     t.row(&["MACs / hw cycles".into(), format!("{} / {}", report.macs, report.hw_cycles)]);
+    resilience_rows(&mut t, &metrics);
     if let Some(pl) = &planner_view {
         planner_rows(&mut t, pl, &metrics);
     }
@@ -485,6 +568,48 @@ packed_ksplit = {ksplit}
             launch_from_config(&cfg)
                 .unwrap_or_else(|e| panic!("rsr={rsr} ksplit={ksplit}: {e:#}"));
         }
+    }
+
+    #[test]
+    fn launch_reads_resilience_config() {
+        // the robustness knobs thread through dotted config paths: a
+        // bounded queue, age shedding, ABFT, a degrade policy over the
+        // headroom zoo, and a deterministic fault plan — the run must
+        // complete (every request gets a terminal answer) even with a
+        // panic and an SEU injected
+        let cfg = crate::config::Config::parse(
+            "name = \"chaos\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"packed\"
+model = \"mlp-headroom\"
+requests = 8
+workers = 1
+max_batch = 4
+packed_threads = 2
+max_queue = 64
+shed_after_ms = 5000.0
+degrade_high_water = 1
+degrade_bits = 4
+abft = true
+fault_plan = \"panic@0,seu@1,seed=7\"
+",
+        )
+        .unwrap();
+        launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_rejects_bad_fault_plan() {
+        let cfg = crate::config::Config::parse(
+            "[server]
+fault_plan = \"meteor@5\"
+",
+        )
+        .unwrap();
+        assert!(launch_from_config(&cfg).is_err());
     }
 
     #[test]

@@ -1,0 +1,285 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The MAC-level simulator (`sim/tmr.rs`) already injects SEUs into
+//! individual multipliers; this module pulls the same discipline up to
+//! the coordinator so integration tests and `examples/chaos_serving.rs`
+//! can prove the resilience pillars end-to-end: a [`FaultPlan`] names
+//! *which* global batch index suffers *what* fault (worker panic,
+//! batch delay, dropped pool job, SEU bit-flip on a packed partial),
+//! and a seeded PRNG makes the SEU placement reproducible run-to-run.
+//! Everything is a runtime hook — no `#[cfg]` walls — so the exact
+//! binary that serves production traffic is the one under chaos test.
+
+use crate::prng::Pcg32;
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One fault to apply while serving a particular batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic inside the worker's supervised execution closure.
+    Panic,
+    /// Sleep before executing the batch (models a stalled kernel /
+    /// GC-style hiccup; drives shedding and deadline machinery).
+    Delay(Duration),
+    /// Drop the next `PackedPool` slot job instead of running it.
+    /// Masked by construction: the caller's inline steal slot drains
+    /// every deque, so the tiles seeded to the dead slot are stolen.
+    DropPoolJob,
+    /// Flip one random bit of one i64 accumulator in the next packed
+    /// matmul output (a single-event upset on a partial sum).
+    Seu,
+}
+
+/// A deterministic schedule of faults, keyed by global batch index
+/// (batches are numbered across all workers in dequeue order).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// `(batch_index, action)` pairs; several actions may target the
+    /// same batch.
+    pub at: Vec<(u64, FaultAction)>,
+    /// Seed for the SEU bit-position PRNG.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a compact spec: comma-separated `kind@batch` items plus an
+    /// optional `seed=N`, e.g. `panic@1,delay@0:250ms,drop@2,seu@3,seed=42`.
+    /// `delay` takes a `:<millis>ms` (or bare `:<millis>`) argument.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan {
+            seed: 0x5eed_fa17,
+            ..FaultPlan::default()
+        };
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(v) = part.strip_prefix("seed=") {
+                plan.seed = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad fault seed {v:?}"))?;
+                continue;
+            }
+            let (kind, rest) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault item {part:?} is not kind@batch"))?;
+            let (batch_s, arg) = match rest.split_once(':') {
+                Some((b, a)) => (b, Some(a)),
+                None => (rest, None),
+            };
+            let batch: u64 = batch_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad batch index in {part:?}"))?;
+            let action = match kind {
+                "panic" => FaultAction::Panic,
+                "drop" => FaultAction::DropPoolJob,
+                "seu" => FaultAction::Seu,
+                "delay" => {
+                    let ms: u64 = arg
+                        .unwrap_or("100")
+                        .trim_end_matches("ms")
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad delay in {part:?}"))?;
+                    FaultAction::Delay(Duration::from_millis(ms))
+                }
+                other => anyhow::bail!("unknown fault kind {other:?} in {part:?}"),
+            };
+            plan.at.push((batch, action));
+        }
+        Ok(plan)
+    }
+
+    /// Read a plan from `BITSMM_FAULT_PLAN`; `Ok(None)` when unset.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("BITSMM_FAULT_PLAN") {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(FaultPlan::parse(&spec)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// All actions scheduled for batch `n`.
+    pub fn actions_at(&self, n: u64) -> Vec<FaultAction> {
+        self.at
+            .iter()
+            .filter(|(b, _)| *b == n)
+            .map(|(_, a)| *a)
+            .collect()
+    }
+
+    /// Highest batch index any fault targets (for harnesses that must
+    /// submit enough work to reach every scheduled fault).
+    pub fn last_batch(&self) -> Option<u64> {
+        self.at.iter().map(|(b, _)| *b).max()
+    }
+}
+
+/// Corruption-fault accounting: how many data-corrupting injections
+/// ran and whether each was masked (absorbed with bit-identical
+/// output) or escaped to a caller-visible value. Availability faults
+/// (panics, delays) are counted by `Metrics.panics` / shed machinery
+/// instead — they can never corrupt a served result.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub injected: u64,
+    pub masked: u64,
+    pub unmasked: u64,
+}
+
+impl FaultStats {
+    pub fn merge(&mut self, o: &FaultStats) {
+        self.injected += o.injected;
+        self.masked += o.masked;
+        self.unmasked += o.unmasked;
+    }
+}
+
+/// Arms SEU injection for the scheduler's packed matmul path: each
+/// armed count flips one PRNG-chosen bit of one output accumulator.
+#[derive(Debug)]
+pub struct SeuInjector {
+    armed: AtomicU64,
+    rng: Mutex<Pcg32>,
+}
+
+impl SeuInjector {
+    pub fn new(seed: u64) -> SeuInjector {
+        SeuInjector {
+            armed: AtomicU64::new(0),
+            rng: Mutex::new(Pcg32::new(seed)),
+        }
+    }
+
+    /// Schedule `n` more single-bit upsets.
+    pub fn arm(&self, n: u64) {
+        self.armed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// If armed, flip one bit of one element and consume one charge.
+    /// Returns whether a flip happened.
+    pub fn maybe_flip(&self, out: &mut [i64]) -> bool {
+        if out.is_empty() {
+            return false;
+        }
+        if self
+            .armed
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+            .is_err()
+        {
+            return false;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        let pos = rng.below_usize(out.len());
+        let bit = rng.below(64);
+        out[pos] = (out[pos] as u64 ^ (1u64 << bit)) as i64;
+        true
+    }
+}
+
+/// Shared runtime state for a [`FaultPlan`]: the global batch counter
+/// (ticked once per dequeued batch, across all workers) and the SEU
+/// injector every worker's scheduler points at.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    next_batch: AtomicU64,
+    seu: std::sync::Arc<SeuInjector>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        let seu = std::sync::Arc::new(SeuInjector::new(plan.seed));
+        FaultState {
+            plan,
+            next_batch: AtomicU64::new(0),
+            seu,
+        }
+    }
+
+    /// The SEU injector to attach to each worker's scheduler.
+    pub fn seu(&self) -> std::sync::Arc<SeuInjector> {
+        self.seu.clone()
+    }
+
+    /// Claim the next global batch index and return its scheduled
+    /// faults. Exactly one call per dequeued batch keeps the numbering
+    /// deterministic in *count* (which worker draws which index may
+    /// vary, but every scheduled fault fires exactly once).
+    pub fn batch_actions(&self) -> Vec<FaultAction> {
+        let n = self.next_batch.fetch_add(1, Ordering::Relaxed);
+        self.plan.actions_at(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse("panic@1, delay@0:250ms, drop@2, seu@3, seed=42").unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.actions_at(1), vec![FaultAction::Panic]);
+        assert_eq!(
+            p.actions_at(0),
+            vec![FaultAction::Delay(Duration::from_millis(250))]
+        );
+        assert_eq!(p.actions_at(2), vec![FaultAction::DropPoolJob]);
+        assert_eq!(p.actions_at(3), vec![FaultAction::Seu]);
+        assert_eq!(p.actions_at(4), vec![]);
+        assert_eq!(p.last_batch(), Some(3));
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(FaultPlan::parse("flood@1").is_err());
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic@x").is_err());
+        assert!(FaultPlan::parse("delay@1:soon").is_err());
+        assert!(FaultPlan::parse("seed=abc").is_err());
+    }
+
+    #[test]
+    fn multiple_actions_same_batch() {
+        let p = FaultPlan::parse("delay@2:10ms,seu@2").unwrap();
+        let acts = p.actions_at(2);
+        assert_eq!(acts.len(), 2);
+        assert!(acts.contains(&FaultAction::Seu));
+    }
+
+    #[test]
+    fn batch_counter_fires_each_fault_once() {
+        let st = FaultState::new(FaultPlan::parse("panic@1,seu@2").unwrap());
+        assert!(st.batch_actions().is_empty()); // batch 0
+        assert_eq!(st.batch_actions(), vec![FaultAction::Panic]); // 1
+        assert_eq!(st.batch_actions(), vec![FaultAction::Seu]); // 2
+        assert!(st.batch_actions().is_empty()); // 3
+    }
+
+    #[test]
+    fn seu_flip_is_single_bit_and_deterministic() {
+        let run = |seed| {
+            let inj = SeuInjector::new(seed);
+            inj.arm(1);
+            let mut out = vec![7i64; 16];
+            assert!(inj.maybe_flip(&mut out));
+            assert!(!inj.maybe_flip(&mut out), "charge consumed");
+            out
+        };
+        let a = run(9);
+        let b = run(9);
+        assert_eq!(a, b, "same seed, same flip");
+        let clean = vec![7i64; 16];
+        let diffs: Vec<usize> = (0..16).filter(|&i| a[i] != clean[i]).collect();
+        assert_eq!(diffs.len(), 1, "exactly one element corrupted");
+        let x = (a[diffs[0]] ^ clean[diffs[0]]) as u64;
+        assert_eq!(x.count_ones(), 1, "exactly one bit flipped");
+    }
+
+    #[test]
+    fn unarmed_injector_never_flips() {
+        let inj = SeuInjector::new(1);
+        let mut out = vec![3i64; 8];
+        assert!(!inj.maybe_flip(&mut out));
+        assert_eq!(out, vec![3i64; 8]);
+    }
+}

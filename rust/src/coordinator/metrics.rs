@@ -2,6 +2,7 @@
 //! packed-pool scheduling telemetry.
 
 use crate::bits::packed::StealStats;
+use crate::coordinator::faults::FaultStats;
 use crate::plan::PlanStats;
 use std::time::Duration;
 
@@ -80,6 +81,29 @@ pub struct Metrics {
     /// on-line calibrations on the request path (zero unless a planner
     /// is attached — DESIGN.md §Planner).
     pub plan: PlanStats,
+    /// Submissions refused at admission (bounded queue full, or the
+    /// server already closed). Their submitters got a typed rejection.
+    pub rejected: u64,
+    /// Queued requests shed for exceeding the `shed_after` age budget
+    /// (answered `Overloaded`, never executed).
+    pub sheds: u64,
+    /// Requests answered `DeadlineExceeded` because their deadline
+    /// passed before (or between) forwards.
+    pub deadline_misses: u64,
+    /// Batch executions that panicked under the worker's supervisor;
+    /// every affected request was answered `WorkerFault` and the
+    /// worker survived.
+    pub panics: u64,
+    /// Worker threads that died outside supervision (join failed at
+    /// shutdown); surviving workers' metrics still merged.
+    pub worker_deaths: u64,
+    /// Low-priority requests served at degraded (narrower) operand
+    /// precision under overload — bit-exact by the `slice_bits`
+    /// clamp argument (DESIGN.md §Resilience).
+    pub degraded: u64,
+    /// Corruption-fault injections (dropped pool jobs, SEU bit-flips)
+    /// and whether each was masked before reaching a response.
+    pub faults: FaultStats,
 }
 
 impl Metrics {
@@ -137,6 +161,26 @@ impl Metrics {
     /// plan-cache hit (0.0 when no planner ran).
     pub fn plan_hit_rate(&self) -> f64 {
         self.plan.hit_rate()
+    }
+
+    /// Fold one worker's metrics into this aggregate: latency samples
+    /// concatenate, counters add. `wall`, `steal`, and `plan` are set
+    /// by the caller (the run clock and the merged `ExecutionReport`
+    /// own those).
+    pub fn absorb(&mut self, w: &Metrics) {
+        self.latency.merge(&w.latency);
+        self.requests += w.requests;
+        self.errors += w.errors;
+        self.batches += w.batches;
+        self.macs += w.macs;
+        self.hw_cycles += w.hw_cycles;
+        self.rejected += w.rejected;
+        self.sheds += w.sheds;
+        self.deadline_misses += w.deadline_misses;
+        self.panics += w.panics;
+        self.worker_deaths += w.worker_deaths;
+        self.degraded += w.degraded;
+        self.faults.merge(&w.faults);
     }
 }
 
@@ -215,6 +259,47 @@ mod tests {
             min_worker_tiles: 0,
         };
         assert_eq!(m.worker_tile_imbalance(), f64::INFINITY);
+    }
+
+    #[test]
+    fn absorb_adds_resilience_counters() {
+        let mut total = Metrics::default();
+        let mut w1 = Metrics::default();
+        w1.latency.record(Duration::from_micros(10));
+        w1.requests = 3;
+        w1.sheds = 2;
+        w1.panics = 1;
+        w1.faults = FaultStats {
+            injected: 2,
+            masked: 2,
+            unmasked: 0,
+        };
+        let mut w2 = Metrics::default();
+        w2.errors = 1;
+        w2.deadline_misses = 4;
+        w2.degraded = 5;
+        w2.faults = FaultStats {
+            injected: 1,
+            masked: 0,
+            unmasked: 1,
+        };
+        total.absorb(&w1);
+        total.absorb(&w2);
+        assert_eq!(total.latency.count(), 1);
+        assert_eq!(total.requests, 3);
+        assert_eq!(total.errors, 1);
+        assert_eq!(total.sheds, 2);
+        assert_eq!(total.deadline_misses, 4);
+        assert_eq!(total.panics, 1);
+        assert_eq!(total.degraded, 5);
+        assert_eq!(
+            total.faults,
+            FaultStats {
+                injected: 3,
+                masked: 2,
+                unmasked: 1
+            }
+        );
     }
 
     #[test]

@@ -14,20 +14,26 @@
 //!   bit-identical) while accounting cycles on the *hardware* timing
 //!   model, i.e. functional–timing co-simulation.
 //! * [`server`] — the threaded request loop with latency metrics.
+//! * [`faults`] — deterministic fault injection (worker panics, batch
+//!   delays, dropped pool jobs, SEU bit-flips) so the resilience layer
+//!   is provable end-to-end (DESIGN.md §Resilience).
 
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod precision;
 pub mod scheduler;
 pub mod server;
 pub mod tiler;
 
-pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use batcher::{Batch, Batcher, BatcherConfig, PushRefused};
+pub use faults::{FaultAction, FaultPlan, FaultState, FaultStats, SeuInjector};
 pub use metrics::{LatencyStats, Metrics};
 pub use precision::PrecisionPolicy;
 pub use scheduler::{Backend, ExecutionReport, Scheduler};
 pub use server::{
-    serve_all, shaped_inputs, InferenceServer, Request, Response, ServerConfig, TensorInput,
+    serve_all, shaped_inputs, DegradePolicy, InferenceServer, Priority, Request, Response,
+    ServeError, ServerConfig, TensorInput,
 };
 pub mod entry;
 pub use entry::{serve_all_entry, simulate_entry, SaParse};

@@ -35,6 +35,7 @@ use crate::bits::packed::{
     KernelFamily, PackedPlanes, PackedPool, PopcountKernel, StealStats, TilePolicy,
 };
 use crate::bits::plane::PlaneKind;
+use crate::coordinator::faults::{FaultStats, SeuInjector};
 use crate::coordinator::tiler::{tile_matmul, TilePlan};
 use crate::nn::layers::{MatmulExec, PackedWeight};
 use crate::nn::matmul_native;
@@ -89,6 +90,10 @@ pub struct ExecutionReport {
     /// below-tier-1 misses, and on-line calibrations (zero unless a
     /// planner is attached — DESIGN.md §Planner).
     pub plan: PlanStats,
+    /// Corruption-fault telemetry: SEU injections on packed-path
+    /// outputs and whether the ABFT row-checksum guard masked them
+    /// (zero unless an injector is armed — DESIGN.md §Resilience).
+    pub faults: FaultStats,
 }
 
 impl ExecutionReport {
@@ -104,6 +109,7 @@ impl ExecutionReport {
         self.plane_slices += o.plane_slices;
         self.steal.merge(&o.steal);
         self.plan.merge(&o.plan);
+        self.faults.merge(&o.faults);
     }
 
     /// Simulated-hardware GOPS at a clock (paper convention).
@@ -139,6 +145,12 @@ pub struct Scheduler {
     /// pre-planner behavior). Shared `Arc` across a server's workers
     /// so every scheduler resolves from one plan cache.
     planner: Option<Arc<Planner>>,
+    /// Armed SEU injector (chaos testing): flips one bit of one packed
+    /// output accumulator per armed charge. `None` in production.
+    seu: Option<Arc<SeuInjector>>,
+    /// Verify packed outputs against the exact ABFT row checksum and
+    /// recompute natively on mismatch (masks SEU-style corruption).
+    abft: bool,
     pub report: ExecutionReport,
 }
 
@@ -157,6 +169,8 @@ impl Scheduler {
             tile_policy: TilePolicy::AUTO,
             family: KernelFamily::Popcount,
             planner: None,
+            seu: None,
+            abft: false,
             report: ExecutionReport::default(),
         }
     }
@@ -193,6 +207,19 @@ impl Scheduler {
     /// instead of the static config (DESIGN.md §Planner).
     pub fn set_planner(&mut self, planner: Arc<Planner>) {
         self.planner = Some(planner);
+    }
+
+    /// Attach a deterministic SEU injector (chaos testing): each armed
+    /// charge flips one PRNG-chosen bit of one packed-path output
+    /// accumulator, modelling a single-event upset in accumulator
+    /// SRAM at the exact point the paper's TMR argument targets.
+    pub fn set_seu_injector(&mut self, seu: Arc<SeuInjector>) {
+        self.seu = Some(seu);
+    }
+
+    /// Enable the ABFT row-checksum guard on packed-path outputs.
+    pub fn set_abft(&mut self, on: bool) {
+        self.abft = on;
     }
 
     /// Execute `A (m×k) · B (k×n)` at `bits` precision. Returns exact
@@ -362,6 +389,33 @@ impl Scheduler {
                     // the planner chose the native loop for this class
                     self.report.native_fallbacks += 1;
                 }
+                let mut out = out;
+                // SEU injection hook: an armed charge lands here, on
+                // the output accumulators, exactly where a radiation
+                // bit-flip in accumulator SRAM would surface
+                let flipped = self.seu.as_ref().map_or(false, |inj| inj.maybe_flip(&mut out));
+                if flipped {
+                    self.report.faults.injected += 1;
+                }
+                if self.abft {
+                    // ABFT row-checksum guard, exact in i64:
+                    // `sum_j C[i,j] == dot(A[i,:], colsum(B))` per row.
+                    // Any single-bit flip shifts one row sum by ±2^b,
+                    // so upsets are always caught, at O(mk+kn+mn)
+                    // checksum cost against the O(mkn) product. On
+                    // mismatch the product is recomputed natively —
+                    // the masked result is bit-identical to fault-free.
+                    if !abft_row_check(a, b, &out, m, k, n) {
+                        out = matmul_native(a, b, m, k, n, bits)?;
+                        anyhow::ensure!(
+                            abft_row_check(a, b, &out, m, k, n),
+                            "matmul corruption persisted across the native recompute"
+                        );
+                        self.report.faults.masked += 1;
+                    }
+                } else if flipped {
+                    self.report.faults.unmasked += 1;
+                }
                 out
             }
             Backend::Simulate => {
@@ -404,6 +458,29 @@ impl Scheduler {
     pub fn as_exec(&mut self) -> impl FnMut(&[i32], &[i32], usize, usize, usize, u32) -> Result<Vec<i64>> + '_ {
         move |a, b, m, k, n, bits| self.matmul(a, b, m, k, n, bits)
     }
+}
+
+/// Algorithm-based fault tolerance check: every output row's sum must
+/// equal the dot product of the corresponding `A` row with `B`'s
+/// column sums — exact in i64 for ≤16-bit operands at any servable
+/// shape (|row dot| ≤ k·n·2³⁰ stays far below i64::MAX).
+fn abft_row_check(a: &[i32], b: &[i32], out: &[i64], m: usize, k: usize, n: usize) -> bool {
+    let mut bsum = vec![0i64; k];
+    for (kk, s) in bsum.iter_mut().enumerate() {
+        *s = b[kk * n..(kk + 1) * n].iter().map(|&v| v as i64).sum();
+    }
+    for i in 0..m {
+        let want: i64 = a[i * k..(i + 1) * k]
+            .iter()
+            .zip(&bsum)
+            .map(|(&av, &bs)| av as i64 * bs)
+            .sum();
+        let got: i64 = out[i * n..(i + 1) * n].iter().sum();
+        if want != got {
+            return false;
+        }
+    }
+    true
 }
 
 impl MatmulExec for Scheduler {
@@ -548,6 +625,69 @@ mod tests {
         assert_eq!(packed.matmul(&a, &b, m, k, n, bits).unwrap(), want);
         assert_eq!(packed.report.packed_execs, 0);
         assert_eq!(packed.report.native_fallbacks, 1);
+    }
+
+    #[test]
+    fn seu_without_abft_escapes_and_is_counted_unmasked() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (4, 8, 6, 6);
+        let mut rng = Pcg32::new(0x5e0);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        let inj = Arc::new(SeuInjector::new(7));
+        s.set_seu_injector(inj.clone());
+        inj.arm(1);
+        let got = s.matmul(&a, &b, m, k, n, bits).unwrap();
+        let diffs = (0..m * n).filter(|&i| got[i] != want[i]).count();
+        assert_eq!(diffs, 1, "one upset corrupts exactly one accumulator");
+        assert_eq!(
+            s.report.faults,
+            FaultStats { injected: 1, masked: 0, unmasked: 1 }
+        );
+        // charge consumed: the next matmul is clean
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.faults.injected, 1);
+    }
+
+    #[test]
+    fn abft_masks_injected_seu_bit_identically() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (4, 8, 6, 6);
+        let mut rng = Pcg32::new(0x5e1);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        let inj = Arc::new(SeuInjector::new(7));
+        s.set_seu_injector(inj.clone());
+        s.set_abft(true);
+        inj.arm(1);
+        assert_eq!(
+            s.matmul(&a, &b, m, k, n, bits).unwrap(),
+            want,
+            "the checksum guard must recompute the corrupted product"
+        );
+        assert_eq!(
+            s.report.faults,
+            FaultStats { injected: 1, masked: 1, unmasked: 0 }
+        );
+    }
+
+    #[test]
+    fn abft_is_quiet_on_clean_runs() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (3, 5, 7, 8);
+        let mut rng = Pcg32::new(0x5e2);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        s.set_abft(true);
+        let got = s.matmul(&a, &b, m, k, n, bits).unwrap();
+        assert_eq!(got, ref_matmul_i64(&a, &b, m, k, n));
+        assert_eq!(s.report.faults, FaultStats::default(), "no false positives");
+        assert!(abft_row_check(&a, &b, &got, m, k, n));
     }
 
     #[test]

@@ -4,7 +4,8 @@
 
 use crate::bits::packed::{KernelFamily, PackedPool, PopcountKernel, TilePolicy};
 use crate::bits::plane::PlaneKind;
-use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
+use crate::coordinator::batcher::{Batcher, BatcherConfig, PushRefused};
+use crate::coordinator::faults::{FaultAction, FaultState};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Backend, ExecutionReport, Scheduler};
 use crate::nn::model::Model;
@@ -12,8 +13,9 @@ use crate::nn::tensor::QTensor;
 use crate::plan::{calibrate_shape, PlanKey, Planner, PlannerMode};
 use crate::sim::array::SaConfig;
 use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A shaped request payload: quantized values on the model's input
 /// grid plus their shape, validated server-side against
@@ -61,23 +63,114 @@ pub fn shaped_inputs(model: &Model, n: usize, seed: u64) -> Vec<TensorInput> {
         .collect()
 }
 
+/// SLA class of a request. Under sustained overload an optional
+/// [`DegradePolicy`] serves `Low` requests at narrower operand
+/// precision (bit-exact by construction — DESIGN.md §Resilience).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    #[default]
+    Normal,
+    Low,
+}
+
 /// One inference request: a quantized, shaped input for the model.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub input: TensorInput,
     pub submitted: Instant,
+    /// Complete-by deadline. Expired requests are answered
+    /// [`ServeError::DeadlineExceeded`] at dequeue, and re-checked
+    /// between per-item forwards so one slow batch-mate cannot spend
+    /// the budget of the rest. `None` = no deadline.
+    pub deadline: Option<Instant>,
+    pub priority: Priority,
 }
+
+impl Request {
+    pub fn new(id: u64, input: impl Into<TensorInput>) -> Request {
+        Request {
+            id,
+            input: input.into(),
+            submitted: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn low_priority(mut self) -> Request {
+        self.priority = Priority::Low;
+        self
+    }
+}
+
+/// Why a request did not produce an output. Every variant is terminal:
+/// a submitter always receives exactly one [`Response`] carrying either
+/// the output or one of these causes — never a bare channel disconnect.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Refused at admission: the bounded queue was at `max_queue`.
+    Rejected { depth: usize },
+    /// Queued longer than the `shed_after` budget and shed unexecuted.
+    Overloaded { waited: Duration },
+    /// The request's deadline passed before its forward pass ran.
+    DeadlineExceeded,
+    /// The worker executing this request's batch panicked; the
+    /// supervisor answered on its behalf and the worker survived.
+    WorkerFault(String),
+    /// Submitted after the server closed to new requests.
+    Closed,
+    /// Validation or execution failure (the pre-resilience error path).
+    Failed(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Rejected { depth } => {
+                write!(f, "rejected at admission: queue full (depth {depth})")
+            }
+            ServeError::Overloaded { waited } => {
+                write!(f, "shed under overload after {}ms in queue", waited.as_millis())
+            }
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            ServeError::WorkerFault(msg) => write!(f, "worker fault: {msg}"),
+            ServeError::Closed => write!(f, "server is closed to new requests"),
+            ServeError::Failed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// One completed inference.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
-    /// Output activations (dequantized logits), or the serving error —
-    /// validation and execution failures reach the submitter with
-    /// their cause instead of a silently dropped channel.
-    pub output: std::result::Result<Vec<f64>, String>,
+    /// Output activations (dequantized logits), or the typed serving
+    /// error — admission refusals, sheds, deadline misses, worker
+    /// faults, and validation/execution failures all reach the
+    /// submitter with their cause instead of a silently dropped
+    /// channel.
+    pub output: std::result::Result<Vec<f64>, ServeError>,
     pub latency: std::time::Duration,
+}
+
+/// Overload-degradation policy: when the queue depth still exceeds
+/// `high_water` after a batch is taken, [`Priority::Low`] requests in
+/// that batch are served by a precision-degraded clone of the model
+/// (operand widths clamped toward `floor_bits`, never below what the
+/// weights/activations need exactly — so outputs stay bit-identical
+/// while narrower planes cut packed work and modelled hw cycles).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DegradePolicy {
+    pub high_water: usize,
+    pub floor_bits: u32,
 }
 
 /// Server tuning.
@@ -124,6 +217,17 @@ pub struct ServerConfig {
     /// shutdown (atomic rename, fingerprint-stamped, merged into any
     /// same-host file already there). `None` = never persist.
     pub plan_persist: Option<std::path::PathBuf>,
+    /// Serve low-priority requests at degraded precision under
+    /// sustained overload. `None` = never degrade.
+    pub degrade: Option<DegradePolicy>,
+    /// Verify every packed matmul output against an exact row-checksum
+    /// (algorithm-based fault tolerance); on mismatch the result is
+    /// recomputed natively, masking SEU-style corruption before it can
+    /// reach a response.
+    pub abft: bool,
+    /// Deterministic fault schedule shared by all workers (chaos
+    /// testing; `None` in production).
+    pub faults: Option<Arc<FaultState>>,
 }
 
 impl ServerConfig {
@@ -142,6 +246,9 @@ impl ServerConfig {
             packed_rsr: false,
             planner: None,
             plan_persist: None,
+            degrade: None,
+            abft: false,
+            faults: None,
         }
     }
 
@@ -186,14 +293,20 @@ impl ServerConfig {
     }
 }
 
+/// A queued request paired with its response channel.
+type Queued = (Request, mpsc::Sender<Response>);
+
 /// A running inference server for one model.
 pub struct InferenceServer {
-    batcher: Arc<Batcher<(Request, mpsc::Sender<Response>)>>,
+    batcher: Arc<Batcher<Queued>>,
     workers: Vec<std::thread::JoinHandle<(ExecutionReport, Metrics)>>,
     /// Plan file the planner's tuned entries are persisted to on
     /// graceful shutdown (`ServerConfig::plan_persist` + an active
     /// planner).
     persist: Option<(std::path::PathBuf, Arc<Planner>)>,
+    /// Submissions refused at admission (answered `Rejected`/`Closed`
+    /// on their own channel, folded into `Metrics.rejected`).
+    rejected: AtomicU64,
 }
 
 impl InferenceServer {
@@ -272,29 +385,62 @@ impl InferenceServer {
                 }
             }
         }
+        // the degraded clone shares the base model's PackedCaches, so
+        // its warm-pack slices the already-packed donors instead of
+        // re-packing; built after the base warm so donors exist
+        let degraded = match &cfg.degrade {
+            Some(d) => {
+                let deg = Arc::new(model.degraded(d.floor_bits));
+                if matches!(cfg.backend, Backend::Packed) {
+                    deg.warm_packed()?;
+                }
+                Some(deg)
+            }
+            None => None,
+        };
         let mut workers = Vec::new();
         for w in 0..cfg.workers {
             let batcher = batcher.clone();
             let model = model.clone();
+            let degraded = degraded.clone();
             let cfg = cfg.clone();
             let pool = packed_pool.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bitsmm-worker-{w}"))
-                    .spawn(move || worker_loop(&model, &cfg, &batcher, pool))?,
+                    .spawn(move || worker_loop(&model, degraded.as_deref(), &cfg, &batcher, pool))?,
             );
         }
         let persist = match (&cfg.plan_persist, cfg.planner.as_ref().filter(|p| p.is_on())) {
             (Some(path), Some(pl)) => Some((path.clone(), pl.clone())),
             _ => None,
         };
-        Ok(InferenceServer { batcher, workers, persist })
+        Ok(InferenceServer {
+            batcher,
+            workers,
+            persist,
+            rejected: AtomicU64::new(0),
+        })
     }
 
     /// Submit a request; the response arrives on the returned channel.
+    /// Admission refusals (bounded queue full, server closed) are
+    /// answered immediately on that same channel with a typed error —
+    /// the caller's `recv()` always yields a terminal [`Response`].
     pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
-        self.batcher.push((req, tx));
+        if let Err(refused) = self.batcher.push((req, tx)) {
+            let (err, (req, tx)) = match refused {
+                PushRefused::Full { item, depth } => (ServeError::Rejected { depth }, item),
+                PushRefused::Closed { item } => (ServeError::Closed, item),
+            };
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Response {
+                id: req.id,
+                output: Err(err),
+                latency: req.submitted.elapsed(),
+            });
+        }
         rx
     }
 
@@ -304,25 +450,31 @@ impl InferenceServer {
     }
 
     /// Stop accepting requests, drain, and collect merged metrics.
+    /// A worker that died outside its batch supervisor is *counted*
+    /// (`Metrics.worker_deaths`), never propagated: the surviving
+    /// workers' telemetry still merges and plan persistence still runs.
     pub fn shutdown(self) -> (ExecutionReport, Metrics) {
         self.batcher.close();
         let mut report = ExecutionReport::default();
         let mut metrics = Metrics::default();
         for w in self.workers {
-            let (r, m) = w.join().expect("worker panicked");
-            report.merge(&r);
-            metrics.latency.merge(&m.latency);
-            metrics.requests += m.requests;
-            metrics.errors += m.errors;
-            metrics.batches += m.batches;
-            metrics.macs += m.macs;
-            metrics.hw_cycles += m.hw_cycles;
-            metrics.wall = metrics.wall.max(m.wall);
+            match w.join() {
+                Ok((r, m)) => {
+                    report.merge(&r);
+                    metrics.absorb(&m);
+                    metrics.wall = metrics.wall.max(m.wall);
+                }
+                Err(_) => metrics.worker_deaths += 1,
+            }
         }
+        metrics.rejected += self.rejected.load(Ordering::Relaxed);
         // single-sourced from the merged report so the two aggregation
         // paths cannot desynchronize
         metrics.steal = report.steal;
         metrics.plan = report.plan;
+        // scheduler-observed corruption faults (SEU path) fold into the
+        // worker-level ledger (dropped pool jobs) — disjoint sources
+        metrics.faults.merge(&report.faults);
         // graceful shutdown persists what this run learned: tuned
         // plans merge into the configured plan file (atomic rename),
         // so the next `--planner static` start serves them as exact
@@ -341,10 +493,67 @@ impl InferenceServer {
     }
 }
 
+/// One admitted request in flight inside a worker: the payload (taken
+/// when it moves into a forward pass), its response channel, and
+/// whether a terminal response was already sent — the ledger the
+/// panic supervisor consults so every submitter gets exactly one
+/// answer no matter where execution died.
+struct Pending {
+    id: u64,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    priority: Priority,
+    input: Option<TensorInput>,
+    tx: mpsc::Sender<Response>,
+    answered: bool,
+}
+
+impl Pending {
+    fn new((req, tx): Queued) -> Pending {
+        Pending {
+            id: req.id,
+            submitted: req.submitted,
+            deadline: req.deadline,
+            priority: req.priority,
+            input: Some(req.input),
+            tx,
+            answered: false,
+        }
+    }
+
+    /// Deliver the terminal response exactly once and account it. The
+    /// supervisor calls this again for items a panic left unanswered;
+    /// the guard makes that a no-op for items already served.
+    fn answer(&mut self, metrics: &mut Metrics, output: std::result::Result<Vec<f64>, ServeError>) {
+        if self.answered {
+            return;
+        }
+        self.answered = true;
+        let latency = self.submitted.elapsed();
+        match &output {
+            Ok(_) => {
+                metrics.latency.record(latency);
+                metrics.requests += 1;
+            }
+            Err(_) => metrics.errors += 1,
+        }
+        let _ = self.tx.send(Response {
+            id: self.id,
+            output,
+            latency,
+        });
+    }
+
+    fn past_deadline(&self, now: Instant) -> bool {
+        self.deadline.map_or(false, |d| now >= d)
+    }
+}
+
 fn worker_loop(
     model: &Model,
+    degraded: Option<&Model>,
     cfg: &ServerConfig,
-    batcher: &Batcher<(Request, mpsc::Sender<Response>)>,
+    batcher: &Batcher<Queued>,
     packed_pool: Option<Arc<PackedPool>>,
 ) -> (ExecutionReport, Metrics) {
     let mut sched = Scheduler::new(cfg.sa, cfg.backend.clone());
@@ -353,12 +562,17 @@ fn worker_loop(
     if cfg.packed_rsr {
         sched.set_kernel_family(KernelFamily::Rsr { seg_words: 0 });
     }
+    let pool_handle = packed_pool.clone();
     if let Some(pool) = packed_pool {
         sched.set_packed_pool(pool);
     }
     if let Some(planner) = cfg.planner.clone().filter(|p| p.is_on()) {
         sched.set_planner(planner);
     }
+    if let Some(faults) = &cfg.faults {
+        sched.set_seu_injector(faults.seu());
+    }
+    sched.set_abft(cfg.abft);
     let mut metrics = Metrics::default();
     let t0 = Instant::now();
     // Per-kind batch assembly: batch-fusable models — rank-1 vector
@@ -372,16 +586,85 @@ fn worker_loop(
     // (DESIGN.md §Serving).
     let fuse = model.fuses_batches();
     while let Some(batch) = batcher.next_batch() {
+        // one global batch index per dequeued batch keeps the fault
+        // schedule deterministic across workers
+        let actions = cfg
+            .faults
+            .as_ref()
+            .map(|f| f.batch_actions())
+            .unwrap_or_default();
+        // shed items never execute but are always answered
+        for (item, waited) in batch.shed {
+            metrics.sheds += 1;
+            Pending::new(item).answer(&mut metrics, Err(ServeError::Overloaded { waited }));
+        }
+        let mut pending: Vec<Pending> = batch.items.into_iter().map(Pending::new).collect();
+        // deadline check at dequeue: a request whose budget is already
+        // spent wastes no matmul
+        let now = Instant::now();
+        for p in &mut pending {
+            if p.past_deadline(now) {
+                metrics.deadline_misses += 1;
+                p.answer(&mut metrics, Err(ServeError::DeadlineExceeded));
+            }
+        }
+        let mut panic_armed = false;
+        for a in &actions {
+            match a {
+                FaultAction::Panic => panic_armed = true,
+                FaultAction::Delay(d) => std::thread::sleep(*d),
+                FaultAction::DropPoolJob => {
+                    if let Some(pool) = &pool_handle {
+                        pool.inject_drop_jobs(1);
+                        // masked by construction: the caller's inline
+                        // steal slot drains every deque, so tiles
+                        // seeded to the dropped slot job are stolen
+                        // and the merge still sees every tile
+                        metrics.faults.injected += 1;
+                        metrics.faults.masked += 1;
+                    }
+                }
+                FaultAction::Seu => {
+                    if let Some(faults) = &cfg.faults {
+                        faults.seu().arm(1);
+                    }
+                }
+            }
+        }
+        if pending.iter().all(|p| p.answered) && !panic_armed {
+            continue; // shed-only or all-expired batch
+        }
         let cycles_before = sched.report.hw_cycles;
         let macs_before = sched.report.macs;
         let served_before = metrics.requests;
-        // the scheduler itself is the executor (not an `as_exec`
-        // closure) so the packed backend sees layer-cached weight
-        // planes and packs each weight once per (layer, precision)
-        if fuse {
-            serve_fused(model, &mut sched, batch, &mut metrics);
-        } else {
-            serve_per_item(model, &mut sched, batch, &mut metrics);
+        // degrade decision per batch: depth measured after this batch
+        // was taken, so only a *sustained* backlog downshifts anyone
+        let deg_for_batch = match (&cfg.degrade, degraded) {
+            (Some(d), Some(deg)) if batcher.depth() > d.high_water => Some(deg),
+            _ => None,
+        };
+        // supervised execution: a panic anywhere in the batch (model
+        // bug, kernel bug, injected fault) is caught here; the ledger
+        // then answers every item the panic left hanging and the
+        // worker lives on to serve the next batch. The scheduler's
+        // internal counters are plain integers — safe to keep using
+        // after an unwind.
+        let exec = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if panic_armed {
+                panic!("injected fault: worker panic (fault plan)");
+            }
+            execute_batch(model, deg_for_batch, &mut sched, &mut pending, &mut metrics, fuse);
+        }));
+        if exec.is_err() {
+            metrics.panics += 1;
+            for p in &mut pending {
+                p.answer(
+                    &mut metrics,
+                    Err(ServeError::WorkerFault(
+                        "worker panicked while executing the batch".into(),
+                    )),
+                );
+            }
         }
         metrics.macs += sched.report.macs - macs_before;
         metrics.hw_cycles += sched.report.hw_cycles - cycles_before;
@@ -397,55 +680,79 @@ fn worker_loop(
     (sched.report, metrics)
 }
 
+/// Route one batch's unanswered items through the model — or, when the
+/// degrade policy fired, split by SLA class: normal traffic keeps full
+/// precision, low-priority traffic runs on the degraded clone (same
+/// integers, narrower planes — `Model::degraded` guarantees bit-exact
+/// outputs, so the split is invisible in the responses).
+fn execute_batch(
+    model: &Model,
+    degraded: Option<&Model>,
+    sched: &mut Scheduler,
+    pending: &mut [Pending],
+    metrics: &mut Metrics,
+    fuse: bool,
+) {
+    match degraded {
+        None => {
+            let all: Vec<usize> = (0..pending.len()).collect();
+            serve_group(model, sched, pending, &all, metrics, fuse);
+        }
+        Some(deg) => {
+            let (low, normal): (Vec<usize>, Vec<usize>) =
+                (0..pending.len()).partition(|&i| pending[i].priority == Priority::Low);
+            if !normal.is_empty() {
+                serve_group(model, sched, pending, &normal, metrics, fuse);
+            }
+            if !low.is_empty() {
+                metrics.degraded += low.iter().filter(|&&i| !pending[i].answered).count() as u64;
+                serve_group(deg, sched, pending, &low, metrics, fuse);
+            }
+        }
+    }
+}
+
+fn serve_group(
+    model: &Model,
+    sched: &mut Scheduler,
+    pending: &mut [Pending],
+    idxs: &[usize],
+    metrics: &mut Metrics,
+    fuse: bool,
+) {
+    if fuse {
+        serve_fused(model, sched, pending, idxs, metrics);
+    } else {
+        serve_per_item(model, sched, pending, idxs, metrics);
+    }
+}
+
 /// Shape + range validation of one request against the model contract.
 /// Rejections become per-request error responses, never batch drops.
-fn validate_input(model: &Model, req: &Request) -> Result<()> {
+fn validate_input(model: &Model, id: u64, input: &TensorInput) -> Result<()> {
     anyhow::ensure!(
-        req.input.shape == model.input_shape,
+        input.shape == model.input_shape,
         "request {}: input shape {:?} does not match model input shape {:?}",
-        req.id,
-        req.input.shape,
+        id,
+        input.shape,
         model.input_shape
     );
     anyhow::ensure!(
-        req.input.data.len() == req.input.numel(),
+        input.data.len() == input.numel(),
         "request {}: {} values for shape {:?}",
-        req.id,
-        req.input.data.len(),
-        req.input.shape
+        id,
+        input.data.len(),
+        input.shape
     );
     let lo = crate::bits::twos::min_value(model.input_bits);
     let hi = crate::bits::twos::max_value(model.input_bits);
     anyhow::ensure!(
-        req.input.data.iter().all(|v| (lo..=hi).contains(v)),
+        input.data.iter().all(|v| (lo..=hi).contains(v)),
         "request {}: values exceed the model's {}-bit input range",
-        req.id,
+        id,
         model.input_bits
     );
     Ok(())
-}
-
-/// Deliver one response and account it.
-fn respond(
-    metrics: &mut Metrics,
-    id: u64,
-    submitted: Instant,
-    tx: &mpsc::Sender<Response>,
-    output: std::result::Result<Vec<f64>, String>,
-) {
-    let latency = submitted.elapsed();
-    match &output {
-        Ok(_) => {
-            metrics.latency.record(latency);
-            metrics.requests += 1;
-        }
-        Err(_) => metrics.errors += 1,
-    }
-    let _ = tx.send(Response {
-        id,
-        output,
-        latency,
-    });
 }
 
 /// Fused assembly: stack every valid request into one forward pass —
@@ -457,20 +764,30 @@ fn respond(
 fn serve_fused(
     model: &Model,
     sched: &mut Scheduler,
-    batch: Batch<(Request, mpsc::Sender<Response>)>,
+    pending: &mut [Pending],
+    idxs: &[usize],
     metrics: &mut Metrics,
 ) {
     let numel: usize = model.input_shape.iter().product();
-    let mut stacked = Vec::with_capacity(batch.items.len() * numel);
-    let mut valid: Vec<(&Request, &mpsc::Sender<Response>)> =
-        Vec::with_capacity(batch.items.len());
-    for (req, tx) in &batch.items {
-        match validate_input(model, req) {
+    let mut stacked = Vec::with_capacity(idxs.len() * numel);
+    let mut valid: Vec<usize> = Vec::with_capacity(idxs.len());
+    for &i in idxs {
+        if pending[i].answered {
+            continue;
+        }
+        let check = {
+            let input = pending[i]
+                .input
+                .as_ref()
+                .expect("unanswered pending item retains its payload");
+            validate_input(model, pending[i].id, input)
+        };
+        match check {
             Ok(()) => {
-                stacked.extend_from_slice(&req.input.data);
-                valid.push((req, tx));
+                stacked.extend_from_slice(&pending[i].input.as_ref().unwrap().data);
+                valid.push(i);
             }
-            Err(e) => respond(metrics, req.id, req.submitted, tx, Err(format!("{e:#}"))),
+            Err(e) => pending[i].answer(metrics, Err(ServeError::Failed(format!("{e:#}")))),
         }
     }
     if valid.is_empty() {
@@ -485,18 +802,18 @@ fn serve_fused(
     match run {
         Ok(y) => {
             let out_dim = y.numel() / rows;
-            for (i, (req, tx)) in valid.iter().enumerate() {
-                let output = y.data[i * out_dim..(i + 1) * out_dim]
+            for (pos, &i) in valid.iter().enumerate() {
+                let output = y.data[pos * out_dim..(pos + 1) * out_dim]
                     .iter()
                     .map(|&q| q as f64 * y.scale)
                     .collect();
-                respond(metrics, req.id, req.submitted, tx, Ok(output));
+                pending[i].answer(metrics, Ok(output));
             }
         }
         Err(e) => {
-            let msg = format!("{e:#}");
-            for (req, tx) in &valid {
-                respond(metrics, req.id, req.submitted, tx, Err(msg.clone()));
+            let err = ServeError::Failed(format!("{e:#}"));
+            for &i in &valid {
+                pending[i].answer(metrics, Err(err.clone()));
             }
         }
     }
@@ -505,22 +822,34 @@ fn serve_fused(
 /// Per-item assembly (token matrices and any model containing
 /// attention): each request runs its own forward pass, so attention's
 /// data-dependent `ctx_scale` requantization never mixes requests, and
-/// one request's failure cannot take its batch-mates down. The batch
-/// is consumed so each payload *moves* into its forward pass — no
-/// per-request copy.
+/// one request's failure cannot take its batch-mates down. Each
+/// payload *moves* into its forward pass — no per-request copy. The
+/// deadline is re-checked before every forward: a slow batch-mate
+/// earlier in the loop must not silently spend the budget of the rest.
 fn serve_per_item(
     model: &Model,
     sched: &mut Scheduler,
-    batch: Batch<(Request, mpsc::Sender<Response>)>,
+    pending: &mut [Pending],
+    idxs: &[usize],
     metrics: &mut Metrics,
 ) {
-    for (req, tx) in batch.items {
-        let (id, submitted) = (req.id, req.submitted);
-        let run = match validate_input(model, &req) {
-            Ok(()) => run_one(model, sched, req.input),
-            Err(e) => Err(e),
-        };
-        respond(metrics, id, submitted, &tx, run.map_err(|e| format!("{e:#}")));
+    for &i in idxs {
+        if pending[i].answered {
+            continue;
+        }
+        if pending[i].past_deadline(Instant::now()) {
+            metrics.deadline_misses += 1;
+            pending[i].answer(metrics, Err(ServeError::DeadlineExceeded));
+            continue;
+        }
+        let id = pending[i].id;
+        let input = pending[i]
+            .input
+            .take()
+            .expect("unanswered pending item retains its payload");
+        let run =
+            validate_input(model, id, &input).and_then(|()| run_one(model, sched, input));
+        pending[i].answer(metrics, run.map_err(|e| ServeError::Failed(format!("{e:#}"))));
     }
 }
 
@@ -544,17 +873,16 @@ pub fn serve_all<I: Into<TensorInput>>(
     let rxs: Vec<_> = inputs
         .into_iter()
         .enumerate()
-        .map(|(i, input)| {
-            server.submit(Request {
-                id: i as u64,
-                input: input.into(),
-                submitted: Instant::now(),
-            })
-        })
+        .map(|(i, input)| server.submit(Request::new(i as u64, input)))
         .collect();
     let mut responses = Vec::with_capacity(rxs.len());
-    for rx in rxs {
-        responses.push(rx.recv()?);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        // the resilience contract says this cannot happen — every
+        // admitted or refused request gets a terminal Response — so a
+        // disconnect here is a bug worth naming, not a bare RecvError
+        responses.push(rx.recv().map_err(|_| {
+            anyhow::anyhow!("request {i}: response channel closed without a terminal response")
+        })?);
     }
     let (report, metrics) = server.shutdown();
     responses.sort_by_key(|r| r.id);
@@ -604,6 +932,7 @@ mod tests {
         cfg.batcher = BatcherConfig {
             max_batch: 16,
             linger: std::time::Duration::from_millis(20),
+            ..BatcherConfig::default()
         };
         let (_, report, metrics) = serve_all(model, cfg, inputs(16, 64, 8)).unwrap();
         // ideally one batch of 16 → 3 matmuls; allow some fragmentation
@@ -717,21 +1046,13 @@ mod tests {
         let cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
         let server = InferenceServer::start(model, cfg).unwrap();
         // wrong shape: a 32-vector against the 64-input model
-        let rx = server.submit(Request {
-            id: 0,
-            input: vec![1i32; 32].into(),
-            submitted: Instant::now(),
-        });
+        let rx = server.submit(Request::new(0, vec![1i32; 32]));
         let r = rx.recv().unwrap();
-        let err = r.output.unwrap_err();
+        let err = r.output.unwrap_err().to_string();
         assert!(err.contains("shape"), "cause must name the shape: {err}");
         // out-of-range values against the 8-bit input contract
-        let rx = server.submit(Request {
-            id: 1,
-            input: vec![300i32; 64].into(),
-            submitted: Instant::now(),
-        });
-        let err = rx.recv().unwrap().output.unwrap_err();
+        let rx = server.submit(Request::new(1, vec![300i32; 64]));
+        let err = rx.recv().unwrap().output.unwrap_err().to_string();
         assert!(err.contains("8-bit"), "cause must name the range: {err}");
         let (_, metrics) = server.shutdown();
         assert_eq!((metrics.requests, metrics.errors), (0, 2));
@@ -749,7 +1070,7 @@ mod tests {
         let cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
         let (resp, _, metrics) = serve_all(model, cfg, inputs(3, 64, 8)).unwrap();
         for r in &resp {
-            let err = r.output.as_ref().unwrap_err();
+            let err = r.output.as_ref().unwrap_err().to_string();
             assert!(err.contains("linear dims"), "cause must reach the caller: {err}");
         }
         assert_eq!((metrics.requests, metrics.errors), (0, 3));
@@ -783,6 +1104,7 @@ mod tests {
         solo_cfg.batcher = BatcherConfig {
             max_batch: 1,
             linger: std::time::Duration::from_millis(1),
+            ..BatcherConfig::default()
         };
         let (solo, solo_rep, _) = serve_all(model.clone(), solo_cfg, ins.clone()).unwrap();
         let mut fused_cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
@@ -790,6 +1112,7 @@ mod tests {
         fused_cfg.batcher = BatcherConfig {
             max_batch: 6,
             linger: std::time::Duration::from_millis(30),
+            ..BatcherConfig::default()
         };
         let (fused, fused_rep, metrics) = serve_all(model.clone(), fused_cfg, ins).unwrap();
         assert_eq!(metrics.errors, 0);
@@ -879,6 +1202,179 @@ mod tests {
         let n = q.load_file(&path).unwrap();
         assert!(n > 0, "warm-start calibrations were persisted");
         std::fs::remove_file(&path).unwrap();
+    }
+
+    fn fault_cfg(spec: &str, backend: Backend) -> ServerConfig {
+        let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), backend);
+        cfg.workers = 1;
+        cfg.faults = Some(Arc::new(FaultState::new(
+            crate::coordinator::faults::FaultPlan::parse(spec).unwrap(),
+        )));
+        cfg
+    }
+
+    #[test]
+    fn expired_deadline_answered_at_dequeue() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        cfg.workers = 1;
+        let server = InferenceServer::start(model, cfg).unwrap();
+        let input: TensorInput = vec![1i32; 64].into();
+        let rx = server.submit(Request::new(0, input.clone()).with_deadline(Instant::now()));
+        let r = rx.recv().unwrap();
+        assert_eq!(r.output, Err(ServeError::DeadlineExceeded));
+        // a generous deadline still serves
+        let rx = server.submit(
+            Request::new(1, input).with_deadline(Instant::now() + Duration::from_secs(30)),
+        );
+        assert!(rx.recv().unwrap().output.is_ok());
+        let (_, metrics) = server.shutdown();
+        assert_eq!(metrics.deadline_misses, 1);
+        assert_eq!((metrics.requests, metrics.errors), (1, 1));
+    }
+
+    #[test]
+    fn queue_full_submissions_get_typed_rejection() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        // batch 0 stalls 250ms while 12 instant submissions hit a
+        // 2-deep queue: rejections are guaranteed regardless of how
+        // the worker races the submitter
+        let mut cfg = fault_cfg("delay@0:250ms", Backend::Native);
+        cfg.batcher = BatcherConfig {
+            max_batch: 2,
+            linger: Duration::from_millis(1),
+            max_queue: 2,
+            ..BatcherConfig::default()
+        };
+        let server = InferenceServer::start(model, cfg).unwrap();
+        let rxs: Vec<_> = (0..12)
+            .map(|i| server.submit(Request::new(i, vec![1i32; 64])))
+            .collect();
+        let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert_eq!(responses.len(), 12, "every submitter got a terminal answer");
+        let rejected = responses
+            .iter()
+            .filter(|r| matches!(r.output, Err(ServeError::Rejected { .. })))
+            .count();
+        assert!(rejected >= 1, "bounded queue must refuse the flood");
+        let (_, metrics) = server.shutdown();
+        assert_eq!(metrics.rejected, rejected as u64);
+        assert_eq!(metrics.requests + metrics.errors, 12 - metrics.rejected);
+    }
+
+    #[test]
+    fn overaged_requests_shed_with_overload_error() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        // batch 0 stalls 200ms; the leftover queue ages past the 50ms
+        // budget and must be shed, not executed
+        let mut cfg = fault_cfg("delay@0:200ms", Backend::Native);
+        cfg.batcher = BatcherConfig {
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            shed_after: Some(Duration::from_millis(50)),
+            ..BatcherConfig::default()
+        };
+        let server = InferenceServer::start(model, cfg).unwrap();
+        let rxs: Vec<_> = (0..8)
+            .map(|i| server.submit(Request::new(i, vec![1i32; 64])))
+            .collect();
+        let responses: Vec<Response> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let shed = responses
+            .iter()
+            .filter(|r| matches!(r.output, Err(ServeError::Overloaded { .. })))
+            .count();
+        assert!(shed >= 1, "items older than the budget must shed");
+        let (_, metrics) = server.shutdown();
+        assert_eq!(metrics.sheds, shed as u64);
+        for r in &responses {
+            if let Err(ServeError::Overloaded { waited }) = &r.output {
+                assert!(*waited >= Duration::from_millis(50), "shed carries real wait");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panic_is_supervised_and_survivors_stay_bit_identical() {
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let ins = inputs(8, 64, 8);
+        // fault-free baseline
+        let cfg_ok = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Native);
+        let (want, _, _) = serve_all(model.clone(), cfg_ok, ins.clone()).unwrap();
+        // batch 0 panics under the supervisor
+        let mut cfg = fault_cfg("panic@0", Backend::Native);
+        cfg.batcher = BatcherConfig {
+            max_batch: 4,
+            linger: Duration::from_millis(5),
+            ..BatcherConfig::default()
+        };
+        let (got, _, metrics) = serve_all(model, cfg, ins).unwrap();
+        assert_eq!(metrics.panics, 1, "exactly the scheduled panic fired");
+        assert_eq!(got.len(), 8, "server survived and answered everyone");
+        let mut faulted = 0;
+        for r in &got {
+            match &r.output {
+                Err(ServeError::WorkerFault(_)) => faulted += 1,
+                Ok(out) => {
+                    let base = want[r.id as usize].output.as_ref().unwrap();
+                    assert_eq!(out, base, "non-faulted request {} diverged", r.id);
+                }
+                other => panic!("unexpected outcome for {}: {other:?}", r.id),
+            }
+        }
+        assert!(faulted >= 1, "the panicked batch answered its requests");
+        assert_eq!(metrics.errors, faulted as u64);
+    }
+
+    #[test]
+    fn degraded_low_priority_serving_is_bit_identical() {
+        // headroom model: 4-bit-valued weights declared at 8 bits, so
+        // the degrade clamp has real width to reclaim
+        let model = Arc::new(crate::nn::model::mlp_headroom_zoo(3));
+        let input: TensorInput = shaped_inputs(&model, 1, 0xdead).remove(0);
+        // baseline at full precision, no degrade
+        let mut base_cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+        base_cfg.workers = 1;
+        base_cfg.packed_threads = 1;
+        let base_server = InferenceServer::start(model.clone(), base_cfg).unwrap();
+        let want = base_server
+            .submit(Request::new(0, input.clone()))
+            .recv()
+            .unwrap()
+            .output
+            .unwrap();
+        base_server.shutdown();
+        // overloaded server with a degrade policy: batch 0 stalls so a
+        // backlog builds, and every request is low-priority
+        let mut cfg = fault_cfg("delay@0:150ms", Backend::Packed);
+        cfg.packed_threads = 1;
+        cfg.batcher = BatcherConfig {
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            ..BatcherConfig::default()
+        };
+        cfg.degrade = Some(DegradePolicy {
+            high_water: 0,
+            floor_bits: 4,
+        });
+        let server = InferenceServer::start(model, cfg).unwrap();
+        let rxs: Vec<_> = (0..12)
+            .map(|i| server.submit(Request::new(i, input.clone()).low_priority()))
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert_eq!(
+                r.output.as_ref().unwrap(),
+                &want,
+                "degraded serving changed bits for request {}",
+                r.id
+            );
+        }
+        let (_, metrics) = server.shutdown();
+        assert!(
+            metrics.degraded >= 1,
+            "backlog above high-water must downshift low-priority traffic"
+        );
+        assert_eq!(metrics.errors, 0);
     }
 
     #[test]

@@ -106,13 +106,42 @@ fn cmd_launch(argv: &[String]) -> Result<()> {
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve", "run the inference server on a zoo model")
-        .opt("model", "zoo model: mlp|cnn|attn", Some("mlp"))
+        .opt("model", "zoo model: mlp|mlp-headroom|cnn|attn", Some("mlp"))
         .opt("backend", "native|packed|simulate|pjrt", Some("native"))
         .opt("sa", "SA geometry colsxrows (paper order)", Some("16x4"))
         .opt("variant", "MAC variant booth|sbmwc", Some("booth"))
         .opt("requests", "number of requests to serve", Some("64"))
         .opt("workers", "worker threads", Some("2"))
         .opt("batch", "max batch size", Some("8"))
+        .opt(
+            "max-queue",
+            "admission control: refuse submissions beyond this queue depth (0 = unbounded)",
+            Some("0"),
+        )
+        .opt(
+            "shed-after-ms",
+            "shed queued requests older than this before executing a batch (0 = never)",
+            Some("0"),
+        )
+        .opt(
+            "degrade-high-water",
+            "queue depth beyond which low-priority requests serve at degraded precision (0 = off)",
+            Some("0"),
+        )
+        .opt(
+            "degrade-bits",
+            "precision floor for degraded serving (clamped so outputs stay bit-identical)",
+            Some("4"),
+        )
+        .switch(
+            "abft",
+            "verify packed matmuls with an exact row-checksum; recompute on mismatch",
+        )
+        .opt(
+            "fault-plan",
+            "deterministic fault schedule, e.g. 'panic@1,drop@2,seu@3,delay@0:50ms,seed=42'",
+            None,
+        )
         .opt(
             "packed-threads",
             "packed-kernel threads shared across workers (0 = auto: cores/workers)",

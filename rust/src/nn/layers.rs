@@ -122,7 +122,12 @@ impl PackedCache {
     /// only when neither exists — a fresh pack (at most once per
     /// `(slot, bits)`).
     pub fn get_or_pack(&self, slot: u32, w: &QTensor, bits: u32) -> Result<Arc<PackedPlanes>> {
-        let mut cache = self.planes.lock().expect("packed cache poisoned");
+        // recover a poisoned lock: a supervised worker panic cannot
+        // leave a half-inserted entry (insertion is the last step), so
+        // the map is always consistent — refusing to serve every later
+        // request over a dead worker's poison flag would turn one
+        // masked fault into a total outage
+        let mut cache = self.planes.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(p) = cache.get(&(slot, bits)) {
             return Ok(p.clone());
         }

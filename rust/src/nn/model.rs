@@ -176,6 +176,42 @@ impl Model {
         Ok(warmed)
     }
 
+    /// A precision-degraded clone for overload shedding-by-quality
+    /// (DESIGN.md §Resilience): every linear layer's operand precision
+    /// is narrowed toward `floor_bits`, clamped so the downshift is
+    /// **bit-exact** — never below the incoming activation width (the
+    /// forward would assert), never below the width the weight values
+    /// actually need ([`crate::bits::packed::PackedPlanes::needed_bits`];
+    /// truncating live values would change results), and never above
+    /// the layer's declared width (degrading must not widen). Within
+    /// those clamps the integer matmul is exact at any width and
+    /// `out_scale`/`out_bits` are untouched, so outputs are
+    /// bit-identical to the base model — only the plane count (and so
+    /// the bit-serial cycle cost) drops. Conv/attention layers pass
+    /// through un-degraded (their transposed-kernel caches are keyed to
+    /// the declared width); the clone shares all packed caches, so its
+    /// narrower planes are zero-copy slices of already-warm packs.
+    pub fn degraded(&self, floor_bits: u32) -> Model {
+        use crate::bits::packed::PackedPlanes;
+        let mut m = self.clone();
+        let mut act_bits = self.input_bits;
+        for layer in &mut m.layers {
+            match layer {
+                Layer::Linear(l) => {
+                    let need = PackedPlanes::needed_bits(&l.w.data);
+                    let nb = floor_bits.max(act_bits).max(need).min(l.bits);
+                    l.bits = nb;
+                    l.w.bits = nb;
+                    act_bits = l.out_bits;
+                }
+                Layer::Conv2d(l) => act_bits = l.out_bits,
+                Layer::Attention(l) => act_bits = l.out_bits,
+                Layer::Flatten => {}
+            }
+        }
+        m
+    }
+
     /// Static MAC census (per-layer precision included) for `batch`
     /// inputs. `batch` means stacked rows for rank-1 (vector) models
     /// and independent items for image/token models, matching how the
@@ -279,6 +315,40 @@ pub fn mlp_zoo(seed: u64) -> Model {
     }
 }
 
+/// MLP 64→32→10 with deliberate precision *headroom*: every weight
+/// value fits in 4 bits but the layers declare 8 — so a degrade policy
+/// ([`Model::degraded`]) can legally narrow them to 4-bit planes while
+/// staying bit-identical. The activations are 4-bit end to end
+/// (`input_bits` 4, `out_bits` 4) so the activation clamp never blocks
+/// the downshift. This is the chaos/degrade demo workload.
+pub fn mlp_headroom_zoo(seed: u64) -> Model {
+    let mut rng = Pcg32::new(seed);
+    let mk = |rng: &mut Pcg32, d_in, d_out, out_scale, relu| {
+        // values drawn from the 4-bit grid, declared at 8 bits
+        let mut w = rand_q(rng, vec![d_in, d_out], 4, 0.02);
+        w.bits = 8;
+        Layer::Linear(LinearLayer {
+            w,
+            bias: (0..d_out).map(|_| rng.range_i32(-16, 16) as i64).collect(),
+            bits: 8,
+            relu,
+            out_scale,
+            out_bits: 4,
+            packed: PackedCache::new(),
+        })
+    };
+    Model {
+        name: "mlp-headroom-64-32-10".into(),
+        layers: vec![
+            mk(&mut rng, 64, 32, 0.1, true),
+            mk(&mut rng, 32, 10, 0.2, false),
+        ],
+        input_shape: vec![64],
+        input_bits: 4,
+        input_scale: 0.05,
+    }
+}
+
 /// Small CNN over 1×16×16 tiles: conv3x3(8) → conv3x3(16, stride 2) →
 /// flatten → linear(10). The cloud-screening-style payload workload.
 /// Each layer's `out_bits` matches the next layer's operand precision,
@@ -349,9 +419,12 @@ pub fn attention_zoo(seed: u64) -> Model {
 pub fn zoo_model(name: &str, seed: u64) -> Result<Model> {
     Ok(match name {
         "mlp" => mlp_zoo(seed),
+        "mlp-headroom" => mlp_headroom_zoo(seed),
         "cnn" => cnn_zoo(seed),
         "attn" | "attention" => attention_zoo(seed),
-        other => anyhow::bail!("unknown zoo model '{other}' (expected mlp|cnn|attn)"),
+        other => {
+            anyhow::bail!("unknown zoo model '{other}' (expected mlp|mlp-headroom|cnn|attn)")
+        }
     })
 }
 
@@ -573,6 +646,68 @@ mod tests {
         if let Layer::Attention(l) = &attn.layers[0] {
             assert_eq!(l.packed.packs(), 4);
         }
+    }
+
+    #[test]
+    fn degraded_headroom_model_narrows_and_stays_bit_identical() {
+        let base = mlp_headroom_zoo(5);
+        let deg = base.degraded(4);
+        for (b, d) in base.layers.iter().zip(&deg.layers) {
+            let (Layer::Linear(b), Layer::Linear(d)) = (b, d) else {
+                panic!("headroom zoo is all-linear");
+            };
+            assert_eq!(b.bits, 8, "base declares headroom");
+            assert_eq!(d.bits, 4, "degrade takes it");
+            assert_eq!(d.w.bits, 4, "weight declaration follows the layer");
+            assert_eq!(b.w.data, d.w.data, "values untouched");
+        }
+        // bit-identical forwards at the narrowed precision
+        let mut rng = Pcg32::new(41);
+        let x = QTensor::new(
+            (0..64).map(|_| rng.range_i32(-8, 7)).collect(),
+            vec![1, 64],
+            0.05,
+            4,
+        )
+        .unwrap();
+        let y_base = base.forward(&x, &mut exec()).unwrap();
+        let y_deg = deg.forward(&x, &mut exec()).unwrap();
+        assert_eq!(y_base.data, y_deg.data);
+        assert_eq!(y_base.bits, y_deg.bits);
+        // the degraded clone shares the packed caches: warming the base
+        // then the clone slices planes instead of re-packing
+        assert_eq!(base.warm_packed().unwrap(), 2);
+        assert_eq!(deg.warm_packed().unwrap(), 2);
+        for (b, d) in base.layers.iter().zip(&deg.layers) {
+            let (Layer::Linear(b), Layer::Linear(d)) = (b, d) else {
+                unreachable!()
+            };
+            assert_eq!(b.packed.packs(), 1, "one real pack per weight");
+            assert_eq!(d.packed.packs(), 1, "clone shares it");
+            assert_eq!(d.packed.plane_reuses(), 1, "4-bit view sliced, not packed");
+        }
+    }
+
+    #[test]
+    fn degraded_clamps_never_truncate_or_widen() {
+        // mlp_zoo has zero headroom: layer widths already equal what the
+        // activations and weight values need, so degrading is a no-op
+        let base = mlp_zoo(1);
+        let deg = base.degraded(1);
+        let widths = |m: &Model| {
+            m.layers
+                .iter()
+                .map(|l| l.bits())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(widths(&deg), widths(&base), "no headroom → no change");
+        // a floor above the declared width must not widen the layer
+        let wide = mlp_headroom_zoo(5).degraded(12);
+        assert!(wide.layers.iter().all(|l| l.bits() == 8));
+        // the activation clamp: layer 1 of mlp_zoo consumes 8-bit input,
+        // so even with headroom its floor could never drop below 8
+        let deg8 = mlp_zoo(1).degraded(2);
+        assert_eq!(deg8.layers[0].bits(), 8);
     }
 
     #[test]

@@ -3,16 +3,16 @@
 //! (malformed requests must not take the server down).
 
 use bitsmm::coordinator::{
-    serve_all, shaped_inputs, Backend, BatcherConfig, InferenceServer, Request, ServerConfig,
+    serve_all, shaped_inputs, Backend, BatcherConfig, FaultPlan, FaultState, InferenceServer,
+    Request, ServeError, ServerConfig,
 };
-use bitsmm::nn::model::{mlp_zoo, zoo_model};
+use bitsmm::nn::model::{mlp_headroom_zoo, mlp_zoo, zoo_model};
 use bitsmm::nn::Layer;
 use bitsmm::plan::{Planner, PlannerMode};
 use bitsmm::prng::Pcg32;
 use bitsmm::sim::array::SaConfig;
 use bitsmm::sim::mac_common::MacVariant;
 use std::sync::Arc;
-use std::time::Instant;
 
 fn inputs(n: usize, seed: u64) -> Vec<Vec<i32>> {
     let mut rng = Pcg32::new(seed);
@@ -27,6 +27,7 @@ fn base_cfg(workers: usize) -> ServerConfig {
     cfg.batcher = BatcherConfig {
         max_batch: 8,
         linger: std::time::Duration::from_millis(1),
+        ..BatcherConfig::default()
     };
     cfg
 }
@@ -61,32 +62,21 @@ fn malformed_request_gets_error_response_not_silence() {
     let server = InferenceServer::start(model, base_cfg(1)).unwrap();
     // out-of-range activation (300 exceeds 8-bit): the submitter gets
     // an error response carrying the cause, not an opaque RecvError
-    let bad_rx = server.submit(Request {
-        id: 0,
-        input: vec![300; 64].into(),
-        submitted: Instant::now(),
-    });
+    let bad_rx = server.submit(Request::new(0, vec![300; 64]));
     let bad = bad_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
-    let err = bad.output.unwrap_err();
+    let err = bad.output.unwrap_err().to_string();
     assert!(err.contains("8-bit"), "error must name the cause: {err}");
     // a wrong-shape payload also surfaces its cause
-    let short_rx = server.submit(Request {
-        id: 1,
-        input: vec![1; 32].into(),
-        submitted: Instant::now(),
-    });
-    let err = short_rx
+    let err = server
+        .submit(Request::new(1, vec![1; 32]))
         .recv_timeout(std::time::Duration::from_secs(5))
         .unwrap()
         .output
-        .unwrap_err();
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("shape"), "error must name the cause: {err}");
     // malformed batch-mates never take a valid request down
-    let good_rx = server.submit(Request {
-        id: 2,
-        input: vec![1; 64].into(),
-        submitted: Instant::now(),
-    });
+    let good_rx = server.submit(Request::new(2, vec![1; 64]));
     let good = good_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
     assert_eq!(good.id, 2);
     assert!(good.output.is_ok());
@@ -103,11 +93,7 @@ fn queue_depth_reflects_backlog() {
     let server = InferenceServer::start(model, base_cfg(1)).unwrap();
     let mut rxs = Vec::new();
     for (i, input) in inputs(64, 3).into_iter().enumerate() {
-        rxs.push(server.submit(Request {
-            id: i as u64,
-            input: input.into(),
-            submitted: Instant::now(),
-        }));
+        rxs.push(server.submit(Request::new(i as u64, input)));
     }
     // depth is a point-in-time observation; it must never exceed the
     // submitted count and must drain to zero by shutdown
@@ -256,13 +242,7 @@ fn warm_start_packs_every_weight_before_first_submit() {
         let rxs: Vec<_> = inputs
             .into_iter()
             .enumerate()
-            .map(|(i, input)| {
-                server.submit(Request {
-                    id: i as u64,
-                    input,
-                    submitted: Instant::now(),
-                })
-            })
+            .map(|(i, input)| server.submit(Request::new(i as u64, input)))
             .collect();
         for rx in rxs {
             assert!(rx.recv().unwrap().output.is_ok(), "{name}");
@@ -361,12 +341,14 @@ fn zoo_models_are_batch_invariant() {
         solo_cfg.batcher = BatcherConfig {
             max_batch: 1,
             linger: std::time::Duration::from_millis(1),
+            ..BatcherConfig::default()
         };
         let (solo, _, _) = serve_all(model.clone(), solo_cfg, ins.clone()).unwrap();
         let mut fused_cfg = base_cfg(1);
         fused_cfg.batcher = BatcherConfig {
             max_batch: 6,
             linger: std::time::Duration::from_millis(20),
+            ..BatcherConfig::default()
         };
         let (fused, _, metrics) = serve_all(model, fused_cfg, ins).unwrap();
         assert_eq!(metrics.requests, 6, "{name}");
@@ -434,4 +416,115 @@ fn conv_and_attention_weights_pack_once_under_multiworker_serving() {
     // four projection slots (q/k/v/o), one pack each, zero re-packs
     assert_eq!(l.packed.packs(), 4, "q/k/v/o must pack exactly once each");
     assert_eq!(l.packed.plane_reuses(), 0);
+}
+
+/// Chaos drill through the public API: a deterministic fault plan
+/// (worker panic, dropped pool job, SEU bit-flip) against the packed
+/// backend with ABFT on. The server must survive, every submitter must
+/// get a terminal typed answer, and every request that still produced
+/// an output must be bit-identical to a fault-free baseline — the
+/// tentpole resilience contract end to end.
+#[test]
+fn injected_faults_are_survived_masked_and_bit_identical() {
+    let model = Arc::new(mlp_headroom_zoo(3));
+    let ins = shaped_inputs(&model, 24, 42);
+    let cfg = |faulty: bool| {
+        let mut cfg = base_cfg(1); // one worker: deterministic batch ids
+        cfg.backend = Backend::Packed;
+        cfg.packed_threads = 2;
+        cfg.batcher.max_batch = 4;
+        if faulty {
+            cfg.abft = true;
+            cfg.faults = Some(Arc::new(FaultState::new(
+                FaultPlan::parse("panic@1,drop@2,seu@3,seed=42").unwrap(),
+            )));
+        }
+        cfg
+    };
+    let (baseline, _, clean) = serve_all(model.clone(), cfg(false), ins.clone()).unwrap();
+    assert_eq!(clean.panics, 0);
+    assert!(baseline.iter().all(|r| r.output.is_ok()));
+
+    let (responses, _, metrics) = serve_all(model, cfg(true), ins).unwrap();
+    assert_eq!(responses.len(), 24, "every submitter got a terminal answer");
+    let mut ok = 0usize;
+    let mut faulted = 0usize;
+    for (want, got) in baseline.iter().zip(&responses) {
+        assert_eq!(want.id, got.id);
+        match &got.output {
+            Ok(out) => {
+                assert_eq!(
+                    out,
+                    want.output.as_ref().unwrap(),
+                    "request {} diverged under fault injection",
+                    got.id
+                );
+                ok += 1;
+            }
+            Err(ServeError::WorkerFault(_)) => faulted += 1,
+            Err(e) => panic!("unexpected terminal error: {e}"),
+        }
+    }
+    assert_eq!(ok + faulted, 24);
+    assert!(metrics.panics >= 1, "the planned panic fired under supervision");
+    assert!(faulted >= 1, "the panicked batch answered its own requests");
+    assert!(metrics.faults.injected >= 2, "drop + SEU were injected");
+    assert_eq!(metrics.faults.unmasked, 0, "ABFT + work stealing masked all");
+}
+
+/// Admission control and age shedding through the public API: a worker
+/// stalled by an injected delay, a bounded queue, and a tiny age
+/// budget — the flood gets typed `Rejected` answers, the stale queue
+/// gets `Overloaded`, and nothing hangs or is silently dropped.
+#[test]
+fn bounded_queue_rejects_and_age_budget_sheds_under_stall() {
+    let model = Arc::new(mlp_headroom_zoo(3));
+    let mut cfg = base_cfg(1);
+    cfg.batcher = BatcherConfig {
+        max_batch: 4,
+        linger: std::time::Duration::from_millis(1),
+        max_queue: 4,
+        shed_after: Some(std::time::Duration::from_millis(10)),
+    };
+    cfg.faults = Some(Arc::new(FaultState::new(
+        FaultPlan::parse("delay@0:300ms").unwrap(),
+    )));
+    let server = InferenceServer::start(model.clone(), cfg).unwrap();
+    let mut ins = shaped_inputs(&model, 24, 42).into_iter().enumerate();
+    let mut rxs = Vec::new();
+    // wave 1 fills the first batch; wait for the worker to dequeue it
+    // and enter the injected stall
+    for (i, input) in ins.by_ref().take(4) {
+        rxs.push(server.submit(Request::new(i as u64, input)));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    // wave 2 floods the stalled server
+    for (i, input) in ins {
+        rxs.push(server.submit(Request::new(i as u64, input)));
+    }
+    let (mut served, mut rejected, mut shed) = (0usize, 0usize, 0usize);
+    for rx in rxs {
+        match rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("every submitter gets a terminal answer")
+            .output
+        {
+            Ok(_) => served += 1,
+            Err(ServeError::Rejected { depth }) => {
+                assert!(depth >= 4);
+                rejected += 1;
+            }
+            Err(ServeError::Overloaded { waited }) => {
+                assert!(waited >= std::time::Duration::from_millis(10));
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected terminal error: {e}"),
+        }
+    }
+    let (_, metrics) = server.shutdown();
+    assert_eq!(served + rejected + shed, 24);
+    assert!(rejected >= 1, "the bounded queue refused part of the flood");
+    assert!(shed >= 1, "the age budget shed the stalled queue");
+    assert_eq!(metrics.rejected as usize, rejected);
+    assert_eq!(metrics.sheds as usize, shed);
 }
