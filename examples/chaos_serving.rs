@@ -1,7 +1,7 @@
-//! Chaos-serving drill — the resilience layer end to end
-//! (DESIGN.md §Resilience).
+//! Chaos-serving drill — the resilience and integrity layers end to
+//! end (DESIGN.md §Resilience, §Integrity).
 //!
-//! Five phases against the packed backend:
+//! Seven phases against the packed backend:
 //!
 //! 1. **Baseline** — a fault-free run records every request's exact
 //!    output (the bit-identity reference).
@@ -18,9 +18,19 @@
 //! 5. **Degradation** — under backlog, low-priority requests serve on
 //!    the precision-degraded clone; outputs still match the baseline
 //!    (the downshift is clamped to be bit-exact).
+//! 6. **Memory SEU + scrubbing** — a `mem@N` fault flips a bit in a
+//!    *resident* packed plane (corrupting state, not one computation);
+//!    the background scrubber detects it via the per-plane signature
+//!    and repairs by re-packing from the golden-verified weights,
+//!    while the ABFT ladder guards any batch that races the sweep —
+//!    outputs stay bit-identical with `unmasked=0`.
+//! 7. **Memory SEU, scrubbing off** — the on-ABFT-miss escalation
+//!    ladder alone detects, repairs, and classifies the resident
+//!    upset as *persistent* (a transient flip would leave the planes
+//!    signature-clean).
 //!
 //! Prints a greppable summary line (CI asserts `panics>=1`,
-//! `sheds>=1`, `unmasked=0`).
+//! `sheds>=1`, `mem-seu injected>=1`, `repaired>=1`, `unmasked=0`).
 //!
 //! ```sh
 //! cargo run --release --example chaos_serving
@@ -122,7 +132,8 @@ fn main() -> bitsmm::Result<()> {
     println!(
         "phase 2 chaos: {ok} bit-identical, {faulted} worker-faulted, \
          {} faults injected / {} masked",
-        chaos.faults.injected, chaos.faults.masked
+        chaos.faults.injected,
+        chaos.faults.masked()
     );
 
     // ---- phase 3: overload — bounded admission + age shedding --------
@@ -229,19 +240,115 @@ fn main() -> bitsmm::Result<()> {
         degrade.degraded
     );
 
+    // ---- phase 6: memory SEU + background scrubbing ------------------
+    let mut cfg = base_cfg();
+    cfg.abft = true;
+    cfg.scrub_ms = 2;
+    cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse("mem@2,seed=7")?)));
+    let server = InferenceServer::start(Arc::new(mlp_headroom_zoo(3)), cfg)?;
+    let mut reqs = requests().into_iter();
+    let mut rxs = Vec::new();
+    // wave 1 runs through the fault batch: the SEU lands in a resident
+    // packed plane — corrupted *state*, not one corrupted computation
+    for req in reqs.by_ref().take(12) {
+        rxs.push(server.submit(req));
+    }
+    // give the 2ms scrubber a window to sweep, catch the flipped
+    // plane's signature, and repair by re-packing from the golden
+    // weights before wave 2 arrives (any batch racing the sweep is
+    // still guarded by the ABFT ladder — same counters, same repair)
+    std::thread::sleep(Duration::from_millis(30));
+    for req in reqs {
+        rxs.push(server.submit(req));
+    }
+    let responses = collect(rxs);
+    let (_, mem) = server.shutdown();
+    for r in &responses {
+        let out = r.output.as_ref().unwrap_or_else(|e| panic!("{}: {e}", r.id));
+        assert_eq!(
+            out, &reference[&r.id],
+            "request {} corrupted by the memory SEU",
+            r.id
+        );
+    }
+    assert!(mem.faults.mem_seu >= 1, "the planned memory SEU must fire");
+    assert!(mem.scrub.sweeps >= 1, "the background scrubber must sweep");
+    assert!(
+        mem.scrub.detected >= 1 && mem.scrub.repaired >= 1,
+        "the flipped plane must be detected and repaired by re-pack"
+    );
+    assert_eq!(mem.scrub.quarantined, 0, "golden weights verify, nothing quarantines");
+    assert_eq!(mem.faults.unmasked, 0, "no corrupt output reached a response");
+    println!(
+        "phase 6 scrub: mem-seu injected={} sweeps={} detected={} repaired={} unmasked={}",
+        mem.faults.mem_seu,
+        mem.scrub.sweeps,
+        mem.scrub.detected,
+        mem.scrub.repaired,
+        mem.faults.unmasked
+    );
+
+    // ---- phase 7: memory SEU, scrubbing off — the ladder alone -------
+    let mut cfg = base_cfg();
+    cfg.abft = true; // scrub_ms stays 0: the ABFT ladder is the only defense
+    cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse("mem@2,seed=13")?)));
+    let (responses, ladder) = run_phase(cfg, requests())?;
+    for r in &responses {
+        let out = r.output.as_ref().unwrap_or_else(|e| panic!("{}: {e}", r.id));
+        assert_eq!(
+            out, &reference[&r.id],
+            "request {} corrupted with scrubbing off",
+            r.id
+        );
+    }
+    assert!(ladder.faults.mem_seu >= 1, "the planned memory SEU must fire");
+    assert!(
+        ladder.faults.masked_persistent >= 1,
+        "resident corruption classifies persistent (the planes themselves are corrupt)"
+    );
+    assert_eq!(
+        ladder.faults.masked_transient, 0,
+        "no transient flips were injected in this phase"
+    );
+    assert_eq!(ladder.faults.unmasked, 0);
+    assert_eq!(ladder.scrub.sweeps, 0, "no scrubber ran");
+    assert!(ladder.scrub.repaired >= 1, "the ladder repaired inline by re-pack");
+    println!(
+        "phase 7 ladder: mem-seu injected={} masked transient={} persistent={} unmasked={}",
+        ladder.faults.mem_seu,
+        ladder.faults.masked_transient,
+        ladder.faults.masked_persistent,
+        ladder.faults.unmasked
+    );
+
     // ---- greppable summary (CI contract) -----------------------------
     println!(
         "chaos_serving summary: answered={} panics={} sheds={} rejected={} \
-         deadline_misses={} degraded={} injected={} masked={} unmasked={}",
-        5 * N_REQUESTS,
+         deadline_misses={} degraded={} injected={} masked={} unmasked={} \
+         mem_seu={} scrub_repaired={}",
+        7 * N_REQUESTS,
         chaos.panics,
         overload.sheds,
         overload.rejected,
         deadlines.deadline_misses,
         degrade.degraded,
-        chaos.faults.injected + overload.faults.injected + degrade.faults.injected,
-        chaos.faults.masked + overload.faults.masked + degrade.faults.masked,
-        chaos.faults.unmasked + overload.faults.unmasked + degrade.faults.unmasked,
+        chaos.faults.injected
+            + overload.faults.injected
+            + degrade.faults.injected
+            + mem.faults.injected
+            + ladder.faults.injected,
+        chaos.faults.masked()
+            + overload.faults.masked()
+            + degrade.faults.masked()
+            + mem.faults.masked()
+            + ladder.faults.masked(),
+        chaos.faults.unmasked
+            + overload.faults.unmasked
+            + degrade.faults.unmasked
+            + mem.faults.unmasked
+            + ladder.faults.unmasked,
+        mem.faults.mem_seu + ladder.faults.mem_seu,
+        mem.scrub.repaired + ladder.scrub.repaired,
     );
     println!("chaos_serving: OK");
     Ok(())

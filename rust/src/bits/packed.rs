@@ -99,6 +99,27 @@ pub struct PackedPlanes {
     pos: Arc<[u64]>,
     /// Negative-digit words (Booth only; empty for SBMwC).
     neg: Arc<[u64]>,
+    /// Per-plane integrity signatures of the `pos` stream, one
+    /// word-fold per *stored* plane (donor planes included, so
+    /// precision-sliced views stay verifiable). Computed once at pack
+    /// time and deliberately never recomputed on mutation — a fault
+    /// model flips words, not signatures, exactly like real SRAM.
+    sig_pos: Arc<[u64]>,
+    /// Per-plane signatures of the `neg` stream (empty for SBMwC).
+    sig_neg: Arc<[u64]>,
+}
+
+/// Rotate-xor word fold behind the per-plane integrity signatures
+/// (DESIGN.md §Integrity). Each word lands at a distinct rotation, so a
+/// flipped bit in word `i` flips exactly one position-dependent bit of
+/// the fold — every single-bit upset in a plane's words (tail padding
+/// included) is guaranteed to change its signature.
+pub fn plane_signature(words: &[u64]) -> u64 {
+    let mut sig = 0x9e37_79b9_7f4a_7c15u64;
+    for &w in words {
+        sig = sig.rotate_left(29) ^ w;
+    }
+    sig
 }
 
 impl PartialEq for PackedPlanes {
@@ -220,6 +241,17 @@ impl PackedPlanes {
                 }
             }
         }
+        let region = vectors * words;
+        let sig_pos: Vec<u64> = (0..bits as usize)
+            .map(|p| plane_signature(&pos[p * region..(p + 1) * region]))
+            .collect();
+        let sig_neg: Vec<u64> = if neg.is_empty() {
+            Vec::new()
+        } else {
+            (0..bits as usize)
+                .map(|p| plane_signature(&neg[p * region..(p + 1) * region]))
+                .collect()
+        };
         PackedPlanes {
             kind,
             bits,
@@ -229,6 +261,8 @@ impl PackedPlanes {
             min_bits: Self::needed_bits(data),
             pos: pos.into(),
             neg: neg.into(),
+            sig_pos: sig_pos.into(),
+            sig_neg: sig_neg.into(),
         }
     }
 
@@ -313,6 +347,77 @@ impl PackedPlanes {
     pub fn mem_words(&self) -> usize {
         let streams = if self.neg.is_empty() { 1 } else { 2 };
         self.bits as usize * self.vectors * self.words * streams
+    }
+
+    /// Whether this pack carries a negative-digit stream (Booth).
+    pub fn has_neg(&self) -> bool {
+        !self.neg.is_empty()
+    }
+
+    /// Integrity check: recompute every *visible* plane's signature and
+    /// compare with the pack-time fold. `true` = intact. A sliced view
+    /// checks exactly the planes it can serve; the donor's extra planes
+    /// stay covered through the donor handle (signatures are per-plane,
+    /// so narrowing never invalidates them).
+    pub fn verify(&self) -> bool {
+        self.locate().is_empty()
+    }
+
+    /// Indices of visible planes whose current words no longer match
+    /// their pack-time signature — empty when the pack is intact, the
+    /// scrubber's repair worklist otherwise.
+    pub fn locate(&self) -> Vec<u32> {
+        let region = self.vectors * self.words;
+        (0..self.bits as usize)
+            .filter(|&p| {
+                plane_signature(&self.pos[p * region..(p + 1) * region]) != self.sig_pos[p]
+                    || (!self.neg.is_empty()
+                        && plane_signature(&self.neg[p * region..(p + 1) * region])
+                            != self.sig_neg[p])
+            })
+            .map(|p| p as u32)
+            .collect()
+    }
+
+    /// A deep copy with one storage bit flipped — the memory-SEU fault
+    /// model behind `FaultAction::MemSeu`: the words change but the
+    /// pack-time signatures are carried over unchanged, so
+    /// [`PackedPlanes::verify`]/[`PackedPlanes::locate`] see the upset
+    /// exactly as a scrubber reading corrupted SRAM would. `bit`
+    /// indexes within the word (`0..64`); flips past `len` land in tail
+    /// padding (signature-visible but output-invisible, which is why
+    /// the injector constrains its draws to live digits).
+    pub fn with_flipped_bit(
+        &self,
+        plane: usize,
+        vec: usize,
+        word: usize,
+        bit: u32,
+        neg_stream: bool,
+    ) -> Result<PackedPlanes> {
+        anyhow::ensure!(
+            plane < self.bits as usize && vec < self.vectors && word < self.words && bit < 64,
+            "flip target plane {plane} vec {vec} word {word} bit {bit} outside a \
+             {}-plane {}x{}-word pack",
+            self.bits,
+            self.vectors,
+            self.words
+        );
+        anyhow::ensure!(
+            !neg_stream || !self.neg.is_empty(),
+            "SBMwC packs have no negative stream to flip"
+        );
+        let mut flipped = self.clone();
+        let idx = (plane * self.vectors + vec) * self.words + word;
+        let stream = if neg_stream { &self.neg } else { &self.pos };
+        let mut words_copy: Vec<u64> = stream.to_vec();
+        words_copy[idx] ^= 1u64 << bit;
+        if neg_stream {
+            flipped.neg = words_copy.into();
+        } else {
+            flipped.pos = words_copy.into();
+        }
+        Ok(flipped)
     }
 }
 
@@ -2171,5 +2276,111 @@ mod tests {
             .unwrap();
             assert_eq!(out, serial, "stolen rsr seg_words={seg_words}");
         }
+    }
+
+    #[test]
+    fn plane_signature_detects_every_single_bit_flip() {
+        // The integrity property the scrubber stands on: for both plane
+        // kinds and every width, flipping ANY single storage bit — any
+        // plane, any vector, any word including the tail-masked last
+        // word, either stream — fails `verify()` and `locate()` names
+        // exactly the upset plane.
+        let mut rng = Pcg32::new(0x519);
+        let (vectors, len) = (2usize, 70usize); // 2 words: one full, one tail
+        for bits in 1..=16u32 {
+            let data = rand_mat(&mut rng, vectors * len, bits);
+            for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+                let p = PackedPlanes::pack_rows(&data, vectors, len, bits, kind).unwrap();
+                assert!(p.verify(), "{kind:?} @{bits}b intact pack must verify");
+                assert!(p.locate().is_empty());
+                let streams: &[bool] =
+                    if p.has_neg() { &[false, true] } else { &[false] };
+                for plane in 0..bits as usize {
+                    for vec in 0..vectors {
+                        for word in 0..p.words {
+                            for bit in 0..64u32 {
+                                for &neg in streams {
+                                    let f = p
+                                        .with_flipped_bit(plane, vec, word, bit, neg)
+                                        .unwrap();
+                                    assert!(
+                                        !f.verify(),
+                                        "{kind:?} @{bits}b flip p{plane} v{vec} w{word} b{bit} neg={neg} escaped"
+                                    );
+                                    assert_eq!(
+                                        f.locate(),
+                                        vec![plane as u32],
+                                        "{kind:?} @{bits}b flip must localise to its plane"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn with_flipped_bit_rejects_out_of_range_targets() {
+        let data = vec![1i32, 2, 3, 4];
+        let p = PackedPlanes::pack_rows(&data, 2, 2, 4, PlaneKind::Sbmwc).unwrap();
+        assert!(p.with_flipped_bit(4, 0, 0, 0, false).is_err(), "plane overrun");
+        assert!(p.with_flipped_bit(0, 2, 0, 0, false).is_err(), "vector overrun");
+        assert!(p.with_flipped_bit(0, 0, 1, 0, false).is_err(), "word overrun");
+        assert!(p.with_flipped_bit(0, 0, 0, 64, false).is_err(), "bit overrun");
+        assert!(p.with_flipped_bit(0, 0, 0, 0, true).is_err(), "SBMwC has no neg stream");
+        let b = PackedPlanes::pack_rows(&data, 2, 2, 4, PlaneKind::Booth).unwrap();
+        assert!(b.with_flipped_bit(0, 0, 0, 0, true).is_ok());
+    }
+
+    #[test]
+    fn sliced_views_remain_verifiable_per_plane() {
+        let mut rng = Pcg32::new(0x51a);
+        let (vectors, len, hi, lo) = (3usize, 130usize, 12u32, 5u32);
+        let data = rand_mat(&mut rng, vectors * len, lo);
+        for kind in [PlaneKind::Sbmwc, PlaneKind::Booth] {
+            let wide = PackedPlanes::pack_rows(&data, vectors, len, hi, kind).unwrap();
+            let view = wide.slice_bits(lo).unwrap();
+            assert!(view.verify(), "zero-copy view of an intact pack verifies");
+            // a flip in a plane the view serves fails BOTH handles
+            let hit = wide.with_flipped_bit(2, 1, 1, 17, false).unwrap();
+            assert!(!hit.verify());
+            let hit_view = hit.slice_bits(lo).unwrap();
+            assert!(!hit_view.verify(), "visible-plane corruption must fail the view");
+            assert_eq!(hit_view.locate(), vec![2]);
+            // a flip in a donor-only plane (>= lo) is invisible to the
+            // view — per-plane signatures keep the narrow check exact —
+            // while the donor handle still catches it
+            let donor_only = wide.with_flipped_bit(lo as usize + 1, 0, 0, 3, false).unwrap();
+            assert_eq!(donor_only.locate(), vec![lo + 1]);
+            let clean_view = donor_only.slice_bits(lo).unwrap();
+            assert!(clean_view.verify(), "donor-plane corruption is outside the view");
+            assert!(clean_view.locate().is_empty());
+        }
+    }
+
+    #[test]
+    fn flipped_live_digit_changes_the_matmul_and_repack_restores_it() {
+        // end-to-end repair contract at the kernel level: a live-digit
+        // flip is both signature-visible and output-visible, and a
+        // fresh re-pack from the intact source is bit-identical to the
+        // pre-fault pack
+        let mut rng = Pcg32::new(0x51b);
+        let (m, k, n, bits) = (3usize, 70usize, 4usize, 6u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap();
+        let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+        let clean = matmul_packed_planes(&pa, &pb).unwrap();
+        // digit 65 of column 2: word 1, bit 1 — a live (non-tail) digit
+        let corrupt = pb.with_flipped_bit(1, 2, 1, 1, false).unwrap();
+        assert!(!corrupt.verify());
+        let wrong = matmul_packed_planes(&pa, &corrupt).unwrap();
+        assert_ne!(wrong, clean, "a live-digit flip must perturb the product");
+        let repacked = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+        assert_eq!(repacked, pb, "re-pack from the intact source is bit-identical");
+        assert!(repacked.verify());
+        assert_eq!(matmul_packed_planes(&pa, &repacked).unwrap(), clean);
     }
 }

@@ -84,7 +84,26 @@ fn resilience_rows(t: &mut Table, metrics: &crate::coordinator::Metrics) {
         "faults injected / masked / unmasked".into(),
         format!(
             "{} / {} / {}",
-            metrics.faults.injected, metrics.faults.masked, metrics.faults.unmasked
+            metrics.faults.injected,
+            metrics.faults.masked(),
+            metrics.faults.unmasked
+        ),
+    ]);
+    t.row(&[
+        "faults masked transient / persistent".into(),
+        format!(
+            "{} / {}",
+            metrics.faults.masked_transient, metrics.faults.masked_persistent
+        ),
+    ]);
+    t.row(&[
+        "scrub sweeps / detected / repaired / quarantined".into(),
+        format!(
+            "{} / {} / {} / {}",
+            metrics.scrub.sweeps,
+            metrics.scrub.detected,
+            metrics.scrub.repaired,
+            metrics.scrub.quarantined
         ),
     ]);
 }
@@ -92,7 +111,8 @@ fn resilience_rows(t: &mut Table, metrics: &crate::coordinator::Metrics) {
 /// Resolve the resilience knobs shared by the CLI and config entry
 /// points onto a [`ServerConfig`]: bounded admission, age shedding,
 /// the optional degrade policy, ABFT verification, and a parsed fault
-/// plan (`spec` empty = no injection).
+/// plan (`spec` empty = no injection), plus the background scrub
+/// period (`scrub_ms`, 0 = off — DESIGN.md §Integrity).
 #[allow(clippy::too_many_arguments)]
 fn apply_resilience(
     cfg: &mut ServerConfig,
@@ -101,6 +121,7 @@ fn apply_resilience(
     degrade_high_water: usize,
     degrade_bits: u32,
     abft: bool,
+    scrub_ms: u64,
     fault_plan: Option<&str>,
 ) -> Result<()> {
     cfg.batcher.max_queue = max_queue;
@@ -116,6 +137,7 @@ fn apply_resilience(
         });
     }
     cfg.abft = abft;
+    cfg.scrub_ms = scrub_ms;
     if let Some(spec) = fault_plan.filter(|s| !s.trim().is_empty()) {
         cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse(spec)?)));
     }
@@ -177,6 +199,7 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
         args.req("degrade-high-water")?,
         args.req("degrade-bits")?,
         args.switch("abft"),
+        args.req("scrub-ms")?,
         args.get("fault-plan"),
     )?;
     cfg.packed_threads = args.req("packed-threads")?;
@@ -303,6 +326,7 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
         usize::try_from(cfg.int_or("server.degrade_high_water", 0))?,
         u32::try_from(cfg.int_or("server.degrade_bits", 4))?,
         cfg.bool_or("server.abft", false),
+        u64::try_from(cfg.int_or("server.scrub_ms", 0))?,
         Some(cfg.str_or("server.fault_plan", "")),
     )?;
     server_cfg.clock_hz = cfg.float_or("server.clock_mhz", 300.0) * 1e6;
@@ -595,6 +619,32 @@ degrade_high_water = 1
 degrade_bits = 4
 abft = true
 fault_plan = \"panic@0,seu@1,seed=7\"
+",
+        )
+        .unwrap();
+        launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_reads_integrity_config() {
+        // scrub_ms + a memory-SEU fault plan thread through dotted
+        // config paths: the scrubber and the ABFT ladder between them
+        // must mask the resident-plane upset and the run completes
+        let cfg = crate::config::Config::parse(
+            "name = \"integrity\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"packed\"
+model = \"mlp-headroom\"
+requests = 8
+workers = 1
+max_batch = 4
+packed_threads = 2
+abft = true
+scrub_ms = 1
+fault_plan = \"mem@1,seed=11\"
 ",
         )
         .unwrap();

@@ -31,6 +31,12 @@ pub enum FaultAction {
     /// Flip one random bit of one i64 accumulator in the next packed
     /// matmul output (a single-event upset on a partial sum).
     Seu,
+    /// Flip one PRNG-chosen live-digit bit of a *resident* packed
+    /// weight plane in a model's `PackedCache` — the memory-SEU model
+    /// (DESIGN.md §Integrity): unlike [`FaultAction::Seu`], the
+    /// corruption persists across batches until the scrubber or the
+    /// ABFT escalation ladder repairs it by re-pack.
+    MemSeu,
 }
 
 /// A deterministic schedule of faults, keyed by global batch index
@@ -71,9 +77,20 @@ impl FaultPlan {
                 .parse()
                 .map_err(|_| anyhow::anyhow!("bad batch index in {part:?}"))?;
             let action = match kind {
-                "panic" => FaultAction::Panic,
-                "drop" => FaultAction::DropPoolJob,
-                "seu" => FaultAction::Seu,
+                "panic" | "drop" | "seu" | "mem" => {
+                    // argless kinds: a stray `:arg` is a spec typo, not
+                    // something to silently drop
+                    anyhow::ensure!(
+                        arg.is_none(),
+                        "fault kind {kind:?} takes no argument, got {part:?}"
+                    );
+                    match kind {
+                        "panic" => FaultAction::Panic,
+                        "drop" => FaultAction::DropPoolJob,
+                        "seu" => FaultAction::Seu,
+                        _ => FaultAction::MemSeu,
+                    }
+                }
                 "delay" => {
                     let ms: u64 = arg
                         .unwrap_or("100")
@@ -118,18 +135,64 @@ impl FaultPlan {
 /// output) or escaped to a caller-visible value. Availability faults
 /// (panics, delays) are counted by `Metrics.panics` / shed machinery
 /// instead — they can never corrupt a served result.
+///
+/// Masked faults classify **transient** (an in-flight upset: the
+/// stationary planes verified intact, and the shape had not just
+/// ABFT-missed) vs **persistent** (resident corruption: the planes'
+/// signatures failed, or the same shape missed ABFT on consecutive
+/// executions) — a stuck-at plane must not read as a stream of
+/// independent transients in the serve-table ledger.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultStats {
     pub injected: u64,
-    pub masked: u64,
+    /// Injections via [`FaultAction::MemSeu`] (a subset of `injected`,
+    /// broken out so chaos drills can pin the resident-SEU path).
+    pub mem_seu: u64,
+    pub masked_transient: u64,
+    pub masked_persistent: u64,
     pub unmasked: u64,
 }
 
 impl FaultStats {
+    /// Total masked faults, transient + persistent — the combined
+    /// figure the serve table's injected/masked/unmasked row reports.
+    pub fn masked(&self) -> u64 {
+        self.masked_transient + self.masked_persistent
+    }
+
     pub fn merge(&mut self, o: &FaultStats) {
         self.injected += o.injected;
-        self.masked += o.masked;
+        self.mem_seu += o.mem_seu;
+        self.masked_transient += o.masked_transient;
+        self.masked_persistent += o.masked_persistent;
         self.unmasked += o.unmasked;
+    }
+}
+
+/// Resident-state integrity accounting (DESIGN.md §Integrity): sweeps
+/// of the background scrubber, plus detections/repairs/quarantines
+/// from *either* integrity path — the scrubber's periodic sweep or the
+/// scheduler's on-ABFT-miss escalation ladder.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScrubStats {
+    /// Completed scrubber sweeps over every resident cache.
+    pub sweeps: u64,
+    /// Planes (or golden tensors) found corrupted.
+    pub detected: u64,
+    /// Corrupted entries restored by evict + re-pack from a
+    /// golden-verified source.
+    pub repaired: u64,
+    /// Slots quarantined because their golden source was itself
+    /// corrupt — requests needing them get `ServeError::Quarantined`.
+    pub quarantined: u64,
+}
+
+impl ScrubStats {
+    pub fn merge(&mut self, o: &ScrubStats) {
+        self.sweeps += o.sweeps;
+        self.detected += o.detected;
+        self.repaired += o.repaired;
+        self.quarantined += o.quarantined;
     }
 }
 
@@ -172,6 +235,15 @@ impl SeuInjector {
         let bit = rng.below(64);
         out[pos] = (out[pos] as u64 ^ (1u64 << bit)) as i64;
         true
+    }
+
+    /// Draw a uniform index in `0..n` from the same seeded stream —
+    /// the placement oracle for [`FaultAction::MemSeu`] (which cache
+    /// entry, which plane, which live digit), so resident upsets are
+    /// reproducible run-to-run like everything else in the plan.
+    pub fn pick(&self, n: usize) -> usize {
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        rng.below_usize(n.max(1))
     }
 }
 
@@ -236,6 +308,62 @@ mod tests {
         assert!(FaultPlan::parse("panic@x").is_err());
         assert!(FaultPlan::parse("delay@1:soon").is_err());
         assert!(FaultPlan::parse("seed=abc").is_err());
+    }
+
+    #[test]
+    fn parse_mem_seu_and_rejects_args_on_argless_kinds() {
+        let p = FaultPlan::parse("mem@2,seed=7").unwrap();
+        assert_eq!(p.actions_at(2), vec![FaultAction::MemSeu]);
+        // a stray `:arg` on an argless kind is an error, not silently
+        // dropped (the old parser accepted `seu@3:5` and ignored the 5)
+        for bad in ["seu@3:5", "panic@1:oops", "drop@2:1", "mem@4:9"] {
+            let err = FaultPlan::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("takes no argument"),
+                "{bad:?} must be rejected with a clear error, got {err:?}"
+            );
+        }
+        // delay still takes its argument either way
+        assert!(FaultPlan::parse("delay@1:50ms").is_ok());
+        assert!(FaultPlan::parse("delay@1").is_ok());
+    }
+
+    #[test]
+    fn fault_stats_split_masked_merge() {
+        let mut s = FaultStats {
+            injected: 2,
+            mem_seu: 1,
+            masked_transient: 1,
+            masked_persistent: 1,
+            unmasked: 0,
+        };
+        assert_eq!(s.masked(), 2);
+        s.merge(&FaultStats {
+            injected: 1,
+            mem_seu: 0,
+            masked_transient: 0,
+            masked_persistent: 1,
+            unmasked: 0,
+        });
+        assert_eq!(s.injected, 3);
+        assert_eq!(s.mem_seu, 1);
+        assert_eq!(s.masked_transient, 1);
+        assert_eq!(s.masked_persistent, 2);
+        assert_eq!(s.masked(), 3);
+    }
+
+    #[test]
+    fn scrub_stats_merge_and_injector_pick_determinism() {
+        let mut s = ScrubStats { sweeps: 1, detected: 1, repaired: 1, quarantined: 0 };
+        s.merge(&ScrubStats { sweeps: 2, detected: 0, repaired: 0, quarantined: 1 });
+        assert_eq!(s, ScrubStats { sweeps: 3, detected: 1, repaired: 1, quarantined: 1 });
+        let a = SeuInjector::new(11);
+        let b = SeuInjector::new(11);
+        let da: Vec<usize> = (0..8).map(|_| a.pick(100)).collect();
+        let db: Vec<usize> = (0..8).map(|_| b.pick(100)).collect();
+        assert_eq!(da, db, "same seed, same placement draws");
+        assert!(da.iter().all(|&v| v < 100));
+        assert_eq!(SeuInjector::new(1).pick(0), 0, "empty ranges degrade to 0");
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! packed-pool scheduling telemetry.
 
 use crate::bits::packed::StealStats;
-use crate::coordinator::faults::FaultStats;
+use crate::coordinator::faults::{FaultStats, ScrubStats};
 use crate::plan::PlanStats;
 use std::time::Duration;
 
@@ -101,9 +101,15 @@ pub struct Metrics {
     /// precision under overload — bit-exact by the `slice_bits`
     /// clamp argument (DESIGN.md §Resilience).
     pub degraded: u64,
-    /// Corruption-fault injections (dropped pool jobs, SEU bit-flips)
-    /// and whether each was masked before reaching a response.
+    /// Corruption-fault injections (dropped pool jobs, SEU bit-flips,
+    /// memory SEUs) and whether each was masked before reaching a
+    /// response.
     pub faults: FaultStats,
+    /// Resident-state integrity telemetry: scrubber sweeps plus
+    /// corrupt planes detected / repaired / quarantined by either
+    /// integrity path — the background scrubber or the on-ABFT-miss
+    /// escalation ladder (DESIGN.md §Integrity).
+    pub scrub: ScrubStats,
 }
 
 impl Metrics {
@@ -181,6 +187,7 @@ impl Metrics {
         self.worker_deaths += w.worker_deaths;
         self.degraded += w.degraded;
         self.faults.merge(&w.faults);
+        self.scrub.merge(&w.scrub);
     }
 }
 
@@ -271,8 +278,15 @@ mod tests {
         w1.panics = 1;
         w1.faults = FaultStats {
             injected: 2,
-            masked: 2,
-            unmasked: 0,
+            masked_transient: 1,
+            masked_persistent: 1,
+            ..FaultStats::default()
+        };
+        w1.scrub = ScrubStats {
+            sweeps: 2,
+            detected: 1,
+            repaired: 1,
+            quarantined: 0,
         };
         let mut w2 = Metrics::default();
         w2.errors = 1;
@@ -280,8 +294,15 @@ mod tests {
         w2.degraded = 5;
         w2.faults = FaultStats {
             injected: 1,
-            masked: 0,
+            mem_seu: 1,
             unmasked: 1,
+            ..FaultStats::default()
+        };
+        w2.scrub = ScrubStats {
+            sweeps: 1,
+            detected: 1,
+            repaired: 0,
+            quarantined: 1,
         };
         total.absorb(&w1);
         total.absorb(&w2);
@@ -296,9 +317,16 @@ mod tests {
             total.faults,
             FaultStats {
                 injected: 3,
-                masked: 2,
-                unmasked: 1
+                mem_seu: 1,
+                masked_transient: 1,
+                masked_persistent: 1,
+                unmasked: 1,
             }
+        );
+        assert_eq!(total.faults.masked(), 2);
+        assert_eq!(
+            total.scrub,
+            ScrubStats { sweeps: 3, detected: 2, repaired: 1, quarantined: 1 }
         );
     }
 

@@ -35,14 +35,15 @@ use crate::bits::packed::{
     KernelFamily, PackedPlanes, PackedPool, PopcountKernel, StealStats, TilePolicy,
 };
 use crate::bits::plane::PlaneKind;
-use crate::coordinator::faults::{FaultStats, SeuInjector};
+use crate::coordinator::faults::{FaultStats, ScrubStats, SeuInjector};
 use crate::coordinator::tiler::{tile_matmul, TilePlan};
-use crate::nn::layers::{MatmulExec, PackedWeight};
+use crate::nn::layers::{MatmulExec, PackedWeight, Quarantined, RepairSource};
 use crate::nn::matmul_native;
 use crate::plan::{ExecPlan, PlanKey, PlanStats, PlanTier, Planner, ShapeRun};
 use crate::runtime::{EngineHandle, IntMat};
 use crate::sim::array::{SaConfig, SystolicArray};
 use crate::Result;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Functional execution backend.
@@ -94,6 +95,12 @@ pub struct ExecutionReport {
     /// outputs and whether the ABFT row-checksum guard masked them
     /// (zero unless an injector is armed — DESIGN.md §Resilience).
     pub faults: FaultStats,
+    /// Resident-state integrity telemetry from the on-ABFT-miss
+    /// escalation ladder: corrupt stationary planes detected, repaired
+    /// by re-pack, or quarantined (DESIGN.md §Integrity). The
+    /// background scrubber's sweeps land in the same counters at the
+    /// server level.
+    pub scrub: ScrubStats,
 }
 
 impl ExecutionReport {
@@ -110,6 +117,7 @@ impl ExecutionReport {
         self.steal.merge(&o.steal);
         self.plan.merge(&o.plan);
         self.faults.merge(&o.faults);
+        self.scrub.merge(&o.scrub);
     }
 
     /// Simulated-hardware GOPS at a clock (paper convention).
@@ -148,9 +156,16 @@ pub struct Scheduler {
     /// Armed SEU injector (chaos testing): flips one bit of one packed
     /// output accumulator per armed charge. `None` in production.
     seu: Option<Arc<SeuInjector>>,
-    /// Verify packed outputs against the exact ABFT row checksum and
-    /// recompute natively on mismatch (masks SEU-style corruption).
+    /// Verify outputs against the exact ABFT row checksum and recover
+    /// on mismatch (masks SEU-style corruption): packed misses climb
+    /// the integrity ladder (verify planes → repair + retry → native
+    /// recompute); native/simulate misses recompute natively.
     abft: bool,
+    /// Per-shape ABFT-miss streak: a shape whose *consecutive*
+    /// executions fail the checksum is a persistent fault (stuck-at
+    /// state), not an independent transient — the classification the
+    /// split `masked_transient`/`masked_persistent` ledger reports.
+    abft_streak: HashMap<(usize, usize, usize, u32), bool>,
     pub report: ExecutionReport,
 }
 
@@ -171,6 +186,7 @@ impl Scheduler {
             planner: None,
             seu: None,
             abft: false,
+            abft_streak: HashMap::new(),
             report: ExecutionReport::default(),
         }
     }
@@ -233,12 +249,14 @@ impl Scheduler {
         n: usize,
         bits: u32,
     ) -> Result<Vec<i64>> {
-        self.matmul_with(a, b, m, k, n, bits, None)
+        self.matmul_with(a, b, m, k, n, bits, None, None)
     }
 
     /// [`Scheduler::matmul`] with an optional pre-packed stationary
     /// operand (the packed backend skips re-packing it; other backends
-    /// ignore it).
+    /// ignore it) and its repair source (the integrity ladder re-packs
+    /// corrupt resident planes from it on an ABFT miss).
+    #[allow(clippy::too_many_arguments)]
     fn matmul_with(
         &mut self,
         a: &[i32],
@@ -248,6 +266,7 @@ impl Scheduler {
         n: usize,
         bits: u32,
         packed_b: Option<Arc<PackedPlanes>>,
+        repair: Option<RepairSource<'_>>,
     ) -> Result<Vec<i64>> {
         crate::validate_bits(bits)?;
         let plan = tile_matmul(m, k, n, &self.sa);
@@ -259,7 +278,19 @@ impl Scheduler {
             Backend::Native => {
                 self.report.hw_cycles += plan.total_cycles(&self.sa, bits);
                 self.report.native_fallbacks += 1;
-                matmul_native(a, b, m, k, n, bits)?
+                let mut out = matmul_native(a, b, m, k, n, bits)?;
+                // the guard wraps every functional backend, not just
+                // packed: a flip in the native path's accumulators is
+                // just as real (one recompute masks it)
+                if self.abft && !abft_row_check(a, b, &out, m, k, n) {
+                    out = matmul_native(a, b, m, k, n, bits)?;
+                    anyhow::ensure!(
+                        abft_row_check(a, b, &out, m, k, n),
+                        "matmul corruption persisted across the native recompute"
+                    );
+                    self.report.faults.masked_transient += 1;
+                }
+                out
             }
             Backend::Pjrt(engine) => {
                 self.report.hw_cycles += plan.total_cycles(&self.sa, bits);
@@ -402,16 +433,86 @@ impl Scheduler {
                     // `sum_j C[i,j] == dot(A[i,:], colsum(B))` per row.
                     // Any single-bit flip shifts one row sum by ±2^b,
                     // so upsets are always caught, at O(mk+kn+mn)
-                    // checksum cost against the O(mkn) product. On
-                    // mismatch the product is recomputed natively —
-                    // the masked result is bit-identical to fault-free.
+                    // checksum cost against the O(mkn) product.
+                    let shape = (m, k, n, bits);
                     if !abft_row_check(a, b, &out, m, k, n) {
-                        out = matmul_native(a, b, m, k, n, bits)?;
-                        anyhow::ensure!(
-                            abft_row_check(a, b, &out, m, k, n),
-                            "matmul corruption persisted across the native recompute"
-                        );
-                        self.report.faults.masked += 1;
+                        // Escalation ladder (DESIGN.md §Integrity).
+                        // Rung 1: verify the stationary planes — a
+                        // corrupt resident pack is a *persistent*
+                        // fault that would fail every later exec of
+                        // this weight, so repair it at the source.
+                        let planes_corrupt =
+                            pb.as_ref().map_or(false, |p| !p.verify());
+                        let mut retried: Option<Vec<i64>> = None;
+                        if planes_corrupt {
+                            self.report.scrub.detected += 1;
+                            match repair {
+                                // Rung 2: golden-verified dense source
+                                // → evict + re-pack, retry packed once
+                                Some(r) if r.w.verify_golden() => {
+                                    let fix = r.cache.scrub(r.slot, r.w);
+                                    self.report.scrub.repaired += fix.repaired;
+                                    self.report.scrub.quarantined += fix.quarantined;
+                                    if fix.repaired > 0 {
+                                        let fresh = r.cache.get_or_pack(r.slot, r.w, bits)?;
+                                        let rerun = ShapeRun {
+                                            a,
+                                            b,
+                                            m,
+                                            k,
+                                            n,
+                                            bits,
+                                            stream_kind: PlaneKind::Sbmwc,
+                                            packed_b: Some(&fresh),
+                                            pool: pool.as_ref(),
+                                        };
+                                        let (again, _, ran) = rerun.run(&plan)?;
+                                        if ran && abft_row_check(a, b, &again, m, k, n) {
+                                            retried = Some(again);
+                                        }
+                                    }
+                                }
+                                // Unrepairable: planes corrupt AND the
+                                // dense golden source corrupt — nothing
+                                // trustworthy remains for this slot
+                                Some(r) => {
+                                    r.cache.quarantine(r.slot);
+                                    self.report.scrub.quarantined += 1;
+                                    return Err(anyhow::Error::new(Quarantined {
+                                        slot: r.slot,
+                                    }));
+                                }
+                                None => {}
+                            }
+                        }
+                        match retried {
+                            Some(again) => {
+                                out = again;
+                                self.report.faults.masked_persistent += 1;
+                                self.abft_streak.remove(&shape);
+                            }
+                            None => {
+                                // Rung 3 (prior behavior): recompute
+                                // natively — bit-identical to fault-free
+                                out = matmul_native(a, b, m, k, n, bits)?;
+                                anyhow::ensure!(
+                                    abft_row_check(a, b, &out, m, k, n),
+                                    "matmul corruption persisted across the native recompute"
+                                );
+                                let persistent = planes_corrupt
+                                    || self.abft_streak.get(&shape).copied().unwrap_or(false);
+                                if persistent {
+                                    self.report.faults.masked_persistent += 1;
+                                } else {
+                                    self.report.faults.masked_transient += 1;
+                                }
+                                self.abft_streak.insert(shape, true);
+                            }
+                        }
+                    } else {
+                        // clean exec breaks any miss streak: a later
+                        // miss on this shape is an independent transient
+                        self.abft_streak.remove(&shape);
                     }
                 } else if flipped {
                     self.report.faults.unmasked += 1;
@@ -439,6 +540,16 @@ impl Scheduler {
                             out[(job.row0 + r) * n + job.col0 + c] = res.result[r * job.n + c];
                         }
                     }
+                }
+                // the guard wraps the merged simulator output too: a
+                // flip while stitching tiles is recomputed natively
+                if self.abft && !abft_row_check(a, b, &out, m, k, n) {
+                    out = matmul_native(a, b, m, k, n, bits)?;
+                    anyhow::ensure!(
+                        abft_row_check(a, b, &out, m, k, n),
+                        "matmul corruption persisted across the native recompute"
+                    );
+                    self.report.faults.masked_transient += 1;
                 }
                 out
             }
@@ -509,7 +620,7 @@ impl MatmulExec for Scheduler {
         n: usize,
         bits: u32,
     ) -> Result<Vec<i64>> {
-        self.matmul_with(a, w.data, m, k, n, bits, w.planes.clone())
+        self.matmul_with(a, w.data, m, k, n, bits, w.planes.clone(), w.repair)
     }
 }
 
@@ -644,7 +755,7 @@ mod tests {
         assert_eq!(diffs, 1, "one upset corrupts exactly one accumulator");
         assert_eq!(
             s.report.faults,
-            FaultStats { injected: 1, masked: 0, unmasked: 1 }
+            FaultStats { injected: 1, unmasked: 1, ..FaultStats::default() }
         );
         // charge consumed: the next matmul is clean
         assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
@@ -671,8 +782,9 @@ mod tests {
         );
         assert_eq!(
             s.report.faults,
-            FaultStats { injected: 1, masked: 1, unmasked: 0 }
+            FaultStats { injected: 1, masked_transient: 1, ..FaultStats::default() }
         );
+        assert_eq!(s.report.faults.masked(), 1);
     }
 
     #[test]
@@ -691,6 +803,136 @@ mod tests {
     }
 
     #[test]
+    fn abft_guards_native_and_simulate_without_false_positives() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (3, 9, 5, 6);
+        let mut rng = Pcg32::new(0x5e3);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+        for backend in [Backend::Native, Backend::Simulate] {
+            let name = backend.name();
+            let mut s = Scheduler::new(sa, backend);
+            s.set_abft(true);
+            assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want, "{name}");
+            assert_eq!(s.report.faults, FaultStats::default(), "{name}: no false positives");
+        }
+    }
+
+    #[test]
+    fn abft_ladder_repairs_corrupt_resident_planes_and_retries_packed() {
+        use crate::nn::layers::{PackedCache, RepairSource};
+        use crate::nn::tensor::QTensor;
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (3usize, 10usize, 4usize, 4u32);
+        let mut rng = Pcg32::new(0xab1);
+        let a = vec![1i32; m * k]; // all-ones: every weight digit is live in the product
+        let wvals = rand_mat(&mut rng, k * n, bits);
+        let w = QTensor::new(wvals.clone(), vec![k, n], 1.0, bits).unwrap();
+        let want = ref_matmul_i64(&a, &wvals, m, k, n);
+        let cache = PackedCache::new();
+        let clean = cache.get_or_pack(0, &w, bits).unwrap();
+        // memory SEU: flip a live digit bit of the resident pack —
+        // every later exec of this weight would fail ABFT (persistent)
+        cache.replace(
+            (0, bits),
+            Arc::new(clean.with_flipped_bit(0, 0, 0, 0, false).unwrap()),
+        );
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        s.set_abft(true);
+        let pw = PackedWeight {
+            data: &w.data,
+            planes: Some(cache.get_or_pack(0, &w, bits).unwrap()),
+            repair: Some(RepairSource { cache: &cache, slot: 0, w: &w }),
+        };
+        let got = s.matmul_packed(&a, &pw, m, k, n, bits).unwrap();
+        assert_eq!(got, want, "ladder output must be bit-identical to fault-free");
+        assert_eq!(s.report.scrub.detected, 1, "corrupt planes located at the source");
+        assert_eq!(s.report.scrub.repaired, 1, "repaired by re-pack");
+        assert_eq!(s.report.scrub.quarantined, 0);
+        assert_eq!(s.report.faults.masked_persistent, 1, "a stuck-at plane is persistent");
+        assert_eq!(s.report.faults.masked_transient, 0);
+        // the cache now holds a verified, bit-identical pack
+        let repaired = cache.get_or_pack(0, &w, bits).unwrap();
+        assert!(repaired.verify());
+        assert_eq!(*repaired, *clean);
+        // next exec is clean: no new detections
+        let pw2 = PackedWeight {
+            data: &w.data,
+            planes: Some(repaired),
+            repair: Some(RepairSource { cache: &cache, slot: 0, w: &w }),
+        };
+        assert_eq!(s.matmul_packed(&a, &pw2, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.scrub.detected, 1);
+    }
+
+    #[test]
+    fn abft_ladder_quarantines_when_golden_source_fails_too() {
+        use crate::nn::layers::{PackedCache, Quarantined, RepairSource};
+        use crate::nn::tensor::QTensor;
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (2usize, 6usize, 3usize, 4u32);
+        let a = vec![1i32; m * k];
+        let mut rng = Pcg32::new(0xab2);
+        let w = QTensor::new(rand_mat(&mut rng, k * n, bits), vec![k, n], 1.0, bits).unwrap();
+        let cache = PackedCache::new();
+        let clean = cache.get_or_pack(3, &w, bits).unwrap();
+        cache.replace(
+            (3, bits),
+            Arc::new(clean.with_flipped_bit(0, 0, 0, 0, false).unwrap()),
+        );
+        // the dense source is corrupt too: its golden stamp is stale
+        let mut bad = w.clone();
+        bad.data[0] ^= 1;
+        assert!(!bad.verify_golden());
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        s.set_abft(true);
+        let pw = PackedWeight {
+            data: &bad.data,
+            planes: Some(cache.get_or_pack(3, &bad, bits).unwrap()),
+            repair: Some(RepairSource { cache: &cache, slot: 3, w: &bad }),
+        };
+        let err = s.matmul_packed(&a, &pw, m, k, n, bits).unwrap_err();
+        assert_eq!(err.downcast_ref::<Quarantined>(), Some(&Quarantined { slot: 3 }));
+        assert!(cache.is_quarantined(3));
+        assert_eq!(s.report.scrub.quarantined, 1);
+        assert_eq!(s.report.scrub.repaired, 0);
+        // the slot refuses all future packs with the same typed error
+        let err = cache.get_or_pack(3, &w, bits).unwrap_err();
+        assert!(err.downcast_ref::<Quarantined>().is_some());
+    }
+
+    #[test]
+    fn consecutive_abft_misses_on_a_shape_classify_as_persistent() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (4, 8, 6, 6);
+        let mut rng = Pcg32::new(0x5e4);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        let inj = Arc::new(SeuInjector::new(7));
+        s.set_seu_injector(inj.clone());
+        s.set_abft(true);
+        // two flips on consecutive executions of the same shape: the
+        // first reads as an independent transient, the second as a
+        // stuck-at (persistent) fault
+        inj.arm(2);
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.faults.masked_transient, 1);
+        assert_eq!(s.report.faults.masked_persistent, 1);
+        // a clean exec breaks the streak: the next miss is transient
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        inj.arm(1);
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.faults.masked_transient, 2);
+        assert_eq!(s.report.faults.masked_persistent, 1);
+        assert_eq!(s.report.faults.masked(), 3);
+        assert_eq!(s.report.faults.unmasked, 0);
+    }
+
+    #[test]
     fn packed_rejects_mismatched_cached_planes() {
         let sa = SaConfig::new(4, 16, MacVariant::Booth);
         let mut s = Scheduler::new(sa, Backend::Packed);
@@ -699,7 +941,7 @@ mod tests {
         let planes = std::sync::Arc::new(
             crate::bits::packed::PackedPlanes::pack_cols(&b, 3, 2, 4, crate::bits::plane::PlaneKind::Sbmwc).unwrap(),
         );
-        let w = PackedWeight { data: &b, planes: Some(planes) };
+        let w = PackedWeight { data: &b, planes: Some(planes), repair: None };
         // ...offered for an 8-bit request: planes cannot *widen*, so
         // this is rejected, not silently wrong
         assert!(s.matmul_packed(&[1, 1, 1], &w, 1, 3, 2, 8).is_err());
@@ -718,7 +960,7 @@ mod tests {
                 &b, 3, 2, 8, crate::bits::plane::PlaneKind::Sbmwc,
             ).unwrap(),
         );
-        let w = PackedWeight { data: &b, planes: Some(planes) };
+        let w = PackedWeight { data: &b, planes: Some(planes), repair: None };
         let mut s = Scheduler::new(sa, Backend::Packed);
         assert_eq!(s.matmul_packed(&a, &w, 1, 3, 2, 4).unwrap(), want);
         assert_eq!(s.report.plane_slices, 1);

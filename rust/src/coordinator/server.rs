@@ -5,7 +5,7 @@
 use crate::bits::packed::{KernelFamily, PackedPool, PopcountKernel, TilePolicy};
 use crate::bits::plane::PlaneKind;
 use crate::coordinator::batcher::{Batcher, BatcherConfig, PushRefused};
-use crate::coordinator::faults::{FaultAction, FaultState};
+use crate::coordinator::faults::{FaultAction, FaultState, ScrubStats};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::scheduler::{Backend, ExecutionReport, Scheduler};
 use crate::nn::model::Model;
@@ -13,7 +13,7 @@ use crate::nn::tensor::QTensor;
 use crate::plan::{calibrate_shape, PlanKey, Planner, PlannerMode};
 use crate::sim::array::SaConfig;
 use crate::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -123,6 +123,12 @@ pub enum ServeError {
     /// The worker executing this request's batch panicked; the
     /// supervisor answered on its behalf and the worker survived.
     WorkerFault(String),
+    /// The request touched a quarantined weight slot: its packed
+    /// planes were corrupt *and* its golden source failed
+    /// verification, so the integrity path evicted the slot and
+    /// refuses to serve from unverifiable state (DESIGN.md
+    /// §Integrity). Recovery requires reloading the weights.
+    Quarantined { slot: u32 },
     /// Submitted after the server closed to new requests.
     Closed,
     /// Validation or execution failure (the pre-resilience error path).
@@ -140,6 +146,10 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
             ServeError::WorkerFault(msg) => write!(f, "worker fault: {msg}"),
+            ServeError::Quarantined { slot } => write!(
+                f,
+                "weight slot {slot} quarantined: packed planes corrupt and golden source unverifiable"
+            ),
             ServeError::Closed => write!(f, "server is closed to new requests"),
             ServeError::Failed(msg) => write!(f, "{msg}"),
         }
@@ -225,6 +235,13 @@ pub struct ServerConfig {
     /// recomputed natively, masking SEU-style corruption before it can
     /// reach a response.
     pub abft: bool,
+    /// Background scrub period in milliseconds (`server.scrub_ms`,
+    /// `--scrub-ms`; `0` = scrubbing off). Every period a dedicated
+    /// thread sweeps the model's resident packed state — weight-plane
+    /// caches and conv kernel transposes — verifying per-plane
+    /// word-fold signatures and repairing corruption by re-packing
+    /// from the golden-verified weights (DESIGN.md §Integrity).
+    pub scrub_ms: u64,
     /// Deterministic fault schedule shared by all workers (chaos
     /// testing; `None` in production).
     pub faults: Option<Arc<FaultState>>,
@@ -248,6 +265,7 @@ impl ServerConfig {
             plan_persist: None,
             degrade: None,
             abft: false,
+            scrub_ms: 0,
             faults: None,
         }
     }
@@ -307,6 +325,10 @@ pub struct InferenceServer {
     /// Submissions refused at admission (answered `Rejected`/`Closed`
     /// on their own channel, folded into `Metrics.rejected`).
     rejected: AtomicU64,
+    /// Background integrity scrubber (`scrub_ms > 0`): its stop flag
+    /// and join handle, returning the sweep counters folded into
+    /// `Metrics.scrub` at shutdown.
+    scrubber: Option<(Arc<AtomicBool>, std::thread::JoinHandle<ScrubStats>)>,
 }
 
 impl InferenceServer {
@@ -415,11 +437,51 @@ impl InferenceServer {
             (Some(path), Some(pl)) => Some((path.clone(), pl.clone())),
             _ => None,
         };
+        // Background scrubber (DESIGN.md §Integrity): every period,
+        // sweep the model's resident packed state — signature-verify
+        // every plane and repair corruption by re-packing from the
+        // golden-verified weights. Scrubbing the base model covers the
+        // degraded clone too: the clone shares the base's packed
+        // caches by Arc, so there is exactly one resident state.
+        let scrubber = if cfg.scrub_ms > 0 {
+            let stop = Arc::new(AtomicBool::new(false));
+            let flag = stop.clone();
+            let scrub_model = model.clone();
+            let period = Duration::from_millis(cfg.scrub_ms);
+            let handle = std::thread::Builder::new()
+                .name("bitsmm-scrubber".into())
+                .spawn(move || {
+                    let mut stats = ScrubStats::default();
+                    while !flag.load(Ordering::Relaxed) {
+                        // sleep in small steps so shutdown never waits
+                        // a full period for the scrubber to notice
+                        let mut slept = Duration::ZERO;
+                        while slept < period && !flag.load(Ordering::Relaxed) {
+                            let step = (period - slept).min(Duration::from_millis(5));
+                            std::thread::sleep(step);
+                            slept += step;
+                        }
+                        if flag.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let o = scrub_model.scrub();
+                        stats.sweeps += 1;
+                        stats.detected += o.detected;
+                        stats.repaired += o.repaired;
+                        stats.quarantined += o.quarantined;
+                    }
+                    stats
+                })?;
+            Some((stop, handle))
+        } else {
+            None
+        };
         Ok(InferenceServer {
             batcher,
             workers,
             persist,
             rejected: AtomicU64::new(0),
+            scrubber,
         })
     }
 
@@ -475,6 +537,18 @@ impl InferenceServer {
         // scheduler-observed corruption faults (SEU path) fold into the
         // worker-level ledger (dropped pool jobs) — disjoint sources
         metrics.faults.merge(&report.faults);
+        // integrity events the ABFT escalation ladder observed inline
+        // join the background scrubber's sweep counters below — one
+        // §Integrity ledger whichever path found the corruption
+        metrics.scrub.merge(&report.scrub);
+        // the scrubber keeps sweeping while workers drain; stop it
+        // only after they are gone so late corruption is still caught
+        if let Some((stop, handle)) = self.scrubber {
+            stop.store(true, Ordering::Relaxed);
+            if let Ok(stats) = handle.join() {
+                metrics.scrub.merge(&stats);
+            }
+        }
         // graceful shutdown persists what this run learned: tuned
         // plans merge into the configured plan file (atomic rename),
         // so the next `--planner static` start serves them as exact
@@ -621,12 +695,37 @@ fn worker_loop(
                         // seeded to the dropped slot job are stolen
                         // and the merge still sees every tile
                         metrics.faults.injected += 1;
-                        metrics.faults.masked += 1;
+                        metrics.faults.masked_transient += 1;
                     }
                 }
                 FaultAction::Seu => {
                     if let Some(faults) = &cfg.faults {
                         faults.seu().arm(1);
+                    }
+                }
+                FaultAction::MemSeu => {
+                    // memory SEU: flip one bit of a *live* digit in a
+                    // resident packed plane (DESIGN.md §Integrity).
+                    // Constraining the draw to live digits keeps the
+                    // upset output-visible, so ABFT deterministically
+                    // observes it; the scrubber and the escalation
+                    // ladder then detect via the plane signature and
+                    // repair by re-packing from the golden weights.
+                    if let Some(faults) = &cfg.faults {
+                        let targets = model.resident_planes();
+                        if !targets.is_empty() {
+                            let seu = faults.seu();
+                            let (cache, key, planes) = &targets[seu.pick(targets.len())];
+                            let plane = seu.pick(planes.bits as usize);
+                            let vec = seu.pick(planes.vectors);
+                            let digit = seu.pick(planes.len);
+                            let corrupted = planes
+                                .with_flipped_bit(plane, vec, digit / 64, (digit % 64) as u32, false)
+                                .expect("flip target drawn inside the pack");
+                            cache.replace(*key, Arc::new(corrupted));
+                            metrics.faults.injected += 1;
+                            metrics.faults.mem_seu += 1;
+                        }
                     }
                 }
             }
@@ -811,7 +910,7 @@ fn serve_fused(
             }
         }
         Err(e) => {
-            let err = ServeError::Failed(format!("{e:#}"));
+            let err = to_serve_error(e);
             for &i in &valid {
                 pending[i].answer(metrics, Err(err.clone()));
             }
@@ -849,7 +948,18 @@ fn serve_per_item(
             .expect("unanswered pending item retains its payload");
         let run =
             validate_input(model, id, &input).and_then(|()| run_one(model, sched, input));
-        pending[i].answer(metrics, run.map_err(|e| ServeError::Failed(format!("{e:#}"))));
+        pending[i].answer(metrics, run.map_err(to_serve_error));
+    }
+}
+
+/// Map an execution error onto its typed serving cause: a quarantined
+/// weight slot keeps its identity through the anyhow chain (the
+/// submitter can tell unrecoverable state loss from a transient
+/// failure); everything else takes the formatted-cause path.
+fn to_serve_error(e: anyhow::Error) -> ServeError {
+    match e.downcast_ref::<crate::nn::layers::Quarantined>() {
+        Some(q) => ServeError::Quarantined { slot: q.slot },
+        None => ServeError::Failed(format!("{e:#}")),
     }
 }
 
@@ -1375,6 +1485,118 @@ mod tests {
             "backlog above high-water must downshift low-priority traffic"
         );
         assert_eq!(metrics.errors, 0);
+    }
+
+    /// All-ones inputs keep every weight digit live, so a flipped
+    /// resident plane bit must perturb the matmul and ABFT must
+    /// observe it (a random input could zero the faulted column).
+    fn ones_inputs(model: &Model, n: usize) -> Vec<TensorInput> {
+        let numel: usize = model.input_shape.iter().product();
+        (0..n)
+            .map(|_| TensorInput::new(vec![1; numel], model.input_shape.clone()))
+            .collect()
+    }
+
+    #[test]
+    fn mem_seu_is_masked_by_the_abft_ladder_and_stays_bit_identical() {
+        let model = Arc::new(crate::nn::model::mlp_headroom_zoo(3));
+        let ins = ones_inputs(&model, 8);
+        let mut base = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+        base.workers = 1;
+        base.packed_threads = 1;
+        let (want, _, _) = serve_all(model.clone(), base, ins.clone()).unwrap();
+        let mut cfg = fault_cfg("mem@1,seed=9", Backend::Packed);
+        cfg.packed_threads = 1;
+        cfg.abft = true;
+        cfg.batcher = BatcherConfig {
+            max_batch: 2,
+            linger: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        };
+        let (got, _, metrics) = serve_all(model, cfg, ins).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.output, b.output, "memory SEU leaked into request {}", a.id);
+        }
+        assert!(metrics.faults.mem_seu >= 1, "the scheduled memory SEU fired");
+        assert_eq!(metrics.faults.injected, metrics.faults.mem_seu);
+        assert_eq!(metrics.faults.unmasked, 0, "no corrupt output reached a response");
+        assert!(metrics.faults.masked() >= 1, "the ladder masked the corruption");
+        assert!(
+            metrics.scrub.detected >= 1 && metrics.scrub.repaired >= 1,
+            "repair-by-re-pack ran inline: {:?}",
+            metrics.scrub
+        );
+        assert_eq!(metrics.scrub.quarantined, 0);
+    }
+
+    #[test]
+    fn background_scrubber_repairs_a_flipped_resident_plane() {
+        let model = Arc::new(crate::nn::model::mlp_headroom_zoo(3));
+        let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+        cfg.workers = 1;
+        cfg.packed_threads = 1;
+        cfg.scrub_ms = 1;
+        let server = InferenceServer::start(model.clone(), cfg).unwrap();
+        // corrupt one warm-packed plane behind the server's back — the
+        // memory-SEU model, minus the fault plan
+        let targets = model.resident_planes();
+        assert!(!targets.is_empty(), "warm start left the weights resident");
+        let (cache, key, clean) = &targets[0];
+        cache.replace(
+            *key,
+            Arc::new(clean.with_flipped_bit(0, 0, 0, 7, false).unwrap()),
+        );
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !model.resident_planes().iter().all(|(_, _, p)| p.verify()) {
+            assert!(Instant::now() < deadline, "scrubber never repaired the plane");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let repaired = model
+            .resident_planes()
+            .into_iter()
+            .find(|(_, k, _)| k == key)
+            .map(|(_, _, p)| p)
+            .unwrap();
+        assert_eq!(repaired.as_ref(), clean.as_ref(), "repair re-packs bit-identically");
+        let (_, metrics) = server.shutdown();
+        assert!(metrics.scrub.sweeps >= 1, "sweep counter advanced");
+        assert!(metrics.scrub.detected >= 1 && metrics.scrub.repaired >= 1);
+        assert_eq!(metrics.scrub.quarantined, 0);
+        assert_eq!(metrics.faults.injected, 0, "no fault plan ran");
+    }
+
+    #[test]
+    fn quarantined_slots_surface_typed_serve_errors() {
+        // poison every weight's dense data *after* construction: the
+        // golden stamps no longer match, so when a memory SEU corrupts
+        // the packed planes the ladder cannot trust the source and
+        // must quarantine instead of re-packing
+        let mut model = crate::nn::model::mlp_headroom_zoo(3);
+        for layer in &mut model.layers {
+            if let crate::nn::Layer::Linear(l) = layer {
+                l.w.data[0] ^= 1;
+            }
+        }
+        let model = Arc::new(model);
+        let mut cfg = fault_cfg("mem@0,seed=5", Backend::Packed);
+        cfg.packed_threads = 1;
+        cfg.abft = true;
+        cfg.batcher = BatcherConfig {
+            max_batch: 2,
+            linger: Duration::from_millis(2),
+            ..BatcherConfig::default()
+        };
+        let ins = ones_inputs(&model, 6);
+        let (resp, _, metrics) = serve_all(model, cfg, ins).unwrap();
+        let quarantined = resp
+            .iter()
+            .filter(|r| matches!(r.output, Err(ServeError::Quarantined { .. })))
+            .count();
+        assert!(quarantined >= 1, "the poisoned slot surfaces its typed cause");
+        assert!(metrics.faults.mem_seu >= 1);
+        assert!(metrics.scrub.quarantined >= 1, "{:?}", metrics.scrub);
+        assert_eq!(metrics.faults.unmasked, 0, "no corrupt output was served");
+        assert_eq!(metrics.errors, quarantined as u64);
     }
 
     #[test]

@@ -139,8 +139,13 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         )
         .opt(
             "fault-plan",
-            "deterministic fault schedule, e.g. 'panic@1,drop@2,seu@3,delay@0:50ms,seed=42'",
+            "deterministic fault schedule, e.g. 'panic@1,drop@2,seu@3,mem@4,delay@0:50ms,seed=42'",
             None,
+        )
+        .opt(
+            "scrub-ms",
+            "background integrity scrub period in ms: verify resident packed planes and repair by re-pack (0 = off)",
+            Some("0"),
         )
         .opt(
             "packed-threads",

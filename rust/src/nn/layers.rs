@@ -16,9 +16,9 @@ use crate::bits::plane::PlaneKind;
 use crate::nn::quant::quantize_with_scale;
 use crate::nn::tensor::{im2col, im2col_batch, QTensor};
 use crate::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex};
 
 /// A matmul executor. `a` is the multiplier operand (activations,
 /// LSb-first in hardware), `b` the multiplicand (weights, MSb-first).
@@ -80,10 +80,67 @@ where
     }
 }
 
-/// A weight operand: dense data plus (optionally) its packed planes.
+/// A weight operand: dense data plus (optionally) its packed planes,
+/// and — when the planes came from a [`PackedCache`] — the repair
+/// source the scheduler's integrity ladder needs to evict and re-pack
+/// a corrupted resident plane from golden-verified dense weights.
 pub struct PackedWeight<'w> {
     pub data: &'w [i32],
     pub planes: Option<Arc<PackedPlanes>>,
+    pub repair: Option<RepairSource<'w>>,
+}
+
+/// Where a packed weight's planes live and what to rebuild them from:
+/// the owning cache + slot, and the dense source tensor whose golden
+/// content hash (stamped at construction) proves it trustworthy. The
+/// ladder re-packs from `w` only when `w.verify_golden()` holds;
+/// otherwise the slot is quarantined (DESIGN.md §Integrity).
+#[derive(Clone, Copy)]
+pub struct RepairSource<'w> {
+    pub cache: &'w PackedCache,
+    pub slot: u32,
+    pub w: &'w QTensor,
+}
+
+/// Typed unserviceable-weight error: both the resident packed planes
+/// and their dense golden source failed verification, so no correct
+/// answer can be produced from this slot. Surfaced to clients as
+/// `ServeError::Quarantined` instead of a wrong or silently-slow
+/// result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Quarantined {
+    pub slot: u32,
+}
+
+impl std::fmt::Display for Quarantined {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "weight slot {} quarantined: packed planes corrupt and golden source unverifiable", self.slot)
+    }
+}
+
+impl std::error::Error for Quarantined {}
+
+/// Outcome of one integrity sweep over a cache (the nn-side sibling of
+/// the coordinator's `ScrubStats`; the server folds these into
+/// `Metrics.scrub`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScrubOutcome {
+    /// Resident entries whose plane signatures failed verification.
+    pub detected: u64,
+    /// Corrupt entries replaced by a fresh pack from golden-verified
+    /// dense weights.
+    pub repaired: u64,
+    /// Slots retired because the dense golden source itself failed
+    /// verification (or the repair re-pack failed).
+    pub quarantined: u64,
+}
+
+impl ScrubOutcome {
+    pub fn merge(&mut self, o: &ScrubOutcome) {
+        self.detected += o.detected;
+        self.repaired += o.repaired;
+        self.quarantined += o.quarantined;
+    }
 }
 
 /// Lazily-built, shared cache of packed weight planes, keyed by
@@ -110,6 +167,11 @@ pub struct PackedCache {
     planes: Arc<Mutex<HashMap<(u32, u32), Arc<PackedPlanes>>>>,
     pack_count: Arc<AtomicU64>,
     reuse_count: Arc<AtomicU64>,
+    /// Slots retired by the integrity subsystem: resident planes were
+    /// corrupt AND the dense golden source failed verification, so
+    /// nothing trustworthy is left to pack from. Serving a quarantined
+    /// slot is a typed [`Quarantined`] error, never a wrong answer.
+    quarantined: Arc<Mutex<HashSet<u32>>>,
 }
 
 impl PackedCache {
@@ -122,6 +184,9 @@ impl PackedCache {
     /// only when neither exists — a fresh pack (at most once per
     /// `(slot, bits)`).
     pub fn get_or_pack(&self, slot: u32, w: &QTensor, bits: u32) -> Result<Arc<PackedPlanes>> {
+        if self.is_quarantined(slot) {
+            return Err(anyhow::Error::new(Quarantined { slot }));
+        }
         // recover a poisoned lock: a supervised worker panic cannot
         // leave a half-inserted entry (insertion is the last step), so
         // the map is always consistent — refusing to serve every later
@@ -169,6 +234,100 @@ impl PackedCache {
     pub fn plane_reuses(&self) -> u64 {
         self.reuse_count.load(Ordering::Relaxed)
     }
+
+    /// Snapshot of every resident `(slot, bits) → planes` entry — the
+    /// scrubber's sweep list and the memory-SEU injector's target set.
+    pub fn entries(&self) -> Vec<((u32, u32), Arc<PackedPlanes>)> {
+        let cache = self.planes.lock().unwrap_or_else(|e| e.into_inner());
+        cache.iter().map(|(&k, p)| (k, p.clone())).collect()
+    }
+
+    /// Swap the resident planes at `key` (fault injection and ladder
+    /// repair both land here). A no-op for keys never packed: a SEU in
+    /// unoccupied SRAM hits nothing.
+    pub fn replace(&self, key: (u32, u32), planes: Arc<PackedPlanes>) {
+        let mut cache = self.planes.lock().unwrap_or_else(|e| e.into_inner());
+        if let std::collections::hash_map::Entry::Occupied(mut e) = cache.entry(key) {
+            e.insert(planes);
+        }
+    }
+
+    /// Drop every resident pack of `slot` (all precisions), returning
+    /// how many entries were evicted. Sliced views of an evicted donor
+    /// are evicted with it — they share the donor's (possibly corrupt)
+    /// storage.
+    pub fn evict_slot(&self, slot: u32) -> usize {
+        let mut cache = self.planes.lock().unwrap_or_else(|e| e.into_inner());
+        let victims: Vec<(u32, u32)> =
+            cache.keys().filter(|&&(s, _)| s == slot).copied().collect();
+        for k in &victims {
+            cache.remove(k);
+        }
+        victims.len()
+    }
+
+    /// Retire `slot`: drop its resident packs and refuse all future
+    /// `get_or_pack` calls with a typed [`Quarantined`] error.
+    pub fn quarantine(&self, slot: u32) {
+        self.evict_slot(slot);
+        let mut q = self.quarantined.lock().unwrap_or_else(|e| e.into_inner());
+        q.insert(slot);
+    }
+
+    pub fn is_quarantined(&self, slot: u32) -> bool {
+        let q = self.quarantined.lock().unwrap_or_else(|e| e.into_inner());
+        q.contains(&slot)
+    }
+
+    /// One integrity pass over the resident packs of `slot`, with `w`
+    /// as the dense golden source: verify every entry's per-plane
+    /// signatures; re-pack corrupt entries from `w` when `w` itself
+    /// passes its golden content hash, else quarantine the slot.
+    /// Repair is per-`(slot, bits)` key, so a repaired narrow entry is
+    /// a fresh pack (sharing with a corrupt donor would re-import the
+    /// flipped bit).
+    pub fn scrub(&self, slot: u32, w: &QTensor) -> ScrubOutcome {
+        let mut out = ScrubOutcome::default();
+        let corrupt: Vec<(u32, u32)> = {
+            let cache = self.planes.lock().unwrap_or_else(|e| e.into_inner());
+            cache
+                .iter()
+                .filter(|&(&(s, _), p)| s == slot && !p.verify())
+                .map(|(&k, _)| k)
+                .collect()
+        };
+        if corrupt.is_empty() {
+            return out;
+        }
+        out.detected = corrupt.len() as u64;
+        if w.rank() != 2 || !w.verify_golden() {
+            self.quarantine(slot);
+            out.quarantined = 1;
+            return out;
+        }
+        for key in corrupt {
+            let fresh = PackedPlanes::pack_cols(
+                &w.data,
+                w.shape[0],
+                w.shape[1],
+                key.1,
+                PlaneKind::Sbmwc,
+            );
+            match fresh {
+                Ok(p) => {
+                    self.pack_count.fetch_add(1, Ordering::Relaxed);
+                    self.replace(key, Arc::new(p));
+                    out.repaired += 1;
+                }
+                Err(_) => {
+                    self.quarantine(slot);
+                    out.quarantined += 1;
+                    break;
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Layer-side executor routing shared by every layer type: take the
@@ -190,6 +349,7 @@ fn exec_layer_matmul(
         let pw = PackedWeight {
             data: &w.data,
             planes: Some(planes),
+            repair: Some(RepairSource { cache, slot, w }),
         };
         exec.matmul_packed(&a.data, &pw, m, k, n, bits)
     } else {
@@ -260,7 +420,7 @@ impl LinearLayer {
 /// most once and never invalidated — packed conv serving re-derives
 /// nothing per request.
 #[derive(Debug, Clone, Default)]
-pub struct TransposedKernelCache(Arc<OnceLock<QTensor>>);
+pub struct TransposedKernelCache(Arc<Mutex<Option<Arc<QTensor>>>>);
 
 impl TransposedKernelCache {
     pub fn new() -> TransposedKernelCache {
@@ -268,26 +428,77 @@ impl TransposedKernelCache {
     }
 
     /// The cached `[c·kh·kw, oc]` transpose of `w`, built on first use.
-    pub fn get_or_build(&self, w: &QTensor) -> Result<&QTensor> {
-        if let Some(t) = self.0.get() {
+    /// Returned by `Arc` (not borrow) so the scrubber can swap in a
+    /// rebuilt replacement without invalidating in-flight readers.
+    pub fn get_or_build(&self, w: &QTensor) -> Result<Arc<QTensor>> {
+        let mut slot = self.0.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(t) = slot.as_ref() {
             debug_assert!(
                 w.rank() == 4
                     && t.shape == [w.shape[1] * w.shape[2] * w.shape[3], w.shape[0]],
                 "cached transpose does not match the kernel — conv weights \
                  mutated after serving started? (rebuild the layer instead)"
             );
-            return Ok(t);
+            return Ok(t.clone());
         }
         anyhow::ensure!(w.rank() == 4, "conv kernel must be [oc,c,kh,kw], got {:?}", w.shape);
         let (oc, ckk) = (w.shape[0], w.shape[1] * w.shape[2] * w.shape[3]);
-        let t = w.reshape(vec![oc, ckk])?.transpose2()?;
-        // racing builders produce identical tensors; the first set wins
-        Ok(self.0.get_or_init(|| t))
+        let t = Arc::new(w.reshape(vec![oc, ckk])?.transpose2()?);
+        *slot = Some(t.clone());
+        Ok(t)
     }
 
     /// Whether the transpose has been derived yet (for tests).
     pub fn is_built(&self) -> bool {
-        self.0.get().is_some()
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).is_some()
+    }
+
+    /// The cached transpose without building it — scrubbers only sweep
+    /// state that is actually resident.
+    pub fn peek(&self) -> Option<Arc<QTensor>> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Fault-injection hook: swap the resident transpose (the
+    /// memory-SEU model for derived dense state, mirroring
+    /// [`PackedCache::replace`] for packed state). No-op when nothing
+    /// is resident yet.
+    pub fn replace(&self, t: Arc<QTensor>) {
+        let mut slot = self.0.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_some() {
+            *slot = Some(t);
+        }
+    }
+
+    /// One integrity pass over the resident transpose: golden-verify
+    /// it, and on corruption rebuild from the golden-verified kernel
+    /// `w` — or drop it and report `quarantined` when `w` itself fails
+    /// verification (the caller then quarantines the packed slot too).
+    pub fn scrub(&self, w: &QTensor) -> ScrubOutcome {
+        let mut out = ScrubOutcome::default();
+        let mut slot = self.0.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(t) = slot.as_ref() else { return out };
+        if t.verify_golden() {
+            return out;
+        }
+        out.detected = 1;
+        if w.rank() != 4 || !w.verify_golden() {
+            *slot = None;
+            out.quarantined = 1;
+            return out;
+        }
+        let (oc, ckk) = (w.shape[0], w.shape[1] * w.shape[2] * w.shape[3]);
+        match w.reshape(vec![oc, ckk]).and_then(|r| r.transpose2()) {
+            Ok(fresh) => {
+                *slot = Some(Arc::new(fresh));
+                out.repaired = 1;
+            }
+            Err(_) => {
+                *slot = None;
+                out.quarantined = 1;
+            }
+        }
+        out
     }
 }
 
@@ -341,7 +552,7 @@ impl Conv2dLayer {
         let per = oh * ow;
         let m = batch * per;
         let kdim = c * kh * kw;
-        let acc = exec_layer_matmul(exec, &self.packed, 0, &a, wt, m, kdim, oc, self.bits)?;
+        let acc = exec_layer_matmul(exec, &self.packed, 0, &a, &wt, m, kdim, oc, self.bits)?;
         let acc_scale = x.scale * self.w.scale;
         // output layout (…, oc, oh, ow): transpose each image's
         // (per, oc) block independently
@@ -711,16 +922,99 @@ mod tests {
         let w = QTensor::new(vec![1, 2, 3, -4], vec![2, 2, 1, 1], 1.0, 8).unwrap();
         let cache = TransposedKernelCache::new();
         assert!(!cache.is_built());
-        let p1 = cache.get_or_build(&w).unwrap() as *const QTensor;
-        let p2 = cache.get_or_build(&w).unwrap() as *const QTensor;
-        assert_eq!(p1, p2, "transpose derived once, then cached");
+        assert!(cache.peek().is_none());
+        let p1 = cache.get_or_build(&w).unwrap();
+        let p2 = cache.get_or_build(&w).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "transpose derived once, then cached");
         assert!(cache.is_built());
         // the cached tensor is exactly the on-the-fly derivation
         let want = w.reshape(vec![2, 2]).unwrap().transpose2().unwrap();
         assert_eq!(*cache.get_or_build(&w).unwrap(), want);
         // clones share the same cached transpose
         let clone = cache.clone();
-        assert_eq!(clone.get_or_build(&w).unwrap() as *const QTensor, p1);
+        assert!(Arc::ptr_eq(&clone.get_or_build(&w).unwrap(), &p1));
+    }
+
+    #[test]
+    fn transposed_kernel_scrub_detects_and_rebuilds() {
+        let w = QTensor::new(vec![1, 2, 3, -4], vec![2, 2, 1, 1], 1.0, 8).unwrap();
+        let cache = TransposedKernelCache::new();
+        // nothing resident: scrub sweeps nothing
+        assert_eq!(cache.scrub(&w), ScrubOutcome::default());
+        let clean = cache.get_or_build(&w).unwrap();
+        assert_eq!(cache.scrub(&w), ScrubOutcome::default());
+        // flip one resident value; the golden stamp goes stale with it
+        let mut bad = (*clean).clone();
+        bad.data[0] ^= 1;
+        cache.replace(Arc::new(bad));
+        assert!(!cache.peek().unwrap().verify_golden());
+        let out = cache.scrub(&w);
+        assert_eq!((out.detected, out.repaired, out.quarantined), (1, 1, 0));
+        // rebuilt transpose is bit-identical to the clean derivation
+        assert_eq!(cache.peek().unwrap().data, clean.data);
+        assert!(cache.peek().unwrap().verify_golden());
+    }
+
+    #[test]
+    fn packed_cache_scrub_repairs_by_repack_bit_identical() {
+        let w = QTensor::new(vec![5, -8, 7, -3, 0, 2], vec![3, 2], 1.0, 4).unwrap();
+        let cache = PackedCache::new();
+        let clean = cache.get_or_pack(0, &w, 8).unwrap();
+        // clean sweep: nothing detected
+        assert_eq!(cache.scrub(0, &w), ScrubOutcome::default());
+        // flip one live bit of the resident pack (digit 1 of column 0)
+        let corrupt = Arc::new(clean.with_flipped_bit(0, 0, 0, 1, false).unwrap());
+        assert!(!corrupt.verify());
+        cache.replace((0, 8), corrupt);
+        assert!(!cache.entries()[0].1.verify());
+        let out = cache.scrub(0, &w);
+        assert_eq!((out.detected, out.repaired, out.quarantined), (1, 1, 0));
+        // repaired pack is bit-identical to the original clean pack
+        let repaired = cache.get_or_pack(0, &w, 8).unwrap();
+        assert_eq!(*repaired, *clean);
+        assert!(repaired.verify());
+        assert!(!cache.is_quarantined(0));
+    }
+
+    #[test]
+    fn packed_cache_quarantines_when_golden_source_is_corrupt() {
+        let w = QTensor::new(vec![5, -8, 7, -3, 0, 2], vec![3, 2], 1.0, 4).unwrap();
+        let cache = PackedCache::new();
+        let clean = cache.get_or_pack(7, &w, 8).unwrap();
+        cache.replace(
+            (7, 8),
+            Arc::new(clean.with_flipped_bit(0, 0, 0, 1, false).unwrap()),
+        );
+        // corrupt the dense source too: its golden stamp goes stale
+        let mut bad = w.clone();
+        bad.data[2] ^= 4;
+        assert!(!bad.verify_golden());
+        let out = cache.scrub(7, &bad);
+        assert_eq!((out.detected, out.repaired, out.quarantined), (1, 0, 1));
+        assert!(cache.is_quarantined(7));
+        assert!(cache.entries().is_empty(), "quarantine evicts the slot");
+        // the slot now refuses to serve with the typed error
+        let err = cache.get_or_pack(7, &w, 8).unwrap_err();
+        assert_eq!(err.downcast_ref::<Quarantined>(), Some(&Quarantined { slot: 7 }));
+        // other slots are unaffected
+        assert!(cache.get_or_pack(0, &w, 8).is_ok());
+    }
+
+    #[test]
+    fn evict_and_replace_touch_only_resident_entries() {
+        let w = QTensor::new(vec![1, 2, 3, -4], vec![2, 2], 1.0, 4).unwrap();
+        let cache = PackedCache::new();
+        let p = cache.get_or_pack(0, &w, 4).unwrap();
+        cache.get_or_pack(0, &w, 8).unwrap();
+        cache.get_or_pack(1, &w, 4).unwrap();
+        assert_eq!(cache.entries().len(), 3);
+        // replacing a never-packed key is a no-op (SEU in empty SRAM)
+        cache.replace((9, 4), p.clone());
+        assert_eq!(cache.entries().len(), 3);
+        assert!(!cache.entries().iter().any(|(k, _)| *k == (9, 4)));
+        assert_eq!(cache.evict_slot(0), 2);
+        assert_eq!(cache.entries().len(), 1);
+        assert_eq!(cache.entries()[0].0, (1, 4));
     }
 
     #[test]

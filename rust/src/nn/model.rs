@@ -156,7 +156,7 @@ impl Model {
                 Layer::Conv2d(l) => {
                     let wt = l.wt.get_or_build(&l.w)?;
                     if wt.bits <= l.bits {
-                        l.packed.get_or_pack(0, wt, l.bits)?;
+                        l.packed.get_or_pack(0, &wt, l.bits)?;
                         warmed += 1;
                     }
                 }
@@ -174,6 +174,74 @@ impl Model {
             }
         }
         Ok(warmed)
+    }
+
+    /// One integrity sweep over every resident stationary artifact of
+    /// this model: each layer's [`PackedCache`] entries (all slots, all
+    /// precisions — warm-start packs, sliced views, and the ad-hoc
+    /// packs a request populated on demand all live there) and each
+    /// conv layer's [`TransposedKernelCache`]. Corrupt state is
+    /// repaired by re-pack/re-derive from its golden-verified dense
+    /// source; unrepairable slots are quarantined. Activation packs are
+    /// per-execution transients and never resident, so they are the
+    /// ABFT row-check's job, not the scrubber's (DESIGN.md §Integrity).
+    pub fn scrub(&self) -> crate::nn::layers::ScrubOutcome {
+        use crate::nn::layers::ScrubOutcome;
+        let mut out = ScrubOutcome::default();
+        for layer in &self.layers {
+            match layer {
+                Layer::Linear(l) => out.merge(&l.packed.scrub(0, &l.w)),
+                Layer::Conv2d(l) => {
+                    // the derived transpose first: it is both resident
+                    // state to protect and the packed cache's golden
+                    // source, so repair it before judging the packs
+                    let wts = l.wt.scrub(&l.w);
+                    out.merge(&wts);
+                    if wts.quarantined > 0 {
+                        l.packed.quarantine(0);
+                        out.quarantined += 1;
+                        continue;
+                    }
+                    if let Some(wt) = l.wt.peek() {
+                        out.merge(&l.packed.scrub(0, &wt));
+                    }
+                }
+                Layer::Attention(l) => {
+                    for (slot, w) in
+                        [(0u32, &l.wq), (1, &l.wk), (2, &l.wv), (3, &l.wo)]
+                    {
+                        out.merge(&l.packed.scrub(slot, w));
+                    }
+                }
+                Layer::Flatten => {}
+            }
+        }
+        out
+    }
+
+    /// Every resident packed-plane entry across the model, paired with
+    /// its owning cache handle — the memory-SEU injector's target set
+    /// (flip a bit in one of these and the scrubber/ladder must catch
+    /// it). Deterministic order (layer, then sorted cache key) so a
+    /// seeded injector picks the same victim every run.
+    pub fn resident_planes(
+        &self,
+    ) -> Vec<(PackedCache, (u32, u32), std::sync::Arc<crate::bits::packed::PackedPlanes>)> {
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            let cache = match layer {
+                Layer::Linear(l) => &l.packed,
+                Layer::Conv2d(l) => &l.packed,
+                Layer::Attention(l) => &l.packed,
+                Layer::Flatten => continue,
+            };
+            let mut entries = cache.entries();
+            entries.sort_by_key(|(k, _)| *k);
+            for (key, planes) in entries {
+                out.push((cache.clone(), key, planes));
+            }
+        }
+        out
     }
 
     /// A precision-degraded clone for overload shedding-by-quality
@@ -646,6 +714,36 @@ mod tests {
         if let Layer::Attention(l) = &attn.layers[0] {
             assert_eq!(l.packed.packs(), 4);
         }
+    }
+
+    #[test]
+    fn model_scrub_repairs_a_flipped_resident_plane_bit() {
+        use std::sync::Arc;
+        let m = cnn_zoo(2);
+        m.warm_packed().unwrap();
+        // clean model: a sweep finds nothing
+        assert_eq!(m.scrub(), crate::nn::layers::ScrubOutcome::default());
+        let targets = m.resident_planes();
+        assert_eq!(targets.len(), 3, "conv1 + conv2 + head packs resident");
+        // flip one live bit in the second resident pack (a conv slot)
+        let (cache, key, planes) = &targets[1];
+        let clean = planes.clone();
+        cache.replace(
+            *key,
+            Arc::new(clean.with_flipped_bit(0, 0, 0, 0, false).unwrap()),
+        );
+        let out = m.scrub();
+        assert_eq!((out.detected, out.repaired, out.quarantined), (1, 1, 0));
+        // the repaired pack is bit-identical to the pre-fault one
+        let repaired = m
+            .resident_planes()
+            .into_iter()
+            .find(|(_, k, _)| k == key)
+            .unwrap()
+            .2;
+        assert_eq!(*repaired, *clean);
+        // a second sweep is clean again
+        assert_eq!(m.scrub(), crate::nn::layers::ScrubOutcome::default());
     }
 
     #[test]

@@ -3,6 +3,19 @@
 use crate::bits::twos::{max_value, min_value};
 use crate::Result;
 
+/// FNV-1a fold over quantized values — the golden-source content hash
+/// stamped on every [`QTensor`] at construction (DESIGN.md §Integrity).
+/// Repair-by-re-pack re-verifies the source against this before
+/// trusting it as the donor for a corrupted packed plane.
+pub fn content_hash(data: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in data {
+        h ^= v as u32 as u64;
+        h = h.wrapping_mul(0x1_0000_01b3);
+    }
+    h
+}
+
 /// A quantized tensor: `real ≈ data · scale`, with `data` in the
 /// `bits`-bit two's-complement range. Row-major.
 #[derive(Debug, Clone, PartialEq)]
@@ -11,6 +24,11 @@ pub struct QTensor {
     pub shape: Vec<usize>,
     pub scale: f64,
     pub bits: u32,
+    /// Golden-source content hash of `data`, stamped at construction
+    /// (private so every tensor goes through [`QTensor::new`] /
+    /// [`QTensor::zeros`] and carries a valid hash; `bits`/`shape`
+    /// re-stamps never touch `data`, so the hash survives them).
+    golden: u64,
 }
 
 impl QTensor {
@@ -23,22 +41,39 @@ impl QTensor {
             data.iter().all(|v| (lo..=hi).contains(v)),
             "values exceed {bits}-bit range"
         );
+        let golden = content_hash(&data);
         Ok(QTensor {
             data,
             shape,
             scale,
             bits,
+            golden,
         })
     }
 
     pub fn zeros(shape: Vec<usize>, scale: f64, bits: u32) -> Self {
         let numel = shape.iter().product();
+        let data = vec![0; numel];
+        let golden = content_hash(&data);
         QTensor {
-            data: vec![0; numel],
+            data,
             shape,
             scale,
             bits,
+            golden,
         }
+    }
+
+    /// The pack-time golden hash of `data`.
+    pub fn golden(&self) -> u64 {
+        self.golden
+    }
+
+    /// Whether `data` still matches the hash stamped at construction —
+    /// the gate repair-by-re-pack passes before trusting this tensor
+    /// as the donor for a corrupted packed plane.
+    pub fn verify_golden(&self) -> bool {
+        content_hash(&self.data) == self.golden
     }
 
     pub fn numel(&self) -> usize {
@@ -203,6 +238,23 @@ fn im2col_fill(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn golden_hash_survives_reshape_and_detects_corruption() {
+        let t = QTensor::new((0..8).collect(), vec![2, 4], 0.5, 8).unwrap();
+        assert!(t.verify_golden());
+        // shape/bits re-stamps never touch data, so the hash holds
+        assert!(t.reshape(vec![4, 2]).unwrap().verify_golden());
+        assert!(t.flatten_row().verify_golden());
+        let mut corrupt = t.clone();
+        corrupt.data[3] ^= 1;
+        assert!(!corrupt.verify_golden(), "a flipped value must fail the golden check");
+        assert_eq!(corrupt.golden(), t.golden(), "the stamp itself is immutable");
+        // distinct contents hash apart (the collision case repair cares about)
+        let u = QTensor::new(vec![1, 2, 3], vec![3], 1.0, 8).unwrap();
+        let v = QTensor::new(vec![1, 2, 4], vec![3], 1.0, 8).unwrap();
+        assert_ne!(u.golden(), v.golden());
+    }
 
     #[test]
     fn new_validates_range_and_shape() {

@@ -200,6 +200,32 @@ y 0 1
     }
 
     #[test]
+    fn loaded_weights_carry_golden_stamps_and_scrub_end_to_end() {
+        let b = parse_trained(SAMPLE).unwrap();
+        for layer in &b.model.layers {
+            let Layer::Linear(l) = layer else {
+                panic!("trained bundle is all-linear");
+            };
+            // every loaded weight goes through QTensor::new, so the
+            // golden content hash is stamped at load time
+            assert!(l.w.verify_golden());
+            assert_eq!(l.w.golden(), crate::nn::tensor::content_hash(&l.w.data));
+        }
+        // the loaded model is scrubbable: corrupt a resident pack and
+        // the sweep repairs it from the golden-verified loaded weights
+        b.model.warm_packed().unwrap();
+        let targets = b.model.resident_planes();
+        assert_eq!(targets.len(), 1);
+        let (cache, key, planes) = &targets[0];
+        cache.replace(
+            *key,
+            std::sync::Arc::new(planes.with_flipped_bit(0, 0, 0, 0, false).unwrap()),
+        );
+        let out = b.model.scrub();
+        assert_eq!((out.detected, out.repaired, out.quarantined), (1, 1, 0));
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(parse_trained("layers 1\n").is_err());
         let bad = SAMPLE.replace("w 1 0 0 1", "w 1 0 0");
