@@ -33,8 +33,9 @@ use bitsmm::sim::mac_common::MacVariant;
 use std::sync::Arc;
 
 /// Serve a zoo model end-to-end on Native, cross-check request 0
-/// against a direct forward, re-serve on Packed and assert bit
-/// identity, then print the serving table.
+/// against a direct forward, re-serve on Packed and on the
+/// instruction-driven device backend asserting bit identity against
+/// both, then print the serving table.
 fn serve_tensor_workload(
     title: &str,
     model: Arc<Model>,
@@ -71,11 +72,22 @@ fn serve_tensor_workload(
     // packed backend serves bit-identical outputs
     let mut pcfg = ServerConfig::new(sa, Backend::Packed);
     pcfg.workers = 2;
-    let (packed, preport, _) = serve_all(model.clone(), pcfg, ins)?;
+    let (packed, preport, _) = serve_all(model.clone(), pcfg, ins.clone())?;
     assert!(preport.packed_execs > 0, "packed engine must have executed");
     for (a, b) in responses.iter().zip(&packed) {
         assert_eq!(a.output, b.output, "native vs packed diverged at id {}", a.id);
     }
+
+    // the instruction-driven device backend serves the same integers,
+    // streaming every tile's bit-planes through the fetch/execute/
+    // writeback queue of the cycle-accurate simulator
+    let mut dcfg = ServerConfig::new(sa, Backend::Simulate);
+    dcfg.workers = 1;
+    let (device, _, dmetrics) = serve_all(model.clone(), dcfg, ins)?;
+    for (a, b) in responses.iter().zip(&device) {
+        assert_eq!(a.output, b.output, "native vs device diverged at id {}", a.id);
+    }
+    assert!(dmetrics.device.tiles > 0, "device backend must have streamed tiles");
 
     let p = metrics.latency.percentiles(&[50.0, 95.0, 99.0]);
     let mut t = Table::new(title, &["metric", "value"]);
@@ -90,6 +102,11 @@ fn serve_tensor_workload(
     t.row(&["hw cycles (timing model)".into(), format!("{}", report.hw_cycles)]);
     t.row(&["hw GOPS @300MHz".into(), f(report.hw_gops(300e6))]);
     t.row(&["packed vs native".into(), "bit-identical".into()]);
+    t.row(&["device vs native".into(), "bit-identical".into()]);
+    t.row(&[
+        "device tiles / fetch overlap cycles".into(),
+        format!("{} / {}", dmetrics.device.tiles, dmetrics.device.overlap_cycles),
+    ]);
     print!("{}", t.render());
     Ok(())
 }

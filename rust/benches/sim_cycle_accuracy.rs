@@ -1,27 +1,83 @@
 //! Bench CYC: validate the paper's cycle equations against *measured*
 //! simulator cycles across the three published topologies — the
-//! eq. 8/9 sanity that the paper takes from its RTL testbenches. Also
-//! times the simulator itself (host-side cost of cycle accuracy).
+//! eq. 8/9 sanity that the paper takes from its RTL testbenches — and
+//! measure what the instruction-driven device driver wins by
+//! overlapping tile N+1's fetch with tile N's execute (DESIGN.md
+//! §Device). Also times the simulator itself (host-side cost of cycle
+//! accuracy).
+//!
+//! Set `BITSMM_BENCH_SMOKE=1` (CI does) to shrink the shape matrix and
+//! the timing budget. Cycle counts are deterministic, so every
+//! assertion still runs in smoke mode.
+//!
+//! Writes `BENCH_sim_cycle.json` at the repo root. Cycle metrics ride
+//! in the same `BenchResult` rows as the wall-clock timings by encoding
+//! *cycles as nanoseconds* (1 cycle == 1 ns, i.e. a 1 GHz notional
+//! clock); such rows are suffixed `(cycles-as-ns)`.
 
-use bitsmm::bench_harness::{bench, BenchConfig};
+use bitsmm::bench_harness::{bench, BenchConfig, BenchResult};
 use bitsmm::coordinator::tile_matmul;
+use bitsmm::device::device_matmul;
+use bitsmm::prng::Pcg32;
 use bitsmm::report::{f, Table};
 use bitsmm::sim::array::{SaConfig, SystolicArray};
 use bitsmm::sim::mac_common::MacVariant;
+use std::time::Duration;
+
+/// One deterministic cycle metric as a `BenchResult` row (see module
+/// doc: cycles encoded as nanoseconds, one "iteration").
+fn cycle_row(name: &str, cycles: u64) -> BenchResult {
+    let d = Duration::from_nanos(cycles);
+    BenchResult {
+        name: format!("{name} (cycles-as-ns)"),
+        iters: 1,
+        mean: d,
+        median: d,
+        p95: d,
+        min: d,
+    }
+}
 
 fn main() {
+    let smoke = std::env::var("BITSMM_BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
     bitsmm::bench_harness::header(
         "sim_cycle_accuracy",
-        "measured simulator cycles vs the paper's analytic model (eq. 8 + readout)",
+        if smoke {
+            "measured vs modelled cycles + driver fetch overlap (SMOKE mode)"
+        } else {
+            "measured simulator cycles vs the paper's analytic model (eq. 8 + readout), plus the driver's fetch/execute overlap"
+        },
     );
+    let cfg = if smoke {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            target_time: Duration::from_millis(50),
+        }
+    } else {
+        BenchConfig::default()
+    };
+    let mut log: Vec<BenchResult> = Vec::new();
+
+    // ---- 1. measured vs modelled cycles (eq. 8 + fill + readout) ------
     let mut t = Table::new(
         "measured vs modelled cycles (full-size tiles)",
         &["SA", "k", "bits", "measured", "eq8+fill+readout", "delta", "delta %"],
     );
+    let topologies: &[(usize, usize)] = if smoke {
+        &[(16, 4)]
+    } else {
+        &[(16, 4), (32, 8), (64, 16)]
+    };
+    let shapes: &[(usize, u32)] = if smoke {
+        &[(32, 4), (128, 8)]
+    } else {
+        &[(32, 4), (128, 8), (512, 16)]
+    };
     let mut worst_pct = 0.0f64;
-    for (cols, rows) in [(16usize, 4usize), (32, 8), (64, 16)] {
+    for &(cols, rows) in topologies {
         let sa = SaConfig::new(rows, cols, MacVariant::Booth);
-        for (k, bits) in [(32usize, 4u32), (128, 8), (512, 16)] {
+        for &(k, bits) in shapes {
             let (m, n) = (rows, cols);
             let a = vec![3i32; m * k];
             let b = vec![-2i32; k * n];
@@ -45,15 +101,70 @@ fn main() {
         }
     }
     print!("{}", t.render());
-    println!("worst model error: {}% (paper's eq. 9 ignores the systolic fill; the sim measures it)\n", f(worst_pct));
+    println!(
+        "worst model error: {}% (paper's eq. 9 ignores the systolic fill; the sim measures it)\n",
+        f(worst_pct)
+    );
 
-    // host-side simulator throughput (feeds the §Perf log)
+    // ---- 2. driver fetch/execute overlap (before vs after) ------------
+    // `serial` is what the pre-refactor accounting charged: every tile's
+    // operand fetch on the critical path. `pipelined` is the streamed
+    // driver's schedule, where tile N+1's DMA hides under tile N's
+    // execute. Same instructions, same measured execute/writeback
+    // cycles — the delta is purely the double-buffering win.
+    let mut ot = Table::new(
+        "driver schedule: serial (no overlap) vs pipelined (double-buffered fetch)",
+        &["shape", "bits", "tiles", "fetch", "overlap", "stall", "serial", "pipelined", "saved %"],
+    );
+    let mut rng = Pcg32::new(0xc1cc);
+    let driver_shapes: &[(usize, usize, usize, u32)] = if smoke {
+        &[(8, 96, 48, 6)]
+    } else {
+        &[(8, 96, 48, 6), (16, 256, 64, 8), (12, 130, 40, 4)]
+    };
+    for &(m, k, n, bits) in driver_shapes {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let hi = (1i64 << (bits - 1)) as i32 - 1;
+        let a: Vec<i32> = (0..m * k).map(|_| rng.range_i32(-hi, hi)).collect();
+        let b: Vec<i32> = (0..k * n).map(|_| rng.range_i32(-hi, hi)).collect();
+        let (_, d) = device_matmul(sa, &a, &b, m, k, n, bits).expect("device matmul");
+        assert!(d.tiles > 1, "{m}x{k}x{n} must tile on a 16x4 array");
+        assert!(
+            d.overlap_cycles > 0,
+            "multi-tile shape {m}x{k}x{n} @{bits}b must overlap fetch with execute"
+        );
+        assert_eq!(d.fetch_cycles, d.overlap_cycles + d.stall_cycles);
+        assert!(d.pipelined_cycles() <= d.serial_cycles());
+        let saved =
+            (d.serial_cycles() - d.pipelined_cycles()) as f64 / d.serial_cycles() as f64 * 100.0;
+        let label = format!("{m}x{k}x{n}");
+        ot.row(&[
+            label.clone(),
+            bits.to_string(),
+            d.tiles.to_string(),
+            d.fetch_cycles.to_string(),
+            d.overlap_cycles.to_string(),
+            d.stall_cycles.to_string(),
+            d.serial_cycles().to_string(),
+            d.pipelined_cycles().to_string(),
+            f(saved),
+        ]);
+        log.push(cycle_row(&format!("driver {label} @{bits}b serial"), d.serial_cycles()));
+        log.push(cycle_row(&format!("driver {label} @{bits}b pipelined"), d.pipelined_cycles()));
+        log.push(cycle_row(&format!("driver {label} @{bits}b fetch_overlap"), d.overlap_cycles));
+    }
+    print!("{}", ot.render());
+    println!(
+        "(fetch == overlap + stall by construction; only the stall remainder reaches the pipelined critical path)\n"
+    );
+
+    // ---- 3. host-side simulator throughput (feeds the §Perf log) ------
     let sa = SaConfig::new(4, 16, MacVariant::Booth);
     let (m, k, n, bits) = (4usize, 64usize, 16usize, 8u32);
     let a = vec![7i32; m * k];
     let b = vec![-7i32; k * n];
     let mut arr = SystolicArray::new(sa);
-    let r = bench("simulate 4x64x16 @8b on 16x4", BenchConfig::default(), || {
+    let r = bench("simulate 4x64x16 @8b on 16x4", cfg, || {
         arr.matmul(&a, &b, m, k, n, bits).unwrap().stats.total_cycles()
     });
     println!("{}", r.format());
@@ -63,5 +174,18 @@ fn main() {
         f(cycles as f64 / r.mean.as_secs_f64()),
         cycles
     );
+    log.push(r);
+
+    // driver on the same small shape, end to end (pack + stream + drain)
+    let r = bench("device_matmul 4x64x16 @8b on 16x4", cfg, || {
+        device_matmul(sa, &a, &b, m, k, n, bits).unwrap().1.hw_cycles()
+    });
+    println!("{}", r.format());
+    log.push(r);
+
+    match bitsmm::bench_harness::write_json("sim_cycle", &log) {
+        Ok(path) => println!("\nwrote {path} ({} results)", log.len()),
+        Err(e) => println!("\ncould not write bench json: {e}"),
+    }
     println!("sim_cycle_accuracy bench OK");
 }

@@ -301,6 +301,19 @@ impl PackedPlanes {
         &self.pos[base..base + self.words]
     }
 
+    /// Append the DMA word stream for one vector into `buf`:
+    /// plane-major, `bits × words_per_vec` u64 words, verbatim from the
+    /// packed storage. This is exactly what the device driver streams
+    /// over the `SimIf` boundary for one edge lane (DESIGN.md §Device)
+    /// — the plane words *are* the serialized bit streams, so no
+    /// re-encoding happens between memory and the array's P2S units.
+    pub fn dma_words(&self, vec: usize, buf: &mut Vec<u64>) {
+        buf.reserve(self.bits as usize * self.words);
+        for p in 0..self.bits as usize {
+            buf.extend_from_slice(self.plane_pos(p, vec));
+        }
+    }
+
     /// Negative-digit words of one plane of one vector (`None` for
     /// SBMwC, whose digits are non-negative).
     #[inline]

@@ -108,6 +108,37 @@ fn resilience_rows(t: &mut Table, metrics: &crate::coordinator::Metrics) {
     ]);
 }
 
+/// Device-backend rows shared by the serve and launch tables: the
+/// per-stage cycle split and the fetch/execute overlap the
+/// double-buffered driver won (DESIGN.md §Device). Printed
+/// unconditionally — all-zero rows state "no simulate backend ran",
+/// and CI greps the `fetch_overlap` line.
+fn device_rows(t: &mut Table, metrics: &crate::coordinator::Metrics) {
+    let d = &metrics.device;
+    t.row(&[
+        "device fetch / exec / wb cycles".into(),
+        format!("{} / {} / {}", d.fetch_cycles, d.exec_cycles, d.wb_cycles),
+    ]);
+    t.row(&[
+        "device fetch_overlap / stall cycles".into(),
+        format!(
+            "{} / {} (overlap ratio {})",
+            d.overlap_cycles,
+            d.stall_cycles,
+            f(d.fetch_overlap_ratio())
+        ),
+    ]);
+    t.row(&[
+        "device pipelined / serial cycles".into(),
+        format!(
+            "{} / {} (occupancy {})",
+            d.pipelined_cycles(),
+            d.serial_cycles(),
+            f(d.occupancy())
+        ),
+    ]);
+}
+
 /// Resolve the resilience knobs shared by the CLI and config entry
 /// points onto a [`ServerConfig`]: bounded admission, age shedding,
 /// the optional degrade policy, ABFT verification, and a parsed fault
@@ -269,6 +300,7 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
             f(metrics.steal_rate())
         ),
     ]);
+    device_rows(&mut t, &metrics);
     resilience_rows(&mut t, &metrics);
     if let Some(pl) = &planner_view {
         planner_rows(&mut t, pl, &metrics);
@@ -370,6 +402,7 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     t.row(&["p50 / p99 latency (us)".into(), format!("{} / {}", p[0], p[1])]);
     t.row(&["hw GOPS @config clock".into(), f(report.hw_gops(clock_hz))]);
     t.row(&["MACs / hw cycles".into(), format!("{} / {}", report.macs, report.hw_cycles)]);
+    device_rows(&mut t, &metrics);
     resilience_rows(&mut t, &metrics);
     if let Some(pl) = &planner_view {
         planner_rows(&mut t, pl, &metrics);
@@ -378,8 +411,19 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     Ok(())
 }
 
-/// `bitsmm simulate` implementation.
-pub fn simulate_entry(sa: SaConfig, m: usize, k: usize, n: usize, bits: u32, seed: u64) -> Result<()> {
+/// `bitsmm simulate` implementation. With `trace`, the run re-executes
+/// through the device driver with the instruction-queue tracer attached
+/// and writes the issue/retire waveform as VCD to that path (the traced
+/// rerun is bit-checked against the first pass).
+pub fn simulate_entry(
+    sa: SaConfig,
+    m: usize,
+    k: usize,
+    n: usize,
+    bits: u32,
+    seed: u64,
+    trace: Option<&std::path::Path>,
+) -> Result<()> {
     let mut rng = Pcg32::new(seed);
     let lo = crate::bits::twos::min_value(bits);
     let hi = crate::bits::twos::max_value(bits);
@@ -400,17 +444,59 @@ pub fn simulate_entry(sa: SaConfig, m: usize, k: usize, n: usize, bits: u32, see
         sa.cols as u64,
         sa.rows as u64,
     );
+    let dev = sched.report.device;
     let mut t = Table::new(
         &format!("simulate {m}x{k}x{n} @{bits}b on {} ({})", sa.label(), sa.variant.name()),
         &["metric", "value"],
     );
     t.row(&["tiles".into(), format!("{}", plan.jobs.len())]);
+    t.row(&["instructions".into(), format!("{}", dev.instrs)]);
     t.row(&["measured cycles".into(), format!("{}", sched.report.hw_cycles)]);
     t.row(&["modelled cycles (eq8+fill+readout)".into(), format!("{}", plan.total_cycles(&sa, bits))]);
+    t.row(&[
+        "fetch / exec / wb cycles".into(),
+        format!("{} / {} / {}", dev.fetch_cycles, dev.exec_cycles, dev.wb_cycles),
+    ]);
+    t.row(&[
+        "fetch_overlap / stall cycles".into(),
+        format!(
+            "{} / {} (overlap ratio {})",
+            dev.overlap_cycles,
+            dev.stall_cycles,
+            f(dev.fetch_overlap_ratio())
+        ),
+    ]);
+    t.row(&[
+        "pipelined / serial cycles".into(),
+        format!(
+            "{} / {} (occupancy {})",
+            dev.pipelined_cycles(),
+            dev.serial_cycles(),
+            f(dev.occupancy())
+        ),
+    ]);
+    t.row(&["DMA words streamed".into(), format!("{}", dev.dma_words)]);
     t.row(&["achieved OP/cycle".into(), f(sched.report.macs as f64 / sched.report.hw_cycles as f64)]);
     t.row(&["eq. 9 OP/cycle (single tile)".into(), f(eq9)]);
     t.row(&["result".into(), "MATCHES integer reference".into()]);
     print!("{}", t.render());
+
+    if let Some(path) = trace {
+        use crate::bits::packed::PackedPlanes;
+        use crate::bits::plane::PlaneKind;
+        let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc)?;
+        let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc)?;
+        let mut dev = crate::sim::array::SystolicArray::new(sa);
+        let mut tr = crate::sim::trace::DeviceTrace::new();
+        let run = crate::device::run_layer(&mut dev, &plan, &sa, &pa, &pb, bits, Some(&mut tr))?;
+        anyhow::ensure!(run.out == want, "traced rerun diverged from reference");
+        std::fs::write(path, tr.render_vcd())?;
+        println!(
+            "wrote {} instruction-queue events to {}",
+            tr.events().len(),
+            path.display()
+        );
+    }
     Ok(())
 }
 
@@ -729,6 +815,17 @@ backend = \"gpu\"
     #[test]
     fn simulate_entry_runs() {
         let sa = SaConfig::new(2, 4, MacVariant::Booth);
-        simulate_entry(sa, 2, 5, 4, 4, 9).unwrap();
+        simulate_entry(sa, 2, 5, 4, 4, 9, None).unwrap();
+    }
+
+    #[test]
+    fn simulate_entry_writes_a_device_trace() {
+        let sa = SaConfig::new(2, 4, MacVariant::Booth);
+        let path = std::env::temp_dir().join(format!("bitsmm-devtrace-{}.vcd", std::process::id()));
+        // 5×9×6 on a 2×4 array: 3 row bands × 2 col bands = 6 tiles
+        simulate_entry(sa, 5, 9, 6, 4, 9, Some(&path)).unwrap();
+        let vcd = std::fs::read_to_string(&path).unwrap();
+        assert!(vcd.contains("fetch_busy") && vcd.contains("writeback_tile"));
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -3,6 +3,7 @@
 
 use crate::bits::packed::StealStats;
 use crate::coordinator::faults::{FaultStats, ScrubStats};
+use crate::device::DeviceStats;
 use crate::plan::PlanStats;
 use std::time::Duration;
 
@@ -110,6 +111,10 @@ pub struct Metrics {
     /// integrity path — the background scrubber or the on-ABFT-miss
     /// escalation ladder (DESIGN.md §Integrity).
     pub scrub: ScrubStats,
+    /// Instruction-driven device telemetry: per-stage fetch/execute/
+    /// writeback cycles and the fetch overlap won by double buffering
+    /// (zero unless the simulate backend ran — DESIGN.md §Device).
+    pub device: DeviceStats,
 }
 
 impl Metrics {
@@ -170,9 +175,9 @@ impl Metrics {
     }
 
     /// Fold one worker's metrics into this aggregate: latency samples
-    /// concatenate, counters add. `wall`, `steal`, and `plan` are set
-    /// by the caller (the run clock and the merged `ExecutionReport`
-    /// own those).
+    /// concatenate, counters add. `wall`, `steal`, `plan`, and
+    /// `device` are set by the caller (the run clock and the merged
+    /// `ExecutionReport` own those).
     pub fn absorb(&mut self, w: &Metrics) {
         self.latency.merge(&w.latency);
         self.requests += w.requests;

@@ -28,8 +28,16 @@
 //!   are resolved **per (shape, precision)** through the shared plan
 //!   cache instead of the static config (DESIGN.md §Planner); plans
 //!   change speed, never integers.
-//! * [`Backend::Simulate`] — the cycle-accurate SA simulator itself;
-//!   slowest, but *measures* cycles instead of modelling them.
+//! * [`Backend::Simulate`] — the cycle-accurate SA through the
+//!   instruction-driven device backend ([`crate::device`]): operands
+//!   are packed once into [`PackedPlanes`], the tile plan is compiled
+//!   to `Fetch`/`Execute`/`Writeback`/`Sync` instructions, and the
+//!   double-buffered driver streams plane words into the array over
+//!   the `SimIf` transport — slowest, but *measures* cycles instead of
+//!   modelling them, and reports per-stage fetch/execute overlap in
+//!   [`ExecutionReport::device`]. Operands wider than the declared
+//!   precision widen to their true width (≤ 16 bits); beyond that the
+//!   native loop serves, exactly like the packed fallback.
 
 use crate::bits::packed::{
     KernelFamily, PackedPlanes, PackedPool, PopcountKernel, StealStats, TilePolicy,
@@ -37,6 +45,7 @@ use crate::bits::packed::{
 use crate::bits::plane::PlaneKind;
 use crate::coordinator::faults::{FaultStats, ScrubStats, SeuInjector};
 use crate::coordinator::tiler::{tile_matmul, TilePlan};
+use crate::device::DeviceStats;
 use crate::nn::layers::{MatmulExec, PackedWeight, Quarantined, RepairSource};
 use crate::nn::matmul_native;
 use crate::plan::{ExecPlan, PlanKey, PlanStats, PlanTier, Planner, ShapeRun};
@@ -101,6 +110,11 @@ pub struct ExecutionReport {
     /// background scrubber's sweeps land in the same counters at the
     /// server level.
     pub scrub: ScrubStats,
+    /// Per-stage device telemetry of the instruction-driven simulate
+    /// backend: fetch/execute/writeback cycles, the fetch cycles hidden
+    /// under compute by double buffering, and the exposed stalls (zero
+    /// unless `Backend::Simulate` ran — DESIGN.md §Device).
+    pub device: DeviceStats,
 }
 
 impl ExecutionReport {
@@ -118,6 +132,7 @@ impl ExecutionReport {
         self.plan.merge(&o.plan);
         self.faults.merge(&o.faults);
         self.scrub.merge(&o.scrub);
+        self.device.merge(&o.device);
     }
 
     /// Simulated-hardware GOPS at a clock (paper convention).
@@ -521,26 +536,34 @@ impl Scheduler {
             }
             Backend::Simulate => {
                 let sim = self.sim.as_mut().expect("simulate backend has an array");
-                let mut out = vec![0i64; m * n];
-                for job in &plan.jobs {
-                    // slice operands for this tile
-                    let mut ta = Vec::with_capacity(job.m * k);
-                    for r in job.row0..job.row0 + job.m {
-                        ta.extend_from_slice(&a[r * k..(r + 1) * k]);
-                    }
-                    let mut tb = Vec::with_capacity(k * job.n);
-                    for kk in 0..k {
-                        tb.extend_from_slice(&b[kk * n + job.col0..kk * n + job.col0 + job.n]);
-                    }
-                    let res = sim.matmul(&ta, &tb, job.m, k, job.n, bits)?;
-                    self.report.hw_cycles += res.stats.total_cycles();
-                    self.report.sim_passes += 1;
-                    for r in 0..job.m {
-                        for c in 0..job.n {
-                            out[(job.row0 + r) * n + job.col0 + c] = res.result[r * job.n + c];
-                        }
-                    }
+                // Plane packing needs operands inside the declared
+                // width; layers with looser precision contracts
+                // (conv/attention inputs are not range-checked) widen
+                // to their true width — the device streams whatever the
+                // planes hold — and only beyond the hardware's 16-bit
+                // ceiling does the native loop serve (mirroring the
+                // packed backend's fallback).
+                let eff = PackedPlanes::needed_bits(a)
+                    .max(PackedPlanes::needed_bits(b))
+                    .max(bits);
+                if eff > crate::MAX_BITS {
+                    self.report.hw_cycles += plan.total_cycles(&self.sa, bits);
+                    self.report.native_fallbacks += 1;
+                    return matmul_native(a, b, m, k, n, bits);
                 }
+                // pack once per matmul; every tile streams word slices
+                // of the same packs over the SimIf transport
+                let pa = PackedPlanes::pack_rows(a, m, k, eff, PlaneKind::Sbmwc)?;
+                let pb = PackedPlanes::pack_cols(b, k, n, eff, PlaneKind::Sbmwc)?;
+                let run = crate::device::run_layer(sim, &plan, &self.sa, &pa, &pb, eff, None)?;
+                // array-busy cycles (compute + readout) land in the
+                // shared hw_cycles ledger exactly as before the
+                // streaming refactor; fetch/overlap/stall are the
+                // device's own telemetry
+                self.report.hw_cycles += run.stats.hw_cycles();
+                self.report.sim_passes += run.stats.tiles;
+                self.report.device.merge(&run.stats);
+                let mut out = run.out;
                 // the guard wraps the merged simulator output too: a
                 // flip while stitching tiles is recomputed natively
                 if self.abft && !abft_row_check(a, b, &out, m, k, n) {
@@ -666,6 +689,45 @@ mod tests {
         );
         assert!(hi - lo <= slack, "sim {} vs model {}", sim.report.hw_cycles, nat.report.hw_cycles);
         assert_eq!(sim.report.sim_passes, sim.report.tiles);
+    }
+
+    #[test]
+    fn simulate_backend_reports_device_telemetry() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (6, 9, 20, 5); // 2 row bands × 2 col bands
+        let mut rng = Pcg32::new(0xdec0);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let mut s = Scheduler::new(sa, Backend::Simulate);
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), ref_matmul_i64(&a, &b, m, k, n));
+        let d = &s.report.device;
+        assert_eq!(d.tiles, s.report.tiles);
+        assert_eq!(d.instrs, d.tiles * 3 + 1);
+        assert!(d.overlap_cycles > 0, "multi-tile fetch must hide under compute");
+        assert_eq!(d.fetch_cycles, d.overlap_cycles + d.stall_cycles);
+        // array-busy accounting is the shared hw_cycles ledger, exactly
+        assert_eq!(d.hw_cycles(), s.report.hw_cycles);
+    }
+
+    #[test]
+    fn simulate_widens_out_of_range_operands_like_packed_falls_back() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (2usize, 5usize, 3usize, 4u32);
+        // 100 does not fit in 4 bits: the device widens and still
+        // matches Native (conv/attention layers rely on this)
+        let a = vec![100i32; m * k];
+        let b = vec![3i32; k * n];
+        let mut nat = Scheduler::new(sa, Backend::Native);
+        let want = nat.matmul(&a, &b, m, k, n, bits).unwrap();
+        let mut s = Scheduler::new(sa, Backend::Simulate);
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.native_fallbacks, 0, "widening, not fallback");
+        assert!(s.report.sim_passes > 0);
+        // beyond the 16-bit hardware ceiling the native loop serves
+        let wide = vec![100_000i32; m * k];
+        let want = nat.matmul(&wide, &b, m, k, n, bits).unwrap();
+        assert_eq!(s.matmul(&wide, &b, m, k, n, bits).unwrap(), want);
+        assert_eq!(s.report.native_fallbacks, 1);
     }
 
     #[test]

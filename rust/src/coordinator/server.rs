@@ -534,6 +534,7 @@ impl InferenceServer {
         // paths cannot desynchronize
         metrics.steal = report.steal;
         metrics.plan = report.plan;
+        metrics.device = report.device;
         // scheduler-observed corruption faults (SEU path) fold into the
         // worker-level ledger (dropped pool jobs) — disjoint sources
         metrics.faults.merge(&report.faults);

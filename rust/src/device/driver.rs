@@ -1,0 +1,387 @@
+//! The driver layer (DESIGN.md §Device): interpret a compiled
+//! instruction list over the [`SimIf`] transport, double-buffering the
+//! next tile's fetch under the current tile's execute, and report
+//! per-stage cycle/occupancy telemetry.
+//!
+//! Function and timing are deliberately split. *Function* is strictly
+//! in-order: fetch tile t (poke geometry + DMA plane words), execute
+//! it, read it back — the blocking transport makes the outputs
+//! deterministic. *Timing* is a scoreboard over the measured stage
+//! durations that models the double-buffered edge FIFOs of the real
+//! device: tile t+1's fetch issues the moment tile t's execute starts
+//! (its FIFO bank is free from then on), so fetch cycles hide under
+//! compute and only the exposed remainder stalls the array. Because
+//! the scoreboard consumes *measured* durations in a fixed order, the
+//! reported overlap is as reproducible as the outputs themselves.
+
+use super::isa::{self, Instr};
+use super::simif::{DevReg, DmaChannel, SimIf};
+use crate::bits::packed::PackedPlanes;
+use crate::bits::plane::PlaneKind;
+use crate::coordinator::tiler::{tile_matmul, TilePlan};
+use crate::sim::array::{SaConfig, SystolicArray};
+use crate::sim::trace::DeviceTrace;
+use crate::Result;
+
+/// Per-stage device telemetry, accumulated across tiles (and across
+/// matmuls when merged into `ExecutionReport`/`Metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeviceStats {
+    /// SA passes executed.
+    pub tiles: u64,
+    /// Instructions interpreted (fetch + execute + writeback + sync).
+    pub instrs: u64,
+    /// Total fetch (DMA) cycles at the modelled bus width.
+    pub fetch_cycles: u64,
+    /// Total measured compute cycles.
+    pub exec_cycles: u64,
+    /// Total readout drain cycles.
+    pub wb_cycles: u64,
+    /// Fetch cycles hidden under the previous tile's execute/writeback
+    /// (the double-buffering win; 0 on a single-tile shape).
+    pub overlap_cycles: u64,
+    /// Exposed fetch cycles (the first tile's lead-in plus any fetch
+    /// longer than the compute it hides under).
+    pub stall_cycles: u64,
+    /// u64 words streamed over the DMA boundary.
+    pub dma_words: u64,
+}
+
+impl DeviceStats {
+    pub fn merge(&mut self, o: &DeviceStats) {
+        self.tiles += o.tiles;
+        self.instrs += o.instrs;
+        self.fetch_cycles += o.fetch_cycles;
+        self.exec_cycles += o.exec_cycles;
+        self.wb_cycles += o.wb_cycles;
+        self.overlap_cycles += o.overlap_cycles;
+        self.stall_cycles += o.stall_cycles;
+        self.dma_words += o.dma_words;
+    }
+
+    /// Array-busy cycles: compute + readout. This is the cycle count
+    /// every backend has always reported as `hw_cycles` — streaming the
+    /// operands adds nothing to it (fetch is accounted separately), so
+    /// the pre-refactor totals are preserved exactly.
+    pub fn hw_cycles(&self) -> u64 {
+        self.exec_cycles + self.wb_cycles
+    }
+
+    /// End-to-end cycles had every stage run back-to-back (no
+    /// double buffering).
+    pub fn serial_cycles(&self) -> u64 {
+        self.fetch_cycles + self.exec_cycles + self.wb_cycles
+    }
+
+    /// End-to-end cycles of the double-buffered schedule: only the
+    /// exposed fetch remainder extends the array-busy time.
+    pub fn pipelined_cycles(&self) -> u64 {
+        self.stall_cycles + self.exec_cycles + self.wb_cycles
+    }
+
+    /// Fraction of fetch traffic hidden under compute (0 when nothing
+    /// was fetched).
+    pub fn fetch_overlap_ratio(&self) -> f64 {
+        if self.fetch_cycles == 0 {
+            0.0
+        } else {
+            self.overlap_cycles as f64 / self.fetch_cycles as f64
+        }
+    }
+
+    /// Fraction of the pipelined schedule the array spent computing or
+    /// draining (vs stalled on exposed fetch).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.pipelined_cycles();
+        if total == 0 {
+            0.0
+        } else {
+            self.hw_cycles() as f64 / total as f64
+        }
+    }
+}
+
+/// One streamed SA pass: the cropped m×n tile and its measured stage
+/// durations.
+pub struct TileRun {
+    pub out: Vec<i64>,
+    pub exec_cycles: u64,
+    pub readout_cycles: u64,
+}
+
+/// Stream one tile through the transport: poke geometry, DMA lane
+/// words (A row vectors `a_vec0..a_vec0+m`, B column vectors
+/// `b_vec0..b_vec0+n`), execute, read back. The packs must be raw
+/// two's-complement (`Sbmwc`) planes at exactly `bits` — both MAC
+/// variants consume the same raw bit streams (the variant is the MAC's
+/// internal architecture, not a stream encoding).
+pub fn run_tile<D: SimIf>(
+    dev: &mut D,
+    pa: &PackedPlanes,
+    a_vec0: usize,
+    pb: &PackedPlanes,
+    b_vec0: usize,
+    m: usize,
+    n: usize,
+    bits: u32,
+) -> Result<TileRun> {
+    check_planes(pa, pb, bits)?;
+    anyhow::ensure!(
+        a_vec0 + m <= pa.vectors && b_vec0 + n <= pb.vectors,
+        "tile [{a_vec0}+{m}, {b_vec0}+{n}] outside packed operands ({} × {} vectors)",
+        pa.vectors,
+        pb.vectors
+    );
+    let k = pa.len;
+    dev.poke(DevReg::Reset, 1)?;
+    program_and_fetch(dev, pa, a_vec0, pb, b_vec0, m, n, k, bits)?;
+    let exec_cycles = dev.exec()?;
+    let (out, readout_cycles) = dev.readback()?;
+    Ok(TileRun { out, exec_cycles, readout_cycles })
+}
+
+fn check_planes(pa: &PackedPlanes, pb: &PackedPlanes, bits: u32) -> Result<()> {
+    anyhow::ensure!(
+        pa.kind == PlaneKind::Sbmwc && pb.kind == PlaneKind::Sbmwc,
+        "device streaming consumes raw two's-complement (sbmwc) planes, got {:?}/{:?}",
+        pa.kind,
+        pb.kind
+    );
+    anyhow::ensure!(
+        pa.bits == bits && pb.bits == bits,
+        "packed planes carry {}/{} bit planes, device programmed for {bits}",
+        pa.bits,
+        pb.bits
+    );
+    anyhow::ensure!(
+        pa.len == pb.len,
+        "contracted dimension mismatch: A k={} vs B k={}",
+        pa.len,
+        pb.len
+    );
+    Ok(())
+}
+
+/// Poke one tile's geometry and DMA its lane words (the `Fetch`
+/// instruction's function).
+#[allow(clippy::too_many_arguments)]
+fn program_and_fetch<D: SimIf>(
+    dev: &mut D,
+    pa: &PackedPlanes,
+    a_vec0: usize,
+    pb: &PackedPlanes,
+    b_vec0: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    bits: u32,
+) -> Result<()> {
+    dev.poke(DevReg::M, m as u64)?;
+    dev.poke(DevReg::N, n as u64)?;
+    dev.poke(DevReg::K, k as u64)?;
+    dev.poke(DevReg::Bits, bits as u64)?;
+    let mut buf = Vec::new();
+    for c in 0..n {
+        buf.clear();
+        pb.dma_words(b_vec0 + c, &mut buf);
+        dev.dma_push(DmaChannel::Vertical, c, &buf)?;
+    }
+    for r in 0..m {
+        buf.clear();
+        pa.dma_words(a_vec0 + r, &mut buf);
+        dev.dma_push(DmaChannel::Horizontal, r, &buf)?;
+    }
+    Ok(())
+}
+
+/// One matmul's worth of device execution: the stitched `plan.m ×
+/// plan.n` result and the accumulated per-stage telemetry.
+pub struct LayerRun {
+    pub out: Vec<i64>,
+    pub stats: DeviceStats,
+}
+
+/// Compile `plan` to the device ISA and interpret it over `dev`,
+/// double-buffering fetches. `pa` packs all of A's rows, `pb` all of
+/// B's columns (`Sbmwc`-kind, exactly `bits` planes); tiles address
+/// them by vector offset, so nothing is re-packed per tile.
+pub fn run_layer<D: SimIf>(
+    dev: &mut D,
+    plan: &TilePlan,
+    sa: &SaConfig,
+    pa: &PackedPlanes,
+    pb: &PackedPlanes,
+    bits: u32,
+    mut trace: Option<&mut DeviceTrace>,
+) -> Result<LayerRun> {
+    check_planes(pa, pb, bits)?;
+    anyhow::ensure!(
+        pa.vectors == plan.m && pb.vectors == plan.n && pa.len == plan.k,
+        "packed operands ({}×{} @k={}) do not cover the tile plan ({}×{} @k={})",
+        pa.vectors,
+        pb.vectors,
+        pa.len,
+        plan.m,
+        plan.n,
+        plan.k
+    );
+    let prog = isa::compile(plan, sa, bits);
+    let mut out = vec![0i64; plan.m * plan.n];
+    let mut stats = DeviceStats { instrs: prog.len() as u64, ..Default::default() };
+
+    dev.poke(DevReg::Reset, 1)?;
+
+    // Scoreboard state (cycles on the device clock). `Fetch` of tile t
+    // issues at `exec_start` of tile t−1 — that is when t's FIFO bank
+    // frees up under double buffering; tile 0's fetch is the exposed
+    // lead-in.
+    let mut last_exec_start = 0u64;
+    let mut last_wb_end = 0u64;
+    // carried from a tile's Fetch to its Execute: (fetch_end, job).
+    let mut pending_fetch_end = 0u64;
+    let mut pending_exec_end = 0u64;
+
+    for instr in &prog {
+        match *instr {
+            Instr::Fetch { tile, job, words, .. } => {
+                program_and_fetch(dev, pa, job.row0, pb, job.col0, job.m, job.n, job.k, bits)?;
+                let fc = isa::fetch_cycles(words);
+                let start = if tile == 0 { 0 } else { last_exec_start };
+                let end = start + fc;
+                let hidden = if tile == 0 {
+                    0
+                } else {
+                    end.min(last_wb_end).saturating_sub(start)
+                };
+                stats.fetch_cycles += fc;
+                stats.overlap_cycles += hidden;
+                stats.stall_cycles += fc - hidden;
+                stats.dma_words += words;
+                pending_fetch_end = end;
+                if let Some(t) = trace.as_deref_mut() {
+                    t.stage(instr.mnemonic(), tile, start, end);
+                }
+            }
+            Instr::Execute { tile, .. } => {
+                let measured = dev.exec()?;
+                let start = pending_fetch_end.max(last_wb_end);
+                let end = start + measured;
+                stats.exec_cycles += measured;
+                last_exec_start = start;
+                pending_exec_end = end;
+                if let Some(t) = trace.as_deref_mut() {
+                    t.stage(instr.mnemonic(), tile, start, end);
+                }
+            }
+            Instr::Writeback { tile, job, .. } => {
+                let (tile_out, wb) = dev.readback()?;
+                for r in 0..job.m {
+                    for c in 0..job.n {
+                        out[(job.row0 + r) * plan.n + job.col0 + c] = tile_out[r * job.n + c];
+                    }
+                }
+                let end = pending_exec_end + wb;
+                stats.wb_cycles += wb;
+                stats.tiles += 1;
+                last_wb_end = end;
+                if let Some(t) = trace.as_deref_mut() {
+                    t.stage(instr.mnemonic(), tile, pending_exec_end, end);
+                }
+            }
+            Instr::Sync => {
+                if let Some(t) = trace.as_deref_mut() {
+                    t.stage(instr.mnemonic(), u32::MAX, last_wb_end, last_wb_end);
+                }
+            }
+        }
+    }
+    Ok(LayerRun { out, stats })
+}
+
+/// Pack, tile, and run one full matmul on a freshly built device —
+/// the standalone entry used by `ExecPlan`'s device backend and tests.
+/// Operands wider than the declared precision widen to their true bit
+/// width (the device streams whatever the planes hold).
+pub fn device_matmul(
+    sa: SaConfig,
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bits: u32,
+) -> Result<(Vec<i64>, DeviceStats)> {
+    crate::validate_bits(bits)?;
+    anyhow::ensure!(a.len() == m * k, "A shape mismatch");
+    anyhow::ensure!(b.len() == k * n, "B shape mismatch");
+    let need = PackedPlanes::needed_bits(a)
+        .max(PackedPlanes::needed_bits(b))
+        .max(bits);
+    crate::validate_bits(need)?;
+    let pa = PackedPlanes::pack_rows(a, m, k, need, PlaneKind::Sbmwc)?;
+    let pb = PackedPlanes::pack_cols(b, k, n, need, PlaneKind::Sbmwc)?;
+    let plan = tile_matmul(m, k, n, &sa);
+    let mut dev = SystolicArray::new(sa);
+    let run = run_layer(&mut dev, &plan, &sa, &pa, &pb, need, None)?;
+    Ok((run.out, run.stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::driver::ref_matmul_i64;
+    use crate::sim::mac_common::MacVariant;
+
+    fn mats(m: usize, k: usize, n: usize, bits: u32) -> (Vec<i32>, Vec<i32>) {
+        let hi = crate::bits::twos::max_value(bits);
+        let a = (0..m * k).map(|i| (i as i32 * 7 % (2 * hi + 1)) - hi).collect();
+        let b = (0..k * n).map(|i| (i as i32 * 13 % (2 * hi + 1)) - hi).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn multi_tile_layer_is_bit_identical_and_overlaps() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (10usize, 130usize, 40usize, 6u32); // 9 tiles, tail word
+        let (a, b) = mats(m, k, n, bits);
+        let (out, stats) = device_matmul(sa, &a, &b, m, k, n, bits).unwrap();
+        assert_eq!(out, ref_matmul_i64(&a, &b, m, k, n));
+        assert_eq!(stats.tiles, 9);
+        assert_eq!(stats.instrs, 9 * 3 + 1);
+        assert!(stats.overlap_cycles > 0, "multi-tile fetch must hide under execute");
+        assert_eq!(stats.fetch_cycles, stats.overlap_cycles + stats.stall_cycles);
+        assert!(stats.pipelined_cycles() <= stats.serial_cycles());
+        assert!(stats.occupancy() > 0.0 && stats.occupancy() <= 1.0);
+    }
+
+    #[test]
+    fn single_tile_has_no_overlap() {
+        let sa = SaConfig::new(4, 16, MacVariant::Sbmwc);
+        let (m, k, n, bits) = (4usize, 32usize, 16usize, 8u32);
+        let (a, b) = mats(m, k, n, bits);
+        let (out, stats) = device_matmul(sa, &a, &b, m, k, n, bits).unwrap();
+        assert_eq!(out, ref_matmul_i64(&a, &b, m, k, n));
+        assert_eq!(stats.tiles, 1);
+        assert_eq!(stats.overlap_cycles, 0);
+        assert_eq!(stats.stall_cycles, stats.fetch_cycles);
+    }
+
+    #[test]
+    fn hot_operands_widen_to_their_true_precision() {
+        // declared 4-bit, but the data needs 9 bits — the device widens
+        let sa = SaConfig::new(2, 2, MacVariant::Booth);
+        let a = [200i32, -7, 3, 1];
+        let b = [1i32, -200, 5, 2];
+        let (out, _) = device_matmul(sa, &a, &b, 2, 2, 2, 4).unwrap();
+        assert_eq!(out, ref_matmul_i64(&a, &b, 2, 2, 2));
+    }
+
+    #[test]
+    fn booth_planes_are_rejected() {
+        let a = [1i32, 2];
+        let pa = PackedPlanes::pack_rows(&a, 1, 2, 4, PlaneKind::Booth).unwrap();
+        let pb = PackedPlanes::pack_cols(&a, 2, 1, 4, PlaneKind::Sbmwc).unwrap();
+        let mut dev = SystolicArray::new(SaConfig::new(2, 2, MacVariant::Booth));
+        assert!(run_tile(&mut dev, &pa, 0, &pb, 0, 1, 1, 4).is_err());
+    }
+}

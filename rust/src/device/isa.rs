@@ -1,0 +1,134 @@
+//! The instruction layer (DESIGN.md §Device): a four-op ISA and the
+//! compiler that lowers a tiled matmul onto it.
+//!
+//! Modelled on BISMO's fetch/execute/result instruction queues: every
+//! SA pass becomes a `Fetch` (DMA the tile's operand plane words into
+//! the back FIFO bank), an `Execute` (run the bit-serial compute
+//! phase), and a `Writeback` (snake-drain the accumulators), with a
+//! trailing `Sync` barrier. The driver interprets the list in order for
+//! *function* and scoreboards it for *timing* — `Fetch` of tile N+1
+//! issues while tile N executes (double buffering), which is where the
+//! fetch/execute overlap the telemetry reports comes from.
+
+use crate::arch::throughput::bitsmm_cycles;
+use crate::coordinator::tiler::{TileJob, TilePlan};
+use crate::sim::array::SaConfig;
+
+/// Modelled DMA bandwidth: packed u64 words transferred per device
+/// cycle (a 256-bit bus). Only the *timing* of `Fetch` depends on this;
+/// function never does.
+pub const DMA_WORDS_PER_CYCLE: u64 = 4;
+
+/// One device instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// Stream one tile's operand plane words into the (back) edge
+    /// FIFOs: `(job.m + job.n) · ceil(k/64) · planes` u64 words.
+    Fetch {
+        tile: u32,
+        job: TileJob,
+        /// Bit planes per operand (the effective precision).
+        planes: u32,
+        /// Total u64 words this fetch transfers.
+        words: u64,
+    },
+    /// Run the compute phase. `cycles` is the closed-form estimate
+    /// (eq. 8 + systolic fill) the compiler schedules with; the driver
+    /// replaces it with the measured count.
+    Execute { tile: u32, cycles: u64 },
+    /// Drain the tile through the readout network (`rows × cols`
+    /// cycles — the full-array snake, §III-B).
+    Writeback { tile: u32, job: TileJob, cycles: u64 },
+    /// Barrier: all prior instructions retire before anything after.
+    Sync,
+}
+
+impl Instr {
+    /// Display mnemonic for traces and tables.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::Fetch { .. } => "fetch",
+            Instr::Execute { .. } => "execute",
+            Instr::Writeback { .. } => "writeback",
+            Instr::Sync => "sync",
+        }
+    }
+}
+
+/// DMA words one tile's fetch transfers: every active lane (the tile's
+/// `m` rows plus `n` columns) receives `planes × ceil(k/64)` packed
+/// words.
+pub fn fetch_words(job: &TileJob, bits: u32) -> u64 {
+    let wpv = job.k.div_ceil(64) as u64;
+    (job.m + job.n) as u64 * wpv * bits as u64
+}
+
+/// Fetch cycles at the modelled DMA width.
+pub fn fetch_cycles(words: u64) -> u64 {
+    words.div_ceil(DMA_WORDS_PER_CYCLE)
+}
+
+/// Lower a tiled matmul at precision `bits` into the instruction list
+/// the driver interprets: `Fetch, Execute, Writeback` per SA pass, in
+/// tile order, then one `Sync`.
+pub fn compile(plan: &TilePlan, sa: &SaConfig, bits: u32) -> Vec<Instr> {
+    let fill = (sa.rows + sa.cols).saturating_sub(2) as u64;
+    let wb = (sa.rows * sa.cols) as u64;
+    let mut prog = Vec::with_capacity(plan.jobs.len() * 3 + 1);
+    for (t, job) in plan.jobs.iter().enumerate() {
+        let tile = t as u32;
+        prog.push(Instr::Fetch {
+            tile,
+            job: *job,
+            planes: bits,
+            words: fetch_words(job, bits),
+        });
+        prog.push(Instr::Execute {
+            tile,
+            cycles: bitsmm_cycles(job.k as u64, bits) + fill,
+        });
+        prog.push(Instr::Writeback { tile, job: *job, cycles: wb });
+    }
+    prog.push(Instr::Sync);
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tiler::tile_matmul;
+    use crate::sim::mac_common::MacVariant;
+
+    #[test]
+    fn compile_emits_three_ops_per_tile_plus_sync() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let plan = tile_matmul(10, 70, 40, &sa); // 3 row bands × 3 col bands
+        let prog = compile(&plan, &sa, 8);
+        assert_eq!(prog.len(), plan.jobs.len() * 3 + 1);
+        assert_eq!(prog.last(), Some(&Instr::Sync));
+        for (t, chunk) in prog.chunks_exact(3).enumerate() {
+            assert!(matches!(chunk[0], Instr::Fetch { tile, .. } if tile == t as u32));
+            assert!(matches!(chunk[1], Instr::Execute { tile, .. } if tile == t as u32));
+            assert!(matches!(chunk[2], Instr::Writeback { tile, .. } if tile == t as u32));
+        }
+    }
+
+    #[test]
+    fn fetch_words_count_every_active_lane() {
+        let job = TileJob { row0: 0, col0: 0, m: 3, k: 70, n: 5 };
+        // ceil(70/64) = 2 words per plane per lane, 8 lanes, 7 planes
+        assert_eq!(fetch_words(&job, 7), (3 + 5) * 2 * 7);
+        assert_eq!(fetch_cycles(fetch_words(&job, 7)), (8 * 2 * 7u64).div_ceil(4));
+    }
+
+    #[test]
+    fn execute_estimate_is_eq8_plus_fill() {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let plan = tile_matmul(4, 64, 16, &sa);
+        let prog = compile(&plan, &sa, 8);
+        let Instr::Execute { cycles, .. } = prog[1] else {
+            panic!("expected execute at slot 1, got {:?}", prog[1])
+        };
+        assert_eq!(cycles, (64 + 1) * 8 + (4 + 16 - 2));
+    }
+}

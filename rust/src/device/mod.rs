@@ -1,0 +1,27 @@
+//! Instruction-driven device backend (DESIGN.md §Device).
+//!
+//! Three layers between the coordinator and the cycle-accurate array:
+//!
+//! - [`isa`] — a four-op instruction set (`Fetch`/`Execute`/
+//!   `Writeback`/`Sync`) and the compiler that lowers a
+//!   [`crate::coordinator::tiler::TilePlan`] onto it.
+//! - [`simif`] — the narrow transport trait ([`SimIf`]: register
+//!   poke/peek + per-lane packed-word DMA) that
+//!   [`crate::sim::SystolicArray`] implements and real hardware or a
+//!   PJRT device could implement instead.
+//! - [`driver`] — the interpreter: strictly in-order function,
+//!   double-buffered timing scoreboard, per-stage telemetry in
+//!   [`DeviceStats`].
+//!
+//! The packed bit-plane representation ([`crate::bits::PackedPlanes`])
+//! is the only operand format that crosses the transport: the array's
+//! P2S front end consumes streamed plane words directly instead of
+//! re-deriving bit patterns from integer values each cycle.
+
+pub mod driver;
+pub mod isa;
+pub mod simif;
+
+pub use driver::{device_matmul, run_layer, run_tile, DeviceStats, LayerRun, TileRun};
+pub use isa::{compile, fetch_cycles, fetch_words, Instr, DMA_WORDS_PER_CYCLE};
+pub use simif::{DevReg, DmaChannel, SimIf};

@@ -1,0 +1,77 @@
+//! The transport layer (DESIGN.md §Device): a narrow register-poke /
+//! packed-word-DMA boundary between the driver and whatever executes
+//! the tile.
+//!
+//! Modelled on BISMO's register-file + DMA front end and the
+//! simif/dmaif split of FPGA emulation harnesses: the driver side only
+//! ever (1) writes geometry registers, (2) streams `PackedPlanes` words
+//! into per-lane edge FIFOs, (3) kicks `exec`, and (4) drains results
+//! with `readback`. The cycle-accurate [`crate::sim::SystolicArray`]
+//! implements this trait today; real hardware (MMIO + DMA engine) or a
+//! PJRT-backed device can attach later by implementing the same five
+//! methods — nothing above this trait knows which one it is driving.
+//!
+//! Determinism: the trait is strictly blocking (`exec` runs a tile to
+//! completion, `readback` drains it), so a driver issuing the same
+//! instruction stream always observes the same outputs and the same
+//! per-stage cycle counts. The fetch/execute overlap the driver reports
+//! is a *scoreboard* over these measured durations, not a concurrent
+//! execution — which is why the double-buffered schedule is
+//! reproducible bit-for-bit and cycle-for-cycle.
+
+use crate::Result;
+
+/// Device register map. Geometry registers are write-only from the
+/// driver's perspective between `Reset` and `exec`; `Cycle` and
+/// `DmaWords` are read-only status counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DevReg {
+    /// Write non-zero: full device reset (array state + FIFOs + regs).
+    Reset,
+    /// Tile output rows (`≤ SA rows`).
+    M,
+    /// Tile output cols (`≤ SA cols`).
+    N,
+    /// Contracted dimension (unbounded — eq. 8 scales linearly).
+    K,
+    /// Operand precision, 1..=16.
+    Bits,
+    /// Read-only: device cycle counter.
+    Cycle,
+    /// Read-only: cumulative u64 words received over DMA.
+    DmaWords,
+}
+
+/// The two edge-FIFO banks of the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaChannel {
+    /// Top edge, one lane per column: multiplicand (B) plane words,
+    /// streamed MSb-first by the device's vertical P2S units.
+    Vertical,
+    /// Left edge, one lane per row: multiplier (A) plane words,
+    /// streamed LSb-first by the horizontal P2S units.
+    Horizontal,
+}
+
+/// The device transport: everything the driver can do to a device.
+pub trait SimIf {
+    /// Write a device register.
+    fn poke(&mut self, reg: DevReg, val: u64) -> Result<()>;
+
+    /// Read a device register.
+    fn peek(&self, reg: DevReg) -> u64;
+
+    /// Stream one lane's packed operand words (plane-major,
+    /// `bits × ceil(k/64)` u64 words per full lane) into an edge FIFO.
+    /// Words are `PackedPlanes` storage verbatim.
+    fn dma_push(&mut self, ch: DmaChannel, lane: usize, words: &[u64]) -> Result<()>;
+
+    /// Run the programmed tile's compute phase to completion. Returns
+    /// the architectural compute cycles consumed. Consumes the FIFOs.
+    fn exec(&mut self) -> Result<u64>;
+
+    /// Drain the result through the readout network: the m×n tile
+    /// (row-major, cropped to the programmed geometry) and the drain
+    /// cycles.
+    fn readback(&mut self) -> Result<(Vec<i64>, u64)>;
+}

@@ -23,6 +23,11 @@
 //!   linear / conv2d / attention layers, and a tiny model zoo.
 //! * [`coordinator`] — the serving stack: matmul tiler, per-layer
 //!   precision policy, dynamic batcher, scheduler and threaded server.
+//! * [`device`] — the instruction-driven device backend: a four-op
+//!   ISA (`Fetch`/`Execute`/`Writeback`/`Sync`), the narrow `SimIf`
+//!   register/DMA transport the simulator implements, and the
+//!   double-buffered driver that streams packed plane words into the
+//!   array and reports fetch/execute overlap (see DESIGN.md §Device).
 //! * [`plan`] — the shape-keyed execution planner: per-(shape,
 //!   precision) kernel/thread/tile plans resolved through a persistent
 //!   cache, a cost model, and on-line calibration (`bitsmm tune`).
@@ -45,6 +50,7 @@ pub mod bits;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod device;
 pub mod nn;
 pub mod plan;
 pub mod prng;

@@ -244,6 +244,11 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
         .opt("n", "output cols", Some("16"))
         .opt("bits", "operand precision 1..16", Some("8"))
         .opt("seed", "operand seed", Some("1"))
+        .opt(
+            "trace",
+            "write the device instruction-queue waveform (VCD) to this path",
+            None,
+        )
         .switch("help", "show help");
     let args = cmd.parse(argv)?;
     if args.switch("help") {
@@ -257,7 +262,8 @@ fn cmd_simulate(argv: &[String]) -> Result<()> {
     let (m, k, n) = (args.req("m")?, args.req("k")?, args.req("n")?);
     let bits: u32 = args.req("bits")?;
     let seed: u64 = args.req("seed")?;
-    bitsmm::coordinator::simulate_entry(sa, m, k, n, bits, seed)
+    let trace = args.get("trace").map(std::path::Path::new);
+    bitsmm::coordinator::simulate_entry(sa, m, k, n, bits, seed, trace)
 }
 
 fn cmd_tables(argv: &[String]) -> Result<()> {

@@ -36,6 +36,13 @@ pub enum PlanBackend {
     Native,
     /// The word-packed plane-pair engine (`bits::packed`).
     Packed,
+    /// The instruction-driven cycle-accurate device
+    /// ([`crate::device::device_matmul`] on the paper's default 4×16
+    /// Booth array). A fidelity choice, not a speed choice: nameable in
+    /// plan files and runnable through the shared executor, but never
+    /// offered by [`ExecPlan::candidates`] — the planner only
+    /// arbitrates the host-speed engines.
+    Device,
 }
 
 impl PlanBackend {
@@ -43,6 +50,7 @@ impl PlanBackend {
         match self {
             PlanBackend::Native => "native",
             PlanBackend::Packed => "packed",
+            PlanBackend::Device => "device",
         }
     }
 }
@@ -54,7 +62,8 @@ impl std::str::FromStr for PlanBackend {
         match s {
             "native" => Ok(PlanBackend::Native),
             "packed" => Ok(PlanBackend::Packed),
-            other => anyhow::bail!("unknown plan backend '{other}' (native|packed)"),
+            "device" => Ok(PlanBackend::Device),
+            other => anyhow::bail!("unknown plan backend '{other}' (native|packed|device)"),
         }
     }
 }
@@ -124,6 +133,15 @@ impl ExecPlan {
         }
     }
 
+    /// The instruction-driven device plan: every other knob is inert
+    /// (the streamed array has no reducer, pool, or tile policy).
+    pub fn device() -> ExecPlan {
+        ExecPlan {
+            backend: PlanBackend::Device,
+            ..ExecPlan::native()
+        }
+    }
+
     pub fn packed(
         kernel: PopcountKernel,
         threads: u32,
@@ -170,6 +188,7 @@ impl ExecPlan {
     pub fn label(&self) -> String {
         match self.backend {
             PlanBackend::Native => "native".to_string(),
+            PlanBackend::Device => "device".to_string(),
             PlanBackend::Packed => {
                 let mut tile = if self.tile.tile_rows == 0 && self.tile.tile_cols == 0 {
                     "auto".to_string()
@@ -330,6 +349,20 @@ impl ShapeRun<'_> {
                 StealStats::default(),
                 false,
             )),
+            // fidelity leg: the cycle-accurate array behind the
+            // instruction-driven driver, on the paper's default 4×16
+            // Booth configuration (per-stage telemetry is dropped here;
+            // the scheduler's Simulate backend reports it)
+            PlanBackend::Device => {
+                let sa = crate::sim::array::SaConfig::new(
+                    4,
+                    16,
+                    crate::sim::mac_common::MacVariant::Booth,
+                );
+                let (out, _stats) =
+                    crate::device::device_matmul(sa, self.a, self.b, m, k, n, bits)?;
+                Ok((out, StealStats::default(), false))
+            }
             PlanBackend::Packed => {
                 let pa = Arc::new(PackedPlanes::pack_rows(self.a, m, k, bits, self.stream_kind)?);
                 let pb = match self.packed_b {
@@ -567,8 +600,37 @@ mod tests {
         assert_eq!(rsr.rsr(0).label(), "packed/scalar/t1/serial/auto/rsr");
         assert_eq!(rsr.rsr(2).label(), "packed/scalar/t1/serial/auto/rsr2");
         assert_eq!("native".parse::<PlanBackend>().unwrap(), PlanBackend::Native);
+        assert_eq!("device".parse::<PlanBackend>().unwrap(), PlanBackend::Device);
+        assert_eq!(ExecPlan::device().label(), "device");
         assert_eq!("stolen".parse::<Partition>().unwrap(), Partition::Stolen);
         assert!("gpu".parse::<PlanBackend>().is_err());
         assert!("diagonal".parse::<Partition>().is_err());
+    }
+
+    #[test]
+    fn device_plan_is_runnable_but_never_a_candidate() {
+        let mut rng = Pcg32::new(0xdead);
+        let (m, k, n, bits) = (5usize, 70usize, 9usize, 6u32);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let run = ShapeRun {
+            a: &a,
+            b: &b,
+            m,
+            k,
+            n,
+            bits,
+            stream_kind: PlaneKind::Sbmwc,
+            packed_b: None,
+            pool: None,
+        };
+        let (out, stats, ran_packed) = run.run(&ExecPlan::device()).unwrap();
+        assert_eq!(out, ref_matmul_i64(&a, &b, m, k, n), "device leg diverged");
+        assert!(!ran_packed);
+        assert_eq!(stats, StealStats::default());
+        // the planner never offers the fidelity leg on speed grounds
+        for plan in ExecPlan::candidates(8) {
+            assert_ne!(plan.backend, PlanBackend::Device);
+        }
     }
 }

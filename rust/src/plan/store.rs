@@ -189,6 +189,7 @@ fn parse_entry(e: &Json) -> Result<(PlanKey, ExecPlan)> {
     };
     let plan = match backend {
         PlanBackend::Native => ExecPlan::native(),
+        PlanBackend::Device => ExecPlan::device(),
         PlanBackend::Packed => {
             let p = ExecPlan::packed(kernel, threads, partition, tile);
             match family {

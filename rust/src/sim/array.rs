@@ -22,14 +22,28 @@
 //! The paper's eq. 8/9 cycle counts ignore the systolic fill
 //! (`rows + cols − 2` skew cycles); the simulator measures the true
 //! count and the `sim_cycle_accuracy` bench quantifies the delta.
+//!
+//! Since the streamed-device refactor (DESIGN.md §Device) the array is
+//! programmed like a memory-mapped device: geometry registers are
+//! poked, operand **plane words** (`PackedPlanes` storage, verbatim)
+//! are DMA'd into per-lane edge FIFOs, and `exec`/`readback` run the
+//! compute and drain phases. [`SystolicArray`] implements the
+//! [`crate::device::SimIf`] transport trait; the edge P2S units consume
+//! bit patterns gathered from the DMA'd words — there is no dense
+//! operand path into the array any more ([`SystolicArray::matmul`] is a
+//! pack-then-stream convenience wrapper).
 
+use crate::bits::packed::PackedPlanes;
+use crate::bits::plane::PlaneKind;
 use crate::bits::twos::{max_value, min_value};
+use crate::device::{DevReg, DmaChannel, SimIf};
 use crate::sim::mac_common::{MacInput, MacVariant};
 use crate::sim::p2s::{BitOrder, P2s, P2sOut};
 use crate::sim::readout::ReadoutNetwork;
 use crate::sim::stats::SimStats;
 use crate::sim::{MacUnit, DEFAULT_ACC_BITS};
 use crate::Result;
+use std::collections::VecDeque;
 
 /// Compile-time configuration of one SA instance. The paper's evaluated
 /// topologies are 16×4, 32×8 and 64×16 (#columns × #rows).
@@ -91,11 +105,14 @@ struct HSig {
     en: bool,
 }
 
-/// Edge stream source: a P2S plus its operand queue and emission skew.
+/// Edge stream source: a P2S plus its operand-pattern queue and
+/// emission skew. The queue holds two's-complement bit patterns
+/// gathered from the DMA'd plane words — the P2S never sees an integer
+/// value.
 struct EdgeSource {
     p2s: P2s,
-    /// Values yet to stream (in order), with their widths.
-    queue: std::collections::VecDeque<(i32, u32)>,
+    /// Bit patterns yet to stream (in order), with their widths.
+    queue: VecDeque<(u32, u32)>,
     /// Idle cycles before the first bit (diagonal skew + lead).
     delay: u64,
     /// Emit one zero flush operand after the queue drains (vertical
@@ -108,7 +125,7 @@ impl EdgeSource {
     fn new(order: BitOrder, delay: u64, flush_ops: u32, flush_width: u32) -> Self {
         EdgeSource {
             p2s: P2s::new(order),
-            queue: std::collections::VecDeque::new(),
+            queue: VecDeque::new(),
             delay,
             flush_ops_left: flush_ops,
             flush_width,
@@ -126,11 +143,11 @@ impl EdgeSource {
             };
         }
         if self.p2s.empty() {
-            if let Some((v, w)) = self.queue.pop_front() {
-                self.p2s.load(v, w);
+            if let Some((pat, w)) = self.queue.pop_front() {
+                self.p2s.load_pattern(pat, w);
             } else if self.flush_ops_left > 0 {
                 self.flush_ops_left -= 1;
-                self.p2s.load(0, self.flush_width);
+                self.p2s.load_pattern(0, self.flush_width);
             }
         }
         self.p2s.shift()
@@ -138,6 +155,52 @@ impl EdgeSource {
 
     fn exhausted(&self) -> bool {
         self.delay == 0 && self.p2s.empty() && self.queue.is_empty() && self.flush_ops_left == 0
+    }
+}
+
+/// Gather per-value bit patterns out of one lane's DMA'd plane words
+/// (plane-major, `bits × wpv` u64 words for a `k`-long vector): value
+/// `kk`'s pattern is bit `kk` of every plane, reassembled LSb-plane
+/// first. This is the device-side unpacker sitting between the DMA
+/// FIFO and the P2S front end.
+fn gather_patterns(words: &[u64], k: usize, wpv: usize, bits: u32) -> VecDeque<(u32, u32)> {
+    (0..k)
+        .map(|kk| {
+            let (w, sh) = (kk >> 6, (kk & 63) as u32);
+            let mut pat = 0u32;
+            for p in 0..bits as usize {
+                pat |= (((words[p * wpv + w] >> sh) & 1) as u32) << p;
+            }
+            (pat, bits)
+        })
+        .collect()
+}
+
+/// Device-visible streaming state: the geometry registers the driver
+/// pokes plus the per-lane packed-word FIFOs it DMAs into.
+#[derive(Debug, Default)]
+struct StreamState {
+    m: usize,
+    n: usize,
+    k: usize,
+    bits: u32,
+    /// Per-column vertical FIFOs (multiplicand plane words).
+    v_fifos: Vec<Vec<u64>>,
+    /// Per-row horizontal FIFOs (multiplier plane words).
+    h_fifos: Vec<Vec<u64>>,
+    /// Cumulative words received over the DMA boundary.
+    dma_words: u64,
+    /// Set by `exec`, cleared by `readback`.
+    executed: bool,
+}
+
+impl StreamState {
+    fn new(rows: usize, cols: usize) -> Self {
+        StreamState {
+            v_fifos: vec![Vec::new(); cols],
+            h_fifos: vec![Vec::new(); rows],
+            ..Default::default()
+        }
     }
 }
 
@@ -150,6 +213,8 @@ pub struct SystolicArray {
     h_regs: Vec<HSig>,
     readout: ReadoutNetwork,
     cycle: u64,
+    /// Transport-facing registers and DMA FIFOs (`crate::device::SimIf`).
+    stream: StreamState,
 }
 
 impl SystolicArray {
@@ -164,6 +229,7 @@ impl SystolicArray {
             h_regs: vec![HSig::default(); cfg.macs()],
             readout: ReadoutNetwork::new(cfg.rows, cfg.cols),
             cycle: 0,
+            stream: StreamState::new(cfg.rows, cfg.cols),
         }
     }
 
@@ -198,6 +264,13 @@ impl SystolicArray {
     /// width `bits`, where `m ≤ rows` and `n ≤ cols`. Returns the m×n
     /// result (row-major) and the cycle statistics, including the
     /// snake-order readout drain.
+    ///
+    /// This is a convenience wrapper over the streamed transport: the
+    /// operands are packed into raw two's-complement bit planes (always
+    /// `Sbmwc`-kind — the MAC variant is the unit's internal
+    /// architecture, not a stream encoding) and DMA'd through the
+    /// [`crate::device::SimIf`] boundary exactly as the device driver
+    /// would.
     pub fn matmul(&mut self, a: &[i32], b: &[i32], m: usize, k: usize, n: usize, bits: u32) -> Result<MatmulOutput> {
         let (rows, cols) = (self.cfg.rows, self.cfg.cols);
         anyhow::ensure!(m >= 1 && k >= 1 && n >= 1, "empty matmul {m}x{k}x{n}");
@@ -211,47 +284,34 @@ impl SystolicArray {
             a.iter().chain(b.iter()).all(|&v| (lo..=hi).contains(&v)),
             "operand out of {bits}-bit two's-complement range"
         );
-        self.reset();
+        let pa = PackedPlanes::pack_rows(a, m, k, bits, PlaneKind::Sbmwc)?;
+        let pb = PackedPlanes::pack_cols(b, k, n, bits, PlaneKind::Sbmwc)?;
+        let run = crate::device::run_tile(self, &pa, 0, &pb, 0, m, n, bits)?;
+        let mut stats = SimStats {
+            compute_cycles: run.exec_cycles,
+            readout_cycles: run.readout_cycles,
+            num_macs: self.cfg.macs() as u64,
+            mac_results: (m * n) as u64,
+            ..Default::default()
+        };
+        for mac in &self.macs {
+            stats.mac.merge(mac.stats());
+        }
+        Ok(MatmulOutput { result: run.out, stats })
+    }
 
-        // Edge sources with diagonal skew. The multiplicand (vertical)
-        // leads the multiplier (horizontal) by b_max cycles (eq. 7).
-        let bits_u64 = bits as u64;
-        let mut v_srcs: Vec<EdgeSource> = (0..cols)
-            .map(|c| {
-                let mut s = EdgeSource::new(BitOrder::MsbFirst, c as u64, 1, bits);
-                if c < n {
-                    for kk in 0..k {
-                        s.queue.push_back((b[kk * n + c], bits));
-                    }
-                } else {
-                    s.queue.clear();
-                    s.flush_ops_left = 0; // unused column: stays idle
-                }
-                s
-            })
-            .collect();
-        let mut h_srcs: Vec<EdgeSource> = (0..rows)
-            .map(|r| {
-                let mut s = EdgeSource::new(BitOrder::LsbFirst, r as u64 + bits_u64, 0, bits);
-                if r < m {
-                    for kk in 0..k {
-                        s.queue.push_back((a[r * k + kk], bits));
-                    }
-                } else {
-                    s.queue.clear();
-                }
-                s
-            })
-            .collect();
-
-        // Compute phase: run until every source is exhausted and every
-        // in-flight bit has propagated through the deepest pipeline.
-        let drain_after = (rows + cols) as u64; // conservative pipeline drain
+    /// The compute phase: run until every edge source is exhausted and
+    /// every in-flight bit has propagated through the deepest pipeline.
+    /// Returns the architectural cycle count (the paper's accounting
+    /// stops when the last MAC has consumed its final multiplier bit;
+    /// the drain allowance is a simulator artefact and is subtracted).
+    fn run_compute(&mut self, v_srcs: &mut [EdgeSource], h_srcs: &mut [EdgeSource]) -> Result<u64> {
+        let drain_after = (self.cfg.rows + self.cfg.cols) as u64; // conservative pipeline drain
         let mut idle_cycles = 0u64;
         let mut compute_cycles = 0u64;
         while idle_cycles < drain_after {
             let all_done = v_srcs.iter().all(|s| s.exhausted()) && h_srcs.iter().all(|s| s.exhausted());
-            self.step_compute(&mut v_srcs, &mut h_srcs);
+            self.step_compute(v_srcs, h_srcs);
             compute_cycles += 1;
             if all_done {
                 idle_cycles += 1;
@@ -261,12 +321,84 @@ impl SystolicArray {
                 "simulation runaway: {compute_cycles} cycles"
             );
         }
+        Ok(compute_cycles - drain_after)
+    }
 
-        // Readout phase: snake drain, one value per cycle.
+    /// The `SimIf::exec` engine: validate the poked geometry, unpack
+    /// the DMA'd plane words into per-lane pattern queues, and run the
+    /// compute phase. Consumes the FIFOs; accumulators hold the tile
+    /// until `readback`.
+    fn exec_streamed(&mut self) -> Result<u64> {
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        let (m, n, k, bits) = (self.stream.m, self.stream.n, self.stream.k, self.stream.bits);
+        anyhow::ensure!(m >= 1 && k >= 1 && n >= 1, "device exec with unprogrammed geometry {m}x{k}x{n}");
+        anyhow::ensure!(m <= rows, "tile rows {m} exceed SA rows {rows}");
+        anyhow::ensure!(n <= cols, "tile cols {n} exceed SA cols {cols}");
+        crate::validate_bits(bits)?;
+        let wpv = k.div_ceil(64);
+        let expect = bits as usize * wpv;
+        for (lane, fifo) in self.stream.v_fifos.iter().enumerate() {
+            let want = if lane < n { expect } else { 0 };
+            anyhow::ensure!(
+                fifo.len() == want,
+                "vertical lane {lane}: {} plane words DMA'd, {want} expected",
+                fifo.len()
+            );
+        }
+        for (lane, fifo) in self.stream.h_fifos.iter().enumerate() {
+            let want = if lane < m { expect } else { 0 };
+            anyhow::ensure!(
+                fifo.len() == want,
+                "horizontal lane {lane}: {} plane words DMA'd, {want} expected",
+                fifo.len()
+            );
+        }
+
+        // Edge sources with diagonal skew. The multiplicand (vertical)
+        // leads the multiplier (horizontal) by b_max cycles (eq. 7);
+        // unused lanes idle through their skew with enables low,
+        // exactly as before the streamed transport existed.
+        let bits_u64 = bits as u64;
+        let mut v_srcs: Vec<EdgeSource> = (0..cols)
+            .map(|c| {
+                let mut s = EdgeSource::new(BitOrder::MsbFirst, c as u64, 1, bits);
+                if c < n {
+                    s.queue = gather_patterns(&self.stream.v_fifos[c], k, wpv, bits);
+                } else {
+                    s.flush_ops_left = 0; // unused column: stays idle
+                }
+                s
+            })
+            .collect();
+        let mut h_srcs: Vec<EdgeSource> = (0..rows)
+            .map(|r| {
+                let mut s = EdgeSource::new(BitOrder::LsbFirst, r as u64 + bits_u64, 0, bits);
+                if r < m {
+                    s.queue = gather_patterns(&self.stream.h_fifos[r], k, wpv, bits);
+                }
+                s
+            })
+            .collect();
+        for fifo in self.stream.v_fifos.iter_mut().chain(self.stream.h_fifos.iter_mut()) {
+            fifo.clear();
+        }
+
+        self.reset();
+        let cycles = self.run_compute(&mut v_srcs, &mut h_srcs)?;
+        self.stream.executed = true;
+        Ok(cycles)
+    }
+
+    /// The `SimIf::readback` engine: snake-drain the accumulator plane
+    /// through the readout network, de-snake, and crop to the
+    /// programmed m×n tile.
+    fn readback_streamed(&mut self) -> Result<(Vec<i64>, u64)> {
+        anyhow::ensure!(self.stream.executed, "device readback before exec");
+        self.stream.executed = false;
+        let (rows, cols) = (self.cfg.rows, self.cfg.cols);
+        let (m, n) = (self.stream.m, self.stream.n);
         let accs = self.accumulators();
         let (snake_vals, readout_cycles) = self.readout.drain(&accs);
-
-        // De-snake into a row-major result and crop to m×n.
         let mut full = vec![0i64; rows * cols];
         for (p, v) in snake_vals.iter().enumerate() {
             let (r, c) = crate::sim::readout::snake_position(p, cols);
@@ -278,21 +410,7 @@ impl SystolicArray {
                 result[r * n + c] = full[r * cols + c];
             }
         }
-
-        let mut stats = SimStats {
-            // the paper's cycle accounting stops when the last MAC has
-            // consumed its final multiplier bit; the drain allowance is
-            // a simulator artefact, so report the architectural count
-            compute_cycles: compute_cycles - drain_after,
-            readout_cycles,
-            num_macs: self.cfg.macs() as u64,
-            mac_results: (m * n) as u64,
-            ..Default::default()
-        };
-        for mac in &self.macs {
-            stats.mac.merge(mac.stats());
-        }
-        Ok(MatmulOutput { result, stats })
+        Ok((result, readout_cycles))
     }
 
     /// One compute-phase clock edge: emit at the edges, step every MAC
@@ -346,6 +464,66 @@ impl SystolicArray {
         }
 
         self.cycle += 1;
+    }
+}
+
+/// The transport boundary (DESIGN.md §Device): the cycle-accurate
+/// array *is* a device behind register pokes and packed-word DMA. This
+/// is the seam where real hardware (or a PJRT-backed engine) attaches
+/// by providing its own `SimIf` implementation.
+impl SimIf for SystolicArray {
+    fn poke(&mut self, reg: DevReg, val: u64) -> Result<()> {
+        match reg {
+            DevReg::Reset => {
+                if val != 0 {
+                    self.reset();
+                    self.stream = StreamState::new(self.cfg.rows, self.cfg.cols);
+                }
+            }
+            DevReg::M => self.stream.m = val as usize,
+            DevReg::N => self.stream.n = val as usize,
+            DevReg::K => self.stream.k = val as usize,
+            DevReg::Bits => self.stream.bits = val as u32,
+            DevReg::Cycle | DevReg::DmaWords => {
+                anyhow::bail!("device register {reg:?} is read-only")
+            }
+        }
+        Ok(())
+    }
+
+    fn peek(&self, reg: DevReg) -> u64 {
+        match reg {
+            DevReg::Reset => 0,
+            DevReg::M => self.stream.m as u64,
+            DevReg::N => self.stream.n as u64,
+            DevReg::K => self.stream.k as u64,
+            DevReg::Bits => self.stream.bits as u64,
+            DevReg::Cycle => self.cycle,
+            DevReg::DmaWords => self.stream.dma_words,
+        }
+    }
+
+    fn dma_push(&mut self, ch: DmaChannel, lane: usize, words: &[u64]) -> Result<()> {
+        let fifos = match ch {
+            DmaChannel::Vertical => &mut self.stream.v_fifos,
+            DmaChannel::Horizontal => &mut self.stream.h_fifos,
+        };
+        anyhow::ensure!(
+            lane < fifos.len(),
+            "DMA lane {lane} out of range for {ch:?} ({} lanes)",
+            fifos.len()
+        );
+        fifos[lane].extend_from_slice(words);
+        self.stream.dma_words += words.len() as u64;
+        Ok(())
+    }
+
+    fn exec(&mut self) -> Result<u64> {
+        self.exec_streamed()
+    }
+
+    fn readback(&mut self) -> Result<(Vec<i64>, u64)> {
+        self.readback_streamed()
     }
 }
 
@@ -431,6 +609,45 @@ mod tests {
         let mut sa = SystolicArray::new(SaConfig::new(2, 2, MacVariant::Booth));
         let out = sa.matmul(&a, &b, 2, 2, 2, 1).unwrap();
         assert_eq!(out.result, ref_matmul(&a, &b, 2, 2, 2));
+    }
+
+    /// Drive the transport trait by hand — poke geometry, DMA the
+    /// plane words verbatim, exec, readback — and pin it to the dense
+    /// wrapper path.
+    #[test]
+    fn raw_simif_streaming_matches_the_wrapper() {
+        let (m, k, n, bits) = (3usize, 70usize, 5usize, 7u32); // k > 64: tail word
+        let a: Vec<i32> = (0..m * k).map(|i| (i as i32 % 127) - 63).collect();
+        let b: Vec<i32> = (0..k * n).map(|i| ((i as i32 * 11) % 127) - 63).collect();
+        let pa = PackedPlanes::pack_rows(&a, m, k, bits, PlaneKind::Sbmwc).unwrap();
+        let pb = PackedPlanes::pack_cols(&b, k, n, bits, PlaneKind::Sbmwc).unwrap();
+
+        let mut dev = SystolicArray::new(SaConfig::new(4, 16, MacVariant::Booth));
+        dev.poke(DevReg::Reset, 1).unwrap();
+        dev.poke(DevReg::M, m as u64).unwrap();
+        dev.poke(DevReg::N, n as u64).unwrap();
+        dev.poke(DevReg::K, k as u64).unwrap();
+        dev.poke(DevReg::Bits, bits as u64).unwrap();
+        let mut buf = Vec::new();
+        for c in 0..n {
+            buf.clear();
+            pb.dma_words(c, &mut buf);
+            dev.dma_push(DmaChannel::Vertical, c, &buf).unwrap();
+        }
+        for r in 0..m {
+            buf.clear();
+            pa.dma_words(r, &mut buf);
+            dev.dma_push(DmaChannel::Horizontal, r, &buf).unwrap();
+        }
+        let exec_cycles = dev.exec().unwrap();
+        let (out, readout_cycles) = dev.readback().unwrap();
+
+        let mut sa = SystolicArray::new(SaConfig::new(4, 16, MacVariant::Booth));
+        let want = sa.matmul(&a, &b, m, k, n, bits).unwrap();
+        assert_eq!(out, want.result);
+        assert_eq!(exec_cycles, want.stats.compute_cycles);
+        assert_eq!(readout_cycles, want.stats.readout_cycles);
+        assert_eq!(dev.peek(DevReg::DmaWords), ((m + n) * 2 * bits as usize) as u64);
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //! * Fig. 5 (snake readout)    → [`readout`]
 //! * §I TMR motivation         → [`tmr`]
 //!
+//! Since the §Device refactor the array is *instruction-driven*: it
+//! implements the [`crate::device::SimIf`] transport (register pokes +
+//! per-lane DMA of [`crate::bits::PackedPlanes`] words), and the P2S
+//! units in [`p2s`] consume pre-gathered bit patterns from those
+//! streamed words instead of re-deriving them from integer values.
+//! [`SystolicArray::matmul`] survives as a pack-then-stream convenience
+//! wrapper over [`crate::device::run_tile`].
+//!
 //! The simulator is validated against [`crate::bits`] exactly as the
 //! paper validates its RTL against testbenches (§IV-A): exhaustively
 //! for ≤8-bit operand pairs, randomly for 8–16-bit, random dot products
@@ -67,15 +75,6 @@ pub trait BitSerialMac {
     /// Inject a single-event upset: flip bit `bit` of the accumulator
     /// (radiation-fault model used by the TMR harness; §I).
     fn inject_accumulator_fault(&mut self, bit: u32);
-}
-
-/// Construct a MAC of the given variant with `acc_bits`-wide
-/// accumulators.
-pub fn make_mac(variant: MacVariant, acc_bits: u32) -> Box<dyn BitSerialMac + Send> {
-    match variant {
-        MacVariant::Booth => Box::new(BoothMac::new(acc_bits)),
-        MacVariant::Sbmwc => Box::new(SbmwcMac::new(acc_bits)),
-    }
 }
 
 /// Statically dispatched MAC — the SA's grid element. `Box<dyn>` costs

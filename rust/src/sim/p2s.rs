@@ -13,8 +13,14 @@
 //! A practical consequence the paper highlights in §V: weights can be
 //! stored big-endian and activations little-endian — no in-memory data
 //! manipulation before multiplication.
-
-use crate::bits::twos::encode;
+//!
+//! Since the streamed-device refactor (DESIGN.md §Device) the P2S no
+//! longer derives the bit pattern from an integer value itself: the
+//! operand arrives as a ready-made two's-complement **bit pattern**
+//! gathered from `PackedPlanes` words on the far side of the DMA
+//! boundary ([`P2s::load_pattern`]). The packed planes are the only
+//! operand source — what shifts out here is, bit for bit, what the
+//! plane words store.
 
 /// Bit emission order (which end of the register leaves first).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,12 +69,15 @@ impl P2s {
         self.remaining == 0
     }
 
-    /// Load a new parallel value (asserting `valid` in hardware). Flips
-    /// the value toggle — this is what signals the operand boundary to
-    /// the MACs downstream.
-    pub fn load(&mut self, value: i32, width: u32) {
+    /// Load a new parallel bit pattern (asserting `valid` in hardware):
+    /// the low `width` bits of `pattern` are the operand's
+    /// two's-complement encoding exactly as stored in the packed bit
+    /// planes. Flips the value toggle — this is what signals the
+    /// operand boundary to the MACs downstream.
+    pub fn load_pattern(&mut self, pattern: u32, width: u32) {
         debug_assert!(self.empty(), "P2S loaded while still shifting");
-        self.reg = encode(value, width);
+        debug_assert!(width >= 1 && width <= 32, "bad P2S width {width}");
+        self.reg = pattern & crate::bits::twos::low_mask(width);
         self.width = width;
         self.remaining = width;
         self.v_t = !self.v_t;
@@ -115,7 +124,7 @@ impl P2s {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bits::twos::Bits;
+    use crate::bits::twos::{encode, Bits};
 
     fn drain(p: &mut P2s, n: u32) -> Vec<bool> {
         (0..n).map(|_| p.shift().bit).collect()
@@ -124,7 +133,7 @@ mod tests {
     #[test]
     fn vertical_emits_msb_first() {
         let mut p = P2s::new(BitOrder::MsbFirst);
-        p.load(-2, 4); // 1110
+        p.load_pattern(encode(-2, 4), 4); // 1110
         assert_eq!(drain(&mut p, 4), Bits::new(-2, 4).unwrap().bits_msb_first());
         assert!(p.empty());
     }
@@ -132,19 +141,47 @@ mod tests {
     #[test]
     fn horizontal_emits_lsb_first() {
         let mut p = P2s::new(BitOrder::LsbFirst);
-        p.load(6, 4); // 0110
+        p.load_pattern(encode(6, 4), 4); // 0110
         assert_eq!(drain(&mut p, 4), Bits::new(6, 4).unwrap().bits_lsb_first());
+    }
+
+    /// The pattern path is pinned bit-identical to the pre-refactor
+    /// value path (`reg = encode(value, width)`): for every width and
+    /// every representable value, loading `encode(v, w)` emits exactly
+    /// the `Bits` reference sequence in both orders.
+    #[test]
+    fn pattern_load_matches_the_old_value_derivation() {
+        for width in 1..=8u32 {
+            let lo = crate::bits::twos::min_value(width);
+            let hi = crate::bits::twos::max_value(width);
+            for v in lo..=hi {
+                let mut p = P2s::new(BitOrder::MsbFirst);
+                p.load_pattern(encode(v, width), width);
+                assert_eq!(
+                    drain(&mut p, width),
+                    Bits::new(v, width).unwrap().bits_msb_first(),
+                    "msb {v}@{width}"
+                );
+                let mut p = P2s::new(BitOrder::LsbFirst);
+                p.load_pattern(encode(v, width), width);
+                assert_eq!(
+                    drain(&mut p, width),
+                    Bits::new(v, width).unwrap().bits_lsb_first(),
+                    "lsb {v}@{width}"
+                );
+            }
+        }
     }
 
     #[test]
     fn toggle_flips_per_load() {
         let mut p = P2s::new(BitOrder::MsbFirst);
         let t0 = p.shift().v_t;
-        p.load(3, 4);
+        p.load_pattern(encode(3, 4), 4);
         let t1 = p.shift().v_t;
         assert_ne!(t0, t1);
         drain(&mut p, 3);
-        p.load(5, 4);
+        p.load_pattern(encode(5, 4), 4);
         let t2 = p.shift().v_t;
         assert_ne!(t1, t2);
     }
@@ -162,9 +199,17 @@ mod tests {
     fn variable_width_values_in_one_stream() {
         // runtime-configurable precision: stream a 3-bit then a 5-bit value
         let mut p = P2s::new(BitOrder::MsbFirst);
-        p.load(-4, 3); // 100
+        p.load_pattern(encode(-4, 3), 3); // 100
         assert_eq!(drain(&mut p, 3), vec![true, false, false]);
-        p.load(9, 5); // 01001
+        p.load_pattern(encode(9, 5), 5); // 01001
         assert_eq!(drain(&mut p, 5), vec![false, true, false, false, true]);
+    }
+
+    #[test]
+    fn pattern_is_masked_to_width() {
+        // upper bits beyond `width` must not leak into the stream
+        let mut p = P2s::new(BitOrder::LsbFirst);
+        p.load_pattern(0xFFFF_FFF6, 4); // low nibble 0110
+        assert_eq!(drain(&mut p, 4), Bits::new(6, 4).unwrap().bits_lsb_first());
     }
 }

@@ -13,7 +13,7 @@
 
 use crate::sim::mac_common::{MacInput, MacVariant};
 use crate::sim::stats::MacStats;
-use crate::sim::{make_mac, BitSerialMac};
+use crate::sim::MacUnit;
 
 /// Bitwise 2-of-3 majority vote — the TMR voter.
 pub fn majority3(a: i64, b: i64, c: i64) -> i64 {
@@ -23,7 +23,7 @@ pub fn majority3(a: i64, b: i64, c: i64) -> i64 {
 /// A triple-modular-redundant bit-serial MAC: three replicas stepped in
 /// lockstep, accumulator read through a bitwise majority voter.
 pub struct TmrMac {
-    replicas: [Box<dyn BitSerialMac + Send>; 3],
+    replicas: [MacUnit; 3],
     variant: MacVariant,
     /// Faults injected so far (for reporting).
     pub injected_faults: u64,
@@ -33,9 +33,9 @@ impl TmrMac {
     pub fn new(variant: MacVariant, acc_bits: u32) -> Self {
         TmrMac {
             replicas: [
-                make_mac(variant, acc_bits),
-                make_mac(variant, acc_bits),
-                make_mac(variant, acc_bits),
+                MacUnit::new(variant, acc_bits),
+                MacUnit::new(variant, acc_bits),
+                MacUnit::new(variant, acc_bits),
             ],
             variant,
             injected_faults: 0,

@@ -189,6 +189,104 @@ pub fn trace_mac_dot(
     vcd.render()
 }
 
+/// One instruction-queue event the device driver recorded: a stage
+/// (`fetch`/`execute`/`writeback`/`sync`) issuing at one scoreboard
+/// cycle and retiring at another.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceEvent {
+    pub stage: &'static str,
+    /// Tile index; `u32::MAX` marks the tile-less `Sync` barrier.
+    pub tile: u32,
+    pub issue: u64,
+    pub retire: u64,
+}
+
+/// Instruction-queue trace for the device driver (DESIGN.md §Device):
+/// collects issue/retire events per stage while the driver interprets
+/// the compiled program, entirely off the hot path — the driver takes
+/// `Option<&mut DeviceTrace>` and serving passes `None`.
+///
+/// Events arrive in *program* order but carry scoreboard times that
+/// are not monotone (tile t+1's fetch issues before tile t's
+/// writeback retires — that is the double buffering), so rendering
+/// sorts the change list before feeding the monotone VCD writer.
+#[derive(Debug, Default)]
+pub struct DeviceTrace {
+    events: Vec<DeviceEvent>,
+}
+
+impl DeviceTrace {
+    pub fn new() -> Self {
+        DeviceTrace::default()
+    }
+
+    /// Record one stage's issue/retire pair (called by the driver).
+    pub fn stage(&mut self, stage: &'static str, tile: u32, issue: u64, retire: u64) {
+        self.events.push(DeviceEvent { stage, tile, issue, retire });
+    }
+
+    pub fn events(&self) -> &[DeviceEvent] {
+        &self.events
+    }
+
+    /// Human-readable event list, sorted by issue cycle.
+    pub fn summary(&self) -> Vec<String> {
+        let mut ev = self.events.clone();
+        ev.sort_by_key(|e| (e.issue, e.retire));
+        ev.iter()
+            .map(|e| {
+                let tile = if e.tile == u32::MAX { "-".to_string() } else { format!("t{}", e.tile) };
+                format!("{:>9} {tile:<4} [{:>6}, {:>6})", e.stage, e.issue, e.retire)
+            })
+            .collect()
+    }
+
+    /// Render the queue occupancy as a VCD waveform: per stage, a
+    /// `busy` wire and the resident `tile` register. Back-to-back
+    /// intervals of one stage stay asserted across the shared edge.
+    pub fn render_vcd(&self) -> String {
+        const STAGES: [&str; 3] = ["fetch", "execute", "writeback"];
+        let mut vcd = VcdTrace::new("device_queue");
+        let handles: Vec<(usize, usize)> = STAGES
+            .iter()
+            .map(|s| {
+                (
+                    vcd.declare(&format!("{s}_busy"), VarKind::Wire),
+                    vcd.declare(&format!("{s}_tile"), VarKind::Reg(16)),
+                )
+            })
+            .collect();
+        // (time, order, handle, value) — asserts (order 1) after
+        // deasserts (order 0) at equal timestamps
+        let mut changes: Vec<(u64, u8, usize, u64)> = Vec::new();
+        for (si, stage) in STAGES.iter().enumerate() {
+            let mut iv: Vec<(u64, u64, u32)> = self
+                .events
+                .iter()
+                .filter(|e| e.stage == *stage)
+                .map(|e| (e.issue, e.retire, e.tile))
+                .collect();
+            iv.sort_unstable();
+            let (busy, tile_h) = handles[si];
+            for (i, &(is, re, tile)) in iv.iter().enumerate() {
+                changes.push((is, 1, busy, 1));
+                changes.push((is, 1, tile_h, tile as u64));
+                // suppress the deassert when the next interval abuts
+                let back_to_back = iv.get(i + 1).is_some_and(|nx| nx.0 <= re);
+                if !back_to_back {
+                    changes.push((re, 0, busy, 0));
+                }
+            }
+        }
+        changes.sort_by_key(|&(t, o, h, _)| (t, o, h));
+        for (t, _, h, v) in changes {
+            vcd.tick(t);
+            vcd.change(h, v);
+        }
+        vcd.render()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +345,45 @@ mod tests {
         assert!(s.contains("b1111111111110100"), "{s}");
         // clock toggles present, one per half-cycle of 2·b·(n+1)
         assert!(s.matches("\n1!").count() >= 8);
+    }
+
+    #[test]
+    fn device_trace_renders_out_of_order_events() {
+        // double-buffered schedule: tile 1's fetch issues (cycle 12)
+        // before tile 0's writeback retires (cycle 40) — the driver
+        // records them in program order; rendering must not panic the
+        // monotone VCD writer
+        let mut d = DeviceTrace::new();
+        d.stage("fetch", 0, 0, 12);
+        d.stage("execute", 0, 12, 36);
+        d.stage("writeback", 0, 36, 40);
+        d.stage("fetch", 1, 12, 24);
+        d.stage("execute", 1, 40, 64);
+        d.stage("writeback", 1, 64, 68);
+        d.stage("sync", u32::MAX, 68, 68);
+        let vcd = d.render_vcd();
+        assert!(vcd.contains("$var wire 1"));
+        assert!(vcd.contains("fetch_busy"));
+        assert!(vcd.contains("execute_tile"));
+        // fetch is back-to-back across tiles 0→1 (12 ≤ 12): busy stays
+        // asserted, so exactly one deassert line lands at cycle 24
+        assert_eq!(vcd.matches("#24").count(), 1);
+        let sum = d.summary();
+        assert_eq!(sum.len(), 7);
+        assert!(sum[0].contains("fetch") && sum[0].contains("t0"));
+        assert!(sum[1].contains("fetch") && sum[1].contains("t1"), "{sum:?}");
+        assert!(sum.last().unwrap().contains("sync"));
+    }
+
+    #[test]
+    fn device_trace_events_accumulate() {
+        let mut d = DeviceTrace::new();
+        assert!(d.events().is_empty());
+        d.stage("fetch", 3, 5, 9);
+        assert_eq!(
+            d.events(),
+            &[DeviceEvent { stage: "fetch", tile: 3, issue: 5, retire: 9 }]
+        );
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Device-backend properties: the streamed instruction-driven driver
+//! (DESIGN.md §Device) must be *bit-identical* to the native and
+//! packed matmul paths across the full precision range, both MAC
+//! variants, and skewed shapes — and its cycle accounting must
+//! reproduce the pre-refactor simulator exactly (streaming the
+//! operands through the DMA transport is a transport change, not a
+//! timing change).
+
+use bitsmm::bits::twos::{max_value, min_value};
+use bitsmm::coordinator::{serve_all, shaped_inputs, tile_matmul, Backend, ServerConfig};
+use bitsmm::device::device_matmul;
+use bitsmm::nn::model::zoo_model;
+use bitsmm::nn::{matmul_native, matmul_packed};
+use bitsmm::prng::Pcg32;
+use bitsmm::sim::array::{SaConfig, SystolicArray};
+use bitsmm::sim::mac_common::MacVariant;
+use std::sync::Arc;
+
+fn rand_operands(m: usize, k: usize, n: usize, bits: u32, seed: u64) -> (Vec<i32>, Vec<i32>) {
+    let (lo, hi) = (min_value(bits), max_value(bits));
+    let mut rng = Pcg32::new(seed);
+    let a = (0..m * k).map(|_| rng.range_i32(lo, hi)).collect();
+    let b = (0..k * n).map(|_| rng.range_i32(lo, hi)).collect();
+    (a, b)
+}
+
+/// The closed-form compute-cycle count the pre-refactor simulator
+/// measured for one tile: every edge source runs `delay + pattern`
+/// cycles — unused columns idle through their skew (`cols-1`), unused
+/// rows through skew + lead (`rows-1+bits`), used columns stream
+/// `k+1` operands of `bits` each after their skew (`n-1 + bits(k+1)`,
+/// the +1 is the flush operand that latches the last value), and used
+/// rows stream `k` operands after skew + lead (`m-1 + bits(k+1)`).
+fn pre_refactor_exec_cycles(sa: &SaConfig, m: usize, n: usize, k: usize, bits: u32) -> u64 {
+    let b = bits as u64;
+    let stream = b * (k as u64 + 1);
+    [
+        sa.cols as u64 - 1,
+        sa.rows as u64 - 1 + b,
+        stream + m as u64 - 1,
+        stream + n as u64 - 1,
+    ]
+    .into_iter()
+    .max()
+    .unwrap()
+}
+
+/// Device == native == packed over every precision and both MAC
+/// variants on a tail-word shape (k=65 needs two plane words per
+/// vector, the second holding a single valid bit).
+#[test]
+fn device_matches_native_and_packed_across_bits_and_variants() {
+    let (m, k, n) = (3usize, 65usize, 5usize);
+    for variant in [MacVariant::Booth, MacVariant::Sbmwc] {
+        let sa = SaConfig::new(4, 16, variant);
+        for bits in 1..=16u32 {
+            let (a, b) = rand_operands(m, k, n, bits, 0xd00d + bits as u64);
+            let native = matmul_native(&a, &b, m, k, n, bits).unwrap();
+            let packed = matmul_packed(&a, &b, m, k, n, bits).unwrap();
+            let (dev, stats) = device_matmul(sa, &a, &b, m, k, n, bits).unwrap();
+            assert_eq!(dev, native, "{variant:?} @{bits}b: device vs native");
+            assert_eq!(dev, packed, "{variant:?} @{bits}b: device vs packed");
+            assert!(stats.tiles >= 1 && stats.instrs == stats.tiles * 3 + 1);
+        }
+    }
+}
+
+/// Sign-plane saturation: operands pinned at the two's-complement
+/// extremes (including the asymmetric `min_value`, whose bit pattern
+/// saturates the sign plane) over skewed tail-word shapes.
+#[test]
+fn device_handles_sign_saturation_and_tail_words() {
+    for (m, k, n) in [(2usize, 127usize, 3usize), (5, 64, 2), (1, 1, 1), (4, 128, 16)] {
+        for (variant, bits) in [
+            (MacVariant::Booth, 4u32),
+            (MacVariant::Booth, 16),
+            (MacVariant::Sbmwc, 7),
+            (MacVariant::Sbmwc, 16),
+        ] {
+            let sa = SaConfig::new(4, 16, variant);
+            let (lo, hi) = (min_value(bits), max_value(bits));
+            let a: Vec<i32> = (0..m * k).map(|i| if i % 2 == 0 { lo } else { hi }).collect();
+            let b: Vec<i32> = (0..k * n).map(|i| if i % 3 == 0 { hi } else { lo }).collect();
+            let native = matmul_native(&a, &b, m, k, n, bits).unwrap();
+            let packed = matmul_packed(&a, &b, m, k, n, bits).unwrap();
+            let (dev, _) = device_matmul(sa, &a, &b, m, k, n, bits).unwrap();
+            assert_eq!(dev, native, "{m}x{k}x{n} {variant:?} @{bits}b vs native");
+            assert_eq!(dev, packed, "{m}x{k}x{n} {variant:?} @{bits}b vs packed");
+        }
+    }
+}
+
+/// The streamed transport must not change measured tile timing: the
+/// simulator's compute cycles equal the pre-refactor closed form, and
+/// readout is always the full `rows×cols` snake drain.
+#[test]
+fn exec_cycles_match_the_pre_refactor_closed_form() {
+    for (m, k, n, bits) in [
+        (4usize, 32usize, 16usize, 8u32), // full tile
+        (3, 65, 5, 7),                    // partial tile, tail word
+        (1, 1, 1, 1),                     // degenerate
+        (2, 300, 16, 16),                 // deep k, full cols
+        (4, 10, 3, 2),                    // narrow precision
+    ] {
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (a, b) = rand_operands(m, k, n, bits, 0xf0f0 + k as u64);
+        let mut arr = SystolicArray::new(sa);
+        let out = arr.matmul(&a, &b, m, k, n, bits).unwrap();
+        assert_eq!(
+            out.stats.compute_cycles,
+            pre_refactor_exec_cycles(&sa, m, n, k, bits),
+            "{m}x{k}x{n} @{bits}b"
+        );
+        assert_eq!(out.stats.readout_cycles, (sa.rows * sa.cols) as u64);
+    }
+}
+
+/// Whole-layer regression: the driver's hardware cycles (execute +
+/// writeback) equal the per-job closed form summed over the tile plan
+/// — streaming the fetches added *nothing* to the old totals — and the
+/// pipelined schedule never exceeds the serial one.
+#[test]
+fn streamed_fetch_never_exceeds_old_totals() {
+    let sa = SaConfig::new(4, 16, MacVariant::Booth);
+    for (m, k, n, bits) in [(10usize, 130usize, 40usize, 6u32), (4, 64, 16, 8), (9, 65, 17, 3)] {
+        let (a, b) = rand_operands(m, k, n, bits, 0xace + m as u64);
+        let (_, d) = device_matmul(sa, &a, &b, m, k, n, bits).unwrap();
+        let plan = tile_matmul(m, k, n, &sa);
+        let expected: u64 = plan
+            .jobs
+            .iter()
+            .map(|j| pre_refactor_exec_cycles(&sa, j.m, j.n, j.k, bits) + (sa.rows * sa.cols) as u64)
+            .sum();
+        assert_eq!(d.hw_cycles(), expected, "{m}x{k}x{n} @{bits}b hw cycles drifted");
+        assert_eq!(d.tiles, plan.jobs.len() as u64);
+        assert!(d.pipelined_cycles() <= d.serial_cycles());
+        assert_eq!(d.fetch_cycles, d.overlap_cycles + d.stall_cycles);
+        if plan.jobs.len() > 1 {
+            assert!(d.overlap_cycles > 0, "{m}x{k}x{n}: multi-tile layer must overlap");
+        } else {
+            assert_eq!(d.overlap_cycles, 0, "single tile has nothing to overlap under");
+        }
+    }
+}
+
+/// Every zoo model serves bit-identically on the device backend — the
+/// ISSUE acceptance gate. Native is the reference; packed rides along
+/// to pin all three execution paths to the same integers.
+#[test]
+fn zoo_models_serve_bit_identical_on_the_device_backend() {
+    for name in ["mlp", "mlp-headroom", "cnn", "attn"] {
+        let model = Arc::new(zoo_model(name, 7).unwrap());
+        let ins = shaped_inputs(&model, 4, 0xbeef);
+        let cfg = |backend| {
+            let mut c = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), backend);
+            c.workers = 1;
+            c
+        };
+        let (native, _, _) = serve_all(model.clone(), cfg(Backend::Native), ins.clone()).unwrap();
+        let (packed, _, _) = serve_all(model.clone(), cfg(Backend::Packed), ins.clone()).unwrap();
+        let (device, _, metrics) = serve_all(model, cfg(Backend::Simulate), ins).unwrap();
+        for ((nr, pr), dr) in native.iter().zip(&packed).zip(&device) {
+            assert_eq!(dr.output, nr.output, "{name} id {}: device vs native", nr.id);
+            assert_eq!(dr.output, pr.output, "{name} id {}: device vs packed", nr.id);
+        }
+        if name == "mlp" {
+            assert!(metrics.device.tiles > 0, "simulate backend must have streamed tiles");
+            assert!(metrics.device.dma_words > 0);
+            assert_eq!(
+                metrics.device.fetch_cycles,
+                metrics.device.overlap_cycles + metrics.device.stall_cycles
+            );
+        }
+    }
+}
