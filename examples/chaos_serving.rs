@@ -29,8 +29,11 @@
 //!    upset as *persistent* (a transient flip would leave the planes
 //!    signature-clean).
 //!
-//! Prints a greppable summary line (CI asserts `panics>=1`,
-//! `sheds>=1`, `mem-seu injected>=1`, `repaired>=1`, `unmasked=0`).
+//! Prints a human summary line; phases 6 and 7 additionally append
+//! JSONL metrics snapshots (`chaos_metrics_scrub.jsonl`,
+//! `chaos_metrics_ladder.jsonl`) that CI gates structurally with
+//! `bitsmm obs --require 'faults.unmasked=0,scrub.repaired>=1'`
+//! instead of grepping the summary text.
 //!
 //! ```sh
 //! cargo run --release --example chaos_serving
@@ -244,6 +247,10 @@ fn main() -> bitsmm::Result<()> {
     let mut cfg = base_cfg();
     cfg.abft = true;
     cfg.scrub_ms = 2;
+    // CI parses the final metrics snapshot of this phase (`bitsmm obs
+    // --metrics chaos_metrics_scrub.jsonl`) instead of grepping the
+    // summary line below
+    cfg.metrics_file = Some("chaos_metrics_scrub.jsonl".into());
     cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse("mem@2,seed=7")?)));
     let server = InferenceServer::start(Arc::new(mlp_headroom_zoo(3)), cfg)?;
     let mut reqs = requests().into_iter();
@@ -291,6 +298,7 @@ fn main() -> bitsmm::Result<()> {
     // ---- phase 7: memory SEU, scrubbing off — the ladder alone -------
     let mut cfg = base_cfg();
     cfg.abft = true; // scrub_ms stays 0: the ABFT ladder is the only defense
+    cfg.metrics_file = Some("chaos_metrics_ladder.jsonl".into());
     cfg.faults = Some(Arc::new(FaultState::new(FaultPlan::parse("mem@2,seed=13")?)));
     let (responses, ladder) = run_phase(cfg, requests())?;
     for r in &responses {

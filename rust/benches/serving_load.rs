@@ -1,0 +1,199 @@
+//! Bench SERVING: the serving load harness (ROADMAP §Serving) — open-
+//! and closed-loop arrival processes driven through the real
+//! `InferenceServer`, with mixed model and precision traffic:
+//!
+//!   1. closed-loop: a fixed window of in-flight requests per model
+//!      (the "saturated clients" regime — measures capacity),
+//!   2. open-loop: Poisson arrivals at a fixed offered rate
+//!      (the "independent users" regime — measures latency under load;
+//!      open-loop numbers do not hide queueing the way closed-loop
+//!      ones do),
+//!   3. mixed precision: a burst of interleaved full-precision and
+//!      low-priority traffic over the headroom zoo with the degrade
+//!      policy armed, so part of the stream serves at the precision
+//!      floor.
+//!
+//! Latency statistics come from the server's own bounded histogram
+//! (`Metrics::latency`, DESIGN.md §Observability) — the same numbers a
+//! production `--metrics-file` snapshot would report — and every
+//! scenario lands in `BENCH_serving.json` at the repo root, like
+//! `perf_hotpath` does, so the serving trajectory is machine-trackable
+//! across PRs.
+//!
+//! Set `BITSMM_BENCH_SMOKE=1` (CI does) for a seconds-not-minutes run
+//! that still produces the JSON artifact.
+
+use bitsmm::bench_harness::BenchResult;
+use bitsmm::coordinator::{
+    Backend, BatcherConfig, DegradePolicy, InferenceServer, Metrics, Request, ServerConfig,
+};
+use bitsmm::nn::model::zoo_model;
+use bitsmm::prng::Pcg32;
+use bitsmm::report::f;
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::mac_common::MacVariant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let smoke = std::env::var("BITSMM_BENCH_SMOKE").map_or(false, |v| v != "0" && !v.is_empty());
+    bitsmm::bench_harness::header(
+        "serving_load",
+        if smoke {
+            "open/closed-loop serving load (SMOKE mode: small request budgets)"
+        } else {
+            "open/closed-loop serving load through the inference server"
+        },
+    );
+    let mut log: Vec<BenchResult> = Vec::new();
+
+    // ---- 1. closed-loop: saturated clients per model --------------------
+    let n_closed = if smoke { 24 } else { 256 };
+    for model in ["mlp", "cnn"] {
+        let m = run_closed_loop(model, n_closed, 8).unwrap();
+        push_scenario(&mut log, &format!("closed-loop {model} w=8 n={n_closed}"), &m);
+    }
+
+    // ---- 2. open-loop: Poisson arrivals at fixed offered rates ----------
+    // rates bracket the closed-loop capacity so the sweep shows the
+    // latency knee; arrivals are submitted on schedule regardless of
+    // completions (the defining property of open loop)
+    let n_open = if smoke { 24 } else { 192 };
+    let rates: &[f64] = if smoke { &[200.0, 1000.0] } else { &[200.0, 1000.0, 4000.0] };
+    for &rate in rates {
+        let m = run_open_loop("mlp", n_open, rate).unwrap();
+        push_scenario(
+            &mut log,
+            &format!("open-loop mlp rate={rate}rps n={n_open}"),
+            &m,
+        );
+    }
+
+    // ---- 3. mixed precision: degrade under a low-priority burst ---------
+    let n_mixed = if smoke { 24 } else { 128 };
+    let m = run_mixed_precision(n_mixed).unwrap();
+    push_scenario(
+        &mut log,
+        &format!("mixed-precision mlp-headroom burst n={n_mixed}"),
+        &m,
+    );
+    println!(
+        "  degraded serves in the mixed burst: {} of {}",
+        m.degraded, m.requests
+    );
+
+    match bitsmm::bench_harness::write_json("serving", &log) {
+        Ok(path) => println!("\nwrote {path} ({} results)", log.len()),
+        Err(e) => println!("\ncould not write bench json: {e}"),
+    }
+    println!("serving_load bench OK");
+}
+
+/// Standard packed-backend server config for the harness.
+fn harness_cfg() -> ServerConfig {
+    let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+    cfg.workers = 2;
+    cfg.batcher = BatcherConfig {
+        max_batch: 8,
+        linger: Duration::from_millis(1),
+        ..BatcherConfig::default()
+    };
+    cfg
+}
+
+/// Closed loop: keep `window` requests in flight until `n` complete.
+/// Measures capacity — each completion immediately triggers the next
+/// submission, so the server never starves and never over-queues.
+fn run_closed_loop(model: &str, n: usize, window: usize) -> bitsmm::Result<Metrics> {
+    let model = Arc::new(zoo_model(model, 1)?);
+    let inputs = bitsmm::coordinator::shaped_inputs(&model, n, 0x10ad);
+    let server = InferenceServer::start(model, harness_cfg())?;
+    let mut pending = std::collections::VecDeque::new();
+    for (i, x) in inputs.into_iter().enumerate() {
+        if pending.len() >= window {
+            let rx: std::sync::mpsc::Receiver<_> = pending.pop_front().unwrap();
+            rx.recv()?.output?;
+        }
+        pending.push_back(server.submit(Request::new(i as u64, x)));
+    }
+    for rx in pending {
+        rx.recv()?.output?;
+    }
+    let (_, metrics) = server.shutdown();
+    Ok(metrics)
+}
+
+/// Open loop: submit on a Poisson arrival schedule (exponential
+/// inter-arrival gaps at `rate` req/s) regardless of completions, then
+/// drain. Latency under load includes every queueing effect.
+fn run_open_loop(model: &str, n: usize, rate: f64) -> bitsmm::Result<Metrics> {
+    let model = Arc::new(zoo_model(model, 1)?);
+    let inputs = bitsmm::coordinator::shaped_inputs(&model, n, 0xa661);
+    let server = InferenceServer::start(model, harness_cfg())?;
+    let mut rng = Pcg32::new(0x0907 + rate as u64);
+    let mut rxs = Vec::with_capacity(n);
+    let mut next_arrival = Instant::now();
+    for (i, x) in inputs.into_iter().enumerate() {
+        let now = Instant::now();
+        if next_arrival > now {
+            std::thread::sleep(next_arrival - now);
+        }
+        rxs.push(server.submit(Request::new(i as u64, x)));
+        // u in (0, 1]: the +1 keeps ln() off exactly zero
+        let u = (rng.next_u32() as f64 + 1.0) / (u32::MAX as f64 + 1.0);
+        next_arrival += Duration::from_secs_f64(-u.ln() / rate);
+    }
+    for rx in rxs {
+        rx.recv()?.output?;
+    }
+    let (_, metrics) = server.shutdown();
+    Ok(metrics)
+}
+
+/// Mixed precision: an all-at-once burst over the headroom zoo with the
+/// degrade policy armed — queue pressure pushes the low-priority half
+/// of the stream down to the precision floor while the full-precision
+/// half serves untouched (outputs stay per-request deterministic).
+fn run_mixed_precision(n: usize) -> bitsmm::Result<Metrics> {
+    let model = Arc::new(zoo_model("mlp-headroom", 1)?);
+    let inputs = bitsmm::coordinator::shaped_inputs(&model, n, 0x3141);
+    let mut cfg = harness_cfg();
+    cfg.degrade = Some(DegradePolicy { high_water: 2, floor_bits: 4 });
+    let server = InferenceServer::start(model, cfg)?;
+    let rxs: Vec<_> = inputs
+        .into_iter()
+        .enumerate()
+        .map(|(i, x)| {
+            let req = Request::new(i as u64, x);
+            let req = if i % 2 == 1 { req.low_priority() } else { req };
+            server.submit(req)
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv()?.output?;
+    }
+    let (_, metrics) = server.shutdown();
+    Ok(metrics)
+}
+
+/// Fold one scenario's server-side latency histogram into the bench
+/// log (mean/p50/p95/min in the `BenchResult` slots) and print the
+/// standard bench line plus throughput.
+fn push_scenario(log: &mut Vec<BenchResult>, name: &str, m: &Metrics) {
+    let p = m.latency.percentiles(&[50.0, 95.0]);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: m.latency.count() as u64,
+        mean: Duration::from_micros(m.latency.mean_us() as u64),
+        median: Duration::from_micros(p[0]),
+        p95: Duration::from_micros(p[1]),
+        min: Duration::from_micros(m.latency.min_us()),
+    };
+    println!(
+        "{}   ({} req/s, mean batch {})",
+        r.format(),
+        f(m.throughput_rps()),
+        f(m.mean_batch())
+    );
+    log.push(r);
+}

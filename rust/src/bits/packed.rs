@@ -1271,6 +1271,16 @@ impl StealStats {
         self.steals += o.steals;
         self.max_worker_tiles = self.max_worker_tiles.max(o.max_worker_tiles);
     }
+
+    /// JSON object for the telemetry snapshot (DESIGN.md
+    /// §Observability). Raw counters only — the derived imbalance
+    /// ratio (which can be non-finite) is the snapshot layer's job.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"tiles\":{},\"steals\":{},\"max_worker_tiles\":{},\"min_worker_tiles\":{}}}",
+            self.tiles, self.steals, self.max_worker_tiles, self.min_worker_tiles
+        )
+    }
 }
 
 /// Per-slot oversubscription: enough tile jobs per worker that

@@ -59,6 +59,12 @@ pub struct Batch<T> {
     pub items: Vec<T>,
     /// When the oldest item entered the queue (for latency accounting).
     pub oldest: Instant,
+    /// How long each entry of `items` waited in the queue before this
+    /// batch formed (same order as `items` — the request tracer turns
+    /// these into per-request `queue_wait` spans).
+    pub waits: Vec<Duration>,
+    /// When the batch was assembled (the `assemble` span's endpoint).
+    pub assembled: Instant,
     /// Items whose queue age exceeded `shed_after`, paired with how
     /// long each actually waited. The consumer must still answer them
     /// (with an overload error) — they are shed from execution, not
@@ -189,15 +195,20 @@ impl<T> Batcher<T> {
                 continue; // raced: everything vanished under the lock
             }
             let mut items = Vec::with_capacity(take);
-            let mut oldest = Instant::now();
+            let mut waits = Vec::with_capacity(take);
+            let assembled = Instant::now();
+            let mut oldest = assembled;
             for _ in 0..take {
                 let (item, t) = g.queue.pop_front().unwrap();
                 oldest = oldest.min(t);
+                waits.push(assembled.duration_since(t));
                 items.push(item);
             }
             return Some(Batch {
                 items,
                 oldest,
+                waits,
+                assembled,
                 shed,
             });
         }
@@ -222,6 +233,8 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.items, vec![0, 1, 2]);
         assert!(batch.shed.is_empty());
+        assert_eq!(batch.waits.len(), 3, "one wait per kept item");
+        assert!(batch.assembled >= batch.oldest);
     }
 
     #[test]

@@ -7,6 +7,7 @@ use crate::coordinator::scheduler::Backend;
 use crate::coordinator::server::{serve_all, shaped_inputs, DegradePolicy, ServerConfig};
 use crate::coordinator::BatcherConfig;
 use crate::nn::model::zoo_model;
+use crate::coordinator::metrics::imbalance_label;
 use crate::plan::{Planner, PlannerMode};
 use crate::prng::Pcg32;
 use crate::report::{f, Table};
@@ -175,6 +176,30 @@ fn apply_resilience(
     Ok(())
 }
 
+/// Resolve the flight-telemetry knobs shared by the CLI and config
+/// entry points onto a [`ServerConfig`]: the JSONL metrics snapshot
+/// file + cadence and the per-request trace dump (DESIGN.md
+/// §Observability). Empty paths leave both layers disabled (and
+/// tracing at its near-zero cost: the hooks short-circuit on a `None`
+/// ring).
+fn apply_observability(
+    cfg: &mut ServerConfig,
+    metrics_file: &str,
+    metrics_every_ms: u64,
+    trace_requests: &str,
+) {
+    if !metrics_file.trim().is_empty() {
+        cfg.metrics_file = Some(std::path::PathBuf::from(metrics_file.trim()));
+    }
+    if metrics_every_ms > 0 {
+        cfg.metrics_every_ms = metrics_every_ms;
+    }
+    if !trace_requests.trim().is_empty() {
+        // the server builds the ring itself when a dump path is set
+        cfg.trace_file = Some(std::path::PathBuf::from(trace_requests.trim()));
+    }
+}
+
 /// Planner rows shared by the serve and launch tables: mode, cache
 /// telemetry, and the chosen plan per shape class.
 fn planner_rows(t: &mut Table, planner: &Planner, metrics: &crate::coordinator::Metrics) {
@@ -239,6 +264,14 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
     cfg.packed_tile_cols = args.req("packed-tile-cols")?;
     cfg.packed_ksplit = args.req("packed-ksplit")?;
     cfg.packed_rsr = args.switch("packed-rsr");
+    apply_observability(
+        &mut cfg,
+        args.get("metrics-file").unwrap_or(""),
+        args.get_parse::<u64>("metrics-every-ms")?.unwrap_or(0),
+        args.get("trace-requests").unwrap_or(""),
+    );
+    let metrics_path = cfg.metrics_file.clone();
+    let trace_path = cfg.trace_file.clone();
     let planner_mode: PlannerMode = args.req::<String>("planner")?.parse()?;
     let plan_file = args.get("plan-file").unwrap();
     let planner = build_planner(planner_mode, plan_file, &cfg);
@@ -287,16 +320,16 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
         "pool tiles / steals".into(),
         format!("{} / {}", report.steal.tiles, report.steal.steals),
     ]);
-    // a starved slot is infinite imbalance — render it as `inf`, never
-    // as a number that could be confused with "balanced" or "no work"
-    let imb = metrics.worker_tile_imbalance();
+    // a starved slot is infinite imbalance — the table renders it as
+    // `inf` (never a number that could be confused with "balanced"),
+    // while JSONL snapshots emit `null` for the same value
     t.row(&[
         "worker tile share max/min".into(),
         format!(
             "{} / {} (imbalance {}, steal rate {})",
             report.steal.max_worker_tiles,
             report.steal.min_worker_tiles,
-            if imb.is_infinite() { "inf".into() } else { f(imb) },
+            imbalance_label(metrics.worker_tile_imbalance()),
             f(metrics.steal_rate())
         ),
     ]);
@@ -306,6 +339,12 @@ pub fn serve_all_entry(args: &Args) -> Result<()> {
         planner_rows(&mut t, pl, &metrics);
     }
     print!("{}", t.render());
+    if let Some(p) = &metrics_path {
+        println!("metrics snapshots appended to {}", p.display());
+    }
+    if let Some(p) = &trace_path {
+        println!("request trace dumped to {}", p.display());
+    }
     Ok(())
 }
 
@@ -368,6 +407,12 @@ pub fn launch_from_config(cfg: &crate::config::Config) -> Result<()> {
     server_cfg.packed_tile_cols = usize::try_from(cfg.int_or("server.packed_tile_cols", 0))?;
     server_cfg.packed_ksplit = usize::try_from(cfg.int_or("server.packed_ksplit", 0))?;
     server_cfg.packed_rsr = cfg.bool_or("server.packed_rsr", false);
+    apply_observability(
+        &mut server_cfg,
+        cfg.str_or("server.metrics_file", ""),
+        u64::try_from(cfg.int_or("server.metrics_every_ms", 0))?,
+        cfg.str_or("server.trace_requests", ""),
+    );
     let planner_mode: PlannerMode = cfg.str_or("server.planner", "off").parse()?;
     let plan_file = cfg.str_or("server.plan_file", "configs/plans.json");
     let planner = build_planner(planner_mode, plan_file, &server_cfg);
@@ -735,6 +780,50 @@ fault_plan = \"mem@1,seed=11\"
         )
         .unwrap();
         launch_from_config(&cfg).unwrap();
+    }
+
+    #[test]
+    fn launch_reads_observability_config() {
+        // metrics_file / metrics_every_ms / trace_requests thread
+        // through dotted config paths: the run appends parseable JSONL
+        // snapshots (≥ 1 periodic + the final) and dumps a trace whose
+        // spans cover every request
+        let dir = std::env::temp_dir().join(format!("bitsmm-launch-obs-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics_file = dir.join("metrics.jsonl");
+        let trace_file = dir.join("trace.jsonl");
+        let cfg = crate::config::Config::parse(&format!(
+            "name = \"obs\"
+[sa]
+rows = 2
+cols = 4
+[server]
+backend = \"packed\"
+requests = 6
+workers = 1
+max_batch = 4
+packed_threads = 2
+metrics_file = \"{}\"
+metrics_every_ms = 5
+trace_requests = \"{}\"
+",
+            metrics_file.display(),
+            trace_file.display()
+        ))
+        .unwrap();
+        launch_from_config(&cfg).unwrap();
+        let text = std::fs::read_to_string(&metrics_file).unwrap();
+        let snaps = crate::obs::snapshot::parse_snapshots(&text).unwrap();
+        let last = snaps.last().unwrap();
+        use crate::obs::snapshot::lookup;
+        assert_eq!(
+            lookup(last, "final").unwrap(),
+            &crate::plan::store::Json::Bool(true)
+        );
+        assert_eq!(lookup(last, "requests").unwrap().as_int().unwrap(), 6);
+        let trace = std::fs::read_to_string(&trace_file).unwrap();
+        assert!(trace.lines().count() > 6, "a span per stage per request plus the trailer");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

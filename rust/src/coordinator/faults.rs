@@ -167,6 +167,15 @@ impl FaultStats {
         self.masked_persistent += o.masked_persistent;
         self.unmasked += o.unmasked;
     }
+
+    /// JSON object for the telemetry snapshot (DESIGN.md
+    /// §Observability) — every counter, no derived rates.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"injected\":{},\"mem_seu\":{},\"masked_transient\":{},\"masked_persistent\":{},\"unmasked\":{}}}",
+            self.injected, self.mem_seu, self.masked_transient, self.masked_persistent, self.unmasked
+        )
+    }
 }
 
 /// Resident-state integrity accounting (DESIGN.md §Integrity): sweeps
@@ -193,6 +202,14 @@ impl ScrubStats {
         self.detected += o.detected;
         self.repaired += o.repaired;
         self.quarantined += o.quarantined;
+    }
+
+    /// JSON object for the telemetry snapshot.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"sweeps\":{},\"detected\":{},\"repaired\":{},\"quarantined\":{}}}",
+            self.sweeps, self.detected, self.repaired, self.quarantined
+        )
     }
 }
 

@@ -3,48 +3,65 @@
 
 use crate::bits::packed::StealStats;
 use crate::coordinator::faults::{FaultStats, ScrubStats};
+use crate::coordinator::scheduler::ExecutionReport;
 use crate::device::DeviceStats;
+use crate::obs::hist::Histogram;
 use crate::plan::PlanStats;
+use std::sync::Mutex;
 use std::time::Duration;
 
-/// Online latency statistics (stores samples; serving volumes here are
-/// small enough that exact percentiles beat sketches).
+/// Online latency statistics, backed by the bounded log-bucketed
+/// histogram (`obs::hist`, DESIGN.md §Observability). Small runs stay
+/// exact — up to `obs::hist::EXACT_MAX` samples are kept verbatim and
+/// percentiles come from a sort, identical to the old per-sample
+/// `Vec<u64>` — and past that memory is constant (~60 KiB) with a
+/// documented ≤ 1/128 relative quantile error. Merging worker stats
+/// then asking percentiles equals recording every sample into one
+/// stats object, in both modes.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyStats {
-    samples_us: Vec<u64>,
+    hist: Histogram,
 }
 
 impl LatencyStats {
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
+        self.hist.record(d.as_micros() as u64);
     }
 
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.hist.count() as usize
     }
 
+    /// Exact mean in both modes (the histogram keeps a full-width sum).
     pub fn mean_us(&self) -> f64 {
-        if self.samples_us.is_empty() {
-            return 0.0;
-        }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+        self.hist.mean()
     }
 
-    /// Exact percentiles (nearest-rank), each `p` in [0, 100]. One sort
-    /// serves every requested percentile — report tables asking for
-    /// p50/p95/p99 pay the sort once, not once per row.
-    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
-        if self.samples_us.is_empty() {
-            return vec![0; ps.len()];
+    /// Smallest recorded latency (exact in both modes; 0 when empty).
+    pub fn min_us(&self) -> u64 {
+        if self.hist.count() == 0 {
+            0
+        } else {
+            self.hist.min()
         }
-        let mut s = self.samples_us.clone();
-        s.sort_unstable();
-        ps.iter()
-            .map(|&p| {
-                let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
-                s[rank.min(s.len() - 1)]
-            })
-            .collect()
+    }
+
+    /// Largest recorded latency (exact in both modes; 0 when empty).
+    pub fn max_us(&self) -> u64 {
+        if self.hist.count() == 0 {
+            0
+        } else {
+            self.hist.max()
+        }
+    }
+
+    /// Nearest-rank percentiles, each `p` in [0, 100]; exact until the
+    /// histogram spills, then within ≤ 1/128 relative error. One sort
+    /// serves every requested percentile — report tables asking for
+    /// p50/p95/p99 pay the sort once, not once per row. Empty stats
+    /// answer 0 for every percentile, never a panic.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
+        self.hist.percentiles(ps)
     }
 
     /// Single-percentile convenience over [`LatencyStats::percentiles`].
@@ -53,7 +70,19 @@ impl LatencyStats {
     }
 
     pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        self.hist.merge(&other.hist);
+    }
+}
+
+/// Table-cell rendering of [`Metrics::worker_tile_imbalance`]: a
+/// starved worker's infinite ratio renders as `inf` in human tables —
+/// the JSONL snapshot layer renders the same value as `null`, because
+/// JSON has no infinity (`obs::snapshot` pins both).
+pub fn imbalance_label(v: f64) -> String {
+    if v.is_infinite() {
+        "inf".into()
+    } else {
+        crate::report::f(v)
     }
 }
 
@@ -196,6 +225,55 @@ impl Metrics {
     }
 }
 
+/// Live per-worker metrics mailbox behind the periodic snapshotter
+/// (DESIGN.md §Observability). Workers own their `Metrics` /
+/// `ExecutionReport` exclusively while serving — the property the whole
+/// serving stack is built on — so mid-run visibility comes from each
+/// worker *publishing* a clone into its slot after every batch, and the
+/// snapshotter folding the slots exactly the way `shutdown` folds the
+/// workers' final state: absorb each slot's metrics, merge the reports,
+/// then single-source `steal`/`plan`/`device` from the merged report
+/// and add its fault/scrub ledgers on top.
+#[derive(Debug)]
+pub struct MetricsHub {
+    slots: Vec<Mutex<(ExecutionReport, Metrics)>>,
+}
+
+impl MetricsHub {
+    pub fn new(workers: usize) -> MetricsHub {
+        MetricsHub {
+            slots: (0..workers.max(1)).map(|_| Mutex::new(Default::default())).collect(),
+        }
+    }
+
+    /// Overwrite worker `w`'s slot with its current state (cheap: the
+    /// histogram is constant-size, the reports are plain counters).
+    pub fn publish(&self, w: usize, report: &ExecutionReport, metrics: &Metrics) {
+        let slot = &self.slots[w % self.slots.len()];
+        let mut s = slot.lock().unwrap_or_else(|p| p.into_inner());
+        *s = (report.clone(), metrics.clone());
+    }
+
+    /// Fold every slot into one `Metrics`, mirroring the shutdown merge.
+    /// `wall` and `rejected` stay zero — the caller owns the run clock
+    /// and the admission counter.
+    pub fn aggregate(&self) -> Metrics {
+        let mut report = ExecutionReport::default();
+        let mut total = Metrics::default();
+        for slot in &self.slots {
+            let s = slot.lock().unwrap_or_else(|p| p.into_inner());
+            report.merge(&s.0);
+            total.absorb(&s.1);
+        }
+        total.steal = report.steal.clone();
+        total.plan = report.plan.clone();
+        total.device = report.device.clone();
+        total.faults.merge(&report.faults);
+        total.scrub.merge(&report.scrub);
+        total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,6 +411,45 @@ mod tests {
             total.scrub,
             ScrubStats { sweeps: 3, detected: 2, repaired: 1, quarantined: 1 }
         );
+    }
+
+    #[test]
+    fn hub_aggregate_mirrors_the_shutdown_merge() {
+        let hub = MetricsHub::new(2);
+        // nothing published yet: an all-zero aggregate, not a panic
+        assert_eq!(hub.aggregate().requests, 0);
+
+        let mut m1 = Metrics::default();
+        m1.requests = 3;
+        m1.latency.record(Duration::from_micros(10));
+        let mut r1 = ExecutionReport::default();
+        r1.steal = StealStats { tiles: 4, steals: 1, max_worker_tiles: 2, min_worker_tiles: 1 };
+        r1.faults.injected = 1;
+        r1.faults.masked_transient = 1;
+        hub.publish(0, &r1, &m1);
+
+        let mut m2 = Metrics::default();
+        m2.requests = 2;
+        m2.sheds = 1;
+        let mut r2 = ExecutionReport::default();
+        r2.steal = StealStats { tiles: 6, steals: 2, max_worker_tiles: 3, min_worker_tiles: 2 };
+        r2.scrub.repaired = 1;
+        hub.publish(1, &r2, &m2);
+
+        let total = hub.aggregate();
+        assert_eq!(total.requests, 5);
+        assert_eq!(total.sheds, 1);
+        assert_eq!(total.latency.count(), 1);
+        assert_eq!(total.steal.tiles, 10, "steal comes from the merged report");
+        assert_eq!(total.faults.injected, 1);
+        assert_eq!(total.faults.masked(), 1);
+        assert_eq!(total.scrub.repaired, 1);
+        assert_eq!(total.wall, Duration::ZERO, "the caller owns the run clock");
+
+        // publish overwrites, never accumulates: re-publishing the same
+        // worker state must not double-count
+        hub.publish(0, &r1, &m1);
+        assert_eq!(hub.aggregate().requests, 5);
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod tiler;
 
 pub use batcher::{Batch, Batcher, BatcherConfig, PushRefused};
 pub use faults::{FaultAction, FaultPlan, FaultState, FaultStats, SeuInjector};
-pub use metrics::{LatencyStats, Metrics};
+pub use metrics::{imbalance_label, LatencyStats, Metrics, MetricsHub};
 pub use precision::PrecisionPolicy;
 pub use scheduler::{Backend, ExecutionReport, Scheduler};
 pub use server::{

@@ -48,12 +48,14 @@ use crate::coordinator::tiler::{tile_matmul, TilePlan};
 use crate::device::DeviceStats;
 use crate::nn::layers::{MatmulExec, PackedWeight, Quarantined, RepairSource};
 use crate::nn::matmul_native;
+use crate::obs::trace::{SpanKind, TraceRing};
 use crate::plan::{ExecPlan, PlanKey, PlanStats, PlanTier, Planner, ShapeRun};
 use crate::runtime::{EngineHandle, IntMat};
 use crate::sim::array::{SaConfig, SystolicArray};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Functional execution backend.
 #[derive(Clone)]
@@ -181,6 +183,15 @@ pub struct Scheduler {
     /// state), not an independent transient — the classification the
     /// split `masked_transient`/`masked_persistent` ledger reports.
     abft_streak: HashMap<(usize, usize, usize, u32), bool>,
+    /// Request-trace ring (DESIGN.md §Observability): when attached,
+    /// plan resolution, pack/slice, kernel execution, ABFT
+    /// verify/repair, and the device stage ledger record spans against
+    /// the current trace context. `None` = tracing off, and every hook
+    /// is a single branch on this Option.
+    tracer: Option<Arc<TraceRing>>,
+    /// Trace ID spans are attributed to — the worker sets it per batch
+    /// to the batch's lead request (0 = untraced context).
+    trace_ctx: u64,
     pub report: ExecutionReport,
 }
 
@@ -202,7 +213,36 @@ impl Scheduler {
             seu: None,
             abft: false,
             abft_streak: HashMap::new(),
+            tracer: None,
+            trace_ctx: 0,
             report: ExecutionReport::default(),
+        }
+    }
+
+    /// Attach the request-trace ring: scheduler-level stages (plan
+    /// resolution, pack/slice, kernel, ABFT, device) then record spans
+    /// against the trace context set by [`Scheduler::set_trace_ctx`].
+    pub fn set_tracer(&mut self, ring: Arc<TraceRing>) {
+        self.tracer = Some(ring);
+    }
+
+    /// Set the trace ID scheduler spans are attributed to (the worker
+    /// calls this per batch with the batch's lead request).
+    pub fn set_trace_ctx(&mut self, trace: u64) {
+        self.trace_ctx = trace;
+    }
+
+    /// `Some(now)` when tracing is on — stage timestamps cost nothing
+    /// when the ring is absent.
+    #[inline]
+    fn stamp(&self) -> Option<Instant> {
+        self.tracer.as_ref().map(|_| Instant::now())
+    }
+
+    #[inline]
+    fn span_since(&self, kind: SpanKind, start: Option<Instant>, detail: u64) {
+        if let (Some(ring), Some(t0)) = (&self.tracer, start) {
+            ring.span(self.trace_ctx, kind, t0, t0.elapsed(), detail);
         }
     }
 
@@ -349,6 +389,7 @@ impl Scheduler {
                 // layer cache (or is packed inside the run for ad-hoc
                 // calls). Planes cached at a *wider* precision are
                 // sliced down — cross-precision reuse, never a re-pack.
+                let t_slice = self.stamp();
                 let pb: Option<Arc<PackedPlanes>> = match packed_b {
                     Some(p) => {
                         anyhow::ensure!(
@@ -377,6 +418,7 @@ impl Scheduler {
                     }
                     None => None,
                 };
+                self.span_since(SpanKind::PackSlice, t_slice, bits as u64);
                 // the hardware tiling above is *timing* accounting; the
                 // functional product runs through the one shared plan
                 // executor: either the plan the shape-keyed planner
@@ -397,6 +439,7 @@ impl Scheduler {
                     pool: pool.as_ref(),
                 };
                 let planner = self.planner.clone().filter(|p| p.is_on());
+                let t_plan = self.stamp();
                 let (plan, tier, pre_run) = match &planner {
                     Some(pl) => {
                         let kind = pb.as_ref().map_or(PlaneKind::Sbmwc, |p| p.kind);
@@ -413,6 +456,7 @@ impl Scheduler {
                         (plan, None, None)
                     }
                 };
+                self.span_since(SpanKind::PlanResolve, t_plan, u64::from(tier.is_some()));
                 match tier {
                     Some(PlanTier::Exact) => self.report.plan.hits += 1,
                     Some(PlanTier::Nearest) | Some(PlanTier::CostModel) => {
@@ -424,10 +468,12 @@ impl Scheduler {
                     }
                     None => {}
                 }
+                let t_kernel = self.stamp();
                 let (out, stats, ran_packed) = match pre_run {
                     Some(r) => r, // calibration already produced the product
                     None => run.run(&plan)?,
                 };
+                self.span_since(SpanKind::Kernel, t_kernel, stats.steals);
                 if ran_packed {
                     self.report.packed_execs += 1;
                     self.report.steal.merge(&stats);
@@ -450,7 +496,11 @@ impl Scheduler {
                     // so upsets are always caught, at O(mk+kn+mn)
                     // checksum cost against the O(mkn) product.
                     let shape = (m, k, n, bits);
-                    if !abft_row_check(a, b, &out, m, k, n) {
+                    let t_verify = self.stamp();
+                    let clean = abft_row_check(a, b, &out, m, k, n);
+                    self.span_since(SpanKind::AbftVerify, t_verify, u64::from(!clean));
+                    if !clean {
+                        let t_repair = self.stamp();
                         // Escalation ladder (DESIGN.md §Integrity).
                         // Rung 1: verify the stationary planes — a
                         // corrupt resident pack is a *persistent*
@@ -524,6 +574,7 @@ impl Scheduler {
                                 self.abft_streak.insert(shape, true);
                             }
                         }
+                        self.span_since(SpanKind::AbftRepair, t_repair, u64::from(planes_corrupt));
                     } else {
                         // clean exec breaks any miss streak: a later
                         // miss on this shape is an independent transient
@@ -535,6 +586,10 @@ impl Scheduler {
                 out
             }
             Backend::Simulate => {
+                // the &mut array borrow below outlives the stage stamps,
+                // so the ring handle is cloned out of self up front
+                let tracer = self.tracer.clone();
+                let ctx = self.trace_ctx;
                 let sim = self.sim.as_mut().expect("simulate backend has an array");
                 // Plane packing needs operands inside the declared
                 // width; layers with looser precision contracts
@@ -553,9 +608,24 @@ impl Scheduler {
                 }
                 // pack once per matmul; every tile streams word slices
                 // of the same packs over the SimIf transport
+                let t_pack = tracer.as_ref().map(|_| Instant::now());
                 let pa = PackedPlanes::pack_rows(a, m, k, eff, PlaneKind::Sbmwc)?;
                 let pb = PackedPlanes::pack_cols(b, k, n, eff, PlaneKind::Sbmwc)?;
+                if let (Some(ring), Some(t0)) = (&tracer, t_pack) {
+                    ring.span(ctx, SpanKind::PackSlice, t0, t0.elapsed(), eff as u64);
+                }
+                let t_kernel = tracer.as_ref().map(|_| Instant::now());
                 let run = crate::device::run_layer(sim, &plan, &self.sa, &pa, &pb, eff, None)?;
+                if let (Some(ring), Some(t0)) = (&tracer, t_kernel) {
+                    ring.span(ctx, SpanKind::Kernel, t0, t0.elapsed(), run.stats.tiles);
+                    // per-stage device ledger as point events: the
+                    // driver already measured these in cycles, so the
+                    // cycle counts ride in `detail` rather than in span
+                    // durations
+                    ring.event(ctx, SpanKind::DeviceFetch, run.stats.fetch_cycles);
+                    ring.event(ctx, SpanKind::DeviceExec, run.stats.exec_cycles);
+                    ring.event(ctx, SpanKind::DeviceWriteback, run.stats.wb_cycles);
+                }
                 // array-busy cycles (compute + readout) land in the
                 // shared hw_cycles ledger exactly as before the
                 // streaming refactor; fetch/overlap/stall are the
@@ -992,6 +1062,52 @@ mod tests {
         assert_eq!(s.report.faults.masked_persistent, 1);
         assert_eq!(s.report.faults.masked(), 3);
         assert_eq!(s.report.faults.unmasked, 0);
+    }
+
+    #[test]
+    fn tracer_records_scheduler_stage_spans() {
+        use crate::obs::trace::TraceRing;
+        let sa = SaConfig::new(4, 16, MacVariant::Booth);
+        let (m, k, n, bits) = (4, 8, 6, 6);
+        let mut rng = Pcg32::new(0x7a7a);
+        let a = rand_mat(&mut rng, m * k, bits);
+        let b = rand_mat(&mut rng, k * n, bits);
+        let want = ref_matmul_i64(&a, &b, m, k, n);
+
+        let ring = Arc::new(TraceRing::new(256));
+        let mut s = Scheduler::new(sa, Backend::Packed);
+        s.set_tracer(ring.clone());
+        s.set_trace_ctx(42);
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        let kinds: Vec<&str> = ring.dump().iter().map(|sp| sp.kind.name()).collect();
+        for need in ["pack_slice", "plan_resolve", "kernel"] {
+            assert!(kinds.contains(&need), "{need} missing from {kinds:?}");
+        }
+        assert!(ring.dump().iter().all(|sp| sp.trace == 42));
+        // the ABFT guard adds a verify span (clean → detail 0)
+        s.set_abft(true);
+        assert_eq!(s.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        let verify: Vec<u64> = ring
+            .dump()
+            .iter()
+            .filter(|sp| sp.kind == SpanKind::AbftVerify)
+            .map(|sp| sp.detail)
+            .collect();
+        assert_eq!(verify, vec![0], "one clean verify span");
+
+        // the simulate arm records pack, kernel, and the device ledger
+        let ring2 = Arc::new(TraceRing::new(256));
+        let mut sim = Scheduler::new(sa, Backend::Simulate);
+        sim.set_tracer(ring2.clone());
+        assert_eq!(sim.matmul(&a, &b, m, k, n, bits).unwrap(), want);
+        let kinds2: Vec<&str> = ring2.dump().iter().map(|sp| sp.kind.name()).collect();
+        for need in ["pack_slice", "kernel", "device_fetch", "device_exec", "device_writeback"] {
+            assert!(kinds2.contains(&need), "{need} missing from {kinds2:?}");
+        }
+
+        // detached tracer (the default) records nothing and costs one branch
+        let mut quiet = Scheduler::new(sa, Backend::Packed);
+        assert_eq!(quiet.matmul(&a, &b, m, k, n, bits).unwrap(), want);
     }
 
     #[test]

@@ -6,16 +6,25 @@ use crate::bits::packed::{KernelFamily, PackedPool, PopcountKernel, TilePolicy};
 use crate::bits::plane::PlaneKind;
 use crate::coordinator::batcher::{Batcher, BatcherConfig, PushRefused};
 use crate::coordinator::faults::{FaultAction, FaultState, ScrubStats};
-use crate::coordinator::metrics::Metrics;
+use crate::coordinator::metrics::{Metrics, MetricsHub};
 use crate::coordinator::scheduler::{Backend, ExecutionReport, Scheduler};
 use crate::nn::model::Model;
 use crate::nn::tensor::QTensor;
+use crate::obs::snapshot::render_snapshot;
+use crate::obs::trace::{SpanKind, TraceRing};
 use crate::plan::{calibrate_shape, PlanKey, Planner, PlannerMode};
 use crate::sim::array::SaConfig;
 use crate::Result;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Span slots in the request-trace ring `start` builds when
+/// `--trace-requests` asks for a dump: ~14 spans per request → room for
+/// the last ~4½k requests, ~3 MiB resident, and overflow is counted —
+/// never silent (DESIGN.md §Observability).
+const TRACE_CAPACITY: usize = 65_536;
 
 /// A shaped request payload: quantized values on the model's input
 /// grid plus their shape, validated server-side against
@@ -85,6 +94,9 @@ pub struct Request {
     /// the budget of the rest. `None` = no deadline.
     pub deadline: Option<Instant>,
     pub priority: Priority,
+    /// Trace ID minted at `submit` when request tracing is on
+    /// (0 = untraced — the default for every request at construction).
+    pub trace: u64,
 }
 
 impl Request {
@@ -95,6 +107,7 @@ impl Request {
             submitted: Instant::now(),
             deadline: None,
             priority: Priority::Normal,
+            trace: 0,
         }
     }
 
@@ -245,6 +258,25 @@ pub struct ServerConfig {
     /// Deterministic fault schedule shared by all workers (chaos
     /// testing; `None` in production).
     pub faults: Option<Arc<FaultState>>,
+    /// Append one JSONL snapshot of the full metrics tree to this file
+    /// every `metrics_every_ms` — plus one at start and a
+    /// `"final":true` one carrying the fully merged totals at graceful
+    /// shutdown (`server.metrics_file`, `--metrics-file`; see DESIGN.md
+    /// §Observability for the schema). `None` = snapshotting off.
+    pub metrics_file: Option<PathBuf>,
+    /// Snapshot period in milliseconds (`server.metrics_every_ms`,
+    /// `--metrics-every-ms`; ignored without `metrics_file`).
+    pub metrics_every_ms: u64,
+    /// Dump the request-trace span ring as JSONL to this file at
+    /// graceful shutdown (`server.trace_requests`, `--trace-requests`).
+    /// Setting it turns tracing on; `None` with no explicit `trace`
+    /// ring means tracing stays off and costs one branch per hook.
+    pub trace_file: Option<PathBuf>,
+    /// Request-trace ring shared by `submit`, the workers, and their
+    /// schedulers. Tests inject one to inspect spans in-process;
+    /// `start` builds one of [`TRACE_CAPACITY`] slots when only
+    /// `trace_file` is set.
+    pub trace: Option<Arc<TraceRing>>,
 }
 
 impl ServerConfig {
@@ -267,6 +299,10 @@ impl ServerConfig {
             abft: false,
             scrub_ms: 0,
             faults: None,
+            metrics_file: None,
+            metrics_every_ms: 1000,
+            trace_file: None,
+            trace: None,
         }
     }
 
@@ -323,12 +359,24 @@ pub struct InferenceServer {
     /// planner).
     persist: Option<(std::path::PathBuf, Arc<Planner>)>,
     /// Submissions refused at admission (answered `Rejected`/`Closed`
-    /// on their own channel, folded into `Metrics.rejected`).
-    rejected: AtomicU64,
+    /// on their own channel, folded into `Metrics.rejected`). Shared
+    /// with the snapshotter so mid-run snapshots count refusals too.
+    rejected: Arc<AtomicU64>,
     /// Background integrity scrubber (`scrub_ms > 0`): its stop flag
     /// and join handle, returning the sweep counters folded into
     /// `Metrics.scrub` at shutdown.
     scrubber: Option<(Arc<AtomicBool>, std::thread::JoinHandle<ScrubStats>)>,
+    /// Periodic metrics snapshotter (`metrics_file` set): stop flag and
+    /// join handle returning how many snapshots it appended — the
+    /// sequence number the shutdown-time `"final":true` snapshot takes.
+    snapshotter: Option<(Arc<AtomicBool>, std::thread::JoinHandle<u64>)>,
+    /// Snapshot sink, kept for the final shutdown snapshot.
+    metrics_file: Option<PathBuf>,
+    /// Request-trace ring (tracing on) and its optional shutdown dump.
+    trace: Option<Arc<TraceRing>>,
+    trace_file: Option<PathBuf>,
+    /// Next trace ID minus one — IDs start at 1 so 0 can mean untraced.
+    trace_seq: AtomicU64,
 }
 
 impl InferenceServer {
@@ -342,8 +390,14 @@ impl InferenceServer {
     /// warm-packs every weight's planes and conv transposes (and
     /// pre-resolves the shape census when a planner is configured), so
     /// the first request pays no pack latency.
-    pub fn start(model: Arc<Model>, cfg: ServerConfig) -> Result<InferenceServer> {
+    pub fn start(model: Arc<Model>, mut cfg: ServerConfig) -> Result<InferenceServer> {
         anyhow::ensure!(cfg.workers >= 1, "need at least one worker");
+        // request tracing: an injected ring (tests) or one built here
+        // when a shutdown dump was requested; absent both, every trace
+        // hook in the serving path is a single branch on a None
+        if cfg.trace.is_none() && cfg.trace_file.is_some() {
+            cfg.trace = Some(Arc::new(TraceRing::new(TRACE_CAPACITY)));
+        }
         anyhow::ensure!(
             (1..=3).contains(&model.input_shape.len())
                 && model.input_shape.iter().all(|&d| d >= 1),
@@ -420,6 +474,13 @@ impl InferenceServer {
             }
             None => None,
         };
+        // live metrics mailbox behind the snapshotter: built only when
+        // snapshots were asked for, so the publish in the worker loop
+        // is one branch otherwise
+        let hub = cfg
+            .metrics_file
+            .as_ref()
+            .map(|_| Arc::new(MetricsHub::new(cfg.workers)));
         let mut workers = Vec::new();
         for w in 0..cfg.workers {
             let batcher = batcher.clone();
@@ -427,10 +488,13 @@ impl InferenceServer {
             let degraded = degraded.clone();
             let cfg = cfg.clone();
             let pool = packed_pool.clone();
+            let hub = hub.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bitsmm-worker-{w}"))
-                    .spawn(move || worker_loop(&model, degraded.as_deref(), &cfg, &batcher, pool))?,
+                    .spawn(move || {
+                        worker_loop(&model, degraded.as_deref(), &cfg, &batcher, pool, w, hub)
+                    })?,
             );
         }
         let persist = match (&cfg.plan_persist, cfg.planner.as_ref().filter(|p| p.is_on())) {
@@ -476,12 +540,66 @@ impl InferenceServer {
         } else {
             None
         };
+        let rejected = Arc::new(AtomicU64::new(0));
+        // Periodic metrics snapshotter (DESIGN.md §Observability): one
+        // snapshot immediately (seq 0), one per period, one more at the
+        // stop signal — and shutdown appends the `"final":true` line on
+        // top, so a graceful run always yields ≥ 2 parseable snapshots.
+        let snapshotter = match (&cfg.metrics_file, &hub) {
+            (Some(path), Some(hub)) => {
+                // create/truncate up front: a bad path fails the start,
+                // not silently in the background thread
+                if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(path, "")?;
+                let stop = Arc::new(AtomicBool::new(false));
+                let flag = stop.clone();
+                let hub = hub.clone();
+                let rej = rejected.clone();
+                let path = path.clone();
+                let period = Duration::from_millis(cfg.metrics_every_ms.max(1));
+                let started = Instant::now();
+                let handle = std::thread::Builder::new()
+                    .name("bitsmm-metrics".into())
+                    .spawn(move || {
+                        let mut written = 0u64;
+                        loop {
+                            let mut m = hub.aggregate();
+                            m.wall = started.elapsed();
+                            m.rejected += rej.load(Ordering::Relaxed);
+                            if append_line(&path, &render_snapshot(written, false, &m)).is_ok() {
+                                written += 1;
+                            }
+                            if flag.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            // sleep in small steps so shutdown never
+                            // waits a full period for the snapshotter
+                            let mut slept = Duration::ZERO;
+                            while slept < period && !flag.load(Ordering::Relaxed) {
+                                let step = (period - slept).min(Duration::from_millis(5));
+                                std::thread::sleep(step);
+                                slept += step;
+                            }
+                        }
+                        written
+                    })?;
+                Some((stop, handle))
+            }
+            _ => None,
+        };
         Ok(InferenceServer {
             batcher,
             workers,
             persist,
-            rejected: AtomicU64::new(0),
+            rejected,
             scrubber,
+            snapshotter,
+            metrics_file: cfg.metrics_file.clone(),
+            trace: cfg.trace.clone(),
+            trace_file: cfg.trace_file.clone(),
+            trace_seq: AtomicU64::new(0),
         })
     }
 
@@ -489,7 +607,20 @@ impl InferenceServer {
     /// Admission refusals (bounded queue full, server closed) are
     /// answered immediately on that same channel with a typed error —
     /// the caller's `recv()` always yields a terminal [`Response`].
-    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+    pub fn submit(&self, mut req: Request) -> mpsc::Receiver<Response> {
+        // trace IDs are minted at admission — spans recorded anywhere
+        // downstream tie back to this moment (IDs start at 1; 0 stays
+        // the untraced sentinel)
+        if let Some(ring) = &self.trace {
+            req.trace = self.trace_seq.fetch_add(1, Ordering::Relaxed) + 1;
+            ring.span(
+                req.trace,
+                SpanKind::Admit,
+                req.submitted,
+                req.submitted.elapsed(),
+                req.id,
+            );
+        }
         let (tx, rx) = mpsc::channel();
         if let Err(refused) = self.batcher.push((req, tx)) {
             let (err, (req, tx)) = match refused {
@@ -550,6 +681,25 @@ impl InferenceServer {
                 metrics.scrub.merge(&stats);
             }
         }
+        // stop the snapshotter and append the terminal snapshot carrying
+        // the fully merged totals above — a graceful `--metrics-file`
+        // run always ends on a `"final":true` line (never fatal: the
+        // metrics still come back to the caller either way)
+        if let Some((stop, handle)) = self.snapshotter {
+            stop.store(true, Ordering::Relaxed);
+            let seq = handle.join().unwrap_or(0);
+            if let Some(path) = &self.metrics_file {
+                if let Err(e) = append_line(path, &render_snapshot(seq, true, &metrics)) {
+                    eprintln!("final metrics snapshot to {} failed: {e}", path.display());
+                }
+            }
+        }
+        // request-trace dump (also never fatal)
+        if let (Some(path), Some(ring)) = (&self.trace_file, &self.trace) {
+            if let Err(e) = ring.write_jsonl(path) {
+                eprintln!("trace dump to {} failed: {e:#}", path.display());
+            }
+        }
         // graceful shutdown persists what this run learned: tuned
         // plans merge into the configured plan file (atomic rename),
         // so the next `--planner static` start serves them as exact
@@ -568,6 +718,13 @@ impl InferenceServer {
     }
 }
 
+/// Append one line to a JSONL sink (snapshotter + final snapshot).
+fn append_line(path: &std::path::Path, line: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().append(true).create(true).open(path)?;
+    writeln!(f, "{line}")
+}
+
 /// One admitted request in flight inside a worker: the payload (taken
 /// when it moves into a forward pass), its response channel, and
 /// whether a terminal response was already sent — the ledger the
@@ -578,6 +735,7 @@ struct Pending {
     submitted: Instant,
     deadline: Option<Instant>,
     priority: Priority,
+    trace: u64,
     input: Option<TensorInput>,
     tx: mpsc::Sender<Response>,
     answered: bool,
@@ -590,6 +748,7 @@ impl Pending {
             submitted: req.submitted,
             deadline: req.deadline,
             priority: req.priority,
+            trace: req.trace,
             input: Some(req.input),
             tx,
             answered: false,
@@ -630,6 +789,8 @@ fn worker_loop(
     cfg: &ServerConfig,
     batcher: &Batcher<Queued>,
     packed_pool: Option<Arc<PackedPool>>,
+    w: usize,
+    hub: Option<Arc<MetricsHub>>,
 ) -> (ExecutionReport, Metrics) {
     let mut sched = Scheduler::new(cfg.sa, cfg.backend.clone());
     sched.set_popcount_kernel(cfg.packed_unroll);
@@ -648,6 +809,10 @@ fn worker_loop(
         sched.set_seu_injector(faults.seu());
     }
     sched.set_abft(cfg.abft);
+    let tracer = cfg.trace.clone();
+    if let Some(ring) = tracer.clone() {
+        sched.set_tracer(ring);
+    }
     let mut metrics = Metrics::default();
     let t0 = Instant::now();
     // Per-kind batch assembly: batch-fusable models — rank-1 vector
@@ -671,7 +836,31 @@ fn worker_loop(
         // shed items never execute but are always answered
         for (item, waited) in batch.shed {
             metrics.sheds += 1;
+            if let Some(ring) = &tracer {
+                if item.0.trace != 0 {
+                    ring.event(item.0.trace, SpanKind::Shed, waited.as_millis() as u64);
+                }
+            }
             Pending::new(item).answer(&mut metrics, Err(ServeError::Overloaded { waited }));
+        }
+        // per-request queue-wait spans plus one assembly span on the
+        // batch's lead (first traced) request
+        if let Some(ring) = &tracer {
+            for ((req, _tx), waited) in batch.items.iter().zip(&batch.waits) {
+                if req.trace != 0 {
+                    ring.span(req.trace, SpanKind::QueueWait, req.submitted, *waited, req.id);
+                }
+            }
+            let lead = batch.items.iter().map(|(r, _)| r.trace).find(|&t| t != 0);
+            if let Some(lead) = lead {
+                ring.span(
+                    lead,
+                    SpanKind::Assemble,
+                    batch.oldest,
+                    batch.assembled.duration_since(batch.oldest),
+                    batch.items.len() as u64,
+                );
+            }
         }
         let mut pending: Vec<Pending> = batch.items.into_iter().map(Pending::new).collect();
         // deadline check at dequeue: a request whose budget is already
@@ -680,6 +869,11 @@ fn worker_loop(
         for p in &mut pending {
             if p.past_deadline(now) {
                 metrics.deadline_misses += 1;
+                if let Some(ring) = &tracer {
+                    if p.trace != 0 {
+                        ring.event(p.trace, SpanKind::DeadlineMiss, p.id);
+                    }
+                }
                 p.answer(&mut metrics, Err(ServeError::DeadlineExceeded));
             }
         }
@@ -734,6 +928,13 @@ fn worker_loop(
         if pending.iter().all(|p| p.answered) && !panic_armed {
             continue; // shed-only or all-expired batch
         }
+        // scheduler-level spans (plan/pack/kernel/ABFT/device) are
+        // batch-granular: attribute them to the lead traced request
+        let lead = pending
+            .iter()
+            .find(|p| p.trace != 0 && !p.answered)
+            .map_or(0, |p| p.trace);
+        sched.set_trace_ctx(lead);
         let cycles_before = sched.report.hw_cycles;
         let macs_before = sched.report.macs;
         let served_before = metrics.requests;
@@ -775,8 +976,23 @@ fn worker_loop(
         if metrics.requests > served_before || sched.report.macs > macs_before {
             metrics.batches += 1;
         }
+        // a respond span closes every trace that received its terminal
+        // answer in this batch (dur = the request's end-to-end latency)
+        if let Some(ring) = &tracer {
+            for p in pending.iter().filter(|p| p.trace != 0 && p.answered) {
+                ring.span(p.trace, SpanKind::Respond, p.submitted, p.submitted.elapsed(), p.id);
+            }
+        }
+        // publish this worker's live state for the snapshotter; one
+        // branch and two struct clones per batch when snapshots are on
+        if let Some(hub) = &hub {
+            hub.publish(w, &sched.report, &metrics);
+        }
     }
     metrics.wall = t0.elapsed();
+    if let Some(hub) = &hub {
+        hub.publish(w, &sched.report, &metrics);
+    }
     (sched.report, metrics)
 }
 
@@ -1598,6 +1814,90 @@ mod tests {
         assert!(metrics.scrub.quarantined >= 1, "{:?}", metrics.scrub);
         assert_eq!(metrics.faults.unmasked, 0, "no corrupt output was served");
         assert_eq!(metrics.errors, quarantined as u64);
+    }
+
+    #[test]
+    fn metrics_snapshots_and_trace_dump_round_trip() {
+        use crate::obs::snapshot::{lookup, parse_snapshots, REQUIRED_GROUPS};
+        use crate::plan::store::Json;
+        let dir = std::env::temp_dir().join(format!("bitsmm_obs_server_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics_path = dir.join("metrics.jsonl");
+        let trace_path = dir.join("trace.jsonl");
+
+        let model = Arc::new(crate::nn::model::mlp_zoo(5));
+        let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+        cfg.workers = 2;
+        cfg.packed_threads = 2;
+        cfg.metrics_file = Some(metrics_path.clone());
+        cfg.metrics_every_ms = 5;
+        cfg.trace_file = Some(trace_path.clone());
+        let server = InferenceServer::start(model, cfg).unwrap();
+        let rxs: Vec<_> = inputs(12, 64, 8)
+            .into_iter()
+            .enumerate()
+            .map(|(i, x)| server.submit(Request::new(i as u64, x)))
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().output.is_ok());
+        }
+        // let at least one periodic snapshot land beyond the initial one
+        std::thread::sleep(Duration::from_millis(25));
+        let (_, metrics) = server.shutdown();
+        assert_eq!(metrics.requests, 12);
+
+        // ≥ 2 snapshots round-trip through the in-repo JSON reader,
+        // every counter group present, last line = the merged final
+        let text = std::fs::read_to_string(&metrics_path).unwrap();
+        let snaps = parse_snapshots(&text).unwrap();
+        assert!(snaps.len() >= 2, "only {} snapshots", snaps.len());
+        let last = snaps.last().unwrap();
+        assert_eq!(lookup(last, "final").unwrap(), &Json::Bool(true));
+        assert_eq!(lookup(last, "requests").unwrap().as_int().unwrap(), 12);
+        assert_eq!(
+            lookup(last, "latency.count").unwrap().as_int().unwrap(),
+            12,
+            "final snapshot carries the merged latency histogram"
+        );
+        assert!(lookup(last, "throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        for g in REQUIRED_GROUPS {
+            assert!(lookup(last, g).is_ok(), "group {g} missing");
+        }
+        // seq numbers are consecutive from 0
+        for (i, s) in snaps.iter().enumerate() {
+            assert_eq!(lookup(s, "seq").unwrap().as_int().unwrap(), i as i64);
+        }
+
+        // the trace dump parses line by line; every request's trace
+        // runs admit → … → respond with strictly increasing seq
+        let ttext = std::fs::read_to_string(&trace_path).unwrap();
+        let mut per_trace: std::collections::HashMap<i64, Vec<(i64, String)>> =
+            std::collections::HashMap::new();
+        let mut trailer_seen = false;
+        for line in ttext.lines() {
+            let v = Json::parse(line).unwrap();
+            if v.field("spans").is_ok() {
+                trailer_seen = true;
+                continue;
+            }
+            per_trace
+                .entry(v.field("trace").unwrap().as_int().unwrap())
+                .or_default()
+                .push((
+                    v.field("seq").unwrap().as_int().unwrap(),
+                    v.field("kind").unwrap().as_str().unwrap().to_string(),
+                ));
+        }
+        assert!(trailer_seen, "dump ends with the ring-accounting trailer");
+        assert_eq!(per_trace.len(), 12, "one trace per request");
+        for (trace, spans) in &per_trace {
+            assert!(spans.windows(2).all(|p| p[0].0 < p[1].0), "trace {trace} seq order");
+            let kinds: Vec<&str> = spans.iter().map(|(_, k)| k.as_str()).collect();
+            assert_eq!(kinds.first().copied(), Some("admit"), "trace {trace}");
+            assert_eq!(kinds.last().copied(), Some("respond"), "trace {trace}");
+            assert!(kinds.contains(&"queue_wait"), "trace {trace}: {kinds:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -48,6 +48,22 @@ pub struct DeviceStats {
 }
 
 impl DeviceStats {
+    /// JSON object for the telemetry snapshot (DESIGN.md
+    /// §Observability) — the per-stage cycle ledger verbatim.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"tiles\":{},\"instrs\":{},\"fetch_cycles\":{},\"exec_cycles\":{},\"wb_cycles\":{},\"overlap_cycles\":{},\"stall_cycles\":{},\"dma_words\":{}}}",
+            self.tiles,
+            self.instrs,
+            self.fetch_cycles,
+            self.exec_cycles,
+            self.wb_cycles,
+            self.overlap_cycles,
+            self.stall_cycles,
+            self.dma_words
+        )
+    }
+
     pub fn merge(&mut self, o: &DeviceStats) {
         self.tiles += o.tiles;
         self.instrs += o.instrs;

@@ -31,6 +31,10 @@
 //! * [`plan`] — the shape-keyed execution planner: per-(shape,
 //!   precision) kernel/thread/tile plans resolved through a persistent
 //!   cache, a cost model, and on-line calibration (`bitsmm tune`).
+//! * [`obs`] — the flight-telemetry layer: per-request trace spans in
+//!   a fixed-capacity ring, the bounded log-bucketed histogram behind
+//!   `LatencyStats`, and JSONL metrics snapshots that CI parses
+//!   instead of grepping tables (see DESIGN.md §Observability).
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes them on
 //!   the request path (Python is never on the request path).
@@ -52,6 +56,7 @@ pub mod config;
 pub mod coordinator;
 pub mod device;
 pub mod nn;
+pub mod obs;
 pub mod plan;
 pub mod prng;
 pub mod proptest_lite;

@@ -39,6 +39,7 @@ fn run(argv: &[String]) -> Result<()> {
         "fig6" => cmd_fig6(rest),
         "artifacts" => cmd_artifacts(rest),
         "verilog" => cmd_verilog(rest),
+        "obs" => cmd_obs(rest),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -61,6 +62,7 @@ subcommands:
   fig6       reproduce paper Fig. 6 (peak OP/cycle vs bit width)
   artifacts  list the AOT artifact registry
   verilog    emit the SystemVerilog for an SA configuration
+  obs        check a JSONL metrics snapshot file against requirements
   help       this text
 
 run `bitsmm <subcommand> --help` for options.
@@ -89,6 +91,35 @@ fn cmd_verilog(argv: &[String]) -> Result<()> {
         }
         None => print!("{text}"),
     }
+    Ok(())
+}
+
+/// `bitsmm obs`: validate a metrics-snapshot JSONL file (every line
+/// parses, every counter group present) and assert requirements on the
+/// final snapshot — CI's replacement for grepping report tables.
+fn cmd_obs(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("obs", "check a JSONL metrics snapshot file")
+        .opt("metrics", "snapshot file written by --metrics-file", None)
+        .opt(
+            "require",
+            "comma-separated assertions on the final snapshot, e.g. 'faults.unmasked=0,scrub.repaired>=1,steal.imbalance=null'",
+            Some(""),
+        )
+        .switch("help", "show help");
+    let args = cmd.parse(argv)?;
+    if args.switch("help") {
+        print!("{}", cmd.help());
+        return Ok(());
+    }
+    let path = args
+        .get("metrics")
+        .filter(|s| !s.trim().is_empty())
+        .ok_or_else(|| anyhow::anyhow!("--metrics <path> is required"))?;
+    let summary = bitsmm::obs::snapshot::check_snapshot_file(
+        std::path::Path::new(path),
+        args.get("require").unwrap_or(""),
+    )?;
+    println!("{summary}");
     Ok(())
 }
 
@@ -185,6 +216,21 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
             "plan-file",
             "persistent plan cache to load (written by `bitsmm tune`)",
             Some("configs/plans.json"),
+        )
+        .opt(
+            "metrics-file",
+            "append periodic JSONL metrics snapshots to this path (empty = off)",
+            Some(""),
+        )
+        .opt(
+            "metrics-every-ms",
+            "snapshot cadence in ms (0 = keep the server default of 1000)",
+            Some("0"),
+        )
+        .opt(
+            "trace-requests",
+            "dump per-request trace spans as JSONL to this path at shutdown (empty = off)",
+            Some(""),
         )
         .opt("artifacts", "artifact directory", None)
         .switch("help", "show help");

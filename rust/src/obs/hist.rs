@@ -1,0 +1,342 @@
+//! Bounded log-bucketed histogram (HDR-style) — the storage behind
+//! `LatencyStats` (DESIGN.md §Observability).
+//!
+//! Small runs stay exact: up to [`EXACT_MAX`] samples are kept verbatim
+//! and percentiles come from a sort, byte-identical to the pre-PR-10
+//! `Vec<u64>` behaviour. Past that the histogram spills every sample
+//! into log-spaced buckets and memory stays constant no matter how many
+//! samples arrive — a million-request serve costs the same ~60 KiB as
+//! a thousand-request one.
+//!
+//! Bucket layout (values are u64 microseconds, but the structure is
+//! unit-agnostic):
+//!   - `v < 64`: one bucket per value (exact).
+//!   - `v >= 64`: let `exp = 63 - v.leading_zeros()` (so `2^exp <= v <
+//!     2^(exp+1)`); the octave `[2^exp, 2^(exp+1))` is split into 64
+//!     sub-buckets of width `2^(exp-6)`. Bucket index:
+//!     `64 + (exp - 6) * 64 + ((v >> (exp - 6)) & 63)`.
+//!
+//! Total buckets: `64 + 58 * 64 = 3776` (`exp` runs 6..=63), ~30 KiB of
+//! `u64` counters. A bucket's representative is its integer midpoint,
+//! clamped to the observed `[min, max]`, so the relative quantile error
+//! is bounded by half a bucket width over the bucket's lower bound:
+//! `(2^(exp-6) / 2) / 2^exp = 1/128` (< 0.79%). `min`, `max`, `count`,
+//! and the mean (exact `u128` sum) are always exact in both modes.
+
+/// Samples kept verbatim before spilling to buckets. Both `record` and
+/// `merge` switch modes on the same rule — "total count exceeds
+/// `EXACT_MAX`" — so merging worker histograms lands in the *same*
+/// state as recording every sample into one histogram (the
+/// merge==record-all property test relies on this).
+pub const EXACT_MAX: usize = 4096;
+
+/// Values below this are their own bucket (exact even in bucket mode).
+const LINEAR_MAX: u64 = 64;
+
+/// Sub-buckets per octave; 64 sub-buckets → rel. error ≤ 1/128.
+const SUBS: u64 = 64;
+
+/// `exp` runs 6..=63 → 58 octaves of 64 sub-buckets after the linear range.
+pub const NUM_BUCKETS: usize = 64 + 58 * 64;
+
+/// Documented relative error bound of bucketed percentiles.
+pub const REL_ERROR_BOUND: f64 = 1.0 / 128.0;
+
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    /// Raw samples while in exact mode; drained on spill.
+    exact: Vec<u64>,
+    /// Log-spaced counters; empty until the first spill.
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros() as u64; // 6..=63
+    let sub = (v >> (exp - 6)) & (SUBS - 1);
+    (64 + (exp - 6) * SUBS + sub) as usize
+}
+
+/// Integer midpoint of bucket `idx` — the value bucketed percentiles
+/// report for samples that landed there.
+fn bucket_mid(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        return idx as u64;
+    }
+    let off = (idx - 64) as u64;
+    let exp = off / SUBS + 6;
+    let sub = off % SUBS;
+    let width = 1u64 << (exp - 6);
+    let lo = (1u64 << exp) + sub * width;
+    lo + (width - 1) / 2
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.count += 1;
+        self.sum += v as u128;
+        if self.count == 1 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        if self.buckets.is_empty() {
+            self.exact.push(v);
+            if self.exact.len() > EXACT_MAX {
+                self.spill();
+            }
+        } else {
+            self.buckets[bucket_index(v)] += 1;
+        }
+    }
+
+    /// Convert the exact samples into bucket counters (one-way).
+    fn spill(&mut self) {
+        self.buckets = vec![0u64; NUM_BUCKETS];
+        for &v in &self.exact {
+            self.buckets[bucket_index(v)] += 1;
+        }
+        self.exact = Vec::new();
+    }
+
+    /// True while percentiles are exact (no sample has been bucketed).
+    pub fn is_exact(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn min(&self) -> u64 {
+        self.min
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean (the sum is kept in full width in both modes).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64
+    }
+
+    /// Merge `other` into `self`. If the combined count still fits the
+    /// exact budget both sides must be exact (each count ≤ combined)
+    /// and the samples concatenate; otherwise both sides land in
+    /// buckets and the counters add. Either way the resulting state is
+    /// identical to having recorded every sample into one histogram.
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+        self.count += other.count;
+        if self.count <= EXACT_MAX as u64 {
+            // both must still be exact: each side's count is bounded
+            // by the combined count, which fits the exact budget
+            self.exact.extend_from_slice(&other.exact);
+            return;
+        }
+        if self.buckets.is_empty() {
+            self.spill();
+        }
+        if other.buckets.is_empty() {
+            for &v in &other.exact {
+                self.buckets[bucket_index(v)] += 1;
+            }
+        } else {
+            for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+                *b += o;
+            }
+        }
+    }
+
+    /// Nearest-rank percentiles, each `p` in [0, 100]. Empty → 0 for
+    /// every requested percentile, never a panic. Exact mode sorts
+    /// once and serves every `p` from the sorted copy; bucket mode
+    /// walks cumulative counts and reports the target bucket's
+    /// midpoint clamped to the observed [min, max] (p0/p100 exact).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<u64> {
+        if self.count == 0 {
+            return vec![0; ps.len()];
+        }
+        let n = self.count;
+        let rank_of = |p: f64| -> u64 {
+            let r = ((p / 100.0) * (n as f64 - 1.0)).round();
+            (r.max(0.0) as u64).min(n - 1)
+        };
+        if self.buckets.is_empty() {
+            let mut s = self.exact.clone();
+            s.sort_unstable();
+            return ps.iter().map(|&p| s[rank_of(p) as usize]).collect();
+        }
+        ps.iter()
+            .map(|&p| {
+                let rank = rank_of(p);
+                let mut seen = 0u64;
+                for (idx, &c) in self.buckets.iter().enumerate() {
+                    seen += c;
+                    if seen > rank {
+                        return bucket_mid(idx).clamp(self.min, self.max);
+                    }
+                }
+                self.max // unreachable while counters stay consistent
+            })
+            .collect()
+    }
+
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.percentiles(&[p])[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Pcg32;
+
+    #[test]
+    fn bucket_index_and_mid_are_consistent() {
+        // every representative lands back in its own bucket, and the
+        // relative error of the representative is within the bound
+        for v in [0u64, 1, 63, 64, 65, 127, 128, 1000, 4096, 1 << 20, u64::MAX] {
+            let idx = bucket_index(v);
+            let mid = bucket_mid(idx);
+            assert_eq!(bucket_index(mid), idx, "mid of bucket {idx} stays inside");
+            let err = (mid as f64 - v as f64).abs() / (v.max(1) as f64);
+            assert!(err <= REL_ERROR_BOUND, "v={v} mid={mid} err={err}");
+        }
+        assert!(bucket_index(u64::MAX) < NUM_BUCKETS);
+    }
+
+    #[test]
+    fn exact_mode_matches_sort() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            h.record(v);
+        }
+        assert!(h.is_exact());
+        assert_eq!(h.percentile(0.0), 10);
+        assert_eq!(h.percentile(50.0), 60);
+        assert_eq!(h.percentile(100.0), 100);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 100);
+        assert!((h.mean() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_percentiles_are_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.percentiles(&[0.0, 50.0, 99.9, 100.0]), vec![0, 0, 0, 0]);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    /// Bits-skewed latencies: most requests are fast 1-bit plans, a
+    /// heavy tail re-packs at 16 bits — the shape that breaks
+    /// fixed-width buckets. The bucketed percentiles must stay within
+    /// the documented 1/128 relative error of an exact sort.
+    #[test]
+    fn bucketed_percentiles_within_error_bound() {
+        let mut rng = Pcg32::new(0xb175);
+        let mut h = Histogram::new();
+        let mut all: Vec<u64> = Vec::new();
+        for i in 0..20_000u64 {
+            let v = match i % 16 {
+                0..=10 => 80 + rng.next_u64() % 60,         // fast mode ~100us
+                11..=14 => 1_500 + rng.next_u64() % 900,    // mid tail
+                _ => 40_000 + rng.next_u64() % 30_000,      // 16-bit re-pack tail
+            };
+            h.record(v);
+            all.push(v);
+        }
+        assert!(!h.is_exact(), "20k samples must have spilled");
+        all.sort_unstable();
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let rank = ((p / 100.0) * (all.len() as f64 - 1.0)).round() as usize;
+            let exact = all[rank.min(all.len() - 1)];
+            let approx = h.percentile(p);
+            let err = (approx as f64 - exact as f64).abs() / exact as f64;
+            assert!(
+                err <= REL_ERROR_BOUND,
+                "p{p}: exact={exact} approx={approx} err={err}"
+            );
+        }
+        assert_eq!(h.min(), all[0]);
+        assert_eq!(h.max(), *all.last().unwrap());
+        let mean = all.iter().sum::<u64>() as f64 / all.len() as f64;
+        assert!((h.mean() - mean).abs() < 1e-6, "mean stays exact after spill");
+    }
+
+    /// Merging any split of a sample stream equals recording it all
+    /// into one histogram — across exact/exact, exact/bucketed, and
+    /// bucketed/bucketed merges.
+    #[test]
+    fn merge_equals_record_all_over_random_splits() {
+        let mut rng = Pcg32::new(0x5eed);
+        for &total in &[10usize, 100, EXACT_MAX - 1, EXACT_MAX + 5, 9_000] {
+            let samples: Vec<u64> = (0..total)
+                .map(|_| rng.next_u64() % 1_000_000)
+                .collect();
+            let mut whole = Histogram::new();
+            for &v in &samples {
+                whole.record(v);
+            }
+            for _ in 0..4 {
+                let cut = (rng.next_u64() as usize) % (total + 1);
+                let (a, b) = samples.split_at(cut);
+                let mut left = Histogram::new();
+                let mut right = Histogram::new();
+                for &v in a {
+                    left.record(v);
+                }
+                for &v in b {
+                    right.record(v);
+                }
+                left.merge(&right);
+                assert_eq!(left.count(), whole.count());
+                assert_eq!(left.min(), whole.min());
+                assert_eq!(left.max(), whole.max());
+                assert_eq!(
+                    left.percentiles(&[0.0, 25.0, 50.0, 75.0, 95.0, 99.0, 100.0]),
+                    whole.percentiles(&[0.0, 25.0, 50.0, 75.0, 95.0, 99.0, 100.0]),
+                    "split at {cut}/{total}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn memory_stays_bounded_after_spill() {
+        let mut h = Histogram::new();
+        for i in 0..(EXACT_MAX as u64 * 4) {
+            h.record(i);
+        }
+        assert!(!h.is_exact());
+        assert_eq!(h.exact.len(), 0, "exact samples drained on spill");
+        assert_eq!(h.buckets.len(), NUM_BUCKETS, "constant bucket storage");
+        assert_eq!(h.count(), EXACT_MAX as u64 * 4);
+    }
+}

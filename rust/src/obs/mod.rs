@@ -1,0 +1,24 @@
+//! Flight-telemetry observability layer (DESIGN.md §Observability).
+//!
+//! Spacecraft operators see an accelerator only through a bounded-rate
+//! telemetry downlink, so every structure here is constant-memory by
+//! construction:
+//!
+//! - [`hist`]: the HDR-style log-bucketed [`hist::Histogram`] behind
+//!   `LatencyStats` — exact for small runs, ≤ 1/128 relative quantile
+//!   error and ~60 KiB flat once a serve goes past 4096 samples.
+//! - [`trace`]: per-request [`trace::Span`]s in a fixed-capacity
+//!   lock-striped [`trace::TraceRing`] with an exact `dropped`
+//!   counter; JSONL dump via `bitsmm serve --trace-requests <path>`.
+//! - [`snapshot`]: the periodic JSONL snapshotter of the full
+//!   `Metrics` tree (`--metrics-file` / `--metrics-every-ms`) plus the
+//!   parse/assert helpers behind `bitsmm obs` that CI uses instead of
+//!   grepping table text.
+
+pub mod hist;
+pub mod snapshot;
+pub mod trace;
+
+pub use hist::{Histogram, EXACT_MAX, NUM_BUCKETS, REL_ERROR_BOUND};
+pub use snapshot::{check_snapshot_file, lookup, parse_snapshots, render_snapshot, REQUIRED_GROUPS};
+pub use trace::{Span, SpanKind, TraceRing};

@@ -1,0 +1,295 @@
+//! Metrics snapshot export: the full `Metrics` tree rendered as one
+//! JSONL object per snapshot, plus the parse/assert helpers CI uses
+//! instead of grepping tables (DESIGN.md §Observability).
+//!
+//! Schema (one line per snapshot; `seq` counts snapshots within a run,
+//! the last line of a file is the final at-shutdown aggregate):
+//!
+//! ```json
+//! {"seq":0,"wall_ms":0,"final":false,
+//!  "latency":{"count":0,"mean_us":0.0,"min_us":0,"p50_us":0,"p95_us":0,"p99_us":0,"max_us":0},
+//!  "requests":0,"errors":0,"batches":0,"macs":0,"hw_cycles":0,
+//!  "throughput_rps":0.0,"rejected":0,"sheds":0,"deadline_misses":0,
+//!  "panics":0,"worker_deaths":0,"degraded":0,
+//!  "steal":{"tiles":0,"steals":0,"max_worker_tiles":0,"min_worker_tiles":0,"imbalance":0.0},
+//!  "plan":{"hits":0,"misses":0,"calibrations":0},
+//!  "faults":{"injected":0,"mem_seu":0,"masked_transient":0,"masked_persistent":0,"unmasked":0},
+//!  "scrub":{"sweeps":0,"detected":0,"repaired":0,"quarantined":0},
+//!  "device":{"tiles":0,"instrs":0,"fetch_cycles":0,"exec_cycles":0,"wb_cycles":0,"overlap_cycles":0,"stall_cycles":0,"dma_words":0}}
+//! ```
+//!
+//! Every value is finite or `null`: derived ratios that can be
+//! non-finite (`steal.imbalance` is `inf` for a starved worker) render
+//! as `null`, because JSON has no infinity — the human tables keep
+//! printing `inf` (see `Metrics::worker_tile_imbalance`).
+
+use crate::coordinator::Metrics;
+use crate::plan::store::Json;
+use crate::Result;
+
+/// Render one snapshot line (no trailing newline).
+pub fn render_snapshot(seq: u64, is_final: bool, m: &Metrics) -> String {
+    let pcts = m.latency.percentiles(&[50.0, 95.0, 99.0]);
+    format!(
+        "{{\"seq\":{seq},\"wall_ms\":{wall},\"final\":{is_final},\
+         \"latency\":{{\"count\":{lc},\"mean_us\":{lmean},\"min_us\":{lmin},\"p50_us\":{p50},\"p95_us\":{p95},\"p99_us\":{p99},\"max_us\":{lmax}}},\
+         \"requests\":{req},\"errors\":{err},\"batches\":{bat},\"macs\":{macs},\"hw_cycles\":{hw},\
+         \"throughput_rps\":{rps},\"rejected\":{rej},\"sheds\":{sheds},\"deadline_misses\":{dl},\
+         \"panics\":{panics},\"worker_deaths\":{deaths},\"degraded\":{deg},\
+         \"steal\":{{\"tiles\":{st},\"steals\":{ss},\"max_worker_tiles\":{smax},\"min_worker_tiles\":{smin},\"imbalance\":{imb}}},\
+         \"plan\":{plan},\"faults\":{faults},\"scrub\":{scrub},\"device\":{device}}}",
+        wall = m.wall.as_millis(),
+        lc = m.latency.count(),
+        lmean = Json::render_f64(m.latency.mean_us()),
+        lmin = m.latency.min_us(),
+        p50 = pcts[0],
+        p95 = pcts[1],
+        p99 = pcts[2],
+        lmax = m.latency.max_us(),
+        req = m.requests,
+        err = m.errors,
+        bat = m.batches,
+        macs = m.macs,
+        hw = m.hw_cycles,
+        rps = Json::render_f64(m.throughput_rps()),
+        rej = m.rejected,
+        sheds = m.sheds,
+        dl = m.deadline_misses,
+        panics = m.panics,
+        deaths = m.worker_deaths,
+        deg = m.degraded,
+        st = m.steal.tiles,
+        ss = m.steal.steals,
+        smax = m.steal.max_worker_tiles,
+        smin = m.steal.min_worker_tiles,
+        imb = Json::render_f64(m.worker_tile_imbalance()),
+        plan = m.plan.json(),
+        faults = m.faults.json(),
+        scrub = m.scrub.json(),
+        device = m.device.json(),
+    )
+}
+
+/// The counter groups every snapshot must carry (acceptance contract).
+pub const REQUIRED_GROUPS: [&str; 5] = ["latency", "faults", "scrub", "plan", "device"];
+
+/// Parse a JSONL snapshot file's text into one `Json` per line,
+/// verifying each line carries every required group and that every
+/// leaf value is finite or null (`Json` cannot even represent a
+/// non-finite float, so parsing alone proves finiteness — this walk
+/// additionally rejects missing groups).
+pub fn parse_snapshots(text: &str) -> Result<Vec<Json>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| anyhow::anyhow!("snapshot line {}: {e}", i + 1))?;
+        for g in REQUIRED_GROUPS {
+            let f = v
+                .field(g)
+                .map_err(|e| anyhow::anyhow!("snapshot line {}: {e}", i + 1))?;
+            anyhow::ensure!(
+                matches!(f, Json::Obj(_)),
+                "snapshot line {}: group '{g}' is not an object",
+                i + 1
+            );
+        }
+        out.push(v);
+    }
+    anyhow::ensure!(!out.is_empty(), "no snapshots in file");
+    Ok(out)
+}
+
+/// Navigate a dotted path (`faults.unmasked`) into a snapshot object.
+pub fn lookup<'a>(v: &'a Json, path: &str) -> Result<&'a Json> {
+    let mut cur = v;
+    for part in path.split('.') {
+        cur = cur
+            .field(part)
+            .map_err(|e| anyhow::anyhow!("path '{path}': {e}"))?;
+    }
+    Ok(cur)
+}
+
+/// One `--require` clause: `faults.unmasked=0`, `scrub.repaired>=1`,
+/// `steal.imbalance=null`, `latency.count>0`, …
+fn check_requirement(snap: &Json, req: &str) -> Result<()> {
+    let (path, op, want) = split_requirement(req)?;
+    let got = lookup(snap, path)?;
+    if want == "null" {
+        let ok = match op {
+            "=" | "==" => got.is_null(),
+            "!=" => !got.is_null(),
+            other => anyhow::bail!("requirement '{req}': op '{other}' does not apply to null"),
+        };
+        anyhow::ensure!(ok, "requirement '{req}' failed: {path} is {got:?}");
+        return Ok(());
+    }
+    let want_num: f64 = want
+        .parse()
+        .map_err(|e| anyhow::anyhow!("requirement '{req}': bad number '{want}': {e}"))?;
+    anyhow::ensure!(
+        !got.is_null(),
+        "requirement '{req}' failed: {path} is null"
+    );
+    let got_num = got.as_f64().map_err(|e| anyhow::anyhow!("requirement '{req}': {e}"))?;
+    let ok = match op {
+        "=" | "==" => got_num == want_num,
+        "!=" => got_num != want_num,
+        ">=" => got_num >= want_num,
+        "<=" => got_num <= want_num,
+        ">" => got_num > want_num,
+        "<" => got_num < want_num,
+        other => anyhow::bail!("requirement '{req}': unknown op '{other}'"),
+    };
+    anyhow::ensure!(
+        ok,
+        "requirement '{req}' failed: {path} = {got_num}"
+    );
+    Ok(())
+}
+
+/// Split `path<op>value` on the first comparison operator. Two-char
+/// ops first so `>=` does not parse as `>` + `=value`.
+fn split_requirement(req: &str) -> Result<(&str, &str, &str)> {
+    for op in ["==", ">=", "<=", "!=", "=", ">", "<"] {
+        if let Some(pos) = req.find(op) {
+            let path = req[..pos].trim();
+            let want = req[pos + op.len()..].trim();
+            anyhow::ensure!(
+                !path.is_empty() && !want.is_empty(),
+                "malformed requirement '{req}'"
+            );
+            return Ok((path, op, want));
+        }
+    }
+    anyhow::bail!("requirement '{req}' has no comparison operator")
+}
+
+/// CI entry (`bitsmm obs`): parse a snapshot file, validate the schema
+/// on every line, and assert each comma-separated requirement against
+/// the **final** (last) snapshot. Returns a human summary line.
+pub fn check_snapshot_file(path: &std::path::Path, requires: &str) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let snaps = parse_snapshots(&text)?;
+    let last = snaps.last().unwrap();
+    let mut checked = 0usize;
+    for req in requires.split(',').map(str::trim).filter(|r| !r.is_empty()) {
+        check_requirement(last, req)?;
+        checked += 1;
+    }
+    Ok(format!(
+        "{}: {} snapshots, {} requirements hold on the final snapshot",
+        path.display(),
+        snaps.len(),
+        checked
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bits::packed::StealStats;
+    use std::time::Duration;
+
+    fn sample_metrics() -> Metrics {
+        let mut m = Metrics::default();
+        m.latency.record(Duration::from_micros(120));
+        m.latency.record(Duration::from_micros(480));
+        m.requests = 2;
+        m.batches = 1;
+        m.macs = 4096;
+        m.wall = Duration::from_millis(10);
+        m.faults.injected = 1;
+        m.faults.masked_transient = 1;
+        m.scrub.sweeps = 3;
+        m.scrub.repaired = 1;
+        m.plan.hits = 2;
+        m.device.tiles = 4;
+        m
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_the_reader() {
+        let m = sample_metrics();
+        let line = render_snapshot(0, true, &m);
+        let snaps = parse_snapshots(&line).unwrap();
+        assert_eq!(snaps.len(), 1);
+        let v = &snaps[0];
+        assert_eq!(lookup(v, "latency.count").unwrap().as_int().unwrap(), 2);
+        assert_eq!(lookup(v, "latency.p50_us").unwrap().as_int().unwrap(), 480);
+        assert_eq!(lookup(v, "latency.mean_us").unwrap().as_f64().unwrap(), 300.0);
+        assert_eq!(lookup(v, "faults.masked_transient").unwrap().as_int().unwrap(), 1);
+        assert_eq!(lookup(v, "scrub.repaired").unwrap().as_int().unwrap(), 1);
+        assert_eq!(lookup(v, "plan.hits").unwrap().as_int().unwrap(), 2);
+        assert_eq!(lookup(v, "device.tiles").unwrap().as_int().unwrap(), 4);
+        assert_eq!(lookup(v, "requests").unwrap().as_int().unwrap(), 2);
+        assert!(lookup(v, "throughput_rps").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(lookup(v, "final").unwrap(), &Json::Bool(true));
+    }
+
+    /// Satellite: the starved-worker imbalance is `inf` in the table
+    /// rendering but must be `null` in the snapshot — both pinned.
+    #[test]
+    fn non_finite_imbalance_renders_null_in_json_inf_in_tables() {
+        let mut m = Metrics::default();
+        m.steal = StealStats {
+            tiles: 6,
+            steals: 0,
+            max_worker_tiles: 6,
+            min_worker_tiles: 0,
+        };
+        assert_eq!(m.worker_tile_imbalance(), f64::INFINITY);
+        // table rendering keeps `inf`
+        assert_eq!(crate::coordinator::metrics::imbalance_label(m.worker_tile_imbalance()), "inf");
+        // snapshot renders null, and the whole line still parses
+        let line = render_snapshot(0, true, &m);
+        let v = &parse_snapshots(&line).unwrap()[0];
+        assert!(lookup(v, "steal.imbalance").unwrap().is_null());
+        // finite imbalance stays a number in both renderings
+        m.steal.min_worker_tiles = 3;
+        assert_eq!(crate::coordinator::metrics::imbalance_label(m.worker_tile_imbalance()), "2.00");
+        let line = render_snapshot(1, true, &m);
+        let v = &parse_snapshots(&line).unwrap()[0];
+        assert_eq!(lookup(v, "steal.imbalance").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn requirements_check_against_the_final_snapshot() {
+        let m = sample_metrics();
+        let text = format!(
+            "{}\n{}\n",
+            render_snapshot(0, false, &Metrics::default()),
+            render_snapshot(1, true, &m)
+        );
+        let dir = std::env::temp_dir().join("bitsmm_obs_snapshot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics.jsonl");
+        std::fs::write(&path, &text).unwrap();
+        let summary = check_snapshot_file(
+            &path,
+            "faults.unmasked=0, scrub.repaired>=1, latency.count>1, steal.imbalance=null, plan.hits==2",
+        )
+        .unwrap();
+        assert!(summary.contains("2 snapshots"));
+        assert!(summary.contains("5 requirements"));
+        // a failing requirement reports path and value
+        let err = check_snapshot_file(&path, "faults.unmasked>=1").unwrap_err();
+        assert!(err.to_string().contains("faults.unmasked"), "{err}");
+        // schema damage is caught on every line, not just the last
+        std::fs::write(&path, "{\"seq\":0}\n").unwrap();
+        assert!(check_snapshot_file(&path, "").is_err(), "missing groups rejected");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn requirement_grammar() {
+        assert_eq!(split_requirement("a.b>=1").unwrap(), ("a.b", ">=", "1"));
+        assert_eq!(split_requirement("a=null").unwrap(), ("a", "=", "null"));
+        assert_eq!(split_requirement("a.b.c<2.5").unwrap(), ("a.b.c", "<", "2.5"));
+        assert!(split_requirement("nonsense").is_err());
+        assert!(split_requirement("=1").is_err());
+    }
+}

@@ -1,0 +1,341 @@
+//! Per-request tracing: fixed-capacity, lock-striped span ring buffer
+//! (DESIGN.md §Observability).
+//!
+//! A trace ID is minted when a request is admitted at `submit`; every
+//! stage it passes after that — queue wait, batch assembly, plan
+//! resolution, pack/slice, kernel execution, ABFT verify/repair, the
+//! device fetch/execute/writeback ledger, respond — records a [`Span`]
+//! against that ID. Batch-granular stages (assembly, kernel, device)
+//! are attributed to the batch's *lead* trace ID, the oldest request in
+//! the batch.
+//!
+//! Storage is a ring: `stripes × per_stripe` span slots, a span's
+//! stripe chosen by `trace % stripes` so one request's spans stay in
+//! one stripe (and contention spreads across workers serving different
+//! requests). When a stripe is full the oldest span in it is
+//! overwritten and the global `dropped` counter increments by exactly
+//! one per overwrite — telemetry is bounded-rate by construction, and
+//! the consumer can see precisely how much history it lost.
+//!
+//! Cost when disabled: the server carries `Option<Arc<TraceRing>>`;
+//! `None` means every call site is one branch on an Option.
+
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Lifecycle stage a span measures. `name()` is the JSONL identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Request accepted at `submit` (dur 0; start = submission).
+    Admit,
+    /// Time between submission and leaving the queue in a batch.
+    QueueWait,
+    /// Batch formed: the `next_batch` call that produced it (lead ID;
+    /// detail = batch size).
+    Assemble,
+    /// Queued request shed for age (detail = waited ms).
+    Shed,
+    /// Request answered `DeadlineExceeded` without executing.
+    DeadlineMiss,
+    /// Execution-plan resolution (cache → cost model → calibration).
+    PlanResolve,
+    /// Operand packing / zero-copy plane slicing ahead of the kernel.
+    PackSlice,
+    /// Packed/native/simulated kernel execution (lead ID; detail =
+    /// tiles stolen during the run — k-split merges ride the same
+    /// pooled run this span times).
+    Kernel,
+    /// ABFT row-checksum verification (detail = 1 on mismatch).
+    AbftVerify,
+    /// ABFT escalation: plane verify + repair + retry after a miss.
+    AbftRepair,
+    /// Device instruction-stream fetch stage (detail = cycles).
+    DeviceFetch,
+    /// Device execute stage (detail = cycles).
+    DeviceExec,
+    /// Device writeback stage (detail = cycles).
+    DeviceWriteback,
+    /// Response delivered (dur = request latency).
+    Respond,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Assemble => "assemble",
+            SpanKind::Shed => "shed",
+            SpanKind::DeadlineMiss => "deadline_miss",
+            SpanKind::PlanResolve => "plan_resolve",
+            SpanKind::PackSlice => "pack_slice",
+            SpanKind::Kernel => "kernel",
+            SpanKind::AbftVerify => "abft_verify",
+            SpanKind::AbftRepair => "abft_repair",
+            SpanKind::DeviceFetch => "device_fetch",
+            SpanKind::DeviceExec => "device_exec",
+            SpanKind::DeviceWriteback => "device_writeback",
+            SpanKind::Respond => "respond",
+        }
+    }
+}
+
+/// One recorded stage of one trace.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    /// Trace ID minted at admission (0 = untraced/batch context).
+    pub trace: u64,
+    /// Global record order — monotone within a trace by construction
+    /// (a trace's spans are recorded in lifecycle order).
+    pub seq: u64,
+    pub kind: SpanKind,
+    /// Microseconds since the ring's epoch (server start).
+    pub start_us: u64,
+    /// Stage duration in microseconds (0 for point events).
+    pub dur_us: u64,
+    /// Stage-specific payload (batch size, steals, cycles, …).
+    pub detail: u64,
+}
+
+impl Span {
+    fn jsonl(&self) -> String {
+        format!(
+            "{{\"trace\":{},\"seq\":{},\"kind\":\"{}\",\"start_us\":{},\"dur_us\":{},\"detail\":{}}}",
+            self.trace,
+            self.seq,
+            self.kind.name(),
+            self.start_us,
+            self.dur_us,
+            self.detail
+        )
+    }
+}
+
+struct Stripe {
+    slots: Vec<Span>,
+    /// Next write position once `slots` reached capacity.
+    head: usize,
+}
+
+/// Fixed-capacity lock-striped span ring. See module docs.
+pub struct TraceRing {
+    stripes: Vec<Mutex<Stripe>>,
+    per_stripe: usize,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    epoch: Instant,
+}
+
+/// Stripe count for `TraceRing::new` (capacity is split across these).
+pub const DEFAULT_STRIPES: usize = 8;
+
+impl TraceRing {
+    /// Ring with `capacity` total span slots split over
+    /// [`DEFAULT_STRIPES`] stripes (rounded up to a whole number of
+    /// slots per stripe).
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing::with_stripes(DEFAULT_STRIPES, capacity.div_ceil(DEFAULT_STRIPES))
+    }
+
+    pub fn with_stripes(stripes: usize, per_stripe: usize) -> TraceRing {
+        let stripes = stripes.max(1);
+        let per_stripe = per_stripe.max(1);
+        TraceRing {
+            stripes: (0..stripes)
+                .map(|_| {
+                    Mutex::new(Stripe {
+                        slots: Vec::with_capacity(per_stripe),
+                        head: 0,
+                    })
+                })
+                .collect(),
+            per_stripe,
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.stripes.len() * self.per_stripe
+    }
+
+    /// Spans currently resident (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).slots.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans overwritten because their stripe was full — exact: one
+    /// increment per lost span.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record a span whose stage started at `start` and ran for `dur`.
+    pub fn span(&self, trace: u64, kind: SpanKind, start: Instant, dur: Duration, detail: u64) {
+        let start_us = start.saturating_duration_since(self.epoch).as_micros() as u64;
+        self.push(Span {
+            trace,
+            seq: self.seq.fetch_add(1, Ordering::Relaxed),
+            kind,
+            start_us,
+            dur_us: dur.as_micros() as u64,
+            detail,
+        });
+    }
+
+    /// Point-event convenience: zero duration, starting now.
+    pub fn event(&self, trace: u64, kind: SpanKind, detail: u64) {
+        self.span(trace, kind, Instant::now(), Duration::ZERO, detail);
+    }
+
+    fn push(&self, span: Span) {
+        let stripe = &self.stripes[(span.trace % self.stripes.len() as u64) as usize];
+        let mut s = stripe.lock().unwrap_or_else(|p| p.into_inner());
+        if s.slots.len() < self.per_stripe {
+            s.slots.push(span);
+        } else {
+            let head = s.head;
+            s.slots[head] = span;
+            s.head = (head + 1) % self.per_stripe;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot every resident span, ordered by (trace, seq).
+    pub fn dump(&self) -> Vec<Span> {
+        let mut all: Vec<Span> = Vec::new();
+        for stripe in &self.stripes {
+            let s = stripe.lock().unwrap_or_else(|p| p.into_inner());
+            all.extend_from_slice(&s.slots);
+        }
+        all.sort_by_key(|s| (s.trace, s.seq));
+        all
+    }
+
+    /// JSONL dump: one span object per line, then a trailer object
+    /// with the ring accounting (`{"spans":…,"dropped":…,…}`).
+    pub fn dump_jsonl(&self) -> String {
+        let spans = self.dump();
+        let mut out = String::new();
+        for s in &spans {
+            out.push_str(&s.jsonl());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "{{\"spans\":{},\"dropped\":{},\"capacity\":{}}}\n",
+            spans.len(),
+            self.dropped(),
+            self.capacity()
+        ));
+        out
+    }
+
+    pub fn write_jsonl(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.dump_jsonl())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::store::Json;
+
+    fn ring1(cap: usize) -> TraceRing {
+        TraceRing::with_stripes(1, cap)
+    }
+
+    #[test]
+    fn span_order_is_monotone_per_trace() {
+        let ring = TraceRing::new(256);
+        let t0 = Instant::now();
+        // interleave two traces the way two workers would
+        for _ in 0..10 {
+            ring.span(1, SpanKind::QueueWait, t0, Duration::from_micros(5), 0);
+            ring.span(2, SpanKind::QueueWait, t0, Duration::from_micros(5), 0);
+            ring.span(1, SpanKind::Kernel, t0, Duration::from_micros(9), 0);
+            ring.span(2, SpanKind::Respond, t0, Duration::from_micros(1), 0);
+        }
+        let spans = ring.dump();
+        for pair in spans.windows(2) {
+            if pair[0].trace == pair[1].trace {
+                assert!(pair[0].seq < pair[1].seq, "dump sorts by seq within a trace");
+            }
+        }
+        // per-trace record order is preserved: for trace 1 every
+        // QueueWait..Kernel pair alternates
+        let t1: Vec<_> = spans.iter().filter(|s| s.trace == 1).collect();
+        assert_eq!(t1.len(), 20);
+        for (i, s) in t1.iter().enumerate() {
+            let want = if i % 2 == 0 { SpanKind::QueueWait } else { SpanKind::Kernel };
+            assert_eq!(s.kind, want, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn dropped_is_exact_under_overflow() {
+        let ring = ring1(16);
+        let t0 = Instant::now();
+        for i in 0..100u64 {
+            ring.span(7, SpanKind::Kernel, t0, Duration::ZERO, i);
+        }
+        assert_eq!(ring.len(), 16, "ring holds exactly its capacity");
+        assert_eq!(ring.dropped(), 100 - 16, "one drop per overwrite");
+        // the survivors are the newest 16 spans, still in seq order
+        let spans = ring.dump();
+        let details: Vec<u64> = spans.iter().map(|s| s.detail).collect();
+        assert_eq!(details, (84..100).collect::<Vec<u64>>());
+        // no overflow → no drops
+        let calm = ring1(64);
+        for _ in 0..64 {
+            calm.event(1, SpanKind::Admit, 0);
+        }
+        assert_eq!(calm.dropped(), 0);
+        assert_eq!(calm.len(), 64);
+    }
+
+    #[test]
+    fn jsonl_dump_parses_line_by_line() {
+        let ring = TraceRing::new(64);
+        ring.event(3, SpanKind::Admit, 0);
+        ring.event(3, SpanKind::Respond, 0);
+        let text = ring.dump_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "two spans + trailer");
+        for line in &lines[..2] {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.field("trace").unwrap().as_int().unwrap(), 3);
+            assert!(v.field("kind").unwrap().as_str().is_ok());
+        }
+        let trailer = Json::parse(lines[2]).unwrap();
+        assert_eq!(trailer.field("spans").unwrap().as_int().unwrap(), 2);
+        assert_eq!(trailer.field("dropped").unwrap().as_int().unwrap(), 0);
+    }
+
+    #[test]
+    fn stripes_partition_by_trace_id() {
+        let ring = TraceRing::with_stripes(4, 4);
+        assert_eq!(ring.capacity(), 16);
+        // 8 spans on one trace overflow only that trace's stripe
+        for _ in 0..8 {
+            ring.event(5, SpanKind::Kernel, 0);
+        }
+        assert_eq!(ring.dropped(), 4);
+        // a different trace's stripe is untouched
+        ring.event(6, SpanKind::Kernel, 0);
+        assert_eq!(ring.dropped(), 4);
+    }
+}

@@ -119,6 +119,14 @@ impl PlanStats {
         }
         self.hits as f64 / self.lookups() as f64
     }
+
+    /// JSON object for the telemetry snapshot.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"hits\":{},\"misses\":{},\"calibrations\":{}}}",
+            self.hits, self.misses, self.calibrations
+        )
+    }
 }
 
 /// Neighbour reuse gives up beyond this bucket distance — classes that

@@ -206,15 +206,19 @@ fn parse_entry(e: &Json) -> Result<(PlanKey, ExecPlan)> {
 // Minimal JSON reader (offline: no serde_json)
 // ---------------------------------------------------------------------------
 
-/// The JSON subset the plan file (and the bench logs) use: objects,
-/// arrays, strings with basic escapes, i64 integers, booleans.
+/// The JSON subset the plan file, the bench logs, and the telemetry
+/// snapshots use: objects, arrays, strings with basic escapes, i64
+/// integers, finite f64 floats, booleans, and null. Plan files remain
+/// integer-strict at the access layer: `as_int` rejects `Float`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Obj(Vec<(String, Json)>),
     Arr(Vec<Json>),
     Str(String),
     Int(i64),
+    Float(f64),
     Bool(bool),
+    Null,
 }
 
 impl Json {
@@ -244,6 +248,33 @@ impl Json {
         match self {
             Json::Int(i) => Ok(*i),
             other => anyhow::bail!("expected an integer, got {other:?}"),
+        }
+    }
+
+    /// Numeric view: integers widen to f64, floats pass through.
+    /// `Null` is *not* a number — callers that accept "finite or
+    /// null" (telemetry snapshots) should check `is_null` first.
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Int(i) => Ok(*i as f64),
+            Json::Float(x) => Ok(*x),
+            other => anyhow::bail!("expected a number, got {other:?}"),
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    /// Render a float as a JSON value: non-finite values (which JSON
+    /// cannot represent) become `null`; finite values use Rust's
+    /// shortest round-trip representation, which always carries a
+    /// '.' or 'e' so the reader keeps Int/Float apart.
+    pub fn render_f64(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v:?}")
+        } else {
+            "null".to_string()
         }
     }
 
@@ -301,7 +332,8 @@ impl Parser<'_> {
             b'[' => self.array(),
             b'"' => Ok(Json::Str(self.string()?)),
             b't' | b'f' => self.boolean(),
-            b'-' | b'0'..=b'9' => self.integer(),
+            b'n' => self.null(),
+            b'-' | b'0'..=b'9' => self.number(),
             other => anyhow::bail!("unexpected '{}' at byte {}", other as char, self.i),
         }
     }
@@ -398,7 +430,21 @@ impl Parser<'_> {
         }
     }
 
-    fn integer(&mut self) -> Result<Json> {
+    fn null(&mut self) -> Result<Json> {
+        self.skip_ws();
+        anyhow::ensure!(
+            self.s[self.i..].starts_with(b"null"),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += 4;
+        Ok(Json::Null)
+    }
+
+    /// Parse a number. A bare integer stays `Json::Int`; the presence
+    /// of a fraction or exponent makes it `Json::Float`, so plan-file
+    /// entries (read back through `as_int`) stay integer-strict.
+    fn number(&mut self) -> Result<Json> {
         self.skip_ws();
         let start = self.i;
         if self.s.get(self.i) == Some(&b'-') {
@@ -407,13 +453,34 @@ impl Parser<'_> {
         while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
             self.i += 1;
         }
-        anyhow::ensure!(
-            self.s.get(self.i) != Some(&b'.'),
-            "plan files carry integers only (byte {})",
-            self.i
-        );
+        let mut float = false;
+        if self.s.get(self.i) == Some(&b'.') {
+            float = true;
+            self.i += 1;
+            while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
+        if matches!(self.s.get(self.i), Some(&b'e') | Some(&b'E')) {
+            float = true;
+            self.i += 1;
+            if matches!(self.s.get(self.i), Some(&b'+') | Some(&b'-')) {
+                self.i += 1;
+            }
+            while self.i < self.s.len() && self.s[self.i].is_ascii_digit() {
+                self.i += 1;
+            }
+        }
         let text = std::str::from_utf8(&self.s[start..self.i])?;
-        Ok(Json::Int(text.parse::<i64>()?))
+        if float {
+            let x = text
+                .parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("bad float '{text}': {e}"))?;
+            anyhow::ensure!(x.is_finite(), "non-finite float '{text}'");
+            Ok(Json::Float(x))
+        } else {
+            Ok(Json::Int(text.parse::<i64>()?))
+        }
     }
 }
 
@@ -569,8 +636,24 @@ mod tests {
         assert_eq!(u.field("fp").unwrap().as_str().unwrap(), "café-box/neon/c2");
         assert!(Json::parse("{\"a\": 1,}").is_err(), "trailing comma");
         assert!(Json::parse("{\"a\": 1} garbage").is_err());
-        assert!(Json::parse("{\"a\": 1.5}").is_err(), "floats rejected");
         assert!(Json::parse("[1, 2").is_err(), "unterminated array");
+        // Floats and null (telemetry snapshots): a fraction or
+        // exponent makes a Float; bare digits stay Int; as_int stays
+        // integer-strict so plan files cannot silently carry floats.
+        let w = Json::parse("{\"a\": 1.5, \"b\": -2.25e2, \"c\": 3, \"d\": null}").unwrap();
+        assert_eq!(w.field("a").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(w.field("b").unwrap().as_f64().unwrap(), -225.0);
+        assert_eq!(w.field("c").unwrap().as_int().unwrap(), 3);
+        assert_eq!(w.field("c").unwrap().as_f64().unwrap(), 3.0);
+        assert!(w.field("d").unwrap().is_null());
+        assert!(w.field("a").unwrap().as_int().is_err(), "as_int rejects Float");
+        assert!(Json::parse("1.").is_ok(), "trailing-dot float parses as 1.0");
+        // The float writer round-trips through the reader, and maps
+        // non-finite values to null (JSON has no inf/nan).
+        assert_eq!(Json::render_f64(1.5), "1.5");
+        assert_eq!(Json::parse(&Json::render_f64(0.1)).unwrap().as_f64().unwrap(), 0.1);
+        assert_eq!(Json::render_f64(f64::INFINITY), "null");
+        assert_eq!(Json::render_f64(f64::NAN), "null");
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! End-to-end flight-telemetry integration (DESIGN.md §Observability):
+//! a real packed serving run with the snapshotter and the request
+//! tracer armed must leave behind
+//!
+//!   * a JSONL metrics file with ≥ 2 snapshots (periodic + final) that
+//!     round-trips through the in-repo JSON reader with every counter
+//!     group present, and
+//!   * a JSONL trace dump whose spans cover every request from
+//!     `admit` to `respond` with per-trace monotone sequence numbers —
+//!
+//! exactly what CI's `bitsmm obs` gate consumes instead of grepping
+//! report tables.
+
+use bitsmm::coordinator::{Backend, InferenceServer, Request, ServerConfig};
+use bitsmm::obs::snapshot::{check_snapshot_file, lookup, parse_snapshots, REQUIRED_GROUPS};
+use bitsmm::plan::store::Json;
+use bitsmm::prng::Pcg32;
+use bitsmm::sim::array::SaConfig;
+use bitsmm::sim::mac_common::MacVariant;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn inputs(n: usize, d: usize, bits: u32) -> Vec<Vec<i32>> {
+    let mut rng = Pcg32::new(0x7e1e);
+    let lo = bitsmm::bits::twos::min_value(bits);
+    let hi = bitsmm::bits::twos::max_value(bits);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.range_i32(lo, hi)).collect())
+        .collect()
+}
+
+#[test]
+fn serving_run_round_trips_snapshots_and_request_traces() {
+    let dir = std::env::temp_dir().join(format!("bitsmm_telemetry_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let metrics_path = dir.join("metrics.jsonl");
+    let trace_path = dir.join("trace.jsonl");
+
+    let model = Arc::new(bitsmm::nn::model::mlp_zoo(5));
+    let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+    cfg.workers = 2;
+    cfg.packed_threads = 2;
+    cfg.metrics_file = Some(metrics_path.clone());
+    cfg.metrics_every_ms = 5;
+    cfg.trace_file = Some(trace_path.clone());
+    let server = InferenceServer::start(model, cfg).unwrap();
+    let n = 10usize;
+    let rxs: Vec<_> = inputs(n, 64, 8)
+        .into_iter()
+        .enumerate()
+        .map(|(i, x)| server.submit(Request::new(i as u64, x)))
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().output.is_ok());
+    }
+    // give the snapshotter a couple of periods beyond the initial write
+    std::thread::sleep(Duration::from_millis(25));
+    let (_, metrics) = server.shutdown();
+    assert_eq!(metrics.requests as usize, n);
+
+    // --- snapshots: parse, groups, final aggregate -------------------
+    let text = std::fs::read_to_string(&metrics_path).unwrap();
+    let snaps = parse_snapshots(&text).unwrap();
+    assert!(snaps.len() >= 2, "periodic + final expected, got {}", snaps.len());
+    let last = snaps.last().unwrap();
+    assert_eq!(lookup(last, "final").unwrap(), &Json::Bool(true));
+    assert_eq!(lookup(last, "requests").unwrap().as_int().unwrap() as usize, n);
+    assert_eq!(lookup(last, "latency.count").unwrap().as_int().unwrap() as usize, n);
+    for g in REQUIRED_GROUPS {
+        assert!(lookup(last, g).is_ok(), "counter group {g} missing from the snapshot");
+    }
+    // every snapshot field CI gates on is finite-or-null by contract:
+    // re-rendering the parsed line must not find a bare inf/nan token
+    for line in text.lines() {
+        assert!(
+            !line.contains("inf") && !line.contains("NaN"),
+            "non-finite leaked into JSONL: {line}"
+        );
+    }
+
+    // --- the CI gate itself ------------------------------------------
+    let summary = check_snapshot_file(
+        &metrics_path,
+        "faults.unmasked=0, errors=0, latency.count>=10, scrub.repaired>=0",
+    )
+    .unwrap();
+    assert!(summary.contains("4 requirements"), "{summary}");
+    // a violated requirement must fail loudly, not pass silently
+    assert!(check_snapshot_file(&metrics_path, "errors>=1").is_err());
+
+    // --- traces: every request admit→…→respond, monotone seq ---------
+    let ttext = std::fs::read_to_string(&trace_path).unwrap();
+    let mut per_trace: HashMap<i64, Vec<(i64, String)>> = HashMap::new();
+    for line in ttext.lines() {
+        let v = Json::parse(line).unwrap();
+        if v.field("capacity").is_ok() {
+            // the ring-accounting trailer: nothing may have been dropped
+            assert_eq!(v.field("dropped").unwrap().as_int().unwrap(), 0);
+            continue;
+        }
+        per_trace
+            .entry(v.field("trace").unwrap().as_int().unwrap())
+            .or_default()
+            .push((
+                v.field("seq").unwrap().as_int().unwrap(),
+                v.field("kind").unwrap().as_str().unwrap().to_string(),
+            ));
+    }
+    assert_eq!(per_trace.len(), n, "one trace per request");
+    let mut all_kinds = std::collections::HashSet::new();
+    for (trace, spans) in &per_trace {
+        assert!(
+            spans.windows(2).all(|p| p[0].0 < p[1].0),
+            "trace {trace}: span seq not monotone"
+        );
+        let kinds: Vec<&str> = spans.iter().map(|(_, k)| k.as_str()).collect();
+        assert_eq!(kinds.first().copied(), Some("admit"), "trace {trace}: {kinds:?}");
+        assert_eq!(kinds.last().copied(), Some("respond"), "trace {trace}: {kinds:?}");
+        assert!(kinds.contains(&"queue_wait"), "trace {trace}: {kinds:?}");
+        all_kinds.extend(kinds.iter().map(|k| k.to_string()));
+    }
+    // the packed execution stages land on each batch's lead trace
+    for stage in ["assemble", "pack_slice", "plan_resolve", "kernel"] {
+        assert!(all_kinds.contains(stage), "no {stage} span anywhere in the dump");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn telemetry_is_off_by_default_and_leaves_no_files() {
+    let dir = std::env::temp_dir().join(format!("bitsmm_telemetry_off_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = Arc::new(bitsmm::nn::model::mlp_zoo(5));
+    let mut cfg = ServerConfig::new(SaConfig::new(4, 16, MacVariant::Booth), Backend::Packed);
+    cfg.workers = 1;
+    cfg.packed_threads = 2;
+    let server = InferenceServer::start(model, cfg).unwrap();
+    let rxs: Vec<_> = inputs(4, 64, 8)
+        .into_iter()
+        .enumerate()
+        .map(|(i, x)| server.submit(Request::new(i as u64, x)))
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().output.is_ok());
+    }
+    let (_, metrics) = server.shutdown();
+    assert_eq!(metrics.requests, 4);
+    let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert!(leftovers.is_empty(), "telemetry wrote files while disabled");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
